@@ -1,0 +1,172 @@
+//! END-TO-END DRIVER — the full system on a real workload.
+//!
+//!     make artifacts && cargo run --release --example full_study
+//!
+//! Exercises every layer in one run and records the numbers EXPERIMENTS.md
+//! reports:
+//!   L1/L2  — the three Pallas/JAX kernel variants, AOT-compiled to HLO
+//!            and executed through PJRT from Rust;
+//!   L3     — native engines, the multi-device slab coordinator (halo
+//!            exchange, bit-exact vs single device), metrics;
+//!   physics — a temperature sweep across the phase transition on a 128²
+//!            lattice, validated against the exact Onsager solution
+//!            (magnetization + energy) and the Binder cumulant;
+//!   performance — flips/ns for every engine (the paper's headline unit).
+//!
+//! Exit code is non-zero if any validation gate fails, so this doubles as
+//! the repo's end-to-end acceptance test.
+
+use ising_dgx::algorithms::{MultispinEngine, ScalarEngine, Sweeper};
+use ising_dgx::analytic;
+use ising_dgx::coordinator::{NativeCluster, SlabCluster};
+use ising_dgx::lattice::Geometry;
+use ising_dgx::observables;
+use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
+use ising_dgx::util::bench::{sweeper_flips_per_ns, write_report};
+use ising_dgx::util::json::{obj, Json};
+use ising_dgx::util::{units, Table};
+use std::path::Path;
+use std::rc::Rc;
+
+fn main() -> ising_dgx::Result<()> {
+    let l = 128usize;
+    let geom = Geometry::square(l)?;
+    let mut failures = Vec::new();
+    let mut report_rows = Vec::new();
+
+    // ---- Stage 1: engine inventory + throughput on the real workload.
+    println!("== stage 1: engines & throughput ({l}^2, beta = betac) ==");
+    let beta_c = analytic::critical_beta() as f32;
+    let mut perf = Table::new(&["engine", "flips/ns"]);
+    let mut scalar = ScalarEngine::hot(geom, beta_c, 1);
+    let scalar_rate = sweeper_flips_per_ns(&mut scalar, 32);
+    perf.row(&["native scalar".into(), units::fmt_sig(scalar_rate, 4)]);
+    let mut ms = MultispinEngine::hot(geom, beta_c, 1)?;
+    let ms_rate = sweeper_flips_per_ns(&mut ms, 32);
+    perf.row(&["native multi-spin".into(), units::fmt_sig(ms_rate, 4)]);
+
+    let engine = Rc::new(Engine::new(Path::new("artifacts"))?);
+    let mut pjrt_rates = Vec::new();
+    for variant in [Variant::Basic, Variant::Multispin, Variant::Tensorcore] {
+        let mut e = PjrtEngine::hot(engine.clone(), variant, geom, beta_c, 1)?;
+        let rate = sweeper_flips_per_ns(&mut e, 16);
+        perf.row(&[e.variant_name().into(), units::fmt_sig(rate, 4)]);
+        pjrt_rates.push((variant, rate));
+    }
+    perf.print();
+    if ms_rate <= scalar_rate {
+        failures.push(format!(
+            "multi-spin ({ms_rate:.3}) should outperform scalar ({scalar_rate:.3})"
+        ));
+    }
+
+    // ---- Stage 2: cross-stack agreement (PJRT vs native, slab vs single).
+    println!("\n== stage 2: cross-stack agreement ==");
+    let mut pjrt = PjrtEngine::hot(engine.clone(), Variant::Basic, geom, 0.42, 77)?;
+    pjrt.sweep_n(8);
+    let mut native = ScalarEngine::hot(geom, 0.42, 77);
+    native.sweep_n(8);
+    let agree = pjrt.spins() == native.spins();
+    println!("  PJRT(Pallas basic) == native scalar after 8 sweeps: {agree}");
+    if !agree {
+        failures.push("PJRT/native trajectory divergence".into());
+    }
+
+    let mut cluster = SlabCluster::hot(engine.clone(), Variant::Basic, geom, 4, 0.42, 77)?;
+    cluster.run(8)?;
+    let slab_ok = cluster.gather() == native.lattice;
+    println!("  4-device slab cluster == single device: {slab_ok}");
+    if !slab_ok {
+        failures.push("slab cluster divergence".into());
+    }
+
+    let mut ncluster = NativeCluster::hot(geom, 4, 0.42, 77)?;
+    ncluster.run(8);
+    let nok = ncluster.lattice.to_checkerboard() == native.lattice;
+    println!("  4-worker native cluster == single device: {nok}");
+    if !nok {
+        failures.push("native cluster divergence".into());
+    }
+
+    // ---- Stage 3: physics across the transition vs exact results.
+    println!("\n== stage 3: temperature sweep across Tc (multi-spin engine) ==");
+    let tc = analytic::critical_temperature();
+    let temps = [1.7, 1.9, 2.1, tc - 0.05, tc + 0.05, 2.4, 2.7, 3.0];
+    let mut phys = Table::new(&[
+        "T", "<|m|>", "Onsager m", "|dm|", "<e>", "exact e", "|de|", "U_L",
+    ]);
+    for &t in &temps {
+        // Cold start below Tc: hot starts coarsen through striped
+        // metastable states (paper §5.3) far slower than the sweep budget.
+        let mut eng = if t < tc {
+            MultispinEngine::cold(geom, (1.0 / t) as f32, 99)?
+        } else {
+            MultispinEngine::hot(geom, (1.0 / t) as f32, 99)?
+        };
+        let meas = observables::measure(&mut eng, 2500, 500, 2);
+        let m_exact = analytic::magnetization(t);
+        let e_exact = analytic::energy_per_site(1.0 / t);
+        let dm = (meas.mean_abs_m() - m_exact).abs();
+        let de = (meas.mean_e() - e_exact).abs();
+        let near_tc = (t - tc).abs() < 0.15;
+        // Gates: tight away from Tc, loose inside the critical window.
+        if !near_tc && (dm > 0.06 || de > 0.03) {
+            failures.push(format!("physics gate failed at T = {t:.3}: dm={dm:.4} de={de:.4}"));
+        }
+        phys.row(&[
+            format!("{t:.4}"),
+            format!("{:.4}", meas.mean_abs_m()),
+            format!("{m_exact:.4}"),
+            format!("{dm:.4}"),
+            format!("{:.4}", meas.mean_e()),
+            format!("{e_exact:.4}"),
+            format!("{de:.4}"),
+            format!("{:.4}", meas.binder().binder()),
+        ]);
+        report_rows.push(obj(vec![
+            ("T", Json::Num(t)),
+            ("abs_m", Json::Num(meas.mean_abs_m())),
+            ("m_exact", Json::Num(m_exact)),
+            ("e", Json::Num(meas.mean_e())),
+            ("e_exact", Json::Num(e_exact)),
+            ("binder", Json::Num(meas.binder().binder())),
+        ]));
+    }
+    phys.print();
+
+    // ---- Verdict + machine-readable record.
+    let _ = write_report(
+        "full_study",
+        &obj(vec![
+            ("lattice", Json::Num(l as f64)),
+            ("scalar_flips_per_ns", Json::Num(scalar_rate)),
+            ("multispin_flips_per_ns", Json::Num(ms_rate)),
+            (
+                "pjrt_flips_per_ns",
+                Json::Arr(
+                    pjrt_rates
+                        .iter()
+                        .map(|(v, r)| {
+                            obj(vec![
+                                ("variant", Json::Str(v.as_str().into())),
+                                ("rate", Json::Num(*r)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("physics", Json::Arr(report_rows)),
+            ("failures", Json::Arr(failures.iter().map(|f| Json::Str(f.clone())).collect())),
+        ]),
+    );
+
+    if failures.is_empty() {
+        println!("\nFULL STUDY: all gates passed ✔ (report: target/bench-reports/full_study.json)");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

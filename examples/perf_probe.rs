@@ -1,0 +1,70 @@
+//! Perf probe — the measurement harness behind EXPERIMENTS.md §Perf.
+//!
+//!     cargo run --release --example perf_probe
+//!
+//! Reports:
+//!   1. Philox throughput: 4 scalar `site_group` calls vs one lockstep
+//!      `site_group_x4` (the L3 hot-loop optimization).
+//!   2. End-to-end engine rates (scalar vs multi-spin) at 512².
+//!   3. PJRT dispatch ablation: flips/ns vs `sweeps_per_call` (the L2/L3
+//!      boundary optimization — in-program fori_loop amortizing dispatch
+//!      and host round-trips).
+
+use ising_dgx::algorithms::{MultispinEngine, ScalarEngine};
+use ising_dgx::lattice::Geometry;
+use ising_dgx::rng::{site_group, site_group_x4};
+use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
+use ising_dgx::util::bench::sweeper_flips_per_ns;
+use ising_dgx::util::{units, Timer};
+use std::hint::black_box;
+use std::path::Path;
+use std::rc::Rc;
+
+fn main() -> ising_dgx::Result<()> {
+    // --- 1. Philox kernel microbench.
+    let iters = 2_000_000u32;
+    let t = Timer::start();
+    let mut acc = 0u32;
+    for i in 0..iters {
+        for g in 0..4 {
+            acc ^= site_group(1, 0, i, 4 * (i & 0xFFFF) + g, 7)[3];
+        }
+    }
+    black_box(acc);
+    let scalar4 = t.secs();
+    let t = Timer::start();
+    let mut acc = 0u32;
+    for i in 0..iters {
+        let b = site_group_x4(1, 0, i, 4 * (i & 0xFFFF), 7);
+        acc ^= b[0][3] ^ b[1][3] ^ b[2][3] ^ b[3][3];
+    }
+    black_box(acc);
+    let x4 = t.secs();
+    println!("philox, {iters} word-groups (16 draws each):");
+    println!("  4x scalar site_group : {:.3}s ({:.1} M draws/s)", scalar4, iters as f64 * 16.0 / scalar4 / 1e6);
+    println!("  lockstep site_group_x4: {:.3}s ({:.1} M draws/s)  → {:.2}x", x4, iters as f64 * 16.0 / x4 / 1e6, scalar4 / x4);
+
+    // --- 2. Engine rates.
+    let geom = Geometry::square(512)?;
+    let beta = 0.4406868f32;
+    let mut scalar = ScalarEngine::hot(geom, beta, 1);
+    let s_rate = sweeper_flips_per_ns(&mut scalar, 8);
+    let mut ms = MultispinEngine::hot(geom, beta, 1)?;
+    let m_rate = sweeper_flips_per_ns(&mut ms, 8);
+    println!("\nengines at 512^2: scalar {} flips/ns, multi-spin {} flips/ns ({:.2}x)",
+        units::fmt_sig(s_rate, 4), units::fmt_sig(m_rate, 4), m_rate / s_rate);
+
+    // --- 3. PJRT dispatch ablation.
+    if let Ok(engine) = Engine::new(Path::new("artifacts")) {
+        let engine = Rc::new(engine);
+        let geom = Geometry::square(128)?;
+        println!("\npjrt-basic 128^2, flips/ns vs sweeps_per_call:");
+        for spc in [1u32, 4, 16, 64] {
+            let mut e = PjrtEngine::hot(engine.clone(), Variant::Basic, geom, beta, 1)?;
+            e.sweeps_per_call = spc;
+            let rate = sweeper_flips_per_ns(&mut e, 64);
+            println!("  n={spc:3}: {} flips/ns", units::fmt_sig(rate, 4));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+"""AOT compiler: lowers the L2 programs to HLO **text** + manifest.json.
+
+HLO text (never ``lowered.compiler_ir('hlo').serialize()``) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the xla_extension 0.5.1 under the Rust `xla` crate rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md and aot_recipe.md).
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+Incremental: programs are skipped when their .hlo.txt already exists and
+--force is not given; the manifest is always rewritten to match the set.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact set (kept modest: ~60 programs, a few minutes to lower).
+UPDATE_SIZES = {
+    "basic": (64, 128, 256, 512),
+    "multispin": (64, 128, 256, 512),
+    "tensorcore": (64, 128, 256, 512),
+}
+SWEEP_SIZES = {
+    "basic": (64, 128, 256, 512, 1024),
+    "multispin": (64, 128, 256, 512, 1024),
+    "tensorcore": (64, 128, 256, 512),
+}
+# (slab_h, w) shapes for the multi-device coordinator: full lattices 128²
+# and 256² split over 2 and 4 workers.
+SLAB_SHAPES = ((64, 128), (32, 128), (128, 256), (64, 256))
+SLAB_VARIANTS = ("basic", "tensorcore")
+MEASURE_SIZES = (64, 128, 256, 512, 1024)
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _plane_spec(variant, h, w):
+    """Input plane spec per variant: i8 color plane or u32 packed words."""
+    if variant == "multispin":
+        return _spec((h, w // 2 // 8), jnp.uint32), "u32"
+    return _spec((h, w // 2), jnp.int8), "s8"
+
+
+SCALARS = [
+    ("beta", jnp.float32),
+    ("seed", jnp.uint32),
+    ("sweep", jnp.uint32),
+]
+
+
+def _scalar_specs(names_types):
+    return [_spec((), t) for _, t in names_types]
+
+
+def build_programs(update_sizes, sweep_sizes, slab_shapes, measure_sizes):
+    """Yield (name, kind, meta, fn, arg_specs) for every artifact program."""
+    for variant, sizes in update_sizes.items():
+        for l in sizes:
+            plane, dt = _plane_spec(variant, l, l)
+            for color in (0, 1):
+                name = f"update_{variant}_{l}x{l}_c{color}"
+
+                def fn(t, s, beta, seed, sweep, _v=variant, _c=color):
+                    return (model.update_color(_v, t, s, _c, beta, seed, sweep),)
+
+                yield (
+                    name,
+                    "update",
+                    {"variant": variant, "h": l, "w": l, "color": color, "dtype": dt},
+                    fn,
+                    [plane, plane] + _scalar_specs(SCALARS),
+                )
+
+    for variant, sizes in sweep_sizes.items():
+        for l in sizes:
+            plane, dt = _plane_spec(variant, l, l)
+            name = f"sweep_{variant}_{l}x{l}"
+
+            def fn(b, w, beta, seed, step0, nsteps, _v=variant):
+                return model.sweep_n(_v, b, w, beta, seed, step0, nsteps)
+
+            yield (
+                name,
+                "sweep",
+                {"variant": variant, "h": l, "w": l, "color": -1, "dtype": dt},
+                fn,
+                [plane, plane]
+                + _scalar_specs(SCALARS)[:2]
+                + [_spec((), jnp.uint32), _spec((), jnp.int32)],
+            )
+
+    for l in measure_sizes:
+        plane = _spec((l, l // 2), jnp.int8)
+        yield (
+            f"measure_{l}x{l}",
+            "measure",
+            {"variant": "any", "h": l, "w": l, "color": -1, "dtype": "s8"},
+            lambda b, w: model.measure(b, w),
+            [plane, plane],
+        )
+        packed = _spec((l, l // 2 // 8), jnp.uint32)
+        yield (
+            f"measure_packed_{l}x{l}",
+            "measure_packed",
+            {"variant": "multispin", "h": l, "w": l, "color": -1, "dtype": "u32"},
+            lambda b, w, _w2=l // 2: model.measure_packed(b, w, _w2),
+            [packed, packed],
+        )
+
+    for variant in SLAB_VARIANTS:
+        for sh, w in slab_shapes:
+            plane = _spec((sh, w // 2), jnp.int8)
+            halo = _spec((1, w // 2), jnp.int8)
+            for color in (0, 1):
+                name = f"slab_{variant}_{sh}x{w}_c{color}"
+
+                def fn(t, s, top, bot, beta, seed, sweep, row_offset,
+                       _v=variant, _c=color):
+                    return model.slab_update_color(
+                        _v, t, s, top, bot, _c, beta, seed, sweep, row_offset
+                    )
+
+                yield (
+                    name,
+                    "slab",
+                    {"variant": variant, "h": sh, "w": w, "color": color, "dtype": "s8"},
+                    fn,
+                    [plane, plane, halo, halo]
+                    + _scalar_specs(SCALARS)
+                    + [_spec((), jnp.uint32)],
+                )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="small set for CI (64/128 only, no 512+)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.quick:
+        upd = {v: tuple(l for l in s if l <= 128) for v, s in UPDATE_SIZES.items()}
+        swp = {v: tuple(l for l in s if l <= 128) for v, s in SWEEP_SIZES.items()}
+        slabs = tuple(s for s in SLAB_SHAPES if s[1] <= 128)
+        meas = tuple(l for l in MEASURE_SIZES if l <= 128)
+    else:
+        upd, swp, slabs, meas = UPDATE_SIZES, SWEEP_SIZES, SLAB_SHAPES, MEASURE_SIZES
+
+    manifest = {"version": 1, "programs": []}
+    n_built = n_skipped = 0
+    for name, kind, meta, fn, specs in build_programs(upd, swp, slabs, meas):
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        entry = {
+            "name": name,
+            "kind": kind,
+            "file": f"{name}.hlo.txt",
+            **meta,
+            "num_inputs": len(specs),
+        }
+        manifest["programs"].append(entry)
+        if os.path.exists(path) and not args.force:
+            n_skipped += 1
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(f"  lowered {name} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"artifacts: {n_built} lowered, {n_skipped} up-to-date, "
+        f"manifest has {len(manifest['programs'])} programs",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Tensor-core-style Metropolis: neighbor sums as matrix multiplies
+(paper §3.2, after Yang et al.'s TPU formulation, Eqs. 3–6).
+
+Each color plane is split by **row parity** (the paper's 2×2 sub-block
+decomposition expressed globally): for the black plane with even rows
+``B_e`` and odd rows ``B_o`` (each (h/2, w2)), the neighbor sums are
+
+    nn(B_e) = (I + D) · W_o + W_e · (I + S_L)
+    nn(B_o) = (I + Dᵀ) · W_e + W_o · (I + S_R)
+
+with ``D`` the cyclic down-shift and ``S_L/S_R`` the cyclic column
+shifts — exactly the paper's banded kernel matrix K, except our K carries
+the periodic corner entry, which **fuses the paper's separate boundary
+kernel into the matmul** (DESIGN.md §3; the `split` variant below mirrors
+the paper's 3-kernel pipeline for the ablation bench).
+
+Hardware adaptation: spins and K are cast to bf16 and multiplied with an
+f32 accumulator — the MXU-native mirror of the paper's fp16
+cublasHgemmBatched. All sums are small integers (|nn| ≤ 4), exact in
+bf16, so decisions stay bit-exact with ``ref.update_color``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import philox
+
+
+def _shift_mats(n, dtype):
+    """(I + down-shift) and its transpose, with periodic corner, n×n."""
+    eye = jnp.eye(n, dtype=dtype)
+    down = jnp.roll(eye, 1, axis=0)   # row r ← row r-1
+    return eye + down, eye + down.T
+
+
+def _col_shift_mats(n, dtype):
+    """(I + S_L) and (I + S_R): right-multiplication column shifts."""
+    eye = jnp.eye(n, dtype=dtype)
+    sl = jnp.roll(eye, 1, axis=1)     # (X @ S_L)[:, k] = X[:, k-1]
+    sr = jnp.roll(eye, -1, axis=1)    # (X @ S_R)[:, k] = X[:, k+1]
+    return eye + sl, eye + sr
+
+
+def _mm(a, b):
+    """bf16 × bf16 → f32 matmul (MXU-shaped)."""
+    return jnp.dot(
+        a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def neighbor_sums_matmul(source, color, row_offset=0):
+    """Neighbor sums for the target color via banded matmuls; must equal
+    ``ref.neighbor_sums`` exactly (integer-exact bf16 products)."""
+    h, w2 = source.shape
+    assert h % 2 == 0
+    # Contract: row_offset (traced) must be even — the parity split bakes
+    # q = i % 2 into the matrix structure. The coordinator only produces
+    # even slab bases (slab heights are even), and aot.py enforces it.
+    del row_offset
+    s = source.astype(jnp.float32)
+    s_e, s_o = s[0::2], s[1::2]                     # (h/2, w2) each
+    kv_down, kv_up = _shift_mats(h // 2, jnp.float32)
+    kh_left, kh_right = _col_shift_mats(w2, jnp.float32)
+
+    if color == 0:
+        # Black targets: even rows side-shift left, odd rows right.
+        nn_e = _mm(kv_down, s_o) + _mm(s_e, kh_left)
+        nn_o = _mm(kv_up, s_e) + _mm(s_o, kh_right)
+    else:
+        # White targets: parity of q flips (q = (i + 1) % 2).
+        nn_e = _mm(kv_down, s_o) + _mm(s_e, kh_right)
+        nn_o = _mm(kv_up, s_e) + _mm(s_o, kh_left)
+
+    nn = jnp.zeros((h, w2), dtype=jnp.float32)
+    nn = nn.at[0::2].set(nn_e).at[1::2].set(nn_o)
+    return nn.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("color",))
+def update_color(target, source, color, beta, seed, sweep, row_offset=0):
+    """Fused tensor-core update (matmul sums + spin update in one jit)."""
+    h, w2 = target.shape
+    nn = neighbor_sums_matmul(source, color, row_offset)
+    arg = (
+        (jnp.float32(-2.0) * jnp.float32(beta))
+        * target.astype(jnp.float32)
+        * nn.astype(jnp.float32)
+    )
+    acc = jnp.exp(arg)
+    u = philox.plane_uniforms(seed, color, h, w2, sweep, row_offset)
+    flip = u < acc
+    return jnp.where(flip, -target, target).astype(target.dtype)
+
+
+def sweep(black, white, beta, seed, sweep_idx, row_offset=0):
+    """Full tensor-core sweep."""
+    black = update_color(black, white, 0, beta, seed, sweep_idx, row_offset)
+    white = update_color(white, black, 1, beta, seed, sweep_idx, row_offset)
+    return black, white
+
+
+# ---------------------------------------------------------------------------
+# Split-phase variant: mirrors the paper's 3-kernel pipeline
+# (local matmul sums → boundary fix-up → spin update) for the ablation
+# bench. The local sums use K *without* the periodic corner; the boundary
+# pass adds the wrap contributions the paper's dedicated kernel handled.
+# ---------------------------------------------------------------------------
+
+def local_sums_split(source, color):
+    """Phase 1: banded matmuls with corner-free K (paper's local sums)."""
+    h, w2 = source.shape
+    s = source.astype(jnp.float32)
+    s_e, s_o = s[0::2], s[1::2]
+    r = h // 2
+    eye_r = jnp.eye(r, dtype=jnp.float32)
+    down_nc = jnp.roll(eye_r, 1, axis=0).at[0, :].set(0.0)   # no wrap row
+    up_nc = down_nc.T
+    eye_c = jnp.eye(w2, dtype=jnp.float32)
+    sl_nc = jnp.roll(eye_c, 1, axis=1).at[:, 0].set(0.0)
+    sr_nc = jnp.roll(eye_c, -1, axis=1).at[:, w2 - 1].set(0.0)
+
+    if color == 0:
+        nn_e = _mm(eye_r + down_nc, s_o) + _mm(s_e, eye_c + sl_nc)
+        nn_o = _mm(eye_r + up_nc, s_e) + _mm(s_o, eye_c + sr_nc)
+    else:
+        nn_e = _mm(eye_r + down_nc, s_o) + _mm(s_e, eye_c + sr_nc)
+        nn_o = _mm(eye_r + up_nc, s_e) + _mm(s_o, eye_c + sl_nc)
+    return nn_e, nn_o
+
+
+def local_sums_split_slab(source, color):
+    """Slab-local sums: corner-free vertical K (halo rows are added by the
+    caller), cyclic horizontal K (rows are complete). Returns (nn_e, nn_o)
+    as f32 of shape (h/2, w2) each."""
+    h, w2 = source.shape
+    s = source.astype(jnp.float32)
+    s_e, s_o = s[0::2], s[1::2]
+    r = h // 2
+    eye_r = jnp.eye(r, dtype=jnp.float32)
+    down_nc = jnp.roll(eye_r, 1, axis=0).at[0, :].set(0.0)
+    up_nc = down_nc.T
+    kh_left, kh_right = _col_shift_mats(w2, jnp.float32)
+    if color == 0:
+        nn_e = _mm(eye_r + down_nc, s_o) + _mm(s_e, kh_left)
+        nn_o = _mm(eye_r + up_nc, s_e) + _mm(s_o, kh_right)
+    else:
+        nn_e = _mm(eye_r + down_nc, s_o) + _mm(s_e, kh_right)
+        nn_o = _mm(eye_r + up_nc, s_e) + _mm(s_o, kh_left)
+    return nn_e, nn_o
+
+
+def add_boundaries_split(nn_e, nn_o, source, color):
+    """Phase 2: add the periodic wrap contributions (paper's boundary
+    kernel — the uncoalesced one it blames for the slowdown)."""
+    h2, w2 = nn_e.shape
+    s = source.astype(jnp.int32)
+    s_e, s_o = s[0::2], s[1::2]
+    # Vertical wrap: even-row block row 0 is global row 0, whose up
+    # neighbor is global row h-1 = odd block row h2-1.
+    nn_e = nn_e.at[0, :].add(s_o[h2 - 1, :])
+    # Odd block row h2-1 (global h-1) down neighbor: global 0 = even row 0.
+    nn_o = nn_o.at[h2 - 1, :].add(s_e[0, :])
+    # Horizontal wrap: the shifted column falls off one edge.
+    if color == 0:
+        nn_e = nn_e.at[:, 0].add(s_e[:, w2 - 1])   # left shift wrap
+        nn_o = nn_o.at[:, w2 - 1].add(s_o[:, 0])   # right shift wrap
+    else:
+        nn_e = nn_e.at[:, w2 - 1].add(s_e[:, 0])
+        nn_o = nn_o.at[:, 0].add(s_o[:, w2 - 1])
+    return nn_e, nn_o
+
+
+def update_spins_split(target, nn, beta, seed, sweep_idx, color):
+    """Phase 3: spin update from completed sums (paper's final kernel)."""
+    h, w2 = target.shape
+    arg = (
+        (jnp.float32(-2.0) * jnp.float32(beta))
+        * target.astype(jnp.float32)
+        * nn.astype(jnp.float32)
+    )
+    acc = jnp.exp(arg)
+    u = philox.plane_uniforms(seed, color, h, w2, sweep_idx)
+    return jnp.where(u < acc, -target, target).astype(target.dtype)
+
+
+def update_color_split(target, source, color, beta, seed, sweep_idx):
+    """The paper-faithful 3-phase pipeline (ablation baseline)."""
+    nn_e, nn_o = local_sums_split(source, color)
+    nn_e, nn_o = add_boundaries_split(nn_e, nn_o, source, color)
+    h, w2 = target.shape
+    nn = jnp.zeros((h, w2), dtype=jnp.float32)
+    nn = nn.at[0::2].set(nn_e).at[1::2].set(nn_o).astype(jnp.int32)
+    return update_spins_split(target, nn, beta, seed, sweep_idx, color)

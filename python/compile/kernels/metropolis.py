@@ -1,0 +1,109 @@
+"""Basic checkerboard Metropolis as a Pallas kernel (paper §3.1).
+
+Hardware adaptation (DESIGN.md §3): the CUDA version assigns one thread
+per spin; on TPU the natural unit is a VMEM-resident row-block. The grid
+iterates over row blocks of the target color plane; the source plane is
+delivered as **three** row-blocks (previous / current / next, periodic via
+the BlockSpec ``index_map``), which expresses the same halo the CUDA
+kernel reads through shared memory. The parity column shift (``joff`` in
+the paper's Fig. 2) is a roll local to the block.
+
+Must match ``ref.update_color`` bit-exactly — pytest enforces this.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import philox
+
+
+def _kernel(tgt_ref, prev_ref, cur_ref, next_ref, scal_ref, out_ref, *, color, block_h, w2):
+    """One grid step: update ``block_h`` rows of the target color.
+
+    ``scal_ref`` packs [beta (f32 bits), seed, sweep, row_offset] as u32.
+    """
+    g = pl.program_id(0)
+    scal = scal_ref[...]
+    beta = jax.lax.bitcast_convert_type(scal[0], jnp.float32)
+    seed, sweep, row_offset = scal[1], scal[2], scal[3]
+
+    tgt = tgt_ref[...].astype(jnp.int32)    # (block_h, w2) target spins
+    prev = prev_ref[...].astype(jnp.int32)  # source row-block g-1 (periodic)
+    cur = cur_ref[...].astype(jnp.int32)    # source row-block g
+    nxt = next_ref[...].astype(jnp.int32)   # source row-block g+1 (periodic)
+
+    # Row r's up-neighbor row is global r-1, down-neighbor r+1: slice a
+    # 3-block stack — the VMEM analogue of the CUDA shared-memory tile.
+    stacked = jnp.concatenate([prev, cur, nxt], axis=0)
+    up = jax.lax.slice_in_dim(stacked, block_h - 1, 2 * block_h - 1, axis=0)
+    down = jax.lax.slice_in_dim(stacked, block_h + 1, 2 * block_h + 1, axis=0)
+
+    # Side columns: k-1 when parity q == 0, k+1 when q == 1 (paper joff).
+    left = jnp.roll(cur, 1, axis=1)
+    right = jnp.roll(cur, -1, axis=1)
+    grows = (
+        jnp.uint32(g * block_h)
+        + jnp.arange(block_h, dtype=jnp.uint32)
+        + row_offset
+    )
+    q = ((grows + jnp.uint32(color)) % 2).astype(jnp.int32)[:, None]
+    side = jnp.where(q == 0, left, right)
+
+    nn = up + down + cur + side
+    arg = (
+        (jnp.float32(-2.0) * beta)
+        * tgt.astype(jnp.float32)
+        * nn.astype(jnp.float32)
+    )
+    acc = jnp.exp(arg)
+    u = philox.row_uniforms(seed, jnp.uint32(color), grows, w2, sweep)
+    flip = u < acc
+    out_ref[...] = jnp.where(flip, -tgt, tgt).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("color", "block_h"))
+def update_color(target, source, color, beta, seed, sweep, row_offset=0, *, block_h=None):
+    """Pallas color update; mirrors ``ref.update_color`` (traced scalars).
+
+    ``block_h``: rows per grid step. Default min(h, 256): a
+    3·block_h × w2 int8 source tile plus target/output/uniforms stays well
+    inside a 16 MB VMEM budget up to w2 = 4096 (see DESIGN.md §Perf/L1).
+    """
+    h, w2 = target.shape
+    if block_h is None:
+        block_h = min(h, 256)
+    assert h % block_h == 0, f"h={h} not divisible by block_h={block_h}"
+    nblocks = h // block_h
+
+    scal = jnp.stack(
+        [
+            jax.lax.bitcast_convert_type(jnp.float32(beta), jnp.uint32),
+            jnp.uint32(seed),
+            jnp.uint32(sweep),
+            jnp.uint32(row_offset),
+        ]
+    )
+
+    spec_row = pl.BlockSpec((block_h, w2), lambda g: (g, 0))
+    spec_prev = pl.BlockSpec((block_h, w2), lambda g: ((g - 1) % nblocks, 0))
+    spec_next = pl.BlockSpec((block_h, w2), lambda g: ((g + 1) % nblocks, 0))
+    spec_scal = pl.BlockSpec((4,), lambda g: (0,))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, color=color, block_h=block_h, w2=w2),
+        grid=(nblocks,),
+        in_specs=[spec_row, spec_prev, spec_row, spec_next, spec_scal],
+        out_specs=spec_row,
+        out_shape=jax.ShapeDtypeStruct(target.shape, target.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(target, source, source, source, scal)
+
+
+def sweep(black, white, beta, seed, sweep_idx, row_offset=0):
+    """Full sweep via the Pallas kernel (black then white)."""
+    black = update_color(black, white, 0, beta, seed, sweep_idx, row_offset)
+    white = update_color(white, black, 1, beta, seed, sweep_idx, row_offset)
+    return black, white

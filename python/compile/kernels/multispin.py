@@ -1,0 +1,157 @@
+"""Multi-spin-coded Metropolis as a Pallas kernel (paper §3.3).
+
+Hardware adaptation (DESIGN.md §3): the CUDA version packs 16 spins into a
+64-bit register per thread; the TPU VPU has no 64-bit lanes, so we pack
+**8 spins per uint32 lane** (4 bits each) and let the 8×128 vector unit
+process thousands of nibbles per op. The word-parallel trick carries over
+unchanged: nearest-neighbor sums for 8 spins cost three 32-bit adds
+(nibble sums ≤ 4 < 16 — no carry), and the side word is one shift away
+(paper Fig. 3).
+
+The acceptance test uses the 10-entry probability table (σ ∈ {0,1},
+s ∈ {0..4}); its values are `exp` of the *same* f32 arguments the ref/
+basic kernels compute per site, so decisions remain bit-exact with
+``ref.update_color`` (pytest enforces it through pack/unpack).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import philox
+
+SPINS_PER_WORD = 8
+NIBBLE_LSB32 = 0x11111111
+
+
+def pack01(plane01):
+    """(h, w2) 0/1 spins → (h, w2/8) uint32 nibble-packed words."""
+    h, w2 = plane01.shape
+    assert w2 % SPINS_PER_WORD == 0
+    v = plane01.astype(jnp.uint32).reshape(h, w2 // SPINS_PER_WORD, SPINS_PER_WORD)
+    shifts = (4 * jnp.arange(SPINS_PER_WORD, dtype=jnp.uint32))[None, None, :]
+    return (v << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack01(words, w2):
+    """(h, w2/8) uint32 words → (h, w2) 0/1 int8 spins."""
+    h = words.shape[0]
+    shifts = (4 * jnp.arange(SPINS_PER_WORD, dtype=jnp.uint32))[None, None, :]
+    v = (words[:, :, None] >> shifts) & jnp.uint32(0xF)
+    return v.reshape(h, w2).astype(jnp.int8)
+
+
+def pack_pm1(plane_pm1):
+    """±1 plane → packed words (via the 0/1 mapping)."""
+    return pack01((plane_pm1.astype(jnp.int32) + 1) // 2)
+
+
+def unpack_pm1(words, w2):
+    """Packed words → ±1 int8 plane."""
+    return (unpack01(words, w2).astype(jnp.int32) * 2 - 1).astype(jnp.int8)
+
+
+def _kernel(tgt_ref, prev_ref, cur_ref, next_ref, scal_ref, out_ref, *, color, block_h, w32):
+    g = pl.program_id(0)
+    scal = scal_ref[...]
+    beta = jax.lax.bitcast_convert_type(scal[0], jnp.float32)
+    seed, sweep, row_offset = scal[1], scal[2], scal[3]
+
+    tgt = tgt_ref[...]
+    prev = prev_ref[...]
+    cur = cur_ref[...]
+    nxt = next_ref[...]
+
+    stacked = jnp.concatenate([prev, cur, nxt], axis=0)
+    up = jax.lax.slice_in_dim(stacked, block_h - 1, 2 * block_h - 1, axis=0)
+    down = jax.lax.slice_in_dim(stacked, block_h + 1, 2 * block_h + 1, axis=0)
+
+    grows = (
+        jnp.uint32(g * block_h)
+        + jnp.arange(block_h, dtype=jnp.uint32)
+        + row_offset
+    )
+    q = ((grows + jnp.uint32(color)) % 2)[:, None]
+
+    # Side word (paper Fig. 3): one nibble-shift toward the parity side,
+    # boundary nibble pulled from the adjacent word (periodic roll).
+    prev_word = jnp.roll(cur, 1, axis=1)
+    next_word = jnp.roll(cur, -1, axis=1)
+    side0 = (cur << jnp.uint32(4)) | (prev_word >> jnp.uint32(28))
+    side1 = (cur >> jnp.uint32(4)) | (next_word << jnp.uint32(28))
+    side = jnp.where(q == 0, side0, side1)
+
+    # Three adds → 8 neighbor sums per word.
+    sums = up + down + cur + side
+
+    # 10-entry acceptance table: exp of the same f32 args as ref.py.
+    s01 = jnp.arange(5, dtype=jnp.int32)
+    nn_pm = (2 * s01 - 4).astype(jnp.float32)[None, :]          # (1, 5)
+    sigma_pm = (2 * jnp.arange(2, dtype=jnp.int32) - 1).astype(jnp.float32)[:, None]  # (2, 1)
+    table = jnp.exp((jnp.float32(-2.0) * beta) * sigma_pm * nn_pm)  # (2, 5)
+
+    # Per-site uniforms, laid out nibble-major: k = 8*word + nibble.
+    u = philox.row_uniforms(seed, jnp.uint32(color), grows, w32 * SPINS_PER_WORD, sweep)
+    u = u.reshape(block_h, w32, SPINS_PER_WORD)
+
+    out = jnp.zeros_like(tgt)
+    for n in range(SPINS_PER_WORD):
+        sh = jnp.uint32(4 * n)
+        s = ((sums >> sh) & jnp.uint32(0x7)).astype(jnp.int32)   # 0..4
+        sig = ((tgt >> sh) & jnp.uint32(1)).astype(jnp.int32)    # 0/1
+        acc = table[sig, s]
+        flip = (u[:, :, n] < acc).astype(jnp.uint32)
+        newbit = (sig.astype(jnp.uint32) ^ flip) & jnp.uint32(1)
+        out = out | (newbit << sh)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("color", "block_h"))
+def update_color_packed(
+    target, source, color, beta, seed, sweep, row_offset=0, *, block_h=None
+):
+    """Packed-plane color update; planes are (h, w2/8) uint32 words."""
+    h, w32 = target.shape
+    if block_h is None:
+        block_h = min(h, 256)
+    assert h % block_h == 0
+    nblocks = h // block_h
+
+    scal = jnp.stack(
+        [
+            jax.lax.bitcast_convert_type(jnp.float32(beta), jnp.uint32),
+            jnp.uint32(seed),
+            jnp.uint32(sweep),
+            jnp.uint32(row_offset),
+        ]
+    )
+
+    spec_row = pl.BlockSpec((block_h, w32), lambda g: (g, 0))
+    spec_prev = pl.BlockSpec((block_h, w32), lambda g: ((g - 1) % nblocks, 0))
+    spec_next = pl.BlockSpec((block_h, w32), lambda g: ((g + 1) % nblocks, 0))
+    spec_scal = pl.BlockSpec((4,), lambda g: (0,))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, color=color, block_h=block_h, w32=w32),
+        grid=(nblocks,),
+        in_specs=[spec_row, spec_prev, spec_row, spec_next, spec_scal],
+        out_specs=spec_row,
+        out_shape=jax.ShapeDtypeStruct(target.shape, target.dtype),
+        interpret=True,
+    )(target, source, source, source, scal)
+
+
+def sweep_packed(black_w, white_w, beta, seed, sweep_idx, row_offset=0):
+    """Full sweep on packed planes."""
+    black_w = update_color_packed(black_w, white_w, 0, beta, seed, sweep_idx, row_offset)
+    white_w = update_color_packed(white_w, black_w, 1, beta, seed, sweep_idx, row_offset)
+    return black_w, white_w
+
+
+def sweep(black, white, beta, seed, sweep_idx, row_offset=0):
+    """±1-plane interface (packs, sweeps, unpacks) — used by tests/model."""
+    w2 = black.shape[1]
+    bw, ww = sweep_packed(pack_pm1(black), pack_pm1(white), beta, seed, sweep_idx, row_offset)
+    return unpack_pm1(bw, w2), unpack_pm1(ww, w2)

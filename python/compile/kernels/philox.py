@@ -1,0 +1,116 @@
+"""Philox4x32-10 counter-based RNG in pure jnp (uint32 only).
+
+Bit-exact twin of ``rust/src/rng/philox.rs`` — the shared determinism
+convention (DESIGN.md §1). Every Metropolis decision in every engine,
+Rust or JAX, draws from this function keyed by *global* lattice
+coordinates, which is what makes trajectories independent of
+partitioning, packing and language.
+
+The 32x32→64 multiply is done with 16-bit limbs so the code runs with or
+without ``jax_enable_x64``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+PHILOX_W32_0 = np.uint32(0x9E3779B9)
+PHILOX_W32_1 = np.uint32(0xBB67AE85)
+PHILOX_M4X32_0 = np.uint32(0xD2511F53)
+PHILOX_M4X32_1 = np.uint32(0xCD9E8D57)
+
+# Stream-domain tags (must match rust/src/rng/philox.rs and lattice/init.rs).
+DOMAIN_TAG = np.uint32(0x49534E47)  # "ISNG"
+CTR_TAG = np.uint32(0x9E3779B9)
+INIT_TAG = np.uint32(0x494E4954)  # "INIT"
+
+_MASK16 = np.uint32(0xFFFF)
+
+
+def _mulhilo(a, b):
+    """(hi, lo) of the 64-bit product of two uint32 arrays, via 16-bit limbs."""
+    a = jnp.uint32(a)
+    b = b.astype(jnp.uint32) if hasattr(b, "astype") else jnp.uint32(b)
+    lo = (a * b).astype(jnp.uint32)  # wrapping low half
+    ah, al = a >> 16, a & _MASK16
+    bh, bl = b >> 16, b & _MASK16
+    m1 = ah * bl  # < 2^32, fits
+    m2 = al * bh
+    lo_part = al * bl
+    carry = ((lo_part >> 16) + (m1 & _MASK16) + (m2 & _MASK16)) >> 16
+    hi = ah * bh + (m1 >> 16) + (m2 >> 16) + carry
+    return hi.astype(jnp.uint32), lo
+
+
+def _round(c0, c1, c2, c3, k0, k1):
+    hi0, lo0 = _mulhilo(PHILOX_M4X32_0, c0)
+    hi1, lo1 = _mulhilo(PHILOX_M4X32_1, c2)
+    return hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+
+
+def philox4x32_10(ctr, key):
+    """Full 10-round Philox4x32 block.
+
+    ``ctr``: sequence of 4 uint32 scalars/arrays (broadcastable).
+    ``key``: sequence of 2 uint32 scalars/arrays.
+    Returns a tuple of 4 uint32 arrays.
+    """
+    u32 = jnp.uint32
+    c0, c1, c2, c3 = [jnp.asarray(c).astype(u32) for c in ctr]
+    k0, k1 = [jnp.asarray(k).astype(u32) for k in key]
+    c0, c1, c2, c3 = _round(c0, c1, c2, c3, k0, k1)
+    for _ in range(9):
+        k0 = k0 + PHILOX_W32_0
+        k1 = k1 + PHILOX_W32_1
+        c0, c1, c2, c3 = _round(c0, c1, c2, c3, k0, k1)
+    return c0, c1, c2, c3
+
+
+def uniform24(r):
+    """The shared u32 → f32 mapping: ``(r >> 8) * 2^-24`` (exact)."""
+    return (r >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / 16777216.0)
+
+
+def row_uniforms(seed, color, grow, w2, sweep):
+    """Per-site uniforms for one color row under the site-group convention.
+
+    ``grow`` is the *global* row index (scalar or (h,1) array); ``w2`` the
+    plane width. Requires ``w2 % 4 == 0``. Returns f32 of shape
+    ``broadcast(grow) × w2`` where column ``k`` uses Philox lane ``k % 4``
+    of counter group ``k // 4`` — identical to Rust ``site_u32``.
+    """
+    assert w2 % 4 == 0, "site-group convention needs W/2 divisible by 4"
+    n4 = w2 // 4
+    kg = jnp.arange(n4, dtype=jnp.uint32)  # (n4,)
+    grow = jnp.asarray(grow, dtype=jnp.uint32)
+    # Broadcast counters against the leading row dimension(s) of `grow`.
+    row = grow[..., None] if grow.ndim else grow
+    lanes = philox4x32_10(
+        (row, kg, jnp.uint32(sweep), CTR_TAG),
+        (jnp.uint32(seed), DOMAIN_TAG ^ jnp.uint32(color)),
+    )
+    # lanes: 4 arrays of shape (..., n4) → interleave to (..., w2) with
+    # k = 4*group + lane.
+    stacked = jnp.stack(lanes, axis=-1)  # (..., n4, 4)
+    out = stacked.reshape(stacked.shape[:-2] + (w2,))
+    return uniform24(out)
+
+
+def plane_uniforms(seed, color, h, w2, sweep, row_offset=0):
+    """Uniforms for a whole color plane (h × w2), global rows starting at
+    ``row_offset`` (non-zero for slab programs)."""
+    rows = jnp.arange(h, dtype=jnp.uint32) + jnp.uint32(row_offset)
+    return row_uniforms(seed, color, rows, w2, sweep)
+
+
+def init_bits(seed, h, w, row_offset=0):
+    """The shared hot-start bit field: ``bit(i, j) = philox([i, j, 0, 0],
+    [seed, INIT_TAG]).lane0 & 1`` for global rows ``row_offset + i``.
+
+    Returns uint32 of shape (h, w) with values in {0, 1}.
+    """
+    i = jnp.arange(h, dtype=jnp.uint32)[:, None] + jnp.uint32(row_offset)
+    j = jnp.arange(w, dtype=jnp.uint32)[None, :]
+    r0, _, _, _ = philox4x32_10(
+        (i, j, jnp.uint32(0), jnp.uint32(0)), (jnp.uint32(seed), INIT_TAG)
+    )
+    return r0 & jnp.uint32(1)

@@ -1,0 +1,132 @@
+"""Pure-jnp reference implementation (the correctness oracle).
+
+Implements the checkerboard Metropolis update with ``jnp.roll`` stencils
+and the shared Philox site-group RNG. Every Pallas kernel is required to
+match this module **bit-exactly** (pytest enforces it), and the Rust
+scalar/multi-spin engines follow the identical conventions (see
+``rust/src/lattice/geometry.rs`` and DESIGN.md §1).
+
+Conventions:
+  * color of site (i, j) = (i + j) % 2, 0 = black;
+  * color plane (h, w/2): site (i, j) stored at (i, j // 2),
+    j = 2k + q with q = (i + color) % 2;
+  * neighbors of a color-c plane entry (i, k) in the opposite plane:
+    (i-1, k), (i+1, k), (i, k), (i, k-1 if q == 0 else k+1), periodic.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from . import philox
+
+# Critical temperature 2 / ln(1 + sqrt(2)) (paper: 2.269185 J).
+T_CRIT = 2.0 / math.log(1.0 + math.sqrt(2.0))
+
+
+def split_planes(spins):
+    """(h, w) ±1 spins → (black, white) planes of shape (h, w/2)."""
+    h, w = spins.shape
+    rows = jnp.arange(h)[:, None]
+    k = jnp.arange(w // 2)[None, :]
+    cols_black = 2 * k + (rows % 2)
+    cols_white = 2 * k + ((rows + 1) % 2)
+    black = jnp.take_along_axis(spins, cols_black, axis=1)
+    white = jnp.take_along_axis(spins, cols_white, axis=1)
+    return black, white
+
+
+def merge_planes(black, white):
+    """Inverse of :func:`split_planes`."""
+    h, w2 = black.shape
+    w = 2 * w2
+    rows = jnp.arange(h)[:, None]
+    k = jnp.arange(w2)[None, :]
+    spins = jnp.zeros((h, w), dtype=black.dtype)
+    cols_black = 2 * k + (rows % 2)
+    cols_white = 2 * k + ((rows + 1) % 2)
+    spins = spins.at[rows, cols_black].set(black)
+    spins = spins.at[rows, cols_white].set(white)
+    return spins
+
+
+def init_spins(seed, h, w, row_offset=0):
+    """Shared hot start: (h, w) ±1 int8 spins (see lattice/init.rs)."""
+    bits = philox.init_bits(seed, h, w, row_offset)
+    return jnp.where(bits == 1, jnp.int8(1), jnp.int8(-1))
+
+
+def init_planes(seed, h, w):
+    """Hot start directly as (black, white) planes."""
+    return split_planes(init_spins(seed, h, w))
+
+
+def neighbor_sums(source, color, row_offset=0):
+    """Nearest-neighbor ±1 sums for the *target* color, from the opposite
+    color plane ``source`` (h, w2). Returns int32 in {-4,...,4}."""
+    s = source.astype(jnp.int32)
+    up = jnp.roll(s, 1, axis=0)
+    down = jnp.roll(s, -1, axis=0)
+    left = jnp.roll(s, 1, axis=1)    # entry k ← source[k-1]
+    right = jnp.roll(s, -1, axis=1)  # entry k ← source[k+1]
+    h = source.shape[0]
+    q = ((jnp.arange(h) + row_offset + color) % 2)[:, None]
+    side = jnp.where(q == 0, left, right)
+    return up + down + s + side
+
+
+def acceptance(target, nn, beta):
+    """Metropolis acceptance probability, f32, computed exactly like the
+    Rust table: ``exp((-2β) · σ · nn)`` — all intermediate products exact
+    in f32 (small even integers), so the `exp` argument is identical
+    across formulations."""
+    arg = (
+        (jnp.float32(-2.0) * jnp.float32(beta))
+        * target.astype(jnp.float32)
+        * nn.astype(jnp.float32)
+    )
+    return jnp.exp(arg)
+
+
+def update_color(target, source, color, beta, seed, sweep_idx, row_offset=0):
+    """One color phase of the checkerboard Metropolis sweep."""
+    h, w2 = target.shape
+    nn = neighbor_sums(source, color, row_offset)
+    acc = acceptance(target, nn, beta)
+    u = philox.plane_uniforms(seed, color, h, w2, sweep_idx, row_offset)
+    flip = u < acc
+    return jnp.where(flip, -target, target).astype(target.dtype)
+
+
+def sweep(black, white, beta, seed, sweep_idx, row_offset=0):
+    """One full sweep: black phase then white phase (paper order)."""
+    black = update_color(black, white, 0, beta, seed, sweep_idx, row_offset)
+    white = update_color(white, black, 1, beta, seed, sweep_idx, row_offset)
+    return black, white
+
+
+def magnetization_sum(black, white):
+    """Σσ as int32."""
+    return black.astype(jnp.int32).sum() + white.astype(jnp.int32).sum()
+
+
+def energy_sum(black, white):
+    """Total bond energy −Σ_<ij> σσ (each torus bond once), int32."""
+    spins = merge_planes(black, white).astype(jnp.int32)
+    return -(
+        (spins * jnp.roll(spins, -1, axis=0)).sum()
+        + (spins * jnp.roll(spins, -1, axis=1)).sum()
+    )
+
+
+def magnetization(black, white):
+    """Magnetization per site as a python float."""
+    n = black.size + white.size
+    return float(magnetization_sum(black, white)) / n
+
+
+def onsager_magnetization(t):
+    """Paper Eq. 7 (for validation plots)."""
+    if t >= T_CRIT:
+        return 0.0
+    return (1.0 - math.sinh(2.0 / t) ** -4) ** 0.125

@@ -1,0 +1,122 @@
+"""L2: the JAX simulation programs that get AOT-lowered to HLO text.
+
+Each program is a pure function over color planes, built from the L1
+kernels (``kernels.metropolis`` / ``kernels.multispin`` /
+``kernels.matmul_nn``). The Rust runtime (`rust/src/runtime/`) loads the
+lowered artifacts and drives them; Python never runs at request time.
+
+Program kinds (see ``aot.py`` for the manifest):
+  * ``update``  — one color phase on full planes.
+  * ``sweep``   — n full sweeps via ``lax.fori_loop`` (dispatch amortizer).
+  * ``measure`` — Σσ and bond energy.
+  * ``slab``    — one color phase on a slab with explicit halo rows in and
+                  boundary rows out (the coordinator's unit of work,
+                  mirroring the paper's unified-memory boundary reads).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_nn, metropolis, multispin, ref
+
+VARIANTS = ("basic", "multispin", "tensorcore")
+
+
+def _update_fn(variant):
+    if variant == "basic":
+        return metropolis.update_color
+    if variant == "tensorcore":
+        return matmul_nn.update_color
+    if variant == "multispin":
+        return multispin.update_color_packed
+    raise ValueError(f"unknown variant {variant}")
+
+
+def update_color(variant, target, source, color, beta, seed, sweep_idx, row_offset=0):
+    """One color phase under the chosen variant."""
+    return _update_fn(variant)(target, source, color, beta, seed, sweep_idx, row_offset)
+
+
+def sweep_pair(variant, black, white, beta, seed, sweep_idx, row_offset=0):
+    """One full sweep (black then white)."""
+    black = update_color(variant, black, white, 0, beta, seed, sweep_idx, row_offset)
+    white = update_color(variant, white, black, 1, beta, seed, sweep_idx, row_offset)
+    return black, white
+
+
+def sweep_n(variant, black, white, beta, seed, step0, nsteps):
+    """``nsteps`` sweeps in-program (fori_loop) — the dispatch amortizer
+    the Rust engines use for throughput runs."""
+
+    def body(t, planes):
+        b, w = planes
+        return sweep_pair(variant, b, w, beta, seed, step0 + jnp.uint32(t))
+
+    return jax.lax.fori_loop(0, nsteps, body, (black, white))
+
+
+def measure(black, white):
+    """(Σσ, E) as int32 — valid for lattices up to 2^15 × 2^15."""
+    return ref.magnetization_sum(black, white), ref.energy_sum(black, white)
+
+
+def measure_packed(black_w, white_w, w2):
+    """Measurement on packed uint32 planes (multispin artifacts)."""
+    black = multispin.unpack_pm1(black_w, w2)
+    white = multispin.unpack_pm1(white_w, w2)
+    return measure(black, white)
+
+
+# ---------------------------------------------------------------------------
+# Slab programs (multi-device unit of work).
+# ---------------------------------------------------------------------------
+
+def _slab_neighbor_sums(source, src_top, src_bot, color, row_offset):
+    """Neighbor sums for a slab: vertical neighbors come from the extended
+    source (halo rows), side columns stay periodic in W (full rows)."""
+    s = source.astype(jnp.int32)
+    ext = jnp.concatenate(
+        [src_top.astype(jnp.int32), s, src_bot.astype(jnp.int32)], axis=0
+    )
+    h = source.shape[0]
+    up = jax.lax.slice_in_dim(ext, 0, h, axis=0)
+    down = jax.lax.slice_in_dim(ext, 2, h + 2, axis=0)
+    left = jnp.roll(s, 1, axis=1)
+    right = jnp.roll(s, -1, axis=1)
+    q = ((jnp.arange(h, dtype=jnp.uint32) + row_offset + jnp.uint32(color)) % 2)[
+        :, None
+    ].astype(jnp.int32)
+    side = jnp.where(q == 0, left, right)
+    return up + down + s + side
+
+
+def slab_update_color(variant, target, source, src_top, src_bot, color, beta, seed,
+                      sweep_idx, row_offset):
+    """One color phase on a slab. Returns (target', first row, last row) —
+    the boundary rows the coordinator ships to the neighboring devices
+    (the NVLink reads of paper §4)."""
+    h, w2 = target.shape
+    if variant == "tensorcore":
+        # Local sums via the corner-free vertical K, then add the halo
+        # contributions to the edge rows — the matmul shape of the paper's
+        # boundary kernel.
+        nn_e, nn_o = matmul_nn.local_sums_split_slab(source, color)
+        nn = jnp.zeros((h, w2), dtype=jnp.float32)
+        nn = nn.at[0::2].set(nn_e).at[1::2].set(nn_o)
+        nn = nn.at[0, :].add(src_top[0].astype(jnp.float32))
+        nn = nn.at[h - 1, :].add(src_bot[0].astype(jnp.float32))
+        nn = nn.astype(jnp.int32)
+    else:
+        nn = _slab_neighbor_sums(source, src_top, src_bot, color, row_offset)
+
+    arg = (
+        (jnp.float32(-2.0) * jnp.float32(beta))
+        * target.astype(jnp.float32)
+        * nn.astype(jnp.float32)
+    )
+    acc = jnp.exp(arg)
+    from .kernels import philox
+
+    u = philox.plane_uniforms(seed, color, h, w2, sweep_idx, row_offset)
+    out = jnp.where(u < acc, -target, target).astype(target.dtype)
+    return out, out[0:1, :], out[h - 1 : h, :]

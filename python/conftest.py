@@ -1,0 +1,6 @@
+"""pytest config: make `compile` importable when running from python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,57 @@
+"""AOT pipeline: program generation and HLO-text lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_program_names_unique_and_complete():
+    progs = list(
+        aot.build_programs(
+            aot.UPDATE_SIZES, aot.SWEEP_SIZES, aot.SLAB_SHAPES, aot.MEASURE_SIZES
+        )
+    )
+    names = [p[0] for p in progs]
+    assert len(names) == len(set(names)), "duplicate program names"
+    kinds = {p[1] for p in progs}
+    assert kinds == {"update", "sweep", "measure", "measure_packed", "slab"}
+    # Every variant appears.
+    variants = {p[2]["variant"] for p in progs}
+    assert {"basic", "multispin", "tensorcore", "any"} <= variants
+
+
+def test_hlo_text_lowering_roundtrips():
+    """Lower one small program and check the HLO text is parseable-ish:
+    has an ENTRY, the right parameter count, and a tuple root (the rust
+    loader relies on return_tuple=True)."""
+    progs = {
+        p[0]: p
+        for p in aot.build_programs(
+            {"basic": (64,)}, {}, (), ()
+        )
+    }
+    name, kind, meta, fn, specs = progs["update_basic_64x64_c0"]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert text.count("parameter(") >= len(specs)
+    assert "tuple(" in text
+    assert "s8[64,32]" in text
+
+
+def test_scalar_spec_layout():
+    """The manifest's documented input order: planes first, then scalars
+    beta/seed/sweep (+ step extras) — the Rust executor hard-relies on it."""
+    progs = list(aot.build_programs({"basic": (64,)}, {"basic": (64,)}, (), (64,)))
+    by_kind = {}
+    for p in progs:
+        by_kind.setdefault(p[1], p)
+    upd = by_kind["update"]
+    assert [s.dtype for s in upd[4]] == [
+        jnp.int8, jnp.int8, jnp.float32, jnp.uint32, jnp.uint32,
+    ]
+    swp = by_kind["sweep"]
+    assert [s.dtype for s in swp[4]] == [
+        jnp.int8, jnp.int8, jnp.float32, jnp.uint32, jnp.uint32, jnp.int32,
+    ]

@@ -1,0 +1,127 @@
+"""Pallas kernels vs the jnp oracle: bit-exact equality is the contract.
+
+Hypothesis sweeps shapes, seeds, temperatures, colors, block sizes and
+slab offsets (the guide's L1 requirement: shape/dtype sweeps with
+assert-allclose against ref — here strengthened to array_equal, since the
+kernels share the exact f32 decision math)."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import matmul_nn, metropolis, multispin, ref
+
+# h even; w2 % 8 == 0 (multispin packing) → w % 16 == 0.
+DIMS = st.tuples(
+    st.integers(min_value=1, max_value=8).map(lambda x: 2 * x),
+    st.integers(min_value=1, max_value=8).map(lambda x: 16 * x),
+)
+SEEDS = st.integers(min_value=0, max_value=2**31)
+BETAS = st.floats(min_value=0.0, max_value=1.5, allow_nan=False, width=32, allow_subnormal=False)
+COLORS = st.integers(min_value=0, max_value=1)
+
+
+def _planes(seed, h, w):
+    return ref.init_planes(seed, h, w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, SEEDS, BETAS, COLORS)
+def test_basic_kernel_bit_exact(dims, seed, beta, color):
+    h, w = dims
+    b, wh = _planes(seed, h, w)
+    tgt, src = (b, wh) if color == 0 else (wh, b)
+    want = np.asarray(ref.update_color(tgt, src, color, beta, seed, 1))
+    # block_h: any divisor of h exercises the periodic index_map.
+    for bh in {1, 2, h // 2 or 1, h}:
+        if h % bh:
+            continue
+        got = np.asarray(
+            metropolis.update_color(tgt, src, color, beta, seed, 1, block_h=bh)
+        )
+        assert np.array_equal(want, got), f"block_h={bh}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, SEEDS, BETAS)
+def test_multispin_kernel_bit_exact(dims, seed, beta):
+    h, w = dims
+    b, wh = _planes(seed, h, w)
+    rb, rw = ref.sweep(b, wh, beta, seed, 0)
+    kb, kw = multispin.sweep(b, wh, beta, seed, 0)
+    assert np.array_equal(np.asarray(rb), np.asarray(kb))
+    assert np.array_equal(np.asarray(rw), np.asarray(kw))
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, SEEDS)
+def test_pack_unpack_roundtrip(dims, seed):
+    h, w = dims
+    b, _ = _planes(seed, h, w)
+    packed = multispin.pack_pm1(b)
+    assert packed.dtype == np.uint32
+    back = multispin.unpack_pm1(packed, w // 2)
+    assert np.array_equal(np.asarray(back), np.asarray(b))
+    # Packed words contain pure 0/1 nibbles.
+    assert (np.asarray(packed) & ~np.uint32(multispin.NIBBLE_LSB32)).max() == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, SEEDS, COLORS)
+def test_matmul_sums_equal_stencil_sums(dims, seed, color):
+    h, w = dims
+    b, wh = _planes(seed, h, w)
+    src = wh if color == 0 else b
+    want = np.asarray(ref.neighbor_sums(src, color))
+    got = np.asarray(matmul_nn.neighbor_sums_matmul(src, color))
+    assert np.array_equal(want, got)
+
+
+@settings(max_examples=15, deadline=None)
+@given(DIMS, SEEDS, BETAS)
+def test_tensorcore_kernel_bit_exact(dims, seed, beta):
+    h, w = dims
+    b, wh = _planes(seed, h, w)
+    rb, rw = ref.sweep(b, wh, beta, seed, 0)
+    kb, kw = matmul_nn.sweep(b, wh, beta, seed, 0)
+    assert np.array_equal(np.asarray(rb), np.asarray(kb))
+    assert np.array_equal(np.asarray(rw), np.asarray(kw))
+
+
+@settings(max_examples=10, deadline=None)
+@given(DIMS, SEEDS, BETAS, COLORS)
+def test_split_pipeline_equals_fused(dims, seed, beta, color):
+    """The paper's 3-kernel pipeline (local sums → boundary → update) must
+    produce the same physics as the fused kernel."""
+    h, w = dims
+    b, wh = _planes(seed, h, w)
+    tgt, src = (b, wh) if color == 0 else (wh, b)
+    fused = np.asarray(matmul_nn.update_color(tgt, src, color, beta, seed, 0))
+    split = np.asarray(matmul_nn.update_color_split(tgt, src, color, beta, seed, 0))
+    assert np.array_equal(fused, split)
+
+
+def test_trajectory_stays_bit_exact_over_many_sweeps():
+    """Long-run agreement (catches drift a single sweep can miss)."""
+    h, w = 16, 32
+    b, wh = _planes(77, h, w)
+    kb, kw = b, wh
+    for t in range(20):
+        b, wh = ref.sweep(b, wh, 0.4406868, 77, t)
+        kb, kw = metropolis.sweep(kb, kw, 0.4406868, 77, t)
+    assert np.array_equal(np.asarray(b), np.asarray(kb))
+    assert np.array_equal(np.asarray(wh), np.asarray(kw))
+
+
+def test_multispin_packed_interface_matches_unpacked():
+    h, w = 8, 32
+    b, wh = _planes(5, h, w)
+    bw, ww = multispin.pack_pm1(b), multispin.pack_pm1(wh)
+    bw2, ww2 = multispin.sweep_packed(bw, ww, 0.5, 5, 0)
+    b2, w2 = multispin.sweep(b, wh, 0.5, 5, 0)
+    assert np.array_equal(
+        np.asarray(multispin.unpack_pm1(bw2, w // 2)), np.asarray(b2)
+    )
+    assert np.array_equal(
+        np.asarray(multispin.unpack_pm1(ww2, w // 2)), np.asarray(w2)
+    )

@@ -1,0 +1,131 @@
+"""Philox RNG: known answers, an independent big-int oracle, and the
+cross-language convention vectors pinned against the Rust side."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import philox
+
+U32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _philox_bigint(ctr, key):
+    """Independent oracle: the same 10-round schedule in pure-python ints
+    (no numpy/jnp arithmetic shared with the implementation under test)."""
+    M0, M1 = 0xD2511F53, 0xCD9E8D57
+    W0, W1 = 0x9E3779B9, 0xBB67AE85
+    c = list(ctr)
+    k = list(key)
+
+    def rnd(c, k):
+        p0 = (M0 * c[0]) & 0xFFFFFFFFFFFFFFFF
+        p1 = (M1 * c[2]) & 0xFFFFFFFFFFFFFFFF
+        hi0, lo0 = p0 >> 32, p0 & 0xFFFFFFFF
+        hi1, lo1 = p1 >> 32, p1 & 0xFFFFFFFF
+        return [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0]
+
+    c = rnd(c, k)
+    for _ in range(9):
+        k = [(k[0] + W0) & 0xFFFFFFFF, (k[1] + W1) & 0xFFFFFFFF]
+        c = rnd(c, k)
+    return c
+
+
+def _run(ctr, key):
+    out = philox.philox4x32_10(
+        tuple(np.uint32(c) for c in ctr), tuple(np.uint32(k) for k in key)
+    )
+    return [int(x) for x in out]
+
+
+def test_known_answer_vectors():
+    # Same three vectors as rust/src/rng/philox.rs::known_answer_vectors.
+    assert _run((0, 0, 0, 0), (0, 0)) == [0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8]
+    assert _run((0xFFFFFFFF,) * 4, (0xFFFFFFFF,) * 2) == [
+        0x408F276D, 0x41C83B0E, 0xA20BC7C6, 0x6D5451FD,
+    ]
+    assert _run(
+        (0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344), (0xA4093822, 0x299F31D0)
+    ) == [0xD16CFE09, 0x94FDCCEB, 0x5001E420, 0x24126EA1]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.tuples(U32, U32, U32, U32), st.tuples(U32, U32))
+def test_matches_bigint_oracle(ctr, key):
+    assert _run(ctr, key) == _philox_bigint(ctr, key)
+
+
+def test_vectorization_matches_scalar():
+    ctrs = np.arange(16, dtype=np.uint32)
+    out = philox.philox4x32_10(
+        (ctrs, np.uint32(1), np.uint32(2), np.uint32(3)), (np.uint32(7), np.uint32(9))
+    )
+    for i in range(16):
+        scalar = _run((i, 1, 2, 3), (7, 9))
+        assert [int(lane[i]) for lane in out] == scalar
+
+
+def test_uniform24_mapping_is_exact():
+    r = np.array([0, 1 << 8, 0xDEADBEEF, 0xFFFFFFFF], dtype=np.uint32)
+    u = np.asarray(philox.uniform24(r))
+    expect = (r >> 8).astype(np.float64) * 2.0**-24
+    assert np.array_equal(u.astype(np.float64), expect)
+    assert u.dtype == np.float32
+    assert (u >= 0).all() and (u < 1).all()
+
+
+def test_row_uniforms_lane_layout():
+    """Column k must use lane k%4 of group k//4 — the Rust site_u32 rule."""
+    seed, color, row, sweep, w2 = 42, 1, 5, 7, 16
+    u = np.asarray(philox.row_uniforms(seed, color, np.uint32(row), w2, sweep))
+    for k in range(w2):
+        lanes = philox.philox4x32_10(
+            (np.uint32(row), np.uint32(k // 4), np.uint32(sweep), philox.CTR_TAG),
+            (np.uint32(seed), philox.DOMAIN_TAG ^ np.uint32(color)),
+        )
+        r = int(lanes[k % 4])
+        assert u[k] == np.float32((r >> 8) * 2.0**-24)
+
+
+def test_plane_uniforms_row_offset():
+    """Slab uniforms must equal the matching rows of the full plane."""
+    full = np.asarray(philox.plane_uniforms(3, 0, 8, 8, 11))
+    slab = np.asarray(philox.plane_uniforms(3, 0, 4, 8, 11, row_offset=4))
+    assert np.array_equal(slab, full[4:8])
+
+
+def test_init_bits_partition_consistency():
+    full = np.asarray(philox.init_bits(5, 8, 8))
+    slab = np.asarray(philox.init_bits(5, 4, 8, row_offset=4))
+    assert np.array_equal(slab, full[4:8])
+    assert set(np.unique(full)) <= {0, 1}
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**32 - 1),
+    st.integers(min_value=0, max_value=1),
+    st.integers(min_value=4, max_value=64).map(lambda x: x * 4),
+)
+def test_row_uniforms_shapes_and_range(seed, color, w2):
+    u = np.asarray(philox.row_uniforms(seed, color, np.uint32(3), w2, 0))
+    assert u.shape == (w2,)
+    assert (u >= 0).all() and (u < 1).all()
+
+
+def test_streams_decorrelate():
+    a = np.asarray(philox.plane_uniforms(1, 0, 16, 16, 0))
+    for other in [
+        philox.plane_uniforms(2, 0, 16, 16, 0),  # seed
+        philox.plane_uniforms(1, 1, 16, 16, 0),  # color
+        philox.plane_uniforms(1, 0, 16, 16, 1),  # sweep
+    ]:
+        assert not np.array_equal(a, np.asarray(other))
+
+
+def test_mean_variance():
+    u = np.asarray(philox.plane_uniforms(9, 0, 64, 64, 0)).ravel()
+    assert abs(u.mean() - 0.5) < 0.02
+    assert abs(u.var() - 1 / 12) < 0.01

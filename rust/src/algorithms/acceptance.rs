@@ -1,0 +1,183 @@
+//! Metropolis acceptance probabilities, tabulated.
+//!
+//! For J = 1 and a site with ±1 spin `σ` whose four neighbors sum to
+//! `nn ∈ {-4,-2,0,2,4}`, the flip `σ → -σ` has `ΔE = 2 σ nn` and is
+//! accepted with probability `min(1, exp(-β ΔE)) = min(1, exp(-2 β σ nn))`.
+//! Only 10 distinct values exist, indexed by `(σ01, s01)` with
+//! `σ01 = (σ+1)/2 ∈ {0,1}` and `s01 = (nn+4)/2 ∈ {0..4}` (the number of
+//! up neighbors) — the same discretization the multi-spin nibbles produce
+//! directly.
+//!
+//! The probabilities are evaluated in f32 with an f32 argument, matching
+//! what the XLA-compiled JAX kernels compute per site, and converted to
+//! exact 24-bit integer thresholds (see `rng::uniform::threshold`) so the
+//! hot loops compare raw Philox bits against an integer — no float math,
+//! no `exp`, bit-identical decisions to the float formulation.
+
+use crate::rng::uniform::{threshold, u32_to_u24};
+
+/// Tabulated acceptance for one temperature.
+#[derive(Clone, Debug)]
+pub struct AcceptanceTable {
+    /// Inverse temperature β = J/T.
+    pub beta: f32,
+    /// `prob[σ01][s01]`: acceptance probability (clamped to 1).
+    pub prob: [[f32; 5]; 2],
+    /// `thresh[σ01][s01]`: 24-bit integer threshold equivalent.
+    pub thresh: [[u32; 5]; 2],
+}
+
+impl AcceptanceTable {
+    /// Build the table for inverse temperature `beta`.
+    pub fn new(beta: f32) -> Self {
+        let mut prob = [[0f32; 5]; 2];
+        let mut thresh = [[0u32; 5]; 2];
+        for sigma01 in 0..2usize {
+            for s01 in 0..5usize {
+                let sigma = (2 * sigma01 as i32 - 1) as f32;
+                let nn = (2 * s01 as i32 - 4) as f32;
+                // f32 arithmetic throughout, like the JAX kernels.
+                let p = (-2.0f32 * beta * sigma * nn).exp().min(1.0);
+                prob[sigma01][s01] = p;
+                thresh[sigma01][s01] = threshold(p);
+            }
+        }
+        Self { beta, prob, thresh }
+    }
+
+    /// Build from a temperature `T` (J = 1).
+    pub fn from_temperature(t: f32) -> Self {
+        Self::new(1.0 / t)
+    }
+
+    /// Float-path decision (used by tests as the oracle).
+    #[inline]
+    pub fn accept_f32(&self, sigma01: usize, s01: usize, r: u32) -> bool {
+        crate::rng::uniform::u32_to_f32(r) < self.prob[sigma01][s01]
+    }
+
+    /// Integer-path decision (used by the hot loops).
+    #[inline(always)]
+    pub fn accept(&self, sigma01: usize, s01: usize, r: u32) -> bool {
+        u32_to_u24(r) < self.thresh[sigma01][s01]
+    }
+}
+
+/// Heat-bath probabilities: `P(σ' = +1) = 1 / (1 + exp(-2 β nn))`,
+/// independent of the current spin; 5 values indexed by `s01`.
+#[derive(Clone, Debug)]
+pub struct HeatBathTable {
+    /// Inverse temperature.
+    pub beta: f32,
+    /// `p_up[s01]` probability the new spin is +1.
+    pub p_up: [f32; 5],
+    /// Integer thresholds for `u < p_up`.
+    pub thresh: [u32; 5],
+}
+
+impl HeatBathTable {
+    /// Build the table for inverse temperature `beta`.
+    pub fn new(beta: f32) -> Self {
+        let mut p_up = [0f32; 5];
+        let mut thresh = [0u32; 5];
+        for s01 in 0..5usize {
+            let nn = (2 * s01 as i32 - 4) as f32;
+            let p = 1.0f32 / (1.0 + (-2.0f32 * beta * nn).exp());
+            p_up[s01] = p;
+            thresh[s01] = threshold(p);
+        }
+        Self { beta, p_up, thresh }
+    }
+
+    /// Integer-path decision: is the new spin up?
+    #[inline(always)]
+    pub fn up(&self, s01: usize, r: u32) -> bool {
+        u32_to_u24(r) < self.thresh[s01]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_lowering_always_accepted() {
+        let t = AcceptanceTable::new(0.6);
+        // σ = -1 (σ01=0) with nn = +4 (s01=4): flipping to +1 lowers E.
+        assert_eq!(t.prob[0][4], 1.0);
+        assert_eq!(t.thresh[0][4], 1 << 24);
+        // σ = +1 with nn = -4 likewise.
+        assert_eq!(t.prob[1][0], 1.0);
+        // ΔE = 0 moves always accepted.
+        assert_eq!(t.prob[0][2], 1.0);
+        assert_eq!(t.prob[1][2], 1.0);
+    }
+
+    #[test]
+    fn uphill_probabilities_are_boltzmann() {
+        let beta = 0.44f32;
+        let t = AcceptanceTable::new(beta);
+        // σ = +1, nn = +4: ΔE = 8.
+        let expect = (-8.0f32 * beta).exp();
+        assert!((t.prob[1][4] - expect).abs() < 1e-7);
+        // σ = -1, nn = -2: ΔE = 4.
+        let expect = (-4.0f32 * beta).exp();
+        assert!((t.prob[0][1] - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn integer_and_float_paths_agree_exhaustively() {
+        // Sample the 24-bit space at stride + boundaries for every entry.
+        let t = AcceptanceTable::new(0.37);
+        for sigma01 in 0..2 {
+            for s01 in 0..5 {
+                let th = t.thresh[sigma01][s01];
+                let mut check = |v24: u32| {
+                    let r = v24 << 8; // any low bits are ignored by both paths
+                    assert_eq!(
+                        t.accept(sigma01, s01, r),
+                        t.accept_f32(sigma01, s01, r),
+                        "sigma01={sigma01} s01={s01} v24={v24}"
+                    );
+                };
+                for v in (0..1u32 << 24).step_by(65_537) {
+                    check(v);
+                }
+                for d in 0..3 {
+                    check(th.saturating_sub(d));
+                    check((th + d).min((1 << 24) - 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beta_zero_flips_everything() {
+        let t = AcceptanceTable::new(0.0);
+        for s in 0..2 {
+            for n in 0..5 {
+                assert_eq!(t.prob[s][n], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_infinite_blocks_uphill() {
+        let t = AcceptanceTable::new(1e9);
+        assert_eq!(t.thresh[1][4], 0, "uphill move frozen out");
+        assert_eq!(t.thresh[1][3], 0);
+        assert_eq!(t.thresh[0][4], 1 << 24, "downhill still free");
+    }
+
+    #[test]
+    fn heatbath_symmetry() {
+        let t = HeatBathTable::new(0.5);
+        // P_up(nn) + P_up(-nn) = 1.
+        for s in 0..5 {
+            let sum = t.p_up[s] + t.p_up[4 - s];
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // Zero field: 1/2.
+        assert!((t.p_up[2] - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,202 @@
+//! Checkerboard heat-bath dynamics (paper §2): the new spin is drawn from
+//! the conditional Boltzmann distribution given its neighbors,
+//! `P(σ' = +1) = 1 / (1 + e^{-2βnn})`, independent of the current spin.
+//!
+//! Shares the lattice layout, neighbor rule and Philox stream convention
+//! with the Metropolis engines.
+
+use super::acceptance::HeatBathTable;
+use crate::lattice::{Checkerboard, Color, Geometry};
+use crate::rng::philox::site_group;
+
+/// Update every site of `color` for sweep `step`.
+pub fn update_color(
+    lat: &mut Checkerboard,
+    color: Color,
+    table: &HeatBathTable,
+    seed: u32,
+    step: u32,
+) {
+    let g = lat.geometry();
+    let w2 = g.w2();
+    let (target, source) = lat.split_planes(color);
+    for i in 0..g.h {
+        let up = if i == 0 { g.h - 1 } else { i - 1 } * w2;
+        let down = if i + 1 == g.h { 0 } else { i + 1 } * w2;
+        let row = i * w2;
+        let q = (i + color.index()) % 2;
+        let mut k = 0usize;
+        while k < w2 {
+            let lanes = site_group(seed, color.index() as u32, i as u32, (k >> 2) as u32, step);
+            let kend = (k + 4).min(w2);
+            while k < kend {
+                let side = if q == 0 {
+                    if k == 0 {
+                        w2 - 1
+                    } else {
+                        k - 1
+                    }
+                } else if k + 1 == w2 {
+                    0
+                } else {
+                    k + 1
+                };
+                let s01 = ((source[up + k] as i32
+                    + source[down + k] as i32
+                    + source[row + k] as i32
+                    + source[row + side] as i32)
+                    + 4)
+                    / 2;
+                target[row + k] = if table.up(s01 as usize, lanes[k & 3]) { 1 } else { -1 };
+                k += 1;
+            }
+        }
+    }
+}
+
+/// One full heat-bath sweep.
+pub fn sweep(lat: &mut Checkerboard, table: &HeatBathTable, seed: u32, step: u32) {
+    update_color(lat, Color::Black, table, seed, step);
+    update_color(lat, Color::White, table, seed, step);
+}
+
+/// Self-contained heat-bath engine implementing [`super::sweeper::Sweeper`].
+pub struct HeatBathEngine {
+    /// Spin state.
+    pub lattice: Checkerboard,
+    /// Flip-probability table.
+    pub table: HeatBathTable,
+    /// Philox seed.
+    pub seed: u32,
+    /// Next sweep number.
+    pub step: u32,
+}
+
+impl HeatBathEngine {
+    /// Hot-start engine.
+    pub fn hot(geom: Geometry, beta: f32, seed: u32) -> Self {
+        Self {
+            lattice: crate::lattice::init::hot(geom, seed),
+            table: HeatBathTable::new(beta),
+            seed,
+            step: 0,
+        }
+    }
+}
+
+impl super::sweeper::Sweeper for HeatBathEngine {
+    fn name(&self) -> &'static str {
+        "heatbath"
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.lattice.geometry()
+    }
+
+    fn sweep_n(&mut self, n: u32) {
+        for t in self.step..self.step + n {
+            sweep(&mut self.lattice, &self.table, self.seed, t);
+        }
+        self.step += n;
+    }
+
+    fn magnetization(&self) -> f64 {
+        self.lattice.magnetization()
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        self.lattice.energy_per_site()
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.lattice.to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.table = HeatBathTable::new(beta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::init;
+
+    #[test]
+    fn deterministic() {
+        let g = Geometry::new(8, 16).unwrap();
+        let table = HeatBathTable::new(0.4);
+        let mut a = init::hot(g, 21);
+        let mut b = init::hot(g, 21);
+        for t in 0..5 {
+            sweep(&mut a, &table, 21, t);
+            sweep(&mut b, &table, 21, t);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn low_temperature_orders() {
+        let g = Geometry::new(16, 16).unwrap();
+        let mut lat = init::hot(g, 2);
+        let table = HeatBathTable::new(1.0); // T = 1 ≪ Tc
+        for t in 0..300 {
+            sweep(&mut lat, &table, 2, t);
+        }
+        assert!(lat.magnetization().abs() > 0.9);
+    }
+
+    #[test]
+    fn infinite_temperature_is_fair_coin() {
+        let g = Geometry::new(32, 32).unwrap();
+        let mut lat = init::cold(g);
+        let table = HeatBathTable::new(0.0);
+        let mut acc = 0.0;
+        for t in 0..200 {
+            sweep(&mut lat, &table, 7, t);
+            acc += lat.magnetization();
+        }
+        assert!((acc / 200.0).abs() < 0.05);
+    }
+
+    /// Heat bath and Metropolis must agree on *equilibrium* physics even
+    /// though their dynamics differ: compare mean energy at a common
+    /// temperature.
+    #[test]
+    fn equilibrium_energy_matches_metropolis() {
+        use crate::algorithms::acceptance::AcceptanceTable;
+        use crate::algorithms::metropolis;
+
+        let g = Geometry::new(24, 24).unwrap();
+        let beta = 0.3f32; // comfortably disordered: fast equilibration
+        let samples = 400;
+
+        let hb_table = HeatBathTable::new(beta);
+        let mut hb = init::hot(g, 31);
+        let mut hb_e = 0.0;
+        for t in 0..200 {
+            sweep(&mut hb, &hb_table, 31, t);
+        }
+        for t in 200..200 + samples {
+            sweep(&mut hb, &hb_table, 31, t);
+            hb_e += hb.energy_per_site();
+        }
+
+        let m_table = AcceptanceTable::new(beta);
+        let mut mp = init::hot(g, 32);
+        let mut mp_e = 0.0;
+        for t in 0..200 {
+            metropolis::sweep(&mut mp, &m_table, 32, t);
+        }
+        for t in 200..200 + samples {
+            metropolis::sweep(&mut mp, &m_table, 32, t);
+            mp_e += mp.energy_per_site();
+        }
+
+        let (he, me) = (hb_e / samples as f64, mp_e / samples as f64);
+        assert!(
+            (he - me).abs() < 0.03,
+            "heat-bath ⟨e⟩ = {he:.4} vs metropolis ⟨e⟩ = {me:.4}"
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Scalar checkerboard Metropolis — the Rust analogue of the paper's
+//! "Basic (CUDA C)" implementation (§3.1, Fig. 2 right): one site per
+//! logical work item, byte spins, two color phases per sweep.
+//!
+//! Every decision draws from the shared Philox site-group stream
+//! (`rng::philox::site_group`), so trajectories are bit-identical to the
+//! multi-spin engine, to slab-partitioned execution, and (modulo XLA's
+//! `exp` rounding, see DESIGN.md §1) to the JAX kernels.
+
+use super::acceptance::AcceptanceTable;
+use crate::lattice::{Checkerboard, Color, Geometry};
+use crate::rng::philox::site_group;
+
+/// Update every site of `color` for sweep number `step`.
+///
+/// `row_offset` is the global row index of the first row of `lat` — 0 for
+/// a full lattice, the slab base for slab-partitioned runs. The RNG and
+/// parity rules use global rows so that partitioning does not change the
+/// trajectory. Halo rows, when `lat` is a slab, must already be resident
+/// in the source plane (the coordinator arranges this).
+pub fn update_color(
+    lat: &mut Checkerboard,
+    color: Color,
+    table: &AcceptanceTable,
+    seed: u32,
+    step: u32,
+    row_offset: usize,
+) {
+    let g = lat.geometry();
+    let w2 = g.w2();
+    let (target, source) = lat.split_planes(color);
+    for i in 0..g.h {
+        let gi = i + row_offset;
+        let up = if i == 0 { g.h - 1 } else { i - 1 } * w2;
+        let down = if i + 1 == g.h { 0 } else { i + 1 } * w2;
+        let row = i * w2;
+        let q = (gi + color.index()) % 2;
+        let mut k = 0usize;
+        while k < w2 {
+            // One Philox block serves four consecutive color columns.
+            let lanes = site_group(seed, color.index() as u32, gi as u32, (k >> 2) as u32, step);
+            let kend = (k + 4).min(w2);
+            while k < kend {
+                let side = if q == 0 {
+                    if k == 0 {
+                        w2 - 1
+                    } else {
+                        k - 1
+                    }
+                } else if k + 1 == w2 {
+                    0
+                } else {
+                    k + 1
+                };
+                let s01 = ((source[up + k] as i32
+                    + source[down + k] as i32
+                    + source[row + k] as i32
+                    + source[row + side] as i32)
+                    + 4)
+                    / 2;
+                let sigma = target[row + k];
+                let sigma01 = ((sigma as i32 + 1) / 2) as usize;
+                if table.accept(sigma01, s01 as usize, lanes[k & 3]) {
+                    target[row + k] = -sigma;
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+/// One full Metropolis sweep: black phase then white phase.
+pub fn sweep(lat: &mut Checkerboard, table: &AcceptanceTable, seed: u32, step: u32) {
+    update_color(lat, Color::Black, table, seed, step, 0);
+    update_color(lat, Color::White, table, seed, step, 0);
+}
+
+/// Run `n` sweeps starting at sweep counter `step0`; returns the next
+/// counter value.
+pub fn run(
+    lat: &mut Checkerboard,
+    table: &AcceptanceTable,
+    seed: u32,
+    step0: u32,
+    n: u32,
+) -> u32 {
+    for t in step0..step0 + n {
+        sweep(lat, table, seed, t);
+    }
+    step0 + n
+}
+
+/// A self-contained scalar engine (lattice + temperature + RNG cursor),
+/// implementing [`super::sweeper::Sweeper`].
+pub struct ScalarEngine {
+    /// Spin state.
+    pub lattice: Checkerboard,
+    /// Acceptance table (β).
+    pub table: AcceptanceTable,
+    /// Philox seed.
+    pub seed: u32,
+    /// Next sweep number.
+    pub step: u32,
+}
+
+impl ScalarEngine {
+    /// Hot-start engine at inverse temperature `beta`.
+    pub fn hot(geom: Geometry, beta: f32, seed: u32) -> Self {
+        Self {
+            lattice: crate::lattice::init::hot(geom, seed),
+            table: AcceptanceTable::new(beta),
+            seed,
+            step: 0,
+        }
+    }
+
+    /// Cold-start engine.
+    pub fn cold(geom: Geometry, beta: f32, seed: u32) -> Self {
+        Self {
+            lattice: Checkerboard::cold(geom),
+            table: AcceptanceTable::new(beta),
+            seed,
+            step: 0,
+        }
+    }
+}
+
+impl super::sweeper::Sweeper for ScalarEngine {
+    fn name(&self) -> &'static str {
+        "metropolis-scalar"
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.lattice.geometry()
+    }
+
+    fn sweep_n(&mut self, n: u32) {
+        self.step = run(&mut self.lattice, &self.table, self.seed, self.step, n);
+    }
+
+    fn magnetization(&self) -> f64 {
+        self.lattice.magnetization()
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        self.lattice.energy_per_site()
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.lattice.to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.table = AcceptanceTable::new(beta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::init;
+
+    #[test]
+    fn beta_zero_randomizes() {
+        // At T = ∞ every move is accepted: each site flips every sweep, so
+        // two sweeps return the initial state exactly.
+        let g = Geometry::new(8, 8).unwrap();
+        let mut lat = init::hot(g, 1);
+        let orig = lat.clone();
+        let table = AcceptanceTable::new(0.0);
+        sweep(&mut lat, &table, 1, 0);
+        assert_ne!(lat, orig, "one sweep flips everything");
+        sweep(&mut lat, &table, 1, 1);
+        assert_eq!(lat, orig, "two sweeps restore the state");
+    }
+
+    #[test]
+    fn cold_state_is_frozen_at_low_temperature() {
+        let g = Geometry::new(8, 8).unwrap();
+        let mut lat = Checkerboard::cold(g);
+        let table = AcceptanceTable::new(10.0);
+        run(&mut lat, &table, 3, 0, 20);
+        // exp(-16β) ≈ 0; a flip is essentially impossible in 20 sweeps.
+        assert_eq!(lat.magnetization(), 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = Geometry::new(8, 16).unwrap();
+        let table = AcceptanceTable::new(0.4);
+        let mut a = init::hot(g, 9);
+        let mut b = init::hot(g, 9);
+        run(&mut a, &table, 9, 0, 5);
+        run(&mut b, &table, 9, 0, 5);
+        assert_eq!(a, b);
+        let mut c = init::hot(g, 10);
+        run(&mut c, &table, 10, 0, 5);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn high_temperature_magnetization_near_zero() {
+        let g = Geometry::new(32, 32).unwrap();
+        let mut lat = init::hot(g, 4);
+        let table = AcceptanceTable::from_temperature(5.0);
+        run(&mut lat, &table, 4, 0, 200);
+        // Average |m| over some samples.
+        let mut acc = 0.0;
+        let mut step = 200;
+        for _ in 0..50 {
+            step = run(&mut lat, &table, 4, step, 2);
+            acc += lat.magnetization().abs();
+        }
+        assert!(acc / 50.0 < 0.2, "disordered phase should have small |m|");
+    }
+
+    #[test]
+    fn low_temperature_orders_from_hot_start() {
+        let g = Geometry::new(16, 16).unwrap();
+        let mut lat = init::hot(g, 11);
+        let table = AcceptanceTable::from_temperature(1.2);
+        run(&mut lat, &table, 11, 0, 400);
+        assert!(
+            lat.magnetization().abs() > 0.9,
+            "T = 1.2 ≪ Tc should order, |m| = {}",
+            lat.magnetization().abs()
+        );
+    }
+}

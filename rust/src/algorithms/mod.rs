@@ -1,0 +1,27 @@
+//! Monte Carlo engines.
+//!
+//! * [`acceptance`] — tabulated Metropolis/heat-bath probabilities with
+//!   exact integer thresholds.
+//! * [`metropolis`] — scalar checkerboard Metropolis (paper "Basic CUDA C").
+//! * [`multispin`] — word-parallel multi-spin coding (paper §3.3, the
+//!   optimized implementation).
+//! * [`heatbath`] — heat-bath dynamics (paper §2).
+//! * [`wolff`] — Wolff cluster algorithm (paper §2).
+//! * [`spinglass`] — ±J Edwards–Anderson glass (paper's conclusion
+//!   extension).
+//! * [`sweeper`] — the engine trait shared with the PJRT runtime engines.
+
+pub mod acceptance;
+pub mod heatbath;
+pub mod metropolis;
+pub mod multispin;
+pub mod spinglass;
+pub mod sweeper;
+pub mod wolff;
+
+pub use acceptance::{AcceptanceTable, HeatBathTable};
+pub use heatbath::HeatBathEngine;
+pub use metropolis::ScalarEngine;
+pub use multispin::MultispinEngine;
+pub use sweeper::Sweeper;
+pub use wolff::WolffEngine;

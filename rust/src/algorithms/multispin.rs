@@ -1,0 +1,313 @@
+//! Word-parallel multi-spin Metropolis — the Rust analogue of the paper's
+//! *optimized* implementation (§3.3): 4 bits per spin, 16 spins per 64-bit
+//! word, neighbor sums for 16 spins in **three additions**, and integer
+//! acceptance thresholds so the hot loop contains no floating point at all.
+//!
+//! Layout and side-word logic follow Figure 3 of the paper: for a target
+//! word at plane coordinates `(i, wd)` the neighbors live in the source
+//! words `(i-1, wd)`, `(i, wd)`, `(i+1, wd)` plus one *side* word —
+//! `(i, wd-1)` shifted in when the row parity `q = 0`, `(i, wd+1)` when
+//! `q = 1` (all periodic).
+//!
+//! RNG follows the shared site-group convention, so this engine's
+//! trajectory is bit-identical to the scalar engine's.
+
+use super::acceptance::AcceptanceTable;
+use crate::lattice::packed::{PackedLattice, NIBBLE_LSB, SPINS_PER_WORD};
+use crate::lattice::{Color, Geometry};
+
+
+/// Update global rows `rows` of the `color` plane for sweep `step`.
+///
+/// `source` is always the **full** opposite-color plane (`src_h × wpr`
+/// words) — workers read neighbor rows straight from it, the in-process
+/// mirror of the paper's NVLink remote reads. `target` may be the full
+/// plane (`target_base = 0`) or a slab chunk whose first row is global
+/// row `target_base`; `rows` are global row indices and must lie within
+/// the chunk. This row-range form is what the multi-worker coordinator
+/// partitions across workers.
+#[allow(clippy::too_many_arguments)]
+pub fn update_color_rows(
+    target: &mut [u64],
+    target_base: usize,
+    source: &[u64],
+    src_h: usize,
+    wpr: usize,
+    rows: std::ops::Range<usize>,
+    color: Color,
+    table: &AcceptanceTable,
+    seed: u32,
+    step: u32,
+) {
+    debug_assert_eq!(source.len(), src_h * wpr);
+    debug_assert!(rows.start >= target_base);
+    debug_assert!((rows.end - target_base) * wpr <= target.len());
+    // Flattened integer thresholds, padded to 16 so that the index
+    // `(σ << 3) | s` is provably in-bounds (σ ∈ {0,1}, s ≤ 4 < 8) and the
+    // bounds check vanishes.
+    let mut th = [0u32; 16];
+    for sigma in 0..2 {
+        for s in 0..5 {
+            th[(sigma << 3) | s] = table.thresh[sigma][s];
+        }
+    }
+    let color_tag = color.index() as u32;
+    for gi in rows {
+        let up = (if gi == 0 { src_h - 1 } else { gi - 1 }) * wpr;
+        let down = (if gi + 1 == src_h { 0 } else { gi + 1 }) * wpr;
+        let src_row = gi * wpr;
+        let row = (gi - target_base) * wpr;
+        let q = (gi + color.index()) % 2;
+        // Row slices hoist bounds checks out of the word loop (perf pass).
+        let up_row = &source[up..up + wpr];
+        let down_row = &source[down..down + wpr];
+        let ctr_row = &source[src_row..src_row + wpr];
+        let tgt_row = &mut target[row..row + wpr];
+        for wd in 0..wpr {
+            let cw = ctr_row[wd];
+            // Side word: shift one nibble toward the target parity and pull
+            // the boundary nibble from the adjacent word (paper Fig. 3).
+            let side = if q == 0 {
+                let prev = ctr_row[if wd == 0 { wpr - 1 } else { wd - 1 }];
+                (cw << 4) | (prev >> 60)
+            } else {
+                let next = ctr_row[if wd + 1 == wpr { 0 } else { wd + 1 }];
+                (cw >> 4) | (next << 60)
+            };
+            // Three word additions compute 16 neighbor sums (≤ 4 < 16: no
+            // nibble overflow).
+            let sums = up_row[wd]
+                .wrapping_add(down_row[wd])
+                .wrapping_add(cw)
+                .wrapping_add(side);
+            let t = tgt_row[wd];
+            let mut flips = 0u64;
+            // 4 Philox blocks per word, evaluated in lockstep (perf pass;
+            // EXPERIMENTS.md §Perf).
+            let blocks = crate::rng::philox::site_group_x4(
+                seed,
+                color_tag,
+                gi as u32,
+                (wd * 4) as u32,
+                step,
+            );
+            for g4 in 0..SPINS_PER_WORD / 4 {
+                let lanes = blocks[g4];
+                for l in 0..4 {
+                    let n = (g4 * 4 + l) as u32;
+                    let sigma = ((t >> (4 * n)) & 1) as usize;
+                    let s01 = ((sums >> (4 * n)) & 0x7) as usize;
+                    let flip = ((lanes[l] >> 8) < th[(sigma << 3) | s01]) as u64;
+                    flips |= flip << (4 * n);
+                }
+            }
+            tgt_row[wd] = t ^ flips;
+        }
+    }
+}
+
+/// Update one full color plane.
+pub fn update_color(
+    lat: &mut PackedLattice,
+    color: Color,
+    table: &AcceptanceTable,
+    seed: u32,
+    step: u32,
+) {
+    let g = lat.geometry();
+    let wpr = lat.wpr();
+    let h = g.h;
+    let (target, source) = lat.split_planes(color);
+    update_color_rows(target, 0, source, h, wpr, 0..h, color, table, seed, step);
+}
+
+/// One full sweep (black then white).
+pub fn sweep(lat: &mut PackedLattice, table: &AcceptanceTable, seed: u32, step: u32) {
+    update_color(lat, Color::Black, table, seed, step);
+    update_color(lat, Color::White, table, seed, step);
+}
+
+/// Run `n` sweeps from counter `step0`; returns the next counter.
+pub fn run(
+    lat: &mut PackedLattice,
+    table: &AcceptanceTable,
+    seed: u32,
+    step0: u32,
+    n: u32,
+) -> u32 {
+    for t in step0..step0 + n {
+        sweep(lat, table, seed, t);
+    }
+    step0 + n
+}
+
+/// Count up-spins in a plane row range — used by observables without
+/// unpacking (masked popcount, cf. `PackedLattice::up_count`).
+pub fn up_count_rows(plane: &[u64], wpr: usize, rows: std::ops::Range<usize>) -> u64 {
+    plane[rows.start * wpr..rows.end * wpr]
+        .iter()
+        .map(|&w| (w & NIBBLE_LSB).count_ones() as u64)
+        .sum()
+}
+
+/// Self-contained multi-spin engine implementing [`super::sweeper::Sweeper`].
+pub struct MultispinEngine {
+    /// Packed spin state.
+    pub lattice: PackedLattice,
+    /// Acceptance table.
+    pub table: AcceptanceTable,
+    /// Philox seed.
+    pub seed: u32,
+    /// Next sweep number.
+    pub step: u32,
+}
+
+impl MultispinEngine {
+    /// Hot-start engine.
+    pub fn hot(geom: Geometry, beta: f32, seed: u32) -> crate::error::Result<Self> {
+        Ok(Self {
+            lattice: crate::lattice::init::hot_packed(geom, seed)?,
+            table: AcceptanceTable::new(beta),
+            seed,
+            step: 0,
+        })
+    }
+
+    /// Cold-start engine.
+    pub fn cold(geom: Geometry, beta: f32, seed: u32) -> crate::error::Result<Self> {
+        Ok(Self {
+            lattice: PackedLattice::cold(geom)?,
+            table: AcceptanceTable::new(beta),
+            seed,
+            step: 0,
+        })
+    }
+}
+
+impl super::sweeper::Sweeper for MultispinEngine {
+    fn name(&self) -> &'static str {
+        "metropolis-multispin"
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.lattice.geometry()
+    }
+
+    fn sweep_n(&mut self, n: u32) {
+        self.step = run(&mut self.lattice, &self.table, self.seed, self.step, n);
+    }
+
+    fn magnetization(&self) -> f64 {
+        self.lattice.magnetization()
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        self.lattice.energy_per_site()
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.lattice.to_checkerboard().to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.table = AcceptanceTable::new(beta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::metropolis;
+    use crate::lattice::init;
+
+    /// The headline equivalence: the multi-spin engine reproduces the
+    /// scalar engine bit-for-bit (same seed ⇒ same trajectory).
+    #[test]
+    fn bit_exact_vs_scalar() {
+        let g = Geometry::new(8, 32).unwrap();
+        let table = AcceptanceTable::new(0.42);
+        let seed = 2024;
+
+        let mut scalar = init::hot(g, seed);
+        let mut packed = init::hot_packed(g, seed).unwrap();
+        assert_eq!(packed.to_checkerboard(), scalar, "inits agree");
+
+        for t in 0..12 {
+            metropolis::sweep(&mut scalar, &table, seed, t);
+            sweep(&mut packed, &table, seed, t);
+            assert_eq!(packed.to_checkerboard(), scalar, "diverged at sweep {t}");
+        }
+    }
+
+    #[test]
+    fn bit_exact_vs_scalar_multiple_temperatures() {
+        let g = Geometry::new(6, 64).unwrap();
+        for (idx, beta) in [0.0f32, 0.2, 0.4406868, 0.9, 5.0].into_iter().enumerate() {
+            let seed = 100 + idx as u32;
+            let table = AcceptanceTable::new(beta);
+            let mut scalar = init::hot(g, seed);
+            let mut packed = init::hot_packed(g, seed).unwrap();
+            for t in 0..6 {
+                metropolis::sweep(&mut scalar, &table, seed, t);
+                sweep(&mut packed, &table, seed, t);
+            }
+            assert_eq!(packed.to_checkerboard(), scalar, "beta={beta}");
+        }
+    }
+
+    #[test]
+    fn row_range_partition_is_equivalent() {
+        // Updating [0, h/2) then [h/2, h) (with the full source plane, as
+        // the multi-worker coordinator does) must equal the full update.
+        let g = Geometry::new(8, 64).unwrap();
+        let table = AcceptanceTable::new(0.35);
+        let seed = 5;
+        let mut whole = init::hot_packed(g, seed).unwrap();
+        let mut parts = whole.clone();
+        let (h, wpr) = (g.h, whole.wpr());
+
+        update_color(&mut whole, Color::Black, &table, seed, 0);
+        {
+            let (t, s) = parts.split_planes(Color::Black);
+            update_color_rows(t, 0, s, h, wpr, 0..h / 2, Color::Black, &table, seed, 0);
+            update_color_rows(t, 0, s, h, wpr, h / 2..h, Color::Black, &table, seed, 0);
+        }
+        assert_eq!(whole, parts);
+
+        // Slab-chunk form: update each half through its own chunk slice.
+        let mut chunked = crate::lattice::init::hot_packed(g, seed).unwrap();
+        {
+            let (t, s) = chunked.split_planes(Color::Black);
+            let (top, bot) = t.split_at_mut(h / 2 * wpr);
+            update_color_rows(top, 0, s, h, wpr, 0..h / 2, Color::Black, &table, seed, 0);
+            update_color_rows(bot, h / 2, s, h, wpr, h / 2..h, Color::Black, &table, seed, 0);
+        }
+        assert_eq!(whole, chunked);
+    }
+
+    #[test]
+    fn nibble_sums_never_overflow() {
+        // After an update, the target plane must contain pure 0/1 nibbles.
+        let g = Geometry::new(8, 32).unwrap();
+        let mut lat = init::hot_packed(g, 3).unwrap();
+        let table = AcceptanceTable::new(0.3);
+        run(&mut lat, &table, 3, 0, 5);
+        for c in Color::BOTH {
+            for &w in lat.plane(c) {
+                assert_eq!(w & !NIBBLE_LSB, 0, "stray bits in word {w:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn up_count_rows_matches_full() {
+        let g = Geometry::new(8, 32).unwrap();
+        let lat = init::hot_packed(g, 8).unwrap();
+        let wpr = lat.wpr();
+        let total: u64 = Color::BOTH
+            .iter()
+            .map(|&c| up_count_rows(lat.plane(c), wpr, 0..g.h))
+            .sum();
+        assert_eq!(total, lat.up_count());
+    }
+}

@@ -1,0 +1,37 @@
+//! The engine abstraction shared by benches, examples and the CLI.
+
+use crate::lattice::Geometry;
+
+/// Anything that can advance a 2D Ising simulation and report observables.
+///
+/// Implemented by the native scalar and multi-spin engines, the heat-bath
+/// engine, the Wolff cluster engine, and the PJRT-backed engines that run
+/// the AOT-compiled JAX programs (`runtime::engines`).
+pub trait Sweeper {
+    /// Human-readable engine name (used in reports).
+    fn name(&self) -> &'static str;
+
+    /// Lattice geometry.
+    fn geometry(&self) -> Geometry;
+
+    /// Advance `n` full lattice sweeps (or, for cluster algorithms, `n`
+    /// cluster updates — see the implementor's docs).
+    fn sweep_n(&mut self, n: u32);
+
+    /// Magnetization per site in `[-1, 1]`.
+    fn magnetization(&self) -> f64;
+
+    /// Energy per site in `[-2, 2]` (J = 1).
+    fn energy_per_site(&self) -> f64;
+
+    /// Export the full `H × W` ±1 spin field (row-major).
+    fn spins(&self) -> Vec<i8>;
+
+    /// Change the temperature (β = J/T) without touching the spin state.
+    fn set_beta(&mut self, beta: f32);
+
+    /// Spin flips attempted per sweep (defaults to one per site).
+    fn flips_per_sweep(&self) -> u64 {
+        self.geometry().sites() as u64
+    }
+}

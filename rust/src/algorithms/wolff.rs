@@ -1,0 +1,209 @@
+//! Wolff single-cluster algorithm (paper §2, ref. [3]): grow a cluster
+//! from a random seed spin, adding aligned neighbors with probability
+//! `P_add = 1 − e^{−2βJ}`, then flip the whole cluster.
+//!
+//! Eliminates critical slowing down near `T_c`, at the cost of work that
+//! is inherently sequential — exactly the trade-off the paper cites as the
+//! reason Metropolis implementations still matter. The
+//! `wolff_vs_metropolis` example measures this (autocorrelation times).
+
+use crate::lattice::{Checkerboard, Geometry};
+use crate::rng::Xoshiro256;
+
+/// Wolff cluster engine.
+pub struct WolffEngine {
+    /// Spin state.
+    pub lattice: Checkerboard,
+    /// Inverse temperature.
+    pub beta: f32,
+    /// Bond-activation probability `1 − e^{−2β}`.
+    pub p_add: f64,
+    rng: Xoshiro256,
+    stack: Vec<(usize, usize)>,
+    /// Sizes of the clusters flipped so far (cleared by `take_cluster_sizes`).
+    cluster_sizes: Vec<usize>,
+}
+
+impl WolffEngine {
+    /// Hot-start engine at inverse temperature `beta`.
+    pub fn hot(geom: Geometry, beta: f32, seed: u32) -> Self {
+        Self {
+            lattice: crate::lattice::init::hot(geom, seed),
+            beta,
+            p_add: 1.0 - (-2.0 * beta as f64).exp(),
+            rng: Xoshiro256::new(seed as u64 ^ 0x574F_4C46_0000_0000), // "WOLF"
+            stack: Vec::new(),
+            cluster_sizes: Vec::new(),
+        }
+    }
+
+    /// Grow and flip one cluster; returns its size.
+    pub fn cluster_update(&mut self) -> usize {
+        let g = self.lattice.geometry();
+        let i0 = self.rng.next_below(g.h as u64) as usize;
+        let j0 = self.rng.next_below(g.w as u64) as usize;
+        let seed_spin = self.lattice.get(i0, j0);
+
+        // Flip-on-visit marks membership, so a site can never be added twice.
+        self.lattice.set(i0, j0, -seed_spin);
+        self.stack.clear();
+        self.stack.push((i0, j0));
+        let mut size = 1usize;
+
+        while let Some((i, j)) = self.stack.pop() {
+            let neighbors = [
+                ((i + g.h - 1) % g.h, j),
+                ((i + 1) % g.h, j),
+                (i, (j + g.w - 1) % g.w),
+                (i, (j + 1) % g.w),
+            ];
+            for (ni, nj) in neighbors {
+                if self.lattice.get(ni, nj) == seed_spin
+                    && self.rng.next_f64() < self.p_add
+                {
+                    self.lattice.set(ni, nj, -seed_spin);
+                    self.stack.push((ni, nj));
+                    size += 1;
+                }
+            }
+        }
+        self.cluster_sizes.push(size);
+        size
+    }
+
+    /// Drain the recorded cluster sizes.
+    pub fn take_cluster_sizes(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.cluster_sizes)
+    }
+}
+
+impl super::sweeper::Sweeper for WolffEngine {
+    fn name(&self) -> &'static str {
+        "wolff"
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.lattice.geometry()
+    }
+
+    /// For Wolff, one "sweep" is one cluster update (the conventional unit;
+    /// observable comparisons rescale by mean cluster size).
+    fn sweep_n(&mut self, n: u32) {
+        for _ in 0..n {
+            self.cluster_update();
+        }
+    }
+
+    fn magnetization(&self) -> f64 {
+        self.lattice.magnetization()
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        self.lattice.energy_per_site()
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.lattice.to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.beta = beta;
+        self.p_add = 1.0 - (-2.0 * beta as f64).exp();
+    }
+
+    fn flips_per_sweep(&self) -> u64 {
+        // Mean cluster size is temperature dependent; report the last
+        // cluster as the best local estimate (benches use explicit sizes).
+        self.cluster_sizes.last().copied().unwrap_or(1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::sweeper::Sweeper;
+
+    #[test]
+    fn cluster_size_bounds() {
+        let g = Geometry::new(16, 16).unwrap();
+        let mut e = WolffEngine::hot(g, 0.44, 1);
+        for _ in 0..100 {
+            let s = e.cluster_update();
+            assert!(s >= 1 && s <= g.sites());
+        }
+    }
+
+    #[test]
+    fn high_temperature_clusters_are_tiny() {
+        let g = Geometry::new(32, 32).unwrap();
+        let mut e = WolffEngine::hot(g, 0.05, 2);
+        let mean: f64 = (0..500).map(|_| e.cluster_update() as f64).sum::<f64>() / 500.0;
+        // P_add ≈ 0.095: clusters barely grow.
+        assert!(mean < 3.0, "mean cluster size {mean}");
+    }
+
+    #[test]
+    fn low_temperature_clusters_span() {
+        let g = Geometry::new(16, 16).unwrap();
+        let mut e = WolffEngine::hot(g, 2.0, 3);
+        // Let it order first.
+        for _ in 0..200 {
+            e.cluster_update();
+        }
+        let mean: f64 = (0..50).map(|_| e.cluster_update() as f64).sum::<f64>() / 50.0;
+        assert!(
+            mean > 0.5 * g.sites() as f64,
+            "ordered-phase clusters should span, mean = {mean}"
+        );
+    }
+
+    #[test]
+    fn magnetization_valid_after_updates() {
+        let g = Geometry::new(16, 16).unwrap();
+        let mut e = WolffEngine::hot(g, 0.4406868, 4);
+        e.sweep_n(200);
+        let m = e.magnetization();
+        assert!((-1.0..=1.0).contains(&m));
+        // Spin field still ±1 everywhere.
+        assert!(e.spins().iter().all(|&s| s == 1 || s == -1));
+    }
+
+    /// Wolff and Metropolis must agree on equilibrium energy.
+    #[test]
+    fn equilibrium_energy_matches_metropolis() {
+        use crate::algorithms::acceptance::AcceptanceTable;
+        use crate::algorithms::metropolis;
+        use crate::lattice::init;
+
+        let g = Geometry::new(24, 24).unwrap();
+        let beta = 0.35f32;
+
+        let mut wolff = WolffEngine::hot(g, beta, 41);
+        for _ in 0..2000 {
+            wolff.cluster_update();
+        }
+        let mut we = 0.0;
+        let samples = 2000;
+        for _ in 0..samples {
+            wolff.cluster_update();
+            we += wolff.energy_per_site();
+        }
+
+        let table = AcceptanceTable::new(beta);
+        let mut mp = init::hot(g, 42);
+        for t in 0..300 {
+            metropolis::sweep(&mut mp, &table, 42, t);
+        }
+        let mut me = 0.0;
+        for t in 300..300 + 400u32 {
+            metropolis::sweep(&mut mp, &table, 42, t);
+            me += mp.energy_per_site();
+        }
+
+        let (we, me) = (we / samples as f64, me / 400.0);
+        assert!(
+            (we - me).abs() < 0.04,
+            "wolff ⟨e⟩ = {we:.4} vs metropolis ⟨e⟩ = {me:.4}"
+        );
+    }
+}

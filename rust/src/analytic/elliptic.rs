@@ -1,0 +1,88 @@
+//! Complete elliptic integrals via the arithmetic–geometric mean.
+//!
+//! Needed for Onsager's exact internal energy (see `onsager.rs`). The AGM
+//! iteration converges quadratically; a dozen iterations reach f64
+//! round-off for any modulus in `[0, 1)`.
+
+/// Complete elliptic integral of the first kind, `K(k)` with *modulus* `k`
+/// (not the parameter `m = k²`): `K(k) = ∫₀^{π/2} dθ / √(1 − k² sin²θ)`.
+pub fn ellip_k(k: f64) -> f64 {
+    assert!((0.0..1.0).contains(&k), "modulus must be in [0,1), got {k}");
+    let mut a = 1.0f64;
+    let mut b = (1.0 - k * k).sqrt();
+    for _ in 0..32 {
+        if (a - b).abs() < 1e-16 * a {
+            break;
+        }
+        let (na, nb) = ((a + b) * 0.5, (a * b).sqrt());
+        a = na;
+        b = nb;
+    }
+    std::f64::consts::PI / (2.0 * a)
+}
+
+/// Complete elliptic integral of the second kind, `E(k)` with modulus `k`,
+/// via the AGM with sum correction (Abramowitz & Stegun 17.6).
+pub fn ellip_e(k: f64) -> f64 {
+    assert!((0.0..1.0).contains(&k), "modulus must be in [0,1), got {k}");
+    if k == 0.0 {
+        return std::f64::consts::FRAC_PI_2;
+    }
+    let mut a = 1.0f64;
+    let mut b = (1.0 - k * k).sqrt();
+    let mut c = k;
+    let mut sum = c * c * 0.5;
+    let mut pow2 = 0.5f64;
+    for _ in 0..32 {
+        if c.abs() < 1e-17 {
+            break;
+        }
+        let (na, nb) = ((a + b) * 0.5, (a * b).sqrt());
+        c = (a - b) * 0.5;
+        a = na;
+        b = nb;
+        pow2 *= 2.0;
+        sum += pow2 * c * c;
+    }
+    ellip_k(k) * (1.0 - sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::FRAC_PI_2;
+
+    #[test]
+    fn k_limits() {
+        assert!((ellip_k(0.0) - FRAC_PI_2).abs() < 1e-15);
+        // K diverges as k → 1.
+        assert!(ellip_k(0.999_999) > 7.0);
+    }
+
+    #[test]
+    fn known_values() {
+        // K(1/√2) = Γ(1/4)² / (4 √π) ≈ 1.85407467730137...
+        assert!((ellip_k(std::f64::consts::FRAC_1_SQRT_2) - 1.854_074_677_301_37).abs() < 1e-12);
+        // E(1/√2) ≈ 1.35064388104768...
+        assert!((ellip_e(std::f64::consts::FRAC_1_SQRT_2) - 1.350_643_881_047_68).abs() < 1e-10);
+        // K(0.5) ≈ 1.68575035481260..., E(0.5) ≈ 1.46746220933943...
+        assert!((ellip_k(0.5) - 1.685_750_354_812_60).abs() < 1e-12);
+        assert!((ellip_e(0.5) - 1.467_462_209_339_43).abs() < 1e-10);
+    }
+
+    #[test]
+    fn legendre_relation() {
+        // E(k) K(k') + E(k') K(k) − K(k) K(k') = π/2 for k² + k'² = 1.
+        let k = 0.6f64;
+        let kp = (1.0 - k * k).sqrt();
+        let lhs = ellip_e(k) * ellip_k(kp) + ellip_e(kp) * ellip_k(k)
+            - ellip_k(k) * ellip_k(kp);
+        assert!((lhs - FRAC_PI_2).abs() < 1e-10, "legendre: {lhs}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_modulus_one() {
+        ellip_k(1.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Exact results used for validation (paper §5.3).
+
+pub mod elliptic;
+pub mod onsager;
+
+pub use elliptic::{ellip_e, ellip_k};
+pub use onsager::{critical_beta, critical_temperature, energy_per_site, magnetization};

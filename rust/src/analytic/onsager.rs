@@ -1,0 +1,113 @@
+//! Onsager's exact solution of the 2D Ising model (paper §5.3, refs [5]).
+//!
+//! Everything is expressed with J = 1 and k_B = 1, matching the paper's
+//! `T_c = 2.269185 J` convention.
+
+use super::elliptic::ellip_k;
+
+/// Exact critical temperature `T_c = 2 / ln(1 + √2) ≈ 2.269185`.
+pub fn critical_temperature() -> f64 {
+    2.0 / (1.0 + 2.0f64.sqrt()).ln()
+}
+
+/// Exact critical inverse temperature `β_c = ln(1 + √2) / 2 ≈ 0.440687`.
+pub fn critical_beta() -> f64 {
+    (1.0 + 2.0f64.sqrt()).ln() / 2.0
+}
+
+/// Spontaneous magnetization (paper Eq. 7, Yang 1952):
+/// `M(T) = (1 − sinh(2/T)^{−4})^{1/8}` for `T < T_c`, 0 above.
+pub fn magnetization(t: f64) -> f64 {
+    if t <= 0.0 {
+        return 1.0;
+    }
+    if t >= critical_temperature() {
+        return 0.0;
+    }
+    let s = (2.0 / t).sinh();
+    (1.0 - s.powi(-4)).powf(0.125)
+}
+
+/// Exact internal energy per site,
+/// `u(β) = −coth(2β) [1 + (2/π)(2 tanh²(2β) − 1) K(κ)]` with
+/// `κ = 2 sinh(2β) / cosh²(2β)` (McCoy & Wu).
+pub fn energy_per_site(beta: f64) -> f64 {
+    assert!(beta > 0.0, "beta must be positive");
+    let x = 2.0 * beta;
+    let kappa = 2.0 * x.sinh() / x.cosh().powi(2);
+    // κ = 1 exactly at β_c; clamp for the AGM domain.
+    let kappa = kappa.min(1.0 - 1e-15);
+    let kprime = 2.0 * x.tanh().powi(2) - 1.0;
+    -1.0 / x.tanh() * (1.0 + 2.0 / std::f64::consts::PI * kprime * ellip_k(kappa))
+}
+
+/// Universal Binder-cumulant value at criticality for the 2D Ising
+/// universality class with periodic square geometry, `U* ≈ 0.61069`
+/// (Kamieniarz & Blöte 1993). Used as a cross-check in fig6 reporting.
+pub const BINDER_CRITICAL: f64 = 0.610_69;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tc_matches_paper_constant() {
+        // Paper: T_c = 2.269185 J.
+        assert!((critical_temperature() - 2.269_185).abs() < 1e-6);
+        assert!((critical_beta() - 0.440_686_8).abs() < 1e-6);
+        assert!((critical_beta() * critical_temperature() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tc_condition() {
+        // The paper's condition: tanh(2/T_c)² = 1/2  (i.e. "= 1" with their
+        // 2 tanh² − 1 = 0 form); equivalently sinh(2/T_c) = 1.
+        let tc = critical_temperature();
+        assert!(((2.0 / tc).sinh() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn magnetization_limits() {
+        assert_eq!(magnetization(3.0), 0.0);
+        assert!((magnetization(0.1) - 1.0).abs() < 1e-12);
+        // Just below Tc the magnetization is small but positive.
+        let tc = critical_temperature();
+        let m = magnetization(tc - 1e-4);
+        assert!(m > 0.0 && m < 0.35, "m(Tc⁻) = {m}");
+        // Monotone decreasing in T.
+        let (m1, m2) = (magnetization(1.0), magnetization(2.0));
+        assert!(m1 > m2 && m2 > 0.0);
+    }
+
+    #[test]
+    fn magnetization_known_value() {
+        // M(T = 2) = (1 − sinh(1)^{-4})^{1/8}; sinh(1) ≈ 1.1752012.
+        let s: f64 = 1.0f64.sinh();
+        let expect = (1.0 - s.powi(-4)).powf(0.125);
+        assert!((magnetization(2.0) - expect).abs() < 1e-14);
+        assert!((magnetization(2.0) - 0.911_319).abs() < 1e-5);
+    }
+
+    #[test]
+    fn energy_limits() {
+        // β → ∞: ground state, u → −2.
+        assert!((energy_per_site(5.0) + 2.0).abs() < 1e-3);
+        // β → 0: u → 0 like −2β... at small beta, −coth(2β)(1 + (2/π)(−1)K(≈0))
+        // = −coth(2β)(1 − 1) → finite small; just require |u| small.
+        assert!(energy_per_site(0.01).abs() < 0.1);
+        // Known value at criticality: u(β_c) = −√2.
+        let u = energy_per_site(critical_beta());
+        assert!((u + 2.0f64.sqrt()).abs() < 1e-6, "u(βc) = {u}");
+    }
+
+    #[test]
+    fn energy_monotone_in_beta() {
+        let mut prev = energy_per_site(0.05);
+        for i in 1..40 {
+            let b = 0.05 + i as f64 * 0.02;
+            let u = energy_per_site(b);
+            assert!(u <= prev + 1e-12, "u not monotone at β = {b}");
+            prev = u;
+        }
+    }
+}

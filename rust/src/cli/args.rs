@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (offline image: no clap): subcommand followed
+//! by `--key value` / `--flag` options.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Subcommand (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Usage("stray '--'".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = arg;
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::Usage(format!("cannot parse --{name} value '{s}'"))
+            }),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Error on unknown options (catch typos).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+        {
+            if !known.contains(&k) {
+                return Err(Error::Usage(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        // Positionals precede flags: a bare token after `--quiet` would be
+        // consumed as its value (documented greedy-value rule).
+        let a = parse("run extra --size 256 --engine=multispin --quiet");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.opt("size"), Some("256"));
+        assert_eq!(a.opt("engine"), Some("multispin"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+        assert_eq!(a.opt_parse("size", 0usize).unwrap(), 256);
+        assert_eq!(a.opt_parse("missing", 42u32).unwrap(), 42);
+    }
+
+    #[test]
+    fn greedy_value_rule() {
+        let a = parse("run --quiet extra");
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.opt("quiet"), Some("extra"));
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("run --size abc");
+        assert!(a.opt_parse("size", 0usize).is_err());
+        assert!(a.ensure_known(&["engine"]).is_err());
+        assert!(a.ensure_known(&["size"]).is_ok());
+    }
+
+    #[test]
+    fn negative_values_as_option_args() {
+        // "--offset -3": '-3' doesn't start with '--', so it's the value.
+        let a = parse("x --offset -3");
+        assert_eq!(a.opt("offset"), Some("-3"));
+    }
+}

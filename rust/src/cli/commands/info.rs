@@ -1,0 +1,51 @@
+//! `ising info` — platform, artifact inventory, analytic constants.
+
+use crate::cli::args::Args;
+use crate::error::Result;
+use crate::runtime::Manifest;
+use crate::util::Table;
+use std::path::Path;
+
+const KNOWN: &[&str] = &["artifacts"];
+
+/// Execute the subcommand.
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+
+    println!("ising-dgx — 2D Ising reproduction (Romero et al. 2019)");
+    println!(
+        "  Tc = {:.9}  βc = {:.9}  U* ≈ {:.5}",
+        crate::analytic::critical_temperature(),
+        crate::analytic::critical_beta(),
+        crate::analytic::onsager::BINDER_CRITICAL,
+    );
+
+    match xla::PjRtClient::cpu() {
+        Ok(client) => println!(
+            "  PJRT: platform = {}, devices = {}",
+            client.platform_name(),
+            client.device_count()
+        ),
+        Err(e) => println!("  PJRT: unavailable ({e})"),
+    }
+
+    match Manifest::load(Path::new(dir)) {
+        Err(e) => println!("  artifacts: {e}"),
+        Ok(m) => {
+            println!("  artifacts: {} programs in {dir}/", m.programs.len());
+            let mut table = Table::new(&["name", "kind", "variant", "shape", "color"]);
+            for p in &m.programs {
+                table.row(&[
+                    p.name.clone(),
+                    format!("{:?}", p.kind),
+                    p.variant.as_str().to_string(),
+                    format!("{}x{}", p.h, p.w),
+                    p.color.map(|c| format!("{c:?}")).unwrap_or_else(|| "-".into()),
+                ]);
+            }
+            table.print();
+        }
+    }
+    Ok(())
+}

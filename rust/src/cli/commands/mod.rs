@@ -1,0 +1,33 @@
+//! Subcommand implementations.
+
+pub mod info;
+pub mod run;
+pub mod scaling;
+pub mod validate;
+
+use crate::algorithms::{
+    HeatBathEngine, MultispinEngine, ScalarEngine, Sweeper, WolffEngine,
+};
+use crate::config::{EngineKind, RunConfig};
+use crate::error::Result;
+use crate::lattice::Geometry;
+use crate::runtime::{Engine, PjrtEngine};
+use std::rc::Rc;
+
+/// Instantiate the configured engine as a boxed `Sweeper`.
+pub fn build_engine(cfg: &RunConfig) -> Result<Box<dyn Sweeper>> {
+    let geom = Geometry::square(cfg.size)?;
+    let beta = cfg.beta();
+    Ok(match cfg.engine {
+        EngineKind::NativeScalar => Box::new(ScalarEngine::hot(geom, beta, cfg.seed)),
+        EngineKind::NativeMultispin => {
+            Box::new(MultispinEngine::hot(geom, beta, cfg.seed)?)
+        }
+        EngineKind::NativeHeatbath => Box::new(HeatBathEngine::hot(geom, beta, cfg.seed)),
+        EngineKind::NativeWolff => Box::new(WolffEngine::hot(geom, beta, cfg.seed)),
+        EngineKind::Pjrt(variant) => {
+            let engine = Rc::new(Engine::new(&cfg.artifacts)?);
+            Box::new(PjrtEngine::hot(engine, variant, geom, beta, cfg.seed)?)
+        }
+    })
+}

@@ -1,0 +1,97 @@
+//! `ising run` — one simulation with observables and throughput.
+
+use super::build_engine;
+use crate::cli::args::Args;
+use crate::config::{EngineKind, RunConfig, Toml};
+use crate::error::Result;
+use crate::observables;
+use crate::util::timer::Timer;
+use crate::util::units;
+
+const KNOWN: &[&str] = &[
+    "size", "temperature", "beta", "engine", "sweeps", "seed", "workers",
+    "artifacts", "config", "burn-in", "samples", "thin", "quiet",
+];
+
+/// Assemble a `RunConfig` from `--config` plus flag overrides.
+pub fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_toml(&Toml::load(std::path::Path::new(path))?)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.opt("size") {
+        cfg.size = v.parse().map_err(|_| crate::Error::Usage("bad --size".into()))?;
+    }
+    if let Some(v) = args.opt("temperature") {
+        cfg.temperature = v.parse().map_err(|_| crate::Error::Usage("bad --temperature".into()))?;
+    }
+    if let Some(v) = args.opt("beta") {
+        let b: f64 = v.parse().map_err(|_| crate::Error::Usage("bad --beta".into()))?;
+        cfg.temperature = 1.0 / b;
+    }
+    if let Some(v) = args.opt("engine") {
+        cfg.engine = EngineKind::parse(v)?;
+    }
+    cfg.seed = args.opt_parse("seed", cfg.seed)?;
+    cfg.burn_in = args.opt_parse("burn-in", cfg.burn_in)?;
+    cfg.samples = args.opt_parse("samples", cfg.samples)?;
+    cfg.thin = args.opt_parse("thin", cfg.thin)?;
+    cfg.workers = args.opt_parse("workers", cfg.workers)?;
+    if let Some(v) = args.opt("artifacts") {
+        cfg.artifacts = v.into();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Execute the subcommand.
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    let cfg = config_from_args(args)?;
+    let sweeps: u32 = args.opt_parse("sweeps", cfg.burn_in + cfg.samples as u32 * cfg.thin)?;
+    let mut engine = build_engine(&cfg)?;
+
+    println!(
+        "ising run: {}² lattice, T = {:.6} (β = {:.6}), engine = {}, seed = {}",
+        cfg.size,
+        cfg.temperature,
+        cfg.beta(),
+        engine.name(),
+        cfg.seed
+    );
+
+    // Throughput phase.
+    let timer = Timer::start();
+    engine.sweep_n(sweeps);
+    let secs = timer.secs();
+    let flips = engine.flips_per_sweep() * sweeps as u64;
+
+    // Measurement phase.
+    let meas = observables::measure(engine.as_mut(), 0, cfg.samples, cfg.thin);
+    let binder = meas.binder();
+
+    if !args.flag("quiet") {
+        println!("  sweeps          : {sweeps} in {secs:.3}s");
+        println!(
+            "  throughput      : {} flips/ns",
+            units::fmt_sig(units::flips_per_ns(flips, secs), 4)
+        );
+        println!("  ⟨|m|⟩           : {:.6} ± {:.6}", meas.mean_abs_m(), meas.err_abs_m());
+        println!("  ⟨e⟩             : {:.6} ± {:.6}", meas.mean_e(), meas.err_e());
+        println!("  Binder U_L      : {:.6}", binder.binder());
+        let tc = crate::analytic::critical_temperature();
+        if cfg.temperature < tc {
+            println!(
+                "  Onsager m(T)    : {:.6} (T < Tc)",
+                crate::analytic::magnetization(cfg.temperature)
+            );
+        } else {
+            println!("  Onsager m(T)    : 0 (T ≥ Tc = {tc:.6})");
+        }
+        println!(
+            "  Onsager e(β)    : {:.6}",
+            crate::analytic::energy_per_site(1.0 / cfg.temperature)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! `ising scaling` — weak/strong scaling: real native-cluster slab runs
+//! (bit-exact, measured) plus the calibrated DGX-2 event-model projection
+//! (paper Tables 3/4 shape).
+
+use crate::cli::args::Args;
+use crate::coordinator::{
+    model_sweep, NativeCluster, SpinWidth, Topology,
+};
+use crate::error::Result;
+use crate::lattice::Geometry;
+use crate::util::units;
+use crate::util::Table;
+
+const KNOWN: &[&str] = &["mode", "size", "max-workers", "sweeps", "seed"];
+
+/// Execute the subcommand.
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    let mode = args.opt("mode").unwrap_or("strong").to_string();
+    let size: usize = args.opt_parse("size", 512usize)?;
+    let max_workers: usize = args.opt_parse("max-workers", 8usize)?;
+    let sweeps: u32 = args.opt_parse("sweeps", 32u32)?;
+    let seed: u32 = args.opt_parse("seed", 3u32)?;
+    let beta = 0.4406868f32;
+
+    let workers: Vec<usize> = (0..)
+        .map(|i| 1usize << i)
+        .take_while(|&n| n <= max_workers)
+        .collect();
+
+    println!("scaling ({mode}): base lattice {size}², {sweeps} sweeps/point");
+    let mut table = Table::new(&[
+        "workers", "lattice", "measured flips/ns", "model DGX-2", "model DGX-2H", "comm %",
+    ])
+    .with_title(&format!(
+        "{} scaling — native multispin cluster (measured, 1-core testbed) + DGX event model",
+        mode
+    ));
+
+    let mut single_state = None;
+    for &n in &workers {
+        let (h, w) = match mode.as_str() {
+            "weak" => (size * n, size),
+            _ => (size, size),
+        };
+        let geom = Geometry::new(h, w)?;
+        let mut cluster = NativeCluster::hot(geom, n, beta, seed)?;
+        cluster.run(sweeps);
+        let measured = cluster.metrics.flips_per_ns();
+
+        // Strong-scaling correctness: every worker count must reproduce
+        // the single-worker state bit-for-bit.
+        if mode != "weak" {
+            match &single_state {
+                None => single_state = Some(cluster.lattice.clone()),
+                Some(want) => assert_eq!(
+                    &cluster.lattice, want,
+                    "partition invariance violated at n = {n}"
+                ),
+            }
+        }
+
+        let m2 = model_sweep(&Topology::dgx2(), SpinWidth::Nibble, h, w, n);
+        let m2h = model_sweep(&Topology::dgx2h(), SpinWidth::Nibble, h, w, n);
+        table.row(&[
+            n.to_string(),
+            format!("{h}x{w}"),
+            units::fmt_sig(measured, 4),
+            units::fmt_sig(m2.flips_per_ns, 6),
+            units::fmt_sig(m2h.flips_per_ns, 6),
+            format!("{:.2}%", m2.comm_fraction * 100.0),
+        ]);
+    }
+    table.print();
+    println!(
+        "note: measured column shares one CPU core across workers (DESIGN.md §2); \
+         the model columns are the paper-calibrated DGX projections"
+    );
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! The `ising` command-line interface.
+//!
+//! Subcommands:
+//! * `run`      — simulate and report observables + flips/ns.
+//! * `validate` — temperature sweep vs the Onsager solution (paper §5.3).
+//! * `scaling`  — multi-device weak/strong scaling (real slabs + DGX model).
+//! * `info`     — platform, artifact inventory, analytic constants.
+
+pub mod args;
+pub mod commands;
+
+use crate::error::{Error, Result};
+use args::Args;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+ising — 2D Ising on a Rust + JAX + Pallas stack (Romero et al. 2019 reproduction)
+
+USAGE: ising <command> [options]
+
+COMMANDS:
+  run       simulate one configuration
+            --size N --temperature T|--beta B --engine E --sweeps N
+            --seed S --workers W --artifacts DIR --config FILE
+  validate  magnetization & Binder vs Onsager across temperatures
+            --size N --engine E --samples N --quick
+  scaling   weak/strong scaling study (native cluster + DGX-2 model)
+            --mode weak|strong --size N --max-workers W
+  info      platform, artifacts, constants
+            --artifacts DIR
+
+ENGINES: scalar | multispin | heatbath | wolff |
+         pjrt-basic | pjrt-multispin | pjrt-tensorcore
+";
+
+/// Entry point used by `main.rs`.
+pub fn main_with_args(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    match args.command.as_str() {
+        "run" => commands::run::exec(&args),
+        "validate" => commands::validate::exec(&args),
+        "scaling" => commands::scaling::exec(&args),
+        "info" => commands::info::exec(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown command '{other}'\n\n{USAGE}"))),
+    }
+}

@@ -1,0 +1,7 @@
+//! Configuration: a std-only TOML-subset parser plus typed config structs.
+
+pub mod toml;
+pub mod types;
+
+pub use toml::{Toml, Value};
+pub use types::{default_temperature_grid, EngineKind, RunConfig, SweepConfig};

@@ -1,0 +1,311 @@
+//! Minimal TOML-subset parser (offline image: no toml crate).
+//!
+//! Supports what the config files need: `[section]` and `[a.b]` tables,
+//! string / integer / float / boolean values, homogeneous scalar arrays,
+//! `#` comments, and basic/literal strings. Dotted keys inside sections
+//! and multi-line structures are intentionally out of scope.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// String.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Array of scalars.
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    /// As string.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => Err(Error::Config(format!("expected string, got {v:?}"))),
+        }
+    }
+
+    /// As integer.
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            v => Err(Error::Config(format!("expected integer, got {v:?}"))),
+        }
+    }
+
+    /// As usize.
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_int()?;
+        usize::try_from(i).map_err(|_| Error::Config(format!("expected usize, got {i}")))
+    }
+
+    /// As float (integers coerce).
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            v => Err(Error::Config(format!("expected float, got {v:?}"))),
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => Err(Error::Config(format!("expected bool, got {v:?}"))),
+        }
+    }
+
+    /// As array.
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            v => Err(Error::Config(format!("expected array, got {v:?}"))),
+        }
+    }
+}
+
+/// A parsed document: `section.key → value` (root keys use section "").
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Toml {
+    /// Parse a document.
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut out = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| Error::Toml { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                section = name.to_string();
+            } else {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| err("expected key = value"))?;
+                let key = k.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(v.trim())
+                    .map_err(|m| Error::Toml { line: lineno + 1, msg: m })?;
+                out.entries
+                    .insert((section.clone(), key.to_string()), value);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// Required lookup.
+    pub fn require(&self, section: &str, key: &str) -> Result<&Value> {
+        self.get(section, key).ok_or_else(|| {
+            Error::Config(format!("missing config key [{section}] {key}"))
+        })
+    }
+
+    /// All keys of a section.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    let mut quote = ' ';
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' | '\'' if !in_str => {
+                in_str = true;
+                quote = c;
+            }
+            c if in_str && c == quote => in_str = false,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if let Some(rest) = s.strip_prefix('\'') {
+        let inner = rest.strip_suffix('\'').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_array(inner)? {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+fn split_array(inner: &str) -> std::result::Result<Vec<&str>, String> {
+    // Scalars only — split on commas outside quotes.
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    let mut quote = ' ';
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' | '\'' if !in_str => {
+                in_str = true;
+                quote = c;
+            }
+            c if in_str && c == quote => in_str = false,
+            ',' if !in_str => {
+                parts.push(&inner[start..i]);
+                start = i + 1;
+            }
+            '[' if !in_str => return Err("nested arrays unsupported".into()),
+            _ => {}
+        }
+    }
+    parts.push(&inner[start..]);
+    Ok(parts)
+}
+
+fn unescape(s: &str) -> std::result::Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# run configuration
+title = "ising run"   # inline comment
+
+[lattice]
+size = 1024
+workers = 4
+temps = [2.0, 2.269, 2.5]
+names = ["a", "b"]
+
+[run]
+sweeps = 1_000
+beta = 0.4406868
+record = true
+label = 'raw #string'
+"#;
+
+    #[test]
+    fn parses_document() {
+        let t = Toml::parse(DOC).unwrap();
+        assert_eq!(t.get("", "title").unwrap().as_str().unwrap(), "ising run");
+        assert_eq!(t.get("lattice", "size").unwrap().as_usize().unwrap(), 1024);
+        assert_eq!(t.get("run", "sweeps").unwrap().as_int().unwrap(), 1000);
+        assert!((t.get("run", "beta").unwrap().as_float().unwrap() - 0.4406868).abs() < 1e-12);
+        assert!(t.get("run", "record").unwrap().as_bool().unwrap());
+        assert_eq!(t.get("run", "label").unwrap().as_str().unwrap(), "raw #string");
+        let temps = t.get("lattice", "temps").unwrap().as_arr().unwrap();
+        assert_eq!(temps.len(), 3);
+        assert!((temps[1].as_float().unwrap() - 2.269).abs() < 1e-12);
+        let names = t.get("lattice", "names").unwrap().as_arr().unwrap();
+        assert_eq!(names[1].as_str().unwrap(), "b");
+    }
+
+    #[test]
+    fn type_coercions_and_errors() {
+        let t = Toml::parse("x = 3").unwrap();
+        assert_eq!(t.get("", "x").unwrap().as_float().unwrap(), 3.0);
+        assert!(t.get("", "x").unwrap().as_str().is_err());
+        assert!(t.require("", "missing").is_err());
+    }
+
+    #[test]
+    fn syntax_errors_carry_line_numbers() {
+        let e = Toml::parse("a = 1\nbad line\n").unwrap_err();
+        match e {
+            Error::Toml { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error {other}"),
+        }
+        assert!(Toml::parse("[unterminated").is_err());
+        assert!(Toml::parse("k = [1, [2]]").is_err());
+        assert!(Toml::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn section_keys_enumerate() {
+        let t = Toml::parse(DOC).unwrap();
+        let mut keys = t.section_keys("lattice");
+        keys.sort_unstable();
+        assert_eq!(keys, vec!["names", "size", "temps", "workers"]);
+    }
+}

@@ -1,0 +1,274 @@
+//! Typed configuration for runs, sweeps and validation, loadable from
+//! TOML files or assembled from CLI flags.
+
+use super::toml::Toml;
+use crate::error::{Error, Result};
+use crate::runtime::Variant;
+use std::path::PathBuf;
+
+/// Which execution engine drives the simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native scalar Metropolis (paper "Basic CUDA C" analogue).
+    NativeScalar,
+    /// Native word-parallel multi-spin (paper §3.3 analogue).
+    NativeMultispin,
+    /// Native heat-bath.
+    NativeHeatbath,
+    /// Native Wolff cluster.
+    NativeWolff,
+    /// PJRT artifact execution of an L1 kernel variant.
+    Pjrt(Variant),
+}
+
+impl EngineKind {
+    /// Parse the CLI/config name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "scalar" | "native-scalar" => Self::NativeScalar,
+            "multispin" | "native-multispin" | "optimized" => Self::NativeMultispin,
+            "heatbath" => Self::NativeHeatbath,
+            "wolff" => Self::NativeWolff,
+            "pjrt-basic" => Self::Pjrt(Variant::Basic),
+            "pjrt-multispin" => Self::Pjrt(Variant::Multispin),
+            "pjrt-tensorcore" => Self::Pjrt(Variant::Tensorcore),
+            other => {
+                return Err(Error::Usage(format!(
+                    "unknown engine '{other}' (try: scalar, multispin, heatbath, wolff, \
+                     pjrt-basic, pjrt-multispin, pjrt-tensorcore)"
+                )))
+            }
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::NativeScalar => "scalar",
+            Self::NativeMultispin => "multispin",
+            Self::NativeHeatbath => "heatbath",
+            Self::NativeWolff => "wolff",
+            Self::Pjrt(Variant::Basic) => "pjrt-basic",
+            Self::Pjrt(Variant::Multispin) => "pjrt-multispin",
+            Self::Pjrt(Variant::Tensorcore) => "pjrt-tensorcore",
+            Self::Pjrt(Variant::Any) => "pjrt",
+        }
+    }
+}
+
+/// A simulation run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Square lattice side.
+    pub size: usize,
+    /// Temperature (J = k_B = 1); β = 1/T.
+    pub temperature: f64,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// Philox seed.
+    pub seed: u32,
+    /// Equilibration sweeps.
+    pub burn_in: u32,
+    /// Measurement samples.
+    pub samples: usize,
+    /// Sweeps between samples.
+    pub thin: u32,
+    /// Worker (virtual device) count for coordinator runs.
+    pub workers: usize,
+    /// Artifact directory (PJRT engines).
+    pub artifacts: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            size: 128,
+            temperature: 2.269185,
+            engine: EngineKind::NativeMultispin,
+            seed: 1,
+            burn_in: 500,
+            samples: 200,
+            thin: 2,
+            workers: 1,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// β = 1/T as f32 (engines are f32).
+    pub fn beta(&self) -> f32 {
+        (1.0 / self.temperature) as f32
+    }
+
+    /// Load from `[run]` (+ root) sections of a TOML file.
+    pub fn from_toml(doc: &Toml) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("run", "size") {
+            cfg.size = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("run", "temperature") {
+            cfg.temperature = v.as_float()?;
+        }
+        if let Some(v) = doc.get("run", "beta") {
+            cfg.temperature = 1.0 / v.as_float()?;
+        }
+        if let Some(v) = doc.get("run", "engine") {
+            cfg.engine = EngineKind::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("run", "seed") {
+            cfg.seed = v.as_int()? as u32;
+        }
+        if let Some(v) = doc.get("run", "burn_in") {
+            cfg.burn_in = v.as_int()? as u32;
+        }
+        if let Some(v) = doc.get("run", "samples") {
+            cfg.samples = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("run", "thin") {
+            cfg.thin = v.as_int()? as u32;
+        }
+        if let Some(v) = doc.get("run", "workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("run", "artifacts") {
+            cfg.artifacts = PathBuf::from(v.as_str()?);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks with actionable messages.
+    pub fn validate(&self) -> Result<()> {
+        if self.size < 2 || self.size % 2 != 0 {
+            return Err(Error::Config(format!("size {} must be even and ≥ 2", self.size)));
+        }
+        if self.engine == EngineKind::NativeMultispin && self.size % 32 != 0 {
+            return Err(Error::Config(format!(
+                "multispin needs size % 32 == 0, got {}",
+                self.size
+            )));
+        }
+        if self.temperature <= 0.0 {
+            return Err(Error::Config("temperature must be positive".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Temperature-sweep configuration (validation / fig5 / fig6 drivers).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Base run parameters.
+    pub run: RunConfig,
+    /// Temperatures to visit.
+    pub temperatures: Vec<f64>,
+    /// Lattice sizes to visit.
+    pub sizes: Vec<usize>,
+}
+
+impl SweepConfig {
+    /// Load from `[sweep]` + `[run]` sections.
+    pub fn from_toml(doc: &Toml) -> Result<Self> {
+        let run = RunConfig::from_toml(doc)?;
+        let temperatures = match doc.get("sweep", "temperatures") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|t| t.as_float())
+                .collect::<Result<Vec<_>>>()?,
+            None => default_temperature_grid(),
+        };
+        let sizes = match doc.get("sweep", "sizes") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![run.size],
+        };
+        Ok(Self { run, temperatures, sizes })
+    }
+}
+
+/// The default validation grid: dense around T_c (paper Fig. 5/6 range).
+pub fn default_temperature_grid() -> Vec<f64> {
+    let mut t = vec![1.5, 1.8, 2.0, 2.1];
+    let tc = crate::analytic::critical_temperature();
+    for k in -3i32..=3 {
+        t.push(tc + k as f64 * 0.05);
+    }
+    t.extend([2.5, 2.7, 3.0]);
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_names_roundtrip() {
+        for name in [
+            "scalar", "multispin", "heatbath", "wolff",
+            "pjrt-basic", "pjrt-multispin", "pjrt-tensorcore",
+        ] {
+            assert_eq!(EngineKind::parse(name).unwrap().name(), name);
+        }
+        assert!(EngineKind::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn from_toml_and_validation() {
+        let doc = Toml::parse(
+            "[run]\nsize = 256\ntemperature = 2.0\nengine = \"multispin\"\nworkers = 4\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.size, 256);
+        assert_eq!(cfg.workers, 4);
+        assert!((cfg.beta() - 0.5).abs() < 1e-6);
+
+        let bad = Toml::parse("[run]\nsize = 48\nengine = \"multispin\"\n").unwrap();
+        assert!(RunConfig::from_toml(&bad).is_err(), "48 % 32 != 0");
+        let bad = Toml::parse("[run]\nsize = 31\n").unwrap();
+        assert!(RunConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn beta_key_sets_temperature() {
+        let doc = Toml::parse("[run]\nbeta = 0.5\n").unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert!((cfg.temperature - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_defaults() {
+        let doc = Toml::parse("[run]\nsize = 64\n").unwrap();
+        let s = SweepConfig::from_toml(&doc).unwrap();
+        assert!(s.temperatures.len() > 5);
+        assert_eq!(s.sizes, vec![64]);
+        let tc = crate::analytic::critical_temperature();
+        assert!(s.temperatures.iter().any(|&t| (t - tc).abs() < 1e-9));
+    }
+}
+
+#[cfg(test)]
+mod config_file_tests {
+    use super::*;
+
+    /// The shipped sample configs must stay loadable.
+    #[test]
+    fn sample_configs_parse() {
+        for f in ["configs/critical_point.toml", "configs/pjrt_sweep.toml"] {
+            let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
+            let doc = Toml::load(&path).unwrap_or_else(|e| panic!("{f}: {e}"));
+            let cfg = SweepConfig::from_toml(&doc).unwrap_or_else(|e| panic!("{f}: {e}"));
+            cfg.run.validate().unwrap();
+            assert!(!cfg.temperatures.is_empty());
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Throughput metrics in the paper's units (flips/ns) plus per-phase
+//! timing for the coordinator.
+
+use crate::util::timer::PhaseTimes;
+use std::time::Duration;
+
+/// Accumulated metrics for a run.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Total spin updates attempted.
+    pub flips: u64,
+    /// Total wall-clock spent in sweeps.
+    pub elapsed: Duration,
+    /// Per-phase breakdown (black/white/halo/dispatch...).
+    pub phases: PhaseTimes,
+    /// Sweeps completed.
+    pub sweeps: u64,
+}
+
+impl Metrics {
+    /// New empty metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sweep over `sites` spins taking `d`.
+    pub fn record_sweep(&mut self, sites: u64, d: Duration) {
+        self.flips += sites;
+        self.elapsed += d;
+        self.sweeps += 1;
+    }
+
+    /// The paper's headline metric.
+    pub fn flips_per_ns(&self) -> f64 {
+        crate::util::units::flips_per_ns(self.flips, self.elapsed.as_secs_f64())
+    }
+
+    /// Mean seconds per sweep.
+    pub fn secs_per_sweep(&self) -> f64 {
+        if self.sweeps == 0 {
+            return f64::NAN;
+        }
+        self.elapsed.as_secs_f64() / self.sweeps as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} sweeps, {} flips, {:.3}s → {} flips/ns",
+            self.sweeps,
+            self.flips,
+            self.elapsed.as_secs_f64(),
+            crate::util::units::fmt_sig(self.flips_per_ns(), 4)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_converts() {
+        let mut m = Metrics::new();
+        m.record_sweep(1_000_000, Duration::from_millis(1));
+        m.record_sweep(1_000_000, Duration::from_millis(1));
+        assert_eq!(m.flips, 2_000_000);
+        assert_eq!(m.sweeps, 2);
+        // 2e6 flips in 2e6 ns = 1 flip/ns.
+        assert!((m.flips_per_ns() - 1.0).abs() < 1e-9);
+        assert!((m.secs_per_sweep() - 0.001).abs() < 1e-9);
+        assert!(m.summary().contains("flips/ns"));
+    }
+}

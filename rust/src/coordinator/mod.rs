@@ -1,0 +1,16 @@
+//! The multi-device coordinator (paper §4): slab decomposition, halo
+//! exchange, two-phase color scheduling, throughput metrics, and the
+//! calibrated DGX-2 performance model that substitutes for hardware this
+//! testbed does not have (DESIGN.md §2).
+
+pub mod driver;
+pub mod metrics;
+pub mod partition;
+pub mod perfmodel;
+pub mod topology;
+
+pub use driver::{NativeCluster, SlabCluster};
+pub use metrics::Metrics;
+pub use partition::{partition, Slab};
+pub use perfmodel::{model_sweep, strong_scaling, weak_scaling, ModelResult, SpinWidth};
+pub use topology::Topology;

@@ -1,0 +1,98 @@
+//! Slab decomposition (paper §4): the lattice is partitioned into
+//! horizontal slabs, one per device, each stored in the same checkerboard
+//! layout as the single-device case.
+
+use crate::error::{Error, Result};
+use crate::lattice::Geometry;
+
+/// One device's slab.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slab {
+    /// Index of the owning device.
+    pub device: usize,
+    /// First global row.
+    pub base_row: usize,
+    /// Number of rows.
+    pub height: usize,
+}
+
+impl Slab {
+    /// Global row above this slab (periodic).
+    pub fn row_above(&self, geom: Geometry) -> usize {
+        (self.base_row + geom.h - 1) % geom.h
+    }
+
+    /// Global row below this slab (periodic).
+    pub fn row_below(&self, geom: Geometry) -> usize {
+        (self.base_row + self.height) % geom.h
+    }
+}
+
+/// Partition `geom` into `n` equal slabs.
+///
+/// Heights must be even (the checkerboard parity rules and the tensor-core
+/// row-parity split both require even slab bases) — callers get a clear
+/// error otherwise.
+pub fn partition(geom: Geometry, n: usize) -> Result<Vec<Slab>> {
+    if n == 0 {
+        return Err(Error::Coordinator("need at least one device".into()));
+    }
+    if geom.h % n != 0 {
+        return Err(Error::Coordinator(format!(
+            "lattice height {} not divisible by {n} devices",
+            geom.h
+        )));
+    }
+    let height = geom.h / n;
+    if height % 2 != 0 {
+        return Err(Error::Coordinator(format!(
+            "slab height {height} must be even (checkerboard parity)"
+        )));
+    }
+    Ok((0..n)
+        .map(|device| Slab { device, base_row: device * height, height })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_cover_disjointly() {
+        let g = Geometry::new(16, 32).unwrap();
+        for n in [1, 2, 4, 8] {
+            let slabs = partition(g, n).unwrap();
+            assert_eq!(slabs.len(), n);
+            let mut covered = vec![false; g.h];
+            for s in &slabs {
+                assert_eq!(s.base_row % 2, 0, "even bases");
+                for r in s.base_row..s.base_row + s.height {
+                    assert!(!covered[r], "overlap at row {r}");
+                    covered[r] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c));
+        }
+    }
+
+    #[test]
+    fn halo_rows_are_periodic() {
+        let g = Geometry::new(8, 32).unwrap();
+        let slabs = partition(g, 2).unwrap();
+        assert_eq!(slabs[0].row_above(g), 7);
+        assert_eq!(slabs[0].row_below(g), 4);
+        assert_eq!(slabs[1].row_above(g), 3);
+        assert_eq!(slabs[1].row_below(g), 0);
+    }
+
+    #[test]
+    fn rejects_bad_partitions() {
+        let g = Geometry::new(8, 32).unwrap();
+        assert!(partition(g, 0).is_err());
+        assert!(partition(g, 3).is_err(), "8 % 3 != 0");
+        let g12 = Geometry::new(12, 32).unwrap();
+        assert!(partition(g12, 4).is_err(), "odd slab height 3");
+        assert!(partition(g12, 2).is_ok());
+    }
+}

@@ -1,0 +1,68 @@
+//! Simulated device topology — the stand-in for the DGX-2's NVSwitch
+//! fabric (DESIGN.md §2: the host has one CPU core, so multi-GPU timing is
+//! produced by the calibrated event model in `perfmodel`, while slab
+//! execution itself is real and bit-exact).
+
+/// A device interconnect description.
+#[derive(Clone, Copy, Debug)]
+pub struct Interconnect {
+    /// Per-direction link bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-message latency in seconds.
+    pub latency: f64,
+}
+
+/// NVLink through NVSwitch as in the DGX-2: 6 links × 25 GB/s per GPU.
+pub const NVLINK_DGX2: Interconnect = Interconnect { bandwidth: 150e9, latency: 2e-6 };
+
+/// Same-host memcpy (what halo exchange actually costs on this testbed).
+pub const LOCAL_MEMCPY: Interconnect = Interconnect { bandwidth: 10e9, latency: 1e-7 };
+
+/// A named multi-device system model.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Number of devices.
+    pub devices: usize,
+    /// Per-device sustained spin-update throughput, flips/ns (the paper's
+    /// headline unit), used to convert slab work to time.
+    pub flips_per_ns: f64,
+    /// Interconnect between slab neighbors.
+    pub link: Interconnect,
+}
+
+impl Topology {
+    /// DGX-2 (paper Table 3: 417.57 flips/ns per V100 on the optimized code).
+    pub fn dgx2() -> Self {
+        Self { name: "DGX-2", devices: 16, flips_per_ns: 417.57, link: NVLINK_DGX2 }
+    }
+
+    /// DGX-2H (paper Table 3: 453.56 flips/ns per GPU).
+    pub fn dgx2h() -> Self {
+        Self { name: "DGX-2H", devices: 16, flips_per_ns: 453.56, link: NVLINK_DGX2 }
+    }
+
+    /// This machine, calibrated from a measured single-worker rate.
+    pub fn local(measured_flips_per_ns: f64, workers: usize) -> Self {
+        Self {
+            name: "local",
+            devices: workers,
+            flips_per_ns: measured_flips_per_ns,
+            link: LOCAL_MEMCPY,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_numbers() {
+        assert_eq!(Topology::dgx2().devices, 16);
+        assert!((Topology::dgx2().flips_per_ns - 417.57).abs() < 1e-9);
+        assert!((Topology::dgx2h().flips_per_ns - 453.56).abs() < 1e-9);
+        assert!(Topology::dgx2().link.bandwidth > 1e11);
+    }
+}

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the ising-dgx library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Lattice dimensions violate a layout constraint.
+    #[error("invalid lattice geometry: {0}")]
+    Geometry(String),
+
+    /// Configuration file / value errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// TOML syntax errors with line information.
+    #[error("toml parse error at line {line}: {msg}")]
+    Toml { line: usize, msg: String },
+
+    /// JSON syntax errors with byte offset.
+    #[error("json parse error at offset {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Artifact manifest problems (missing program, shape mismatch, ...).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failures (wraps the xla crate's error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator-level failures (worker panic, halo mismatch, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// CLI usage errors.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,230 @@
+//! Byte-per-spin checkerboard lattice — the layout of the paper's *basic*
+//! implementations (§3.1): two `H × W/2` planes of `i8` spins (±1), one per
+//! color, compacted along rows (Fig. 1, center).
+
+use super::geometry::{Color, Geometry};
+use crate::error::{Error, Result};
+
+/// Two-plane checkerboard spin lattice with ±1 byte spins.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Checkerboard {
+    geom: Geometry,
+    /// `planes[c]` is the color-`c` plane, row-major `H × W/2`.
+    planes: [Vec<i8>; 2],
+}
+
+impl Checkerboard {
+    /// All spins up ("cold start").
+    pub fn cold(geom: Geometry) -> Self {
+        let n = geom.sites_per_color();
+        Self { geom, planes: [vec![1; n], vec![1; n]] }
+    }
+
+    /// Geometry accessor.
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geom
+    }
+
+    /// Immutable plane view.
+    #[inline]
+    pub fn plane(&self, c: Color) -> &[i8] {
+        &self.planes[c.index()]
+    }
+
+    /// Mutable plane view.
+    #[inline]
+    pub fn plane_mut(&mut self, c: Color) -> &mut [i8] {
+        &mut self.planes[c.index()]
+    }
+
+    /// Split into the target plane (mutable) and the source plane (shared)
+    /// for a color update.
+    #[inline]
+    pub fn split_planes(&mut self, target: Color) -> (&mut [i8], &[i8]) {
+        let (b, w) = {
+            let [ref mut black, ref mut white] = self.planes;
+            (black, white)
+        };
+        match target {
+            Color::Black => (&mut b[..], &w[..]),
+            Color::White => (&mut w[..], &b[..]),
+        }
+    }
+
+    /// Plane entry.
+    #[inline]
+    pub fn get_plane(&self, c: Color, i: usize, k: usize) -> i8 {
+        self.planes[c.index()][i * self.geom.w2() + k]
+    }
+
+    /// Set a plane entry.
+    #[inline]
+    pub fn set_plane(&mut self, c: Color, i: usize, k: usize, v: i8) {
+        debug_assert!(v == 1 || v == -1);
+        self.planes[c.index()][i * self.geom.w2() + k] = v;
+    }
+
+    /// Spin at full-lattice coordinates.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        let (c, i, k) = self.geom.to_plane(i, j);
+        self.get_plane(c, i, k)
+    }
+
+    /// Set spin at full-lattice coordinates.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: i8) {
+        let (c, i, k) = self.geom.to_plane(i, j);
+        self.set_plane(c, i, k, v);
+    }
+
+    /// Build from a row-major `H × W` array of ±1 spins.
+    pub fn from_spins(geom: Geometry, spins: &[i8]) -> Result<Self> {
+        if spins.len() != geom.sites() {
+            return Err(Error::Geometry(format!(
+                "spin array has {} entries, lattice needs {}",
+                spins.len(),
+                geom.sites()
+            )));
+        }
+        if let Some(bad) = spins.iter().find(|&&s| s != 1 && s != -1) {
+            return Err(Error::Geometry(format!("spin value {bad} not in {{-1, 1}}")));
+        }
+        let mut lat = Self::cold(geom);
+        for i in 0..geom.h {
+            for j in 0..geom.w {
+                lat.set(i, j, spins[i * geom.w + j]);
+            }
+        }
+        Ok(lat)
+    }
+
+    /// Export to a row-major `H × W` array of ±1 spins.
+    pub fn to_spins(&self) -> Vec<i8> {
+        let g = self.geom;
+        let mut out = vec![0i8; g.sites()];
+        for i in 0..g.h {
+            for j in 0..g.w {
+                out[i * g.w + j] = self.get(i, j);
+            }
+        }
+        out
+    }
+
+    /// Sum of all spins (the un-normalized magnetization).
+    pub fn magnetization_sum(&self) -> i64 {
+        self.planes
+            .iter()
+            .flat_map(|p| p.iter())
+            .map(|&s| s as i64)
+            .sum()
+    }
+
+    /// Total energy `E = -Σ_<ij> σ_i σ_j` over all `2N` torus bonds (J = 1).
+    ///
+    /// Each bond is counted once via the right and down neighbors of every
+    /// site, using only plane reads (the neighbor rule from `Geometry`).
+    pub fn energy_sum(&self) -> i64 {
+        let g = self.geom;
+        let mut e = 0i64;
+        for c in Color::BOTH {
+            let o = c.other();
+            for i in 0..g.h {
+                let q = g.parity(c, i);
+                for k in 0..g.w2() {
+                    let s = self.get_plane(c, i, k) as i64;
+                    // Down neighbor (same plane column, opposite color).
+                    let down = self.get_plane(o, g.down(i), k) as i64;
+                    // Right neighbor: same column when q == 0 (j+1 = 2k+1),
+                    // column k+1 when q == 1 (j+1 = 2k+2).
+                    let right = if q == 0 {
+                        self.get_plane(o, i, k) as i64
+                    } else {
+                        self.get_plane(o, i, g.right(k)) as i64
+                    };
+                    e -= s * (down + right);
+                }
+            }
+        }
+        e
+    }
+
+    /// Magnetization per site in `[-1, 1]`.
+    pub fn magnetization(&self) -> f64 {
+        self.magnetization_sum() as f64 / self.geom.sites() as f64
+    }
+
+    /// Energy per site in `[-2, 2]`.
+    pub fn energy_per_site(&self) -> f64 {
+        self.energy_sum() as f64 / self.geom.sites() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry::new(6, 8).unwrap()
+    }
+
+    #[test]
+    fn cold_start_is_fully_magnetized() {
+        let lat = Checkerboard::cold(geom());
+        assert_eq!(lat.magnetization(), 1.0);
+        assert_eq!(lat.energy_per_site(), -2.0);
+    }
+
+    #[test]
+    fn spins_roundtrip() {
+        let g = geom();
+        // A deterministic non-trivial pattern.
+        let spins: Vec<i8> = (0..g.sites())
+            .map(|s| if (s * 2654435761usize) % 3 == 0 { 1 } else { -1 })
+            .collect();
+        let lat = Checkerboard::from_spins(g, &spins).unwrap();
+        assert_eq!(lat.to_spins(), spins);
+    }
+
+    #[test]
+    fn rejects_invalid_spins() {
+        let g = geom();
+        assert!(Checkerboard::from_spins(g, &vec![1i8; 3]).is_err());
+        let mut spins = vec![1i8; g.sites()];
+        spins[5] = 0;
+        assert!(Checkerboard::from_spins(g, &spins).is_err());
+    }
+
+    /// Energy from the plane-based bond walk must match a brute-force
+    /// full-lattice computation.
+    #[test]
+    fn energy_matches_bruteforce() {
+        let g = geom();
+        let spins: Vec<i8> = (0..g.sites())
+            .map(|s| if (s * 0x9E3779B9usize) % 5 < 2 { 1 } else { -1 })
+            .collect();
+        let lat = Checkerboard::from_spins(g, &spins).unwrap();
+        let mut e = 0i64;
+        for i in 0..g.h {
+            for j in 0..g.w {
+                let s = spins[i * g.w + j] as i64;
+                let r = spins[i * g.w + (j + 1) % g.w] as i64;
+                let d = spins[((i + 1) % g.h) * g.w + j] as i64;
+                e -= s * (r + d);
+            }
+        }
+        assert_eq!(lat.energy_sum(), e);
+    }
+
+    #[test]
+    fn single_flip_changes_energy_locally() {
+        let g = geom();
+        let mut lat = Checkerboard::cold(g);
+        let e0 = lat.energy_sum();
+        lat.set(2, 3, -1);
+        // Flipping one spin in the ground state breaks 4 bonds: ΔE = +8.
+        assert_eq!(lat.energy_sum() - e0, 8);
+        assert_eq!(lat.magnetization_sum(), g.sites() as i64 - 2);
+    }
+}

@@ -1,0 +1,246 @@
+//! Lattice geometry and the checkerboard coordinate conventions.
+//!
+//! The `H × W` torus of spins is split by color (`(i + j) % 2`) into two
+//! `H × W/2` planes, compacted along rows exactly as in Figure 1 (center)
+//! of the paper. Site `(i, j)` of color `c` lives at plane coordinates
+//! `(i, k)` with `j = 2k + q`, `q = (i + c) % 2`.
+//!
+//! Neighbor rule used by every engine (paper Fig. 2 / Fig. 3): for a target
+//! of color `c` at `(i, k)`, the four opposite-color neighbors are the
+//! plane entries at `(i±1, k)`, `(i, k)`, and the *side* entry at
+//! `(i, k-1)` when `q == 0` or `(i, k+1)` when `q == 1` (all periodic).
+
+use crate::error::{Error, Result};
+
+/// Spin color in the checkerboard decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Color {
+    /// Sites with `(i + j) % 2 == 0`; updated first in each sweep.
+    Black = 0,
+    /// Sites with `(i + j) % 2 == 1`.
+    White = 1,
+}
+
+impl Color {
+    /// The opposite color.
+    #[inline]
+    pub fn other(self) -> Color {
+        match self {
+            Color::Black => Color::White,
+            Color::White => Color::Black,
+        }
+    }
+
+    /// Numeric tag (0 black, 1 white) — also the RNG stream tag.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Both colors in sweep order.
+    pub const BOTH: [Color; 2] = [Color::Black, Color::White];
+}
+
+/// Torus dimensions plus derived checkerboard quantities.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    /// Rows.
+    pub h: usize,
+    /// Columns (full lattice).
+    pub w: usize,
+}
+
+impl Geometry {
+    /// Validate and build. Both dimensions must be even and ≥ 2 so that the
+    /// checkerboard pattern tiles the torus; `w` even also makes `w/2`
+    /// columns per color plane exact.
+    pub fn new(h: usize, w: usize) -> Result<Self> {
+        if h < 2 || w < 2 {
+            return Err(Error::Geometry(format!("{h}x{w}: dims must be >= 2")));
+        }
+        if h % 2 != 0 || w % 2 != 0 {
+            return Err(Error::Geometry(format!("{h}x{w}: dims must be even")));
+        }
+        Ok(Self { h, w })
+    }
+
+    /// Square lattice.
+    pub fn square(l: usize) -> Result<Self> {
+        Self::new(l, l)
+    }
+
+    /// Columns per color plane.
+    #[inline]
+    pub fn w2(&self) -> usize {
+        self.w / 2
+    }
+
+    /// Total sites.
+    #[inline]
+    pub fn sites(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Sites per color plane.
+    #[inline]
+    pub fn sites_per_color(&self) -> usize {
+        self.h * self.w2()
+    }
+
+    /// Color of lattice site `(i, j)`.
+    #[inline]
+    pub fn color_of(&self, i: usize, j: usize) -> Color {
+        if (i + j) % 2 == 0 {
+            Color::Black
+        } else {
+            Color::White
+        }
+    }
+
+    /// Column parity `q = (i + c) % 2` of color-`c` sites in row `i`:
+    /// their full-lattice column is `j = 2k + q`.
+    #[inline]
+    pub fn parity(&self, color: Color, i: usize) -> usize {
+        (i + color.index()) % 2
+    }
+
+    /// Plane coordinates of site `(i, j)`.
+    #[inline]
+    pub fn to_plane(&self, i: usize, j: usize) -> (Color, usize, usize) {
+        (self.color_of(i, j), i, j / 2)
+    }
+
+    /// Full-lattice column of the color-`c` plane entry `(i, k)`.
+    #[inline]
+    pub fn to_column(&self, color: Color, i: usize, k: usize) -> usize {
+        2 * k + self.parity(color, i)
+    }
+
+    /// Row above (periodic).
+    #[inline]
+    pub fn up(&self, i: usize) -> usize {
+        if i == 0 {
+            self.h - 1
+        } else {
+            i - 1
+        }
+    }
+
+    /// Row below (periodic).
+    #[inline]
+    pub fn down(&self, i: usize) -> usize {
+        if i + 1 == self.h {
+            0
+        } else {
+            i + 1
+        }
+    }
+
+    /// Plane column to the left (periodic).
+    #[inline]
+    pub fn left(&self, k: usize) -> usize {
+        if k == 0 {
+            self.w2() - 1
+        } else {
+            k - 1
+        }
+    }
+
+    /// Plane column to the right (periodic).
+    #[inline]
+    pub fn right(&self, k: usize) -> usize {
+        if k + 1 == self.w2() {
+            0
+        } else {
+            k + 1
+        }
+    }
+
+    /// The side plane-column for a color-`c` target at `(i, k)`:
+    /// `k-1` when the parity is 0, `k+1` when it is 1 (periodic).
+    #[inline]
+    pub fn side(&self, color: Color, i: usize, k: usize) -> usize {
+        if self.parity(color, i) == 0 {
+            self.left(k)
+        } else {
+            self.right(k)
+        }
+    }
+
+    /// Number of bonds on the torus (`2 N` for nearest neighbors in 2D).
+    #[inline]
+    pub fn bonds(&self) -> usize {
+        2 * self.sites()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_dims() {
+        assert!(Geometry::new(3, 4).is_err());
+        assert!(Geometry::new(4, 7).is_err());
+        assert!(Geometry::new(0, 0).is_err());
+        assert!(Geometry::new(2, 2).is_ok());
+    }
+
+    #[test]
+    fn plane_roundtrip() {
+        let g = Geometry::new(6, 8).unwrap();
+        for i in 0..g.h {
+            for j in 0..g.w {
+                let (c, pi, k) = g.to_plane(i, j);
+                assert_eq!(pi, i);
+                assert_eq!(g.to_column(c, i, k), j);
+            }
+        }
+    }
+
+    #[test]
+    fn side_columns_map_to_true_neighbors() {
+        // For every target site, the neighbor rule {up, down, same, side}
+        // must produce exactly the four lattice neighbors' plane entries.
+        let g = Geometry::new(6, 8).unwrap();
+        for i in 0..g.h {
+            for j in 0..g.w {
+                let (c, _, k) = g.to_plane(i, j);
+                let o = c.other();
+                // True lattice neighbors of (i, j).
+                let mut expect: Vec<(usize, usize)> = vec![
+                    ((i + g.h - 1) % g.h, j),
+                    ((i + 1) % g.h, j),
+                    (i, (j + g.w - 1) % g.w),
+                    (i, (j + 1) % g.w),
+                ]
+                .into_iter()
+                .map(|(ni, nj)| {
+                    let (nc, pi, pk) = g.to_plane(ni, nj);
+                    assert_eq!(nc, o, "all neighbors must be opposite color");
+                    (pi, pk)
+                })
+                .collect();
+                // Rule-produced entries.
+                let mut got = vec![
+                    (g.up(i), k),
+                    (g.down(i), k),
+                    (i, k),
+                    (i, g.side(c, i, k)),
+                ];
+                expect.sort_unstable();
+                got.sort_unstable();
+                assert_eq!(expect, got, "site ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_wrap() {
+        let g = Geometry::new(4, 4).unwrap();
+        assert_eq!(g.up(0), 3);
+        assert_eq!(g.down(3), 0);
+        assert_eq!(g.left(0), 1);
+        assert_eq!(g.right(1), 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Deterministic lattice initialization, shared with the JAX build path.
+//!
+//! The hot start assigns `spin(i, j) = +1 iff philox([i, j, 0, 0],
+//! [seed, INIT_TAG]).lane0 & 1 == 1`. Because the draw is keyed by global
+//! site coordinates, Rust engines, the JAX programs and any slab
+//! partitioning all construct the *same* initial configuration from the
+//! same seed (`python/compile/kernels/philox.py` mirrors this function).
+
+use super::checkerboard::Checkerboard;
+use super::geometry::Geometry;
+use super::packed::PackedLattice;
+use crate::error::Result;
+use crate::rng::philox::philox4x32_10;
+
+/// Key tag for initialization streams ("INIT" in ASCII).
+pub const INIT_TAG: u32 = 0x494E_4954;
+
+/// The shared per-site init draw.
+#[inline]
+pub fn init_bit(seed: u32, i: usize, j: usize) -> bool {
+    philox4x32_10([i as u32, j as u32, 0, 0], [seed, INIT_TAG])[0] & 1 == 1
+}
+
+/// Random ("hot", T = ∞) start.
+pub fn hot(geom: Geometry, seed: u32) -> Checkerboard {
+    let mut lat = Checkerboard::cold(geom);
+    for i in 0..geom.h {
+        for j in 0..geom.w {
+            lat.set(i, j, if init_bit(seed, i, j) { 1 } else { -1 });
+        }
+    }
+    lat
+}
+
+/// Fully aligned ("cold", T = 0) start.
+pub fn cold(geom: Geometry) -> Checkerboard {
+    Checkerboard::cold(geom)
+}
+
+/// Hot start directly in packed form.
+pub fn hot_packed(geom: Geometry, seed: u32) -> Result<PackedLattice> {
+    PackedLattice::from_checkerboard(&hot(geom, seed))
+}
+
+/// Striped start (alternating rows) — used by metastability studies
+/// (paper §5.3 observes band-shaped metastable states) and as a
+/// maximally-antialigned-rows test fixture.
+pub fn striped(geom: Geometry, period: usize) -> Checkerboard {
+    let mut lat = Checkerboard::cold(geom);
+    let p = period.max(1);
+    for i in 0..geom.h {
+        let v = if (i / p) % 2 == 0 { 1 } else { -1 };
+        for j in 0..geom.w {
+            lat.set(i, j, v);
+        }
+    }
+    lat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_is_deterministic_and_seed_sensitive() {
+        let g = Geometry::new(8, 8).unwrap();
+        assert_eq!(hot(g, 1).to_spins(), hot(g, 1).to_spins());
+        assert_ne!(hot(g, 1).to_spins(), hot(g, 2).to_spins());
+    }
+
+    #[test]
+    fn hot_is_roughly_balanced() {
+        let g = Geometry::new(64, 64).unwrap();
+        let m = hot(g, 3).magnetization();
+        assert!(m.abs() < 0.1, "hot-start magnetization {m}");
+    }
+
+    #[test]
+    fn hot_is_partition_consistent() {
+        // Initializing a slab of the lattice independently must agree with
+        // the corresponding rows of the full lattice (the property the
+        // coordinator relies on).
+        let g = Geometry::new(8, 8).unwrap();
+        let full = hot(g, 5);
+        for i in 4..8 {
+            for j in 0..8 {
+                assert_eq!(full.get(i, j), if init_bit(5, i, j) { 1 } else { -1 });
+            }
+        }
+    }
+
+    #[test]
+    fn striped_energy() {
+        let g = Geometry::new(8, 8).unwrap();
+        let lat = striped(g, 1);
+        // Alternating single rows: vertical bonds all broken (+1 each),
+        // horizontal all aligned (-1 each) → E = 0.
+        assert_eq!(lat.energy_sum(), 0);
+        assert_eq!(lat.magnetization_sum(), 0);
+    }
+
+    #[test]
+    fn hot_packed_matches_hot() {
+        let g = Geometry::new(8, 32).unwrap();
+        let a = hot(g, 9);
+        let b = hot_packed(g, 9).unwrap().to_checkerboard();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,257 @@
+//! Multi-spin-coded lattice — the layout of the paper's *optimized*
+//! implementation (§3.3, Fig. 3): each color plane stores spins as 4-bit
+//! nibbles packed 16-per-`u64` word, with spin values mapped `-1/+1 → 0/1`.
+//!
+//! Four bits per spin (not one) is the paper's key trick: the nibble is
+//! wide enough to hold a nearest-neighbor *sum* (≤ 4 < 16), so the sums of
+//! 16 consecutive spins are computed with three 64-bit additions instead of
+//! 48 scalar ones, with no carry propagation between nibbles.
+
+use super::checkerboard::Checkerboard;
+use super::geometry::{Color, Geometry};
+use crate::error::{Error, Result};
+
+/// Spins per 64-bit word.
+pub const SPINS_PER_WORD: usize = 16;
+
+/// Bits per spin nibble.
+pub const BITS_PER_SPIN: u32 = 4;
+
+/// Mask selecting the low bit of every nibble (a 0/1 spin plane).
+pub const NIBBLE_LSB: u64 = 0x1111_1111_1111_1111;
+
+/// Mask selecting entire nibbles.
+pub const NIBBLE_MASK: u64 = 0xFFFF_FFFF_FFFF_FFFF;
+
+/// Multi-spin-coded checkerboard lattice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedLattice {
+    geom: Geometry,
+    /// Words per plane row (`W/2 / 16`).
+    wpr: usize,
+    /// `planes[c]` row-major `H × wpr` words.
+    planes: [Vec<u64>; 2],
+}
+
+impl PackedLattice {
+    /// Words per plane row required for `geom`; errors unless `W/2` is a
+    /// multiple of 16 (i.e. `W % 32 == 0`), the same alignment the paper's
+    /// 64-bit kernels require.
+    pub fn words_per_row(geom: Geometry) -> Result<usize> {
+        if geom.w2() % SPINS_PER_WORD != 0 {
+            return Err(Error::Geometry(format!(
+                "packed layout needs W/2 divisible by {SPINS_PER_WORD} (W % 32 == 0), got W = {}",
+                geom.w
+            )));
+        }
+        Ok(geom.w2() / SPINS_PER_WORD)
+    }
+
+    /// All spins up ("cold start"): every nibble = 1.
+    pub fn cold(geom: Geometry) -> Result<Self> {
+        let wpr = Self::words_per_row(geom)?;
+        let n = geom.h * wpr;
+        Ok(Self { geom, wpr, planes: [vec![NIBBLE_LSB; n], vec![NIBBLE_LSB; n]] })
+    }
+
+    /// Geometry accessor.
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geom
+    }
+
+    /// Words per plane row.
+    #[inline]
+    pub fn wpr(&self) -> usize {
+        self.wpr
+    }
+
+    /// Immutable plane words.
+    #[inline]
+    pub fn plane(&self, c: Color) -> &[u64] {
+        &self.planes[c.index()]
+    }
+
+    /// Mutable plane words.
+    #[inline]
+    pub fn plane_mut(&mut self, c: Color) -> &mut [u64] {
+        &mut self.planes[c.index()]
+    }
+
+    /// Split into (target plane mutable, source plane shared).
+    #[inline]
+    pub fn split_planes(&mut self, target: Color) -> (&mut [u64], &[u64]) {
+        let [ref mut b, ref mut w] = self.planes;
+        match target {
+            Color::Black => (&mut b[..], &w[..]),
+            Color::White => (&mut w[..], &b[..]),
+        }
+    }
+
+    /// 0/1 spin at plane coordinates `(c, i, k)`.
+    #[inline]
+    pub fn get01(&self, c: Color, i: usize, k: usize) -> u8 {
+        let word = self.planes[c.index()][i * self.wpr + k / SPINS_PER_WORD];
+        ((word >> ((k % SPINS_PER_WORD) as u32 * BITS_PER_SPIN)) & 1) as u8
+    }
+
+    /// Set a 0/1 spin at plane coordinates.
+    #[inline]
+    pub fn set01(&mut self, c: Color, i: usize, k: usize, v: u8) {
+        debug_assert!(v <= 1);
+        let idx = i * self.wpr + k / SPINS_PER_WORD;
+        let sh = (k % SPINS_PER_WORD) as u32 * BITS_PER_SPIN;
+        let w = &mut self.planes[c.index()][idx];
+        *w = (*w & !(0xF << sh)) | ((v as u64) << sh);
+    }
+
+    /// ±1 spin at full-lattice coordinates.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        let (c, i, k) = self.geom.to_plane(i, j);
+        (self.get01(c, i, k) as i8) * 2 - 1
+    }
+
+    /// Convert from a byte-per-spin lattice.
+    pub fn from_checkerboard(src: &Checkerboard) -> Result<Self> {
+        let geom = src.geometry();
+        let mut out = Self::cold(geom)?;
+        for c in Color::BOTH {
+            for i in 0..geom.h {
+                for k in 0..geom.w2() {
+                    let v = (src.get_plane(c, i, k) + 1) / 2;
+                    out.set01(c, i, k, v as u8);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Convert to a byte-per-spin lattice.
+    pub fn to_checkerboard(&self) -> Checkerboard {
+        let geom = self.geom;
+        let mut out = Checkerboard::cold(geom);
+        for c in Color::BOTH {
+            for i in 0..geom.h {
+                for k in 0..geom.w2() {
+                    out.set_plane(c, i, k, (self.get01(c, i, k) as i8) * 2 - 1);
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of up spins, via a masked popcount per word (each nibble's
+    /// low bit is the spin; higher nibble bits are always 0 between sweeps).
+    pub fn up_count(&self) -> u64 {
+        self.planes
+            .iter()
+            .flat_map(|p| p.iter())
+            .map(|&w| (w & NIBBLE_LSB).count_ones() as u64)
+            .sum()
+    }
+
+    /// Sum of ±1 spins: `2 · ups − N`.
+    pub fn magnetization_sum(&self) -> i64 {
+        2 * self.up_count() as i64 - self.geom.sites() as i64
+    }
+
+    /// Magnetization per site.
+    pub fn magnetization(&self) -> f64 {
+        self.magnetization_sum() as f64 / self.geom.sites() as f64
+    }
+
+    /// Total bond energy (delegates to the neighbor-sum identity).
+    ///
+    /// With 0/1 spins, for each site `σ` with up-neighbor count `s` out of
+    /// 4, the ±1 bond energy of its 4 incident bonds is
+    /// `-(2σ-1)(2s-4)`; summing over one color counts every bond exactly
+    /// once (all bonds join opposite colors).
+    pub fn energy_sum(&self) -> i64 {
+        let g = self.geom;
+        let mut e = 0i64;
+        for i in 0..g.h {
+            for k in 0..g.w2() {
+                let sigma = self.get01(Color::Black, i, k) as i64;
+                let o = Color::White;
+                let s = self.get01(o, g.up(i), k) as i64
+                    + self.get01(o, g.down(i), k) as i64
+                    + self.get01(o, i, k) as i64
+                    + self.get01(o, i, g.side(Color::Black, i, k)) as i64;
+                e -= (2 * sigma - 1) * (2 * s - 4);
+            }
+        }
+        e
+    }
+
+    /// Energy per site.
+    pub fn energy_per_site(&self) -> f64 {
+        self.energy_sum() as f64 / self.geom.sites() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_board(g: Geometry, seed: u64) -> Checkerboard {
+        let mut rng = Xoshiro256::new(seed);
+        let spins: Vec<i8> = (0..g.sites())
+            .map(|_| if rng.next_u64() & 1 == 1 { 1 } else { -1 })
+            .collect();
+        Checkerboard::from_spins(g, &spins).unwrap()
+    }
+
+    #[test]
+    fn alignment_enforced() {
+        assert!(PackedLattice::cold(Geometry::new(4, 16).unwrap()).is_err());
+        assert!(PackedLattice::cold(Geometry::new(4, 32).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn roundtrip_through_checkerboard() {
+        let g = Geometry::new(8, 64).unwrap();
+        let board = random_board(g, 42);
+        let packed = PackedLattice::from_checkerboard(&board).unwrap();
+        assert_eq!(packed.to_checkerboard(), board);
+    }
+
+    #[test]
+    fn observables_agree_with_checkerboard() {
+        let g = Geometry::new(8, 64).unwrap();
+        let board = random_board(g, 7);
+        let packed = PackedLattice::from_checkerboard(&board).unwrap();
+        assert_eq!(packed.magnetization_sum(), board.magnetization_sum());
+        assert_eq!(packed.energy_sum(), board.energy_sum());
+    }
+
+    #[test]
+    fn cold_state_observables() {
+        let g = Geometry::new(4, 32).unwrap();
+        let p = PackedLattice::cold(g).unwrap();
+        assert_eq!(p.magnetization(), 1.0);
+        assert_eq!(p.energy_per_site(), -2.0);
+        assert_eq!(p.up_count(), g.sites() as u64);
+    }
+
+    #[test]
+    fn get_set_all_positions() {
+        let g = Geometry::new(4, 32).unwrap();
+        let mut p = PackedLattice::cold(g).unwrap();
+        for c in Color::BOTH {
+            for i in 0..g.h {
+                for k in 0..g.w2() {
+                    p.set01(c, i, k, ((i + k) % 2) as u8);
+                }
+            }
+        }
+        for c in Color::BOTH {
+            for i in 0..g.h {
+                for k in 0..g.w2() {
+                    assert_eq!(p.get01(c, i, k), ((i + k) % 2) as u8);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! # ising-dgx
+//!
+//! Reproduction of *“A Performance Study of the 2D Ising Model on GPUs”*
+//! (Romero, Bisson, Fatica, Bernaschi — 2019) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (basic stencil, MXU matmul neighbor sums,
+//!   multi-spin packed), authored in `python/compile/kernels/` and
+//!   AOT-lowered to HLO text.
+//! * **L2** — JAX simulation programs (`python/compile/model.py`).
+//! * **L3** — this crate: native optimized engines, the PJRT runtime that
+//!   executes the AOT artifacts, and the multi-device coordinator that
+//!   reproduces the paper's DGX-2 slab decomposition.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algorithms;
+pub mod analytic;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod lattice;
+pub mod observables;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};
+

@@ -1,0 +1,10 @@
+//! `ising` — the leader binary: CLI over the native engines, the PJRT
+//! runtime and the multi-device coordinator.
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = ising_dgx::cli::main_with_args(raw) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,90 @@
+//! Integrated autocorrelation time — the quantity that makes the paper's
+//! "Metropolis still matters" argument quantitative (§2): local dynamics
+//! suffer critical slowing down (τ grows near T_c), Wolff does not. Used
+//! by the `wolff_vs_metropolis` example.
+
+/// Normalized autocorrelation function `ρ(t)` for lags `0..max_lag`.
+pub fn acf(xs: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = xs.len();
+    assert!(n >= 2, "need at least two samples");
+    let m = super::stats::mean(xs);
+    let var: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+    if var == 0.0 {
+        // Constant series: perfectly correlated by convention.
+        return vec![1.0; max_lag.min(n - 1) + 1];
+    }
+    (0..=max_lag.min(n - 1))
+        .map(|lag| {
+            let c: f64 = (0..n - lag)
+                .map(|i| (xs[i] - m) * (xs[i + lag] - m))
+                .sum::<f64>()
+                / (n - lag) as f64;
+            c / var
+        })
+        .collect()
+}
+
+/// Integrated autocorrelation time with the standard self-consistent
+/// window (Sokal): `τ_int = 1/2 + Σ_{t≥1} ρ(t)`, truncated at the first
+/// lag `t ≥ c · τ_int(t)` with `c = 6`.
+pub fn tau_int(xs: &[f64]) -> f64 {
+    let max_lag = (xs.len() / 4).max(1);
+    let rho = acf(xs, max_lag);
+    let mut tau = 0.5;
+    for (t, &r) in rho.iter().enumerate().skip(1) {
+        tau += r;
+        if (t as f64) >= 6.0 * tau {
+            break;
+        }
+    }
+    tau.max(0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn iid_has_tau_half() {
+        let mut g = Xoshiro256::new(1);
+        let xs: Vec<f64> = (0..20_000).map(|_| g.next_f64()).collect();
+        let tau = tau_int(&xs);
+        assert!((tau - 0.5).abs() < 0.15, "tau = {tau}");
+    }
+
+    #[test]
+    fn ar1_matches_theory() {
+        // AR(1) with coefficient a: τ_int = 1/2 · (1+a)/(1−a).
+        let a = 0.8f64;
+        let mut g = Xoshiro256::new(2);
+        let mut x = 0.0;
+        let xs: Vec<f64> = (0..200_000)
+            .map(|_| {
+                x = a * x + (g.next_f64() - 0.5);
+                x
+            })
+            .collect();
+        let tau = tau_int(&xs);
+        let theory = 0.5 * (1.0 + a) / (1.0 - a);
+        assert!(
+            (tau - theory).abs() < theory * 0.25,
+            "tau = {tau}, theory = {theory}"
+        );
+    }
+
+    #[test]
+    fn acf_lag_zero_is_one() {
+        let xs = [1.0, 3.0, 2.0, 5.0, 4.0];
+        let rho = acf(&xs, 2);
+        assert!((rho[0] - 1.0).abs() < 1e-12);
+        assert!(rho.len() == 3);
+    }
+
+    #[test]
+    fn constant_series_is_defined() {
+        let xs = [2.0; 64];
+        assert_eq!(acf(&xs, 4), vec![1.0; 5]);
+        assert!(tau_int(&xs) >= 0.5);
+    }
+}

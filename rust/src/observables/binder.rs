@@ -1,0 +1,157 @@
+//! Binder cumulant (paper §5.3, ref [14]):
+//! `U_L = 1 − ⟨m⁴⟩ / (3 ⟨m²⟩²)`.
+//!
+//! Note the factor 3: the paper's formula omits it (a typo — its Fig. 6
+//! values ≈ 0.6 ≈ 2/3 at low T are only reachable with the 3). With the 3,
+//! `U_L → 2/3` in the ordered phase, `→ 0` in the disordered phase, and
+//! curves for different `L` cross at `T_c` at the universal value
+//! `U* ≈ 0.6107`.
+
+use super::stats;
+
+/// Streaming accumulator for magnetization moments.
+#[derive(Clone, Debug, Default)]
+pub struct BinderAccumulator {
+    n: u64,
+    sum_m2: f64,
+    sum_m4: f64,
+    /// Raw |m| samples retained for jackknife errors.
+    samples_m: Vec<f64>,
+}
+
+impl BinderAccumulator {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one magnetization-per-site sample.
+    pub fn push(&mut self, m: f64) {
+        let m2 = m * m;
+        self.n += 1;
+        self.sum_m2 += m2;
+        self.sum_m4 += m2 * m2;
+        self.samples_m.push(m);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// ⟨m²⟩.
+    pub fn m2(&self) -> f64 {
+        self.sum_m2 / self.n as f64
+    }
+
+    /// ⟨m⁴⟩.
+    pub fn m4(&self) -> f64 {
+        self.sum_m4 / self.n as f64
+    }
+
+    /// ⟨|m|⟩ — the finite-size order parameter plotted in Fig. 5.
+    pub fn abs_m(&self) -> f64 {
+        stats::mean(&self.samples_m.iter().map(|m| m.abs()).collect::<Vec<_>>())
+    }
+
+    /// The Binder cumulant `U_L`.
+    pub fn binder(&self) -> f64 {
+        let m2 = self.m2();
+        1.0 - self.m4() / (3.0 * m2 * m2)
+    }
+
+    /// Jackknife error on `U_L`.
+    pub fn binder_error(&self, nblocks: usize) -> f64 {
+        let (_, err) = stats::jackknife(&self.samples_m, nblocks, |ms| {
+            let m2 = stats::mean(&ms.iter().map(|m| m * m).collect::<Vec<_>>());
+            let m4 = stats::mean(&ms.iter().map(|m| m.powi(4)).collect::<Vec<_>>());
+            1.0 - m4 / (3.0 * m2 * m2)
+        });
+        err
+    }
+}
+
+/// Estimate the crossing temperature of two Binder curves given as
+/// `(t, u)` samples on a common temperature grid (linear interpolation of
+/// the difference; returns `None` when no sign change exists).
+pub fn crossing(curve_a: &[(f64, f64)], curve_b: &[(f64, f64)]) -> Option<f64> {
+    assert_eq!(curve_a.len(), curve_b.len());
+    let diff: Vec<(f64, f64)> = curve_a
+        .iter()
+        .zip(curve_b)
+        .map(|(&(t, ua), &(t2, ub))| {
+            assert!((t - t2).abs() < 1e-12, "grids must match");
+            (t, ua - ub)
+        })
+        .collect();
+    for w in diff.windows(2) {
+        let (t0, d0) = w[0];
+        let (t1, d1) = w[1];
+        if d0 == 0.0 {
+            return Some(t0);
+        }
+        if d0 * d1 < 0.0 {
+            return Some(t0 + (t1 - t0) * d0 / (d0 - d1));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_phase_limit() {
+        // m = ±1 always: U = 1 − 1/3 = 2/3.
+        let mut acc = BinderAccumulator::new();
+        for i in 0..100 {
+            acc.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        assert!((acc.binder() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_limit_is_zero() {
+        // For zero-mean Gaussian m: ⟨m⁴⟩ = 3⟨m²⟩² ⇒ U = 0.
+        use crate::rng::Xoshiro256;
+        let mut g = Xoshiro256::new(5);
+        let mut acc = BinderAccumulator::new();
+        for _ in 0..200_000 {
+            // Box–Muller.
+            let u1 = g.next_f64().max(1e-12);
+            let u2 = g.next_f64();
+            let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            acc.push(z * 0.3);
+        }
+        assert!(acc.binder().abs() < 0.02, "U = {}", acc.binder());
+    }
+
+    #[test]
+    fn crossing_detection() {
+        let a: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 1.0 - 0.1 * i as f64)).collect();
+        let b: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 0.5 - 0.02 * i as f64)).collect();
+        // a(t) = 1 − 0.1 t, b(t) = 0.5 − 0.02 t cross at t = 6.25.
+        let t = crossing(&a, &b).unwrap();
+        assert!((t - 6.25).abs() < 1e-12);
+        // Parallel curves never cross.
+        let c: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 2.0 - 0.1 * i as f64)).collect();
+        assert!(crossing(&a, &c).is_none());
+    }
+
+    #[test]
+    fn error_shrinks_with_samples() {
+        use crate::rng::Xoshiro256;
+        let mut g = Xoshiro256::new(6);
+        let mut small = BinderAccumulator::new();
+        let mut large = BinderAccumulator::new();
+        for i in 0..20_000 {
+            let m = g.next_f64() - 0.5;
+            if i < 500 {
+                small.push(m);
+            }
+            large.push(m);
+        }
+        assert!(large.binder_error(20) < small.binder_error(20));
+    }
+}

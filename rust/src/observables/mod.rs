@@ -1,0 +1,11 @@
+//! Observables and Monte Carlo statistics (paper §5.3).
+
+pub mod autocorr;
+pub mod binder;
+pub mod series;
+pub mod stats;
+pub mod stripes;
+
+pub use autocorr::tau_int;
+pub use binder::BinderAccumulator;
+pub use series::{measure, Measurements};

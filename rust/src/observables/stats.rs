@@ -1,0 +1,133 @@
+//! Basic statistics for Monte Carlo time series: means, errors that
+//! respect autocorrelation (blocking), and jackknife for nonlinear
+//! estimators like the Binder cumulant.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Naive standard error of the mean (assumes independent samples).
+pub fn stderr_naive(xs: &[f64]) -> f64 {
+    (variance(xs) / xs.len() as f64).sqrt()
+}
+
+/// Blocking (binning) analysis: error of the mean as a function of block
+/// size; the plateau value is the autocorrelation-corrected error.
+/// Returns `(block_size, stderr)` pairs for power-of-two block sizes.
+pub fn blocking(xs: &[f64]) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let mut data = xs.to_vec();
+    let mut block = 1usize;
+    while data.len() >= 8 {
+        out.push((block, stderr_naive(&data)));
+        // Pairwise average into the next block level.
+        data = data.chunks_exact(2).map(|c| (c[0] + c[1]) * 0.5).collect();
+        block *= 2;
+    }
+    out
+}
+
+/// Autocorrelation-corrected standard error: the maximum over blocking
+/// levels (a conservative plateau estimate).
+pub fn stderr_blocked(xs: &[f64]) -> f64 {
+    blocking(xs)
+        .into_iter()
+        .map(|(_, e)| e)
+        .fold(f64::NAN, f64::max)
+}
+
+/// Jackknife estimate and error of an arbitrary statistic `f` computed
+/// from per-sample values, using `nblocks` delete-one blocks.
+pub fn jackknife<F: Fn(&[f64]) -> f64>(xs: &[f64], nblocks: usize, f: F) -> (f64, f64) {
+    let nb = nblocks.clamp(2, xs.len().max(2));
+    let bl = xs.len() / nb;
+    if bl == 0 {
+        return (f(xs), f64::NAN);
+    }
+    let full = f(&xs[..nb * bl]);
+    let mut estimates = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let mut rest = Vec::with_capacity((nb - 1) * bl);
+        rest.extend_from_slice(&xs[..b * bl]);
+        rest.extend_from_slice(&xs[(b + 1) * bl..nb * bl]);
+        estimates.push(f(&rest));
+    }
+    let m = mean(&estimates);
+    let var = estimates.iter().map(|e| (e - m) * (e - m)).sum::<f64>() * (nb - 1) as f64
+        / nb as f64;
+    // Bias-corrected estimate.
+    let est = full * nb as f64 - m * (nb - 1) as f64;
+    (est, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn mean_variance_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn blocking_flat_for_iid() {
+        // For iid samples the blocked error ≈ naive error at every level.
+        let mut g = Xoshiro256::new(1);
+        let xs: Vec<f64> = (0..4096).map(|_| g.next_f64()).collect();
+        let naive = stderr_naive(&xs);
+        let blocked = stderr_blocked(&xs);
+        assert!(blocked < naive * 1.6, "iid: blocked {blocked} vs naive {naive}");
+    }
+
+    #[test]
+    fn blocking_grows_for_correlated() {
+        // AR(1) with strong correlation: blocked error must exceed naive.
+        let mut g = Xoshiro256::new(2);
+        let mut x = 0.0f64;
+        let xs: Vec<f64> = (0..8192)
+            .map(|_| {
+                x = 0.95 * x + g.next_f64() - 0.5;
+                x
+            })
+            .collect();
+        assert!(stderr_blocked(&xs) > 2.0 * stderr_naive(&xs));
+    }
+
+    #[test]
+    fn jackknife_of_mean_matches_naive() {
+        let mut g = Xoshiro256::new(3);
+        let xs: Vec<f64> = (0..1000).map(|_| g.next_f64()).collect();
+        let (est, err) = jackknife(&xs, 10, mean);
+        assert!((est - mean(&xs)).abs() < 1e-10);
+        // Error close to naive for iid data.
+        let naive = stderr_naive(&xs);
+        assert!((err - naive).abs() < naive * 0.5, "jk {err} vs naive {naive}");
+    }
+
+    #[test]
+    fn jackknife_nonlinear() {
+        // Estimator x̄² on mean-zero data: bias-corrected jackknife should
+        // land near 0 within error.
+        let mut g = Xoshiro256::new(4);
+        let xs: Vec<f64> = (0..2000).map(|_| g.next_f64() - 0.5).collect();
+        let (est, err) = jackknife(&xs, 20, |v| mean(v) * mean(v));
+        assert!(est.abs() < 4.0 * err.max(1e-6), "est {est} err {err}");
+    }
+}

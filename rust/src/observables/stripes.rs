@@ -1,0 +1,86 @@
+//! Striped-state detector for the metastability phenomenon the paper
+//! reports in §5.3: below T_c, large lattices quenched from hot starts
+//! often lock into horizontal/vertical band configurations whose lifetime
+//! vastly exceeds the naive L² relaxation estimate.
+//!
+//! A banded state has near-zero global magnetization but strongly
+//! magnetized rows (or columns); the detector compares the mean absolute
+//! row/column magnetization against the global |m|.
+
+use crate::lattice::Checkerboard;
+
+/// Profile summary of a configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StripeReport {
+    /// |global magnetization|.
+    pub abs_m: f64,
+    /// Mean |row magnetization|.
+    pub row_m: f64,
+    /// Mean |column magnetization|.
+    pub col_m: f64,
+    /// max(row_m, col_m) − abs_m: ≈ 0 for uniform states, large for bands.
+    pub stripe_score: f64,
+}
+
+/// Analyze a configuration.
+pub fn analyze(lat: &Checkerboard) -> StripeReport {
+    let g = lat.geometry();
+    let spins = lat.to_spins();
+    let mut row_sum = vec![0i64; g.h];
+    let mut col_sum = vec![0i64; g.w];
+    for i in 0..g.h {
+        for j in 0..g.w {
+            let s = spins[i * g.w + j] as i64;
+            row_sum[i] += s;
+            col_sum[j] += s;
+        }
+    }
+    let abs_m = (row_sum.iter().sum::<i64>() as f64 / g.sites() as f64).abs();
+    let row_m = row_sum.iter().map(|&r| (r as f64 / g.w as f64).abs()).sum::<f64>()
+        / g.h as f64;
+    let col_m = col_sum.iter().map(|&c| (c as f64 / g.h as f64).abs()).sum::<f64>()
+        / g.w as f64;
+    StripeReport { abs_m, row_m, col_m, stripe_score: row_m.max(col_m) - abs_m }
+}
+
+/// Convenience: is this configuration band-like?
+pub fn is_striped(lat: &Checkerboard) -> bool {
+    let r = analyze(lat);
+    r.stripe_score > 0.5 && r.abs_m < 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{init, Geometry};
+
+    #[test]
+    fn uniform_state_scores_zero() {
+        let g = Geometry::new(16, 16).unwrap();
+        let lat = Checkerboard::cold(g);
+        let r = analyze(&lat);
+        assert!((r.abs_m - 1.0).abs() < 1e-12);
+        assert!(r.stripe_score.abs() < 1e-12);
+        assert!(!is_striped(&lat));
+    }
+
+    #[test]
+    fn banded_state_detected() {
+        let g = Geometry::new(16, 16).unwrap();
+        let lat = init::striped(g, 8); // two bands of 8 rows
+        let r = analyze(&lat);
+        assert!(r.abs_m < 1e-12);
+        assert!((r.row_m - 1.0).abs() < 1e-12);
+        assert!(r.stripe_score > 0.9);
+        assert!(is_striped(&lat));
+    }
+
+    #[test]
+    fn hot_state_not_striped() {
+        let g = Geometry::new(32, 32).unwrap();
+        let lat = init::hot(g, 9);
+        assert!(!is_striped(&lat));
+        let r = analyze(&lat);
+        assert!(r.stripe_score < 0.3, "score {}", r.stripe_score);
+    }
+}

@@ -1,0 +1,20 @@
+//! Random-number generation.
+//!
+//! Three generators with sharply separated roles:
+//!
+//! * [`philox`] — the counter-based Philox4x32-10 that drives every
+//!   Metropolis/heat-bath decision under the shared site-group convention
+//!   (bit-exact with the JAX kernels; see DESIGN.md §1).
+//! * [`xoshiro`] — fast sequential stream for the Wolff cluster engine and
+//!   property-test case generation.
+//! * [`splitmix`] — seed expansion only.
+
+pub mod philox;
+pub mod splitmix;
+pub mod uniform;
+pub mod xoshiro;
+
+pub use philox::{philox4x32_10, site_group, site_group_x4, site_u32, PhiloxStream};
+pub use splitmix::SplitMix64;
+pub use uniform::{threshold, u32_to_f32, u32_to_u24};
+pub use xoshiro::Xoshiro256;

@@ -1,0 +1,61 @@
+//! SplitMix64 (Steele et al. 2014) — used only to expand user seeds into
+//! well-mixed sub-seeds (e.g. per-worker init streams). Never used on a
+//! Metropolis decision path; those are all Philox (see `philox.rs`).
+
+/// SplitMix64 state.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    /// Create from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self(seed)
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next 32-bit output (upper half).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_seed_known_answer() {
+        // First output for seed 0 per the public-domain reference
+        // (splitmix64.c): mix(0 + GAMMA) — computed symbolically, this is
+        // the widely-cited value used by e.g. the xoshiro seeding docs.
+        let mut s = SplitMix64::new(0);
+        assert_eq!(s.next_u64(), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert!(va.iter().zip(&vb).all(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn rough_bit_balance() {
+        let mut s = SplitMix64::new(42);
+        let ones: u32 = (0..1024).map(|_| s.next_u64().count_ones()).sum();
+        let mean = ones as f64 / 1024.0;
+        assert!((mean - 32.0).abs() < 1.0, "mean ones/word = {mean}");
+    }
+}

@@ -1,0 +1,95 @@
+//! The shared u32 → uniform-f32 mapping (DESIGN.md §1).
+//!
+//! Both the Rust engines and the JAX kernels map a raw 32-bit word to a
+//! float in `[0, 1)` as `(r >> 8) * 2^-24`. The top 24 bits fit exactly in
+//! an f32 mantissa and the scale is a power of two, so the mapping is exact
+//! — which is what makes the float comparison `u < p` exactly equivalent to
+//! the integer comparison `(r >> 8) < ceil(p * 2^24)` used on the optimized
+//! path (see `algorithms::acceptance`).
+
+/// Scale factor `2^-24`.
+pub const INV_2P24: f32 = 1.0 / 16_777_216.0;
+
+/// Number of mantissa bits kept.
+pub const BITS: u32 = 24;
+
+/// Map a raw word to `[0, 1)`; exact (no rounding).
+#[inline(always)]
+pub fn u32_to_f32(r: u32) -> f32 {
+    (r >> 8) as f32 * INV_2P24
+}
+
+/// The 24-bit integer the mapping is based on.
+#[inline(always)]
+pub fn u32_to_u24(r: u32) -> u32 {
+    r >> 8
+}
+
+/// Convert an acceptance probability to the exactly-equivalent 24-bit
+/// integer threshold: `u32_to_f32(r) < p  ⟺  (r >> 8) < threshold(p)`.
+#[inline]
+pub fn threshold(p: f32) -> u32 {
+    if p >= 1.0 {
+        return 1 << BITS;
+    }
+    if p <= 0.0 {
+        return 0;
+    }
+    // ceil(p * 2^24) computed in f64: exact for every f32 input, and the
+    // strict-< comparison semantics make ceil (not floor/round) correct —
+    // see the exhaustive equivalence test below.
+    (p as f64 * (1u64 << BITS) as f64).ceil() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_bounds() {
+        assert_eq!(u32_to_f32(0), 0.0);
+        let max = u32_to_f32(u32::MAX);
+        assert!(max < 1.0);
+        assert!(max > 0.9999);
+    }
+
+    #[test]
+    fn mapping_is_exact() {
+        // Every output must be a multiple of 2^-24, exactly representable.
+        for r in [0u32, 1 << 8, 255 << 8, 0xdead_beef, u32::MAX] {
+            let u = u32_to_f32(r);
+            assert_eq!(u, (r >> 8) as f64 as f32 * INV_2P24);
+            assert_eq!((u / INV_2P24) as u32, r >> 8);
+        }
+    }
+
+    #[test]
+    fn threshold_equivalence_exhaustive_over_u24() {
+        // For a set of representative probabilities, verify the integer
+        // comparison agrees with the float comparison for *every* 24-bit
+        // value (16.7M cases per probability is too slow for CI; sample the
+        // full space with stride plus all boundary neighborhoods).
+        let probs = [
+            0.0f32, 1.0e-9, 0.1, 0.25, 0.5, 2.0 / 3.0, 0.999_999, 1.0,
+            (-2.0f32 * 0.44 * 4.0).exp(),
+            (-2.0f32 * 0.44 * 2.0).exp(),
+        ];
+        for &p in &probs {
+            let t = threshold(p);
+            let check = |v: u32| {
+                let f = v as f32 * INV_2P24;
+                assert_eq!(f < p, v < t, "p={p} v={v} t={t}");
+            };
+            for v in (0..(1u32 << BITS)).step_by(4099) {
+                check(v);
+            }
+            // Boundary neighborhood.
+            for d in 0..4u32 {
+                check(t.saturating_sub(d));
+                if t + d < (1 << BITS) {
+                    check(t + d);
+                }
+            }
+        }
+    }
+}

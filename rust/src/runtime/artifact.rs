@@ -1,0 +1,255 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `artifacts/manifest.json` lists every lowered program
+//! with its kind, variant, lattice shape and I/O layout.
+
+use crate::error::{Error, Result};
+use crate::lattice::Color;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// What a program computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProgramKind {
+    /// One color phase on full planes.
+    Update,
+    /// `n` full sweeps in-program (fori_loop).
+    Sweep,
+    /// (Σσ, E) on i8 planes.
+    Measure,
+    /// (Σσ, E) on packed u32 planes.
+    MeasurePacked,
+    /// One color phase on a slab with halo I/O.
+    Slab,
+}
+
+impl ProgramKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "update" => Self::Update,
+            "sweep" => Self::Sweep,
+            "measure" => Self::Measure,
+            "measure_packed" => Self::MeasurePacked,
+            "slab" => Self::Slab,
+            other => return Err(Error::Artifact(format!("unknown kind '{other}'"))),
+        })
+    }
+}
+
+/// Which L1 kernel the program was built from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Stencil kernel (paper §3.1).
+    Basic,
+    /// Packed multi-spin kernel (paper §3.3).
+    Multispin,
+    /// MXU matmul kernel (paper §3.2).
+    Tensorcore,
+    /// Variant-independent (measure programs).
+    Any,
+}
+
+impl Variant {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "basic" => Self::Basic,
+            "multispin" => Self::Multispin,
+            "tensorcore" => Self::Tensorcore,
+            "any" => Self::Any,
+            other => return Err(Error::Artifact(format!("unknown variant '{other}'"))),
+        })
+    }
+
+    /// Name as used in manifests and CLI flags.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Basic => "basic",
+            Self::Multispin => "multispin",
+            Self::Tensorcore => "tensorcore",
+            Self::Any => "any",
+        }
+    }
+}
+
+/// Plane element type of the program's lattice inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneDtype {
+    /// ±1 spins as int8 (`(h, w/2)` planes).
+    S8,
+    /// Packed nibbles as uint32 (`(h, w/2/8)` words).
+    U32,
+}
+
+/// One lowered program.
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    /// Unique name, also the file stem.
+    pub name: String,
+    /// Program kind.
+    pub kind: ProgramKind,
+    /// Kernel variant.
+    pub variant: Variant,
+    /// Lattice rows this program covers (slab height for slabs).
+    pub h: usize,
+    /// Full lattice width.
+    pub w: usize,
+    /// Color phase (update/slab programs).
+    pub color: Option<Color>,
+    /// Plane dtype.
+    pub dtype: PlaneDtype,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Total number of inputs (planes + scalars).
+    pub num_inputs: usize,
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug)]
+pub struct Manifest {
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+    /// All programs.
+    pub programs: Vec<ProgramMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (factored out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
+        let version = root.field("version")?.as_usize()?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let mut programs = Vec::new();
+        for p in root.field("programs")?.as_arr()? {
+            let color = match p.field("color")?.as_f64()? as i64 {
+                -1 => None,
+                0 => Some(Color::Black),
+                1 => Some(Color::White),
+                other => {
+                    return Err(Error::Artifact(format!("bad color {other}")));
+                }
+            };
+            programs.push(ProgramMeta {
+                name: p.field("name")?.as_str()?.to_string(),
+                kind: ProgramKind::parse(p.field("kind")?.as_str()?)?,
+                variant: Variant::parse(p.field("variant")?.as_str()?)?,
+                h: p.field("h")?.as_usize()?,
+                w: p.field("w")?.as_usize()?,
+                color,
+                dtype: match p.field("dtype")?.as_str()? {
+                    "s8" => PlaneDtype::S8,
+                    "u32" => PlaneDtype::U32,
+                    other => {
+                        return Err(Error::Artifact(format!("bad dtype '{other}'")));
+                    }
+                },
+                file: p.field("file")?.as_str()?.to_string(),
+                num_inputs: p.field("num_inputs")?.as_usize()?,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), programs })
+    }
+
+    /// Find a program by its identifying tuple.
+    pub fn find(
+        &self,
+        kind: ProgramKind,
+        variant: Variant,
+        h: usize,
+        w: usize,
+        color: Option<Color>,
+    ) -> Result<&ProgramMeta> {
+        self.programs
+            .iter()
+            .find(|p| {
+                p.kind == kind
+                    && p.variant == variant
+                    && p.h == h
+                    && p.w == w
+                    && p.color == color
+            })
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no artifact for kind={kind:?} variant={variant:?} {h}x{w} color={color:?}; \
+                     regenerate with `python -m compile.aot`"
+                ))
+            })
+    }
+
+    /// Absolute path of a program's HLO file.
+    pub fn path_of(&self, meta: &ProgramMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All lattice sizes available for a (kind, variant).
+    pub fn sizes(&self, kind: ProgramKind, variant: Variant) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .programs
+            .iter()
+            .filter(|p| p.kind == kind && p.variant == variant)
+            .map(|p| p.h)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "programs": [
+        {"name": "update_basic_64x64_c0", "kind": "update", "variant": "basic",
+         "h": 64, "w": 64, "color": 0, "dtype": "s8",
+         "file": "update_basic_64x64_c0.hlo.txt", "num_inputs": 5},
+        {"name": "sweep_multispin_128x128", "kind": "sweep", "variant": "multispin",
+         "h": 128, "w": 128, "color": -1, "dtype": "u32",
+         "file": "sweep_multispin_128x128.hlo.txt", "num_inputs": 6},
+        {"name": "measure_64x64", "kind": "measure", "variant": "any",
+         "h": 64, "w": 64, "color": -1, "dtype": "s8",
+         "file": "measure_64x64.hlo.txt", "num_inputs": 2}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.programs.len(), 3);
+        let p = m
+            .find(ProgramKind::Update, Variant::Basic, 64, 64, Some(Color::Black))
+            .unwrap();
+        assert_eq!(p.name, "update_basic_64x64_c0");
+        assert_eq!(p.dtype, PlaneDtype::S8);
+        assert!(m
+            .find(ProgramKind::Update, Variant::Basic, 64, 64, Some(Color::White))
+            .is_err());
+        assert_eq!(m.sizes(ProgramKind::Sweep, Variant::Multispin), vec![128]);
+        assert_eq!(
+            m.path_of(p),
+            Path::new("/tmp/a").join("update_basic_64x64_c0.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+        assert!(Manifest::parse(Path::new("."), r#"{"version": 2, "programs": []}"#).is_err());
+        let bad_kind = SAMPLE.replace("\"update\"", "\"frobnicate\"");
+        assert!(Manifest::parse(Path::new("."), &bad_kind).is_err());
+    }
+}

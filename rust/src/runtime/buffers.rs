@@ -1,0 +1,118 @@
+//! Literal construction/extraction helpers for the plane and scalar types
+//! the artifact programs use (the `xla` crate has no i8 `NativeType`, so
+//! s8 planes go through the untyped-bytes constructor).
+
+use crate::error::{Error, Result};
+use xla::{ElementType, Literal};
+
+/// Build an `s8[h, w2]` literal from ±1 spins.
+pub fn plane_i8(data: &[i8], h: usize, w2: usize) -> Result<Literal> {
+    if data.len() != h * w2 {
+        return Err(Error::Runtime(format!(
+            "plane data {} != {h}x{w2}",
+            data.len()
+        )));
+    }
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S8,
+        &[h, w2],
+        bytes,
+    )?)
+}
+
+/// Build a `u32[h, wpr]` literal from packed words.
+pub fn plane_u32(words: &[u32], h: usize, wpr: usize) -> Result<Literal> {
+    if words.len() != h * wpr {
+        return Err(Error::Runtime(format!(
+            "packed plane {} != {h}x{wpr}",
+            words.len()
+        )));
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::U32,
+        &[h, wpr],
+        bytes,
+    )?)
+}
+
+/// Extract an s8 plane back to a vector.
+pub fn read_i8(lit: &Literal) -> Result<Vec<i8>> {
+    Ok(lit.to_vec::<i8>()?)
+}
+
+/// Extract a u32 plane back to a vector.
+pub fn read_u32(lit: &Literal) -> Result<Vec<u32>> {
+    Ok(lit.to_vec::<u32>()?)
+}
+
+/// Scalar literals in the artifact calling convention.
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// u32 scalar.
+pub fn scalar_u32(v: u32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// i32 scalar.
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Read an i32 scalar output.
+pub fn read_scalar_i32(lit: &Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}
+
+/// Convert the u64 packed words of `lattice::PackedLattice` (16 spins per
+/// word) into the u32 words (8 spins) the JAX multispin programs use.
+/// Nibble order is little-endian in both, so this is a pure reinterpret.
+pub fn u64_words_to_u32(words: &[u64]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(words.len() * 2);
+    for &w in words {
+        out.push(w as u32);
+        out.push((w >> 32) as u32);
+    }
+    out
+}
+
+/// Inverse of [`u64_words_to_u32`].
+pub fn u32_words_to_u64(words: &[u32]) -> Vec<u64> {
+    debug_assert_eq!(words.len() % 2, 0);
+    words
+        .chunks_exact(2)
+        .map(|c| (c[0] as u64) | ((c[1] as u64) << 32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_width_conversion_roundtrip() {
+        let words: Vec<u64> = vec![0x0101_1010_0110_1001, 0x1111_0000_1010_0101, 0, u64::MAX];
+        let u32s = u64_words_to_u32(&words);
+        assert_eq!(u32s.len(), 8);
+        assert_eq!(u32_words_to_u64(&u32s), words);
+        // Spin order: nibble n of the u64 == nibble n%8 of u32 word n/8.
+        let w = 0x0000_0000_0000_0001u64; // spin at column 0
+        let u = u64_words_to_u32(&[w]);
+        assert_eq!(u[0] & 0xF, 1);
+        let w = 0x0001_0000_0000_0000u64; // spin at column 12
+        let u = u64_words_to_u32(&[w]);
+        assert_eq!((u[1] >> 16) & 0xF, 1);
+    }
+
+    #[test]
+    fn plane_literal_shapes_checked() {
+        assert!(plane_i8(&[1, -1, 1], 2, 2).is_err());
+        assert!(plane_u32(&[0; 3], 2, 2).is_err());
+    }
+}

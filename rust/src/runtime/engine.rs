@@ -1,0 +1,98 @@
+//! The PJRT execution engine: owns the CPU client, loads HLO-text
+//! artifacts, compiles them once and caches the executables.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile`. Everything here is
+//! `Rc`-based (the `xla` crate types are not `Send`), so the engine lives
+//! on the driver thread.
+
+use super::artifact::{Manifest, ProgramKind, ProgramMeta, Variant};
+use crate::error::{Error, Result};
+use crate::lattice::Color;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A compiled program plus its metadata.
+pub struct Program {
+    /// Manifest entry.
+    pub meta: ProgramMeta,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl Program {
+    /// Execute with literal inputs; returns the tuple elements of the
+    /// program's (always tuple-rooted — aot.py lowers with
+    /// return_tuple=True) result as host literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.num_inputs {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.num_inputs,
+                inputs.len()
+            )));
+        }
+        let out = self.exe.execute::<xla::Literal>(inputs)?;
+        let result = out[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Engine: PJRT client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Platform string (for `ising info`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once) a program by manifest identity.
+    pub fn load(
+        &self,
+        kind: ProgramKind,
+        variant: Variant,
+        h: usize,
+        w: usize,
+        color: Option<Color>,
+    ) -> Result<Program> {
+        let meta = self.manifest.find(kind, variant, h, w, color)?.clone();
+        let exe = {
+            let mut cache = self.cache.borrow_mut();
+            if let Some(exe) = cache.get(&meta.name) {
+                exe.clone()
+            } else {
+                let path = self.manifest.path_of(&meta);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| {
+                        Error::Artifact(format!("non-utf8 path {}", path.display()))
+                    })?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = Rc::new(self.client.compile(&comp)?);
+                cache.insert(meta.name.clone(), exe.clone());
+                exe
+            }
+        };
+        Ok(Program { meta, exe })
+    }
+
+    /// Number of compiled programs currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,195 @@
+//! `Sweeper` implementations backed by the AOT artifacts: the Rust-driven
+//! equivalents of the paper's three single-GPU implementations, executing
+//! the JAX/Pallas kernels through PJRT.
+
+use super::artifact::{PlaneDtype, ProgramKind, Variant};
+use super::buffers;
+use super::engine::{Engine, Program};
+use crate::algorithms::sweeper::Sweeper;
+use crate::error::{Error, Result};
+use crate::lattice::{Checkerboard, Color, Geometry, PackedLattice};
+use std::rc::Rc;
+
+/// A PJRT-backed engine for one (variant, lattice size).
+///
+/// Holds host mirrors of the color planes (the `xla` crate cannot keep
+/// multi-output results device-resident — tuple buffers are opaque — so
+/// planes round-trip per program call; the fused `sweep` program amortizes
+/// this over its in-program fori_loop, see DESIGN.md §6/L3).
+pub struct PjrtEngine {
+    /// Keeps the client + cache alive for the programs.
+    #[allow(dead_code)]
+    engine: Rc<Engine>,
+    variant: Variant,
+    geom: Geometry,
+    /// i8 planes (basic/tensorcore) — row-major (h, w2) per color.
+    planes_i8: Option<[Vec<i8>; 2]>,
+    /// packed u32 planes (multispin) — row-major (h, w2/8) per color.
+    planes_u32: Option<[Vec<u32>; 2]>,
+    sweep_prog: Program,
+    measure_prog: Program,
+    beta: f32,
+    seed: u32,
+    step: u32,
+    /// Sweeps executed per program call (dispatch amortization).
+    pub sweeps_per_call: u32,
+}
+
+impl PjrtEngine {
+    /// Hot-start engine; `variant` ∈ {Basic, Multispin, Tensorcore}.
+    pub fn hot(
+        engine: Rc<Engine>,
+        variant: Variant,
+        geom: Geometry,
+        beta: f32,
+        seed: u32,
+    ) -> Result<Self> {
+        let (h, w) = (geom.h, geom.w);
+        let sweep_prog = engine.load(ProgramKind::Sweep, variant, h, w, None)?;
+        let (planes_i8, planes_u32, measure_prog) = match sweep_prog.meta.dtype {
+            PlaneDtype::S8 => {
+                let lat = crate::lattice::init::hot(geom, seed);
+                let planes = [lat.plane(Color::Black).to_vec(), lat.plane(Color::White).to_vec()];
+                let m = engine.load(ProgramKind::Measure, Variant::Any, h, w, None)?;
+                (Some(planes), None, m)
+            }
+            PlaneDtype::U32 => {
+                let lat = crate::lattice::init::hot_packed(geom, seed)?;
+                let planes = [
+                    buffers::u64_words_to_u32(lat.plane(Color::Black)),
+                    buffers::u64_words_to_u32(lat.plane(Color::White)),
+                ];
+                let m =
+                    engine.load(ProgramKind::MeasurePacked, Variant::Multispin, h, w, None)?;
+                (None, Some(planes), m)
+            }
+        };
+        Ok(Self {
+            engine,
+            variant,
+            geom,
+            planes_i8,
+            planes_u32,
+            sweep_prog,
+            measure_prog,
+            beta,
+            seed,
+            step: 0,
+            sweeps_per_call: 16,
+        })
+    }
+
+    fn plane_literals(&self) -> Result<(xla::Literal, xla::Literal)> {
+        let (h, w2) = (self.geom.h, self.geom.w2());
+        if let Some(p) = &self.planes_i8 {
+            Ok((buffers::plane_i8(&p[0], h, w2)?, buffers::plane_i8(&p[1], h, w2)?))
+        } else if let Some(p) = &self.planes_u32 {
+            let wpr = w2 / 8;
+            Ok((buffers::plane_u32(&p[0], h, wpr)?, buffers::plane_u32(&p[1], h, wpr)?))
+        } else {
+            Err(Error::Runtime("engine has no planes".into()))
+        }
+    }
+
+    fn store_planes(&mut self, black: &xla::Literal, white: &xla::Literal) -> Result<()> {
+        if self.planes_i8.is_some() {
+            self.planes_i8 = Some([buffers::read_i8(black)?, buffers::read_i8(white)?]);
+        } else {
+            self.planes_u32 = Some([buffers::read_u32(black)?, buffers::read_u32(white)?]);
+        }
+        Ok(())
+    }
+
+    /// Run `n` sweeps through the fused program (chunks of
+    /// `sweeps_per_call`).
+    pub fn run_sweeps(&mut self, n: u32) -> Result<()> {
+        let mut left = n;
+        while left > 0 {
+            let chunk = left.min(self.sweeps_per_call);
+            let (b, w) = self.plane_literals()?;
+            let out = self.sweep_prog.run(&[
+                b,
+                w,
+                buffers::scalar_f32(self.beta),
+                buffers::scalar_u32(self.seed),
+                buffers::scalar_u32(self.step),
+                buffers::scalar_i32(chunk as i32),
+            ])?;
+            self.store_planes(&out[0], &out[1])?;
+            self.step += chunk;
+            left -= chunk;
+        }
+        Ok(())
+    }
+
+    /// (Σσ, E) through the measure program.
+    pub fn measure(&self) -> Result<(i64, i64)> {
+        let (b, w) = self.plane_literals()?;
+        let out = self.measure_prog.run(&[b, w])?;
+        Ok((
+            buffers::read_scalar_i32(&out[0])? as i64,
+            buffers::read_scalar_i32(&out[1])? as i64,
+        ))
+    }
+
+    /// Export the state as a byte-per-spin lattice (for cross-checks).
+    pub fn to_checkerboard(&self) -> Result<Checkerboard> {
+        let g = self.geom;
+        if let Some(p) = &self.planes_i8 {
+            let mut lat = Checkerboard::cold(g);
+            lat.plane_mut(Color::Black).copy_from_slice(&p[0]);
+            lat.plane_mut(Color::White).copy_from_slice(&p[1]);
+            Ok(lat)
+        } else {
+            let p = self.planes_u32.as_ref().unwrap();
+            let mut lat = PackedLattice::cold(g)?;
+            lat.plane_mut(Color::Black)
+                .copy_from_slice(&buffers::u32_words_to_u64(&p[0]));
+            lat.plane_mut(Color::White)
+                .copy_from_slice(&buffers::u32_words_to_u64(&p[1]));
+            Ok(lat.to_checkerboard())
+        }
+    }
+
+    /// Engine name including the variant.
+    pub fn variant_name(&self) -> &'static str {
+        match self.variant {
+            Variant::Basic => "pjrt-basic",
+            Variant::Multispin => "pjrt-multispin",
+            Variant::Tensorcore => "pjrt-tensorcore",
+            Variant::Any => "pjrt",
+        }
+    }
+}
+
+impl Sweeper for PjrtEngine {
+    fn name(&self) -> &'static str {
+        self.variant_name()
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.geom
+    }
+
+    fn sweep_n(&mut self, n: u32) {
+        self.run_sweeps(n).expect("pjrt sweep failed");
+    }
+
+    fn magnetization(&self) -> f64 {
+        let (m, _) = self.measure().expect("pjrt measure failed");
+        m as f64 / self.geom.sites() as f64
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        let (_, e) = self.measure().expect("pjrt measure failed");
+        e as f64 / self.geom.sites() as f64
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.to_checkerboard().expect("export failed").to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.beta = beta;
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs at request time — the Rust binary is self-contained
+//! once `make artifacts` has been built.
+
+pub mod artifact;
+pub mod buffers;
+pub mod engine;
+pub mod engines;
+
+pub use artifact::{Manifest, PlaneDtype, ProgramKind, ProgramMeta, Variant};
+pub use engine::{Engine, Program};
+pub use engines::PjrtEngine;

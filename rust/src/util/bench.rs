@@ -1,0 +1,151 @@
+//! Minimal benchmarking harness (offline image: no criterion).
+//!
+//! Measures a closure with warmup + repeated timed runs and reports
+//! min/median/mean. The bench binaries (`rust/benches/*.rs`) are
+//! `harness = false` and drive this directly, printing paper-style tables
+//! and machine-readable JSON via `util::json`.
+
+use super::timer::Timer;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Seconds per timed run (sorted ascending).
+    pub runs: Vec<f64>,
+}
+
+impl Sample {
+    /// Fastest run.
+    pub fn min(&self) -> f64 {
+        self.runs[0]
+    }
+
+    /// Median run.
+    pub fn median(&self) -> f64 {
+        let n = self.runs.len();
+        if n % 2 == 1 {
+            self.runs[n / 2]
+        } else {
+            0.5 * (self.runs[n / 2 - 1] + self.runs[n / 2])
+        }
+    }
+
+    /// Mean run.
+    pub fn mean(&self) -> f64 {
+        self.runs.iter().sum::<f64>() / self.runs.len() as f64
+    }
+
+    /// Relative spread (max−min)/median — a stability indicator.
+    pub fn spread(&self) -> f64 {
+        (self.runs[self.runs.len() - 1] - self.runs[0]) / self.median()
+    }
+}
+
+/// Options for [`bench`].
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    /// Untimed warmup iterations.
+    pub warmup: u32,
+    /// Timed repetitions.
+    pub reps: u32,
+    /// Target minimum seconds per timed rep; the harness scales the
+    /// closure's internal iteration count hint accordingly (reported via
+    /// the `iters` argument).
+    pub min_rep_secs: f64,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self { warmup: 1, reps: 5, min_rep_secs: 0.2 }
+    }
+}
+
+/// Benchmark `f(iters)` where `f` performs `iters` internal iterations of
+/// the unit of work and the harness auto-scales `iters` to hit
+/// `min_rep_secs`. Returns the sample plus the final `iters` used, so
+/// callers can convert to per-unit rates.
+pub fn bench<F: FnMut(u64)>(opts: Options, mut f: F) -> (Sample, u64) {
+    // Calibrate.
+    let mut iters = 1u64;
+    loop {
+        let t = Timer::start();
+        f(iters);
+        let s = t.secs();
+        if s >= opts.min_rep_secs || iters >= 1 << 30 {
+            break;
+        }
+        let scale = (opts.min_rep_secs / s.max(1e-9)).ceil() as u64;
+        iters = (iters * scale.clamp(2, 100)).min(1 << 30);
+    }
+    for _ in 0..opts.warmup {
+        f(iters);
+    }
+    let mut runs = Vec::with_capacity(opts.reps as usize);
+    for _ in 0..opts.reps {
+        let t = Timer::start();
+        f(iters);
+        runs.push(t.secs());
+    }
+    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (Sample { runs }, iters)
+}
+
+/// Quick-mode detection: `ISING_BENCH_QUICK=1` shrinks workloads so CI and
+/// smoke runs finish fast; bench binaries consult this.
+pub fn quick_mode() -> bool {
+    std::env::var("ISING_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Write a machine-readable bench report to `target/bench-reports/`.
+pub fn write_report(name: &str, report: &super::json::Json) -> std::io::Result<()> {
+    let dir = std::path::Path::new("target/bench-reports");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.json")), report.to_string_pretty())
+}
+
+/// Measure flips/ns of one `Sweeper` over `sweeps` full sweeps
+/// (single timed run — Monte Carlo state advances, so repetition is
+/// chunked rather than repeated from the same state).
+pub fn sweeper_flips_per_ns(
+    engine: &mut dyn crate::algorithms::Sweeper,
+    sweeps: u32,
+) -> f64 {
+    let flips = engine.flips_per_sweep() * sweeps as u64;
+    let t = Timer::start();
+    engine.sweep_n(sweeps);
+    crate::util::units::flips_per_ns(flips, t.secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_iterations_and_reports() {
+        let mut count = 0u64;
+        let (sample, iters) = bench(
+            Options { warmup: 0, reps: 3, min_rep_secs: 0.01 },
+            |n| {
+                // ~50ns of work per iter.
+                for _ in 0..n {
+                    std::hint::black_box((0..50u64).sum::<u64>());
+                }
+                count += n;
+            },
+        );
+        assert!(iters >= 1);
+        assert_eq!(sample.runs.len(), 3);
+        assert!(sample.min() > 0.0);
+        assert!(sample.min() <= sample.median());
+        assert!(count > 0);
+    }
+
+    #[test]
+    fn sample_stats() {
+        let s = Sample { runs: vec![1.0, 2.0, 4.0] };
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.median(), 2.0);
+        assert!((s.mean() - 7.0 / 3.0).abs() < 1e-12);
+        assert!((s.spread() - 1.5).abs() < 1e-12);
+    }
+}

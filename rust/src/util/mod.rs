@@ -1,0 +1,14 @@
+//! Std-only substrates the offline image requires us to own (DESIGN.md §2):
+//! JSON, timing, unit formatting, ASCII tables, a bench harness and a
+//! property-testing harness.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod table;
+pub mod timer;
+pub mod units;
+
+pub use json::Json;
+pub use table::Table;
+pub use timer::Timer;

@@ -1,0 +1,182 @@
+//! Mini property-testing harness (offline image: no proptest crate).
+//!
+//! Runs a property over many pseudo-random cases; on failure it reports
+//! the case index and seed so the exact case can be replayed, and performs
+//! a simple "shrink by halving sizes" pass for cases expressed through
+//! [`Gen`]'s sized generators.
+
+use crate::rng::Xoshiro256;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size budget for sized values; shrinking lowers this.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform u32.
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.rng.next_f64() as f32) * (hi - lo)
+    }
+
+    /// Even integer in `[lo, hi]` (for lattice dims).
+    pub fn even_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.int_in(lo as i64 / 2, hi as i64 / 2) as usize;
+        (v * 2).max(2)
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    /// A vector of sized length up to `size`.
+    pub fn vec_f64(&mut self) -> Vec<f64> {
+        let n = 1 + self.rng.next_below(self.size.max(1) as u64) as usize;
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct Failure {
+    /// Case number that failed.
+    pub case: usize,
+    /// RNG seed to replay the case.
+    pub seed: u64,
+    /// Panic/assertion message.
+    pub message: String,
+}
+
+/// Run `prop` over `cases` generated cases. Panics with a replayable
+/// report on the first failure. The per-case seed is derived from
+/// `ISING_PROPTEST_SEED` (env) or a fixed default, so CI is deterministic.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    let base: u64 = std::env::var("ISING_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE);
+    if let Some(f) = check_quiet(base, cases, &prop) {
+        panic!(
+            "property '{name}' failed at case {}/{cases} (replay: ISING_PROPTEST_SEED={} single case seed {}): {}",
+            f.case, base, f.seed, f.message
+        );
+    }
+}
+
+/// Non-panicking core (testable).
+pub fn check_quiet<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    base_seed: u64,
+    cases: usize,
+    prop: &F,
+) -> Option<Failure> {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for size in [64usize, 8] {
+            // Full size first; on failure retry the same seed with a
+            // smaller budget and report whichever still fails (poor man's
+            // shrinking — sized generators produce smaller cases).
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen { rng: Xoshiro256::new(seed), size };
+                prop(&mut g);
+            });
+            match (result, size) {
+                (Ok(()), 64) => break,     // passed, next case
+                (Ok(()), _) => {
+                    // Failed at 64 but passed at 8: report the large case.
+                    return Some(Failure {
+                        case,
+                        seed,
+                        message: "fails only at larger size budget".into(),
+                    });
+                }
+                (Err(e), 8) => {
+                    return Some(Failure { case, seed, message: panic_msg(e) });
+                }
+                (Err(_), _) => continue,   // try shrunken size
+            }
+        }
+    }
+    None
+}
+
+fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 roundtrips through u128", 50, |g| {
+            let x = g.u64();
+            assert_eq!(x as u128 as u64, x);
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_with_replay_info() {
+        // Derive a value that the fixed seed *will* generate, then forbid
+        // it — guaranteed deterministic failure at case 0.
+        let forbidden = {
+            // Case-0 seed derivation mirrors check_quiet's.
+            let seed = 42u64.wrapping_add(0).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut g = Gen { rng: Xoshiro256::new(seed), size: 64 };
+            g.int_in(0, 100)
+        };
+        let prop = move |g: &mut Gen| {
+            let v = g.int_in(0, 100);
+            assert!(v != forbidden, "hit the forbidden value");
+        };
+        let f = check_quiet(42, 100, &prop).expect("case 0 must fail");
+        assert_eq!(f.case, 0);
+        assert!(f.message.contains("forbidden") || f.message.contains("size budget"));
+        // Replay: the same base seed must reproduce the failure.
+        let again = check_quiet(42, 100, &prop);
+        assert_eq!(again.unwrap().case, 0);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let v = g.int_in(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let e = g.even_in(2, 64);
+            assert!(e % 2 == 0 && (2..=64).contains(&e));
+            let f = g.f32_in(0.1, 0.9);
+            assert!((0.1..0.9).contains(&f));
+            let xs = g.vec_f64();
+            assert!(!xs.is_empty() && xs.len() <= 64);
+        });
+    }
+}

@@ -1,0 +1,93 @@
+//! Human-readable formatting of the paper's units: spin flips per
+//! nanosecond, byte sizes, lattice shorthands like `(123×2048)²`.
+
+/// Flips per nanosecond from a flip count and elapsed seconds — the
+/// paper's headline metric.
+pub fn flips_per_ns(flips: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::NAN;
+    }
+    flips as f64 / (secs * 1e9)
+}
+
+/// Format a float with a sensible number of significant digits for tables.
+pub fn fmt_sig(x: f64, digits: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{x:.dec$}")
+}
+
+/// Format a byte count (`30.3 GB` style, decimal units like the paper).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const U: [(&str, f64); 4] =
+        [("GB", 1e9), ("MB", 1e6), ("KB", 1e3), ("B", 1.0)];
+    for (name, scale) in U {
+        if bytes as f64 >= scale {
+            return format!("{} {}", fmt_sig(bytes as f64 / scale, 3), name);
+        }
+    }
+    "0 B".to_string()
+}
+
+/// Lattice-size shorthand: factors powers of 128/2048 like the paper's
+/// `(k×128)²` table labels when possible, else plain `L²`.
+pub fn fmt_lattice(l: usize) -> String {
+    for base in [2048usize, 128] {
+        if l % base == 0 {
+            return format!("({}x{})^2", l / base, base);
+        }
+    }
+    format!("{l}^2")
+}
+
+/// Memory footprint of an `L²` lattice at `bits` bits per spin.
+pub fn lattice_bytes(l: usize, bits: u32) -> u64 {
+    (l as u64 * l as u64 * bits as u64).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flips_rate() {
+        // 1e9 flips in 1s = 1 flip/ns.
+        assert!((flips_per_ns(1_000_000_000, 1.0) - 1.0).abs() < 1e-12);
+        assert!(flips_per_ns(1, 0.0).is_nan());
+    }
+
+    #[test]
+    fn sig_digits() {
+        assert_eq!(fmt_sig(417.5739, 5), "417.57");
+        assert_eq!(fmt_sig(0.0123456, 3), "0.0123");
+        assert_eq!(fmt_sig(66954.0, 5), "66954");
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(2_000_000), "2.00 MB");
+        assert_eq!(fmt_bytes(30_300_000_000), "30.3 GB");
+        assert_eq!(fmt_bytes(12), "12.0 B");
+    }
+
+    #[test]
+    fn lattice_labels() {
+        assert_eq!(fmt_lattice(2560), "(20x128)^2");
+        assert_eq!(fmt_lattice(251904), "(123x2048)^2");
+        assert_eq!(fmt_lattice(100), "100^2");
+    }
+
+    #[test]
+    fn lattice_memory_matches_paper() {
+        // Paper: (123×2048)² at 4 bits/spin = 30.3 GB... (it stores two
+        // half-lattices of nibbles = 4 bits/spin total footprint).
+        let l = 123 * 2048;
+        let b = lattice_bytes(l, 4);
+        assert!((b as f64 / 1e9 - 31.7).abs() < 0.5, "{}", fmt_bytes(b));
+        // 2048² at 4 bits/spin ≈ 2 MB (paper Table 2 smallest row).
+        assert!((lattice_bytes(2048, 4) as f64 / 1e6 - 2.1).abs() < 0.2);
+    }
+}

@@ -1,0 +1,87 @@
+//! Fuzz-style property tests for the std-only parsers: arbitrary bytes
+//! must never panic, and valid documents must round-trip.
+
+use ising_dgx::config::Toml;
+use ising_dgx::util::json::{obj, Json};
+use ising_dgx::util::proptest::{check, Gen};
+
+fn random_bytes(g: &mut Gen, max: usize) -> String {
+    let n = g.int_in(0, max as i64) as usize;
+    (0..n)
+        .map(|_| {
+            // Bias toward structural characters to reach deep parser paths.
+            match g.int_in(0, 9) {
+                0 => '{',
+                1 => '}',
+                2 => '[',
+                3 => ']',
+                4 => '"',
+                5 => '\\',
+                6 => ',',
+                7 => '=',
+                _ => char::from_u32(g.int_in(32, 126) as u32).unwrap(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn json_parser_never_panics() {
+    check("json fuzz", 500, |g| {
+        let s = random_bytes(g, 200);
+        let _ = Json::parse(&s); // must return Ok or Err, never panic
+    });
+}
+
+#[test]
+fn toml_parser_never_panics() {
+    check("toml fuzz", 500, |g| {
+        let s = random_bytes(g, 200);
+        let _ = Toml::parse(&s);
+    });
+}
+
+#[test]
+fn json_roundtrip_property() {
+    check("json roundtrip", 100, |g| {
+        // Build a random (flat-ish) document.
+        let mut fields = Vec::new();
+        let n = g.int_in(0, 8) as usize;
+        for i in 0..n {
+            let v = match g.int_in(0, 4) {
+                0 => Json::Null,
+                1 => Json::Bool(g.int_in(0, 1) == 1),
+                2 => Json::Num(g.int_in(-1_000_000, 1_000_000) as f64),
+                3 => Json::Str(random_bytes(g, 20)),
+                _ => Json::Arr(vec![Json::Num(g.f64()), Json::Bool(true)]),
+            };
+            fields.push((format!("k{i}"), v));
+        }
+        let doc = Json::Obj(fields.into_iter().collect());
+        let pretty = Json::parse(&doc.to_string_pretty()).unwrap();
+        let compact = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(doc, pretty);
+        assert_eq!(doc, compact);
+    });
+}
+
+#[test]
+fn toml_numeric_string_roundtrip() {
+    check("toml values", 100, |g| {
+        let i = g.int_in(-1_000_000, 1_000_000);
+        let f = g.f64() * 100.0;
+        let doc = format!("[s]\na = {i}\nb = {f}\nc = \"x{i}\"\nd = [1, 2, 3]\n");
+        let t = Toml::parse(&doc).unwrap();
+        assert_eq!(t.get("s", "a").unwrap().as_int().unwrap(), i);
+        assert!((t.get("s", "b").unwrap().as_float().unwrap() - f).abs() < 1e-9 * f.abs().max(1.0));
+        assert_eq!(t.get("s", "c").unwrap().as_str().unwrap(), format!("x{i}"));
+        assert_eq!(t.get("s", "d").unwrap().as_arr().unwrap().len(), 3);
+    });
+}
+
+#[test]
+fn json_helper_obj_builder() {
+    let j = obj(vec![("a", Json::Num(1.0)), ("b", Json::Str("x".into()))]);
+    let s = j.to_string_compact();
+    assert_eq!(Json::parse(&s).unwrap(), j);
+}

@@ -1,0 +1,116 @@
+//! Coordinator integration: slab clusters (PJRT and native) must be
+//! bit-exact against single-device execution, and the perf model must
+//! reproduce the paper's scaling shapes.
+
+use ising_dgx::algorithms::{metropolis, multispin, AcceptanceTable};
+use ising_dgx::coordinator::{
+    model_sweep, partition, NativeCluster, SlabCluster, SpinWidth, Topology,
+};
+use ising_dgx::lattice::{init, Geometry};
+use ising_dgx::runtime::{Engine, Variant};
+use std::path::Path;
+use std::rc::Rc;
+
+fn engine() -> Option<Rc<Engine>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    Some(Rc::new(Engine::new(&dir).expect("engine")))
+}
+
+/// Paper §4 invariant, PJRT path: a 2-device basic cluster over 128²
+/// equals the native single-device trajectory (slab programs + halo
+/// exchange + Pallas kernels + PJRT, all in one assertion).
+#[test]
+fn pjrt_slab_cluster_bit_exact_vs_native() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(128).unwrap();
+    let (beta, seed) = (0.44f32, 33u32);
+
+    for n in [2usize, 4] {
+        let mut cluster =
+            SlabCluster::hot(eng.clone(), Variant::Basic, geom, n, beta, seed).unwrap();
+        cluster.run(4).unwrap();
+
+        let mut native = init::hot(geom, seed);
+        let table = AcceptanceTable::new(beta);
+        metropolis::run(&mut native, &table, seed, 0, 4);
+
+        assert_eq!(cluster.gather(), native, "n = {n}");
+    }
+}
+
+#[test]
+fn pjrt_tensorcore_cluster_bit_exact() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(128).unwrap();
+    let (beta, seed) = (0.5f32, 12u32);
+    let mut cluster =
+        SlabCluster::hot(eng, Variant::Tensorcore, geom, 2, beta, seed).unwrap();
+    cluster.run(3).unwrap();
+    let mut native = init::hot(geom, seed);
+    let table = AcceptanceTable::new(beta);
+    metropolis::run(&mut native, &table, seed, 0, 3);
+    assert_eq!(cluster.gather(), native);
+}
+
+/// Native cluster partition invariance across worker counts and both
+/// dispatch modes (threaded workers with shared-plane "NVLink" reads).
+#[test]
+fn native_cluster_partition_invariance() {
+    let geom = Geometry::new(32, 64).unwrap();
+    let (beta, seed) = (0.4406868f32, 5u32);
+    let table = AcceptanceTable::new(beta);
+    let mut want = init::hot_packed(geom, seed).unwrap();
+    for t in 0..6 {
+        multispin::sweep(&mut want, &table, seed, t);
+    }
+    for n in [1usize, 2, 4, 8] {
+        for threaded in [false, true] {
+            let mut cluster = NativeCluster::hot(geom, n, beta, seed).unwrap();
+            cluster.threaded = threaded;
+            cluster.run(6);
+            assert_eq!(cluster.lattice, want, "n = {n}, threaded = {threaded}");
+        }
+    }
+}
+
+#[test]
+fn partition_rejects_odd_slabs() {
+    let geom = Geometry::new(12, 32).unwrap();
+    assert!(partition(geom, 4).is_err());
+    assert!(NativeCluster::hot(geom, 4, 0.4, 1).is_err());
+}
+
+#[test]
+fn metrics_accumulate_over_cluster_run() {
+    let geom = Geometry::new(16, 32).unwrap();
+    let mut cluster = NativeCluster::hot(geom, 2, 0.44, 1).unwrap();
+    cluster.run(10);
+    assert_eq!(cluster.metrics.sweeps, 10);
+    assert_eq!(cluster.metrics.flips, 10 * geom.sites() as u64);
+    assert!(cluster.metrics.flips_per_ns() > 0.0);
+}
+
+/// The event model vs the paper's published endpoints (Tables 3/4):
+/// within a few percent on the DGX-2 *shape* (linear weak scaling,
+/// ~15.5× strong scaling at 16 GPUs).
+#[test]
+fn perf_model_reproduces_paper_endpoints() {
+    let l = 123 * 2048;
+    let t = Topology::dgx2();
+    // Weak scaling, 16 GPUs: paper 6474.16 flips/ns.
+    let m = model_sweep(&t, SpinWidth::Nibble, 16 * l, l, 16);
+    let err = (m.flips_per_ns - 6474.16).abs() / 6474.16;
+    assert!(err < 0.05, "weak-16 model {} vs paper 6474.16", m.flips_per_ns);
+    // Strong scaling, 16 GPUs: paper reaches the same rate on the fixed lattice.
+    let m = model_sweep(&t, SpinWidth::Nibble, l, l, 16);
+    let err = (m.flips_per_ns - 6474.16).abs() / 6474.16;
+    assert!(err < 0.05, "strong-16 model {} vs paper", m.flips_per_ns);
+    // DGX-2H endpoint: paper 7292.19.
+    let m = model_sweep(&Topology::dgx2h(), SpinWidth::Nibble, l, l, 16);
+    let err = (m.flips_per_ns - 7292.19).abs() / 7292.19;
+    assert!(err < 0.05, "dgx2h model {} vs paper 7292.19", m.flips_per_ns);
+}

@@ -1,0 +1,104 @@
+//! Native-engine integration: physics-level agreement between all four
+//! native engines and the exact Onsager results (paper §5.3 on a small
+//! scale), plus the critical-slowing-down contrast the paper cites.
+
+use ising_dgx::algorithms::{
+    HeatBathEngine, MultispinEngine, ScalarEngine, Sweeper, WolffEngine,
+};
+use ising_dgx::analytic;
+use ising_dgx::lattice::Geometry;
+use ising_dgx::observables::{self, tau_int};
+
+/// ⟨e⟩ from every engine must agree with Onsager's exact energy away
+/// from T_c (finite-size corrections are exponentially small there).
+#[test]
+fn all_engines_match_onsager_energy() {
+    let geom = Geometry::square(32).unwrap();
+    for &t in &[1.8f64, 2.8] {
+        let beta = (1.0 / t) as f32;
+        let exact = analytic::energy_per_site(1.0 / t);
+        let engines: Vec<(Box<dyn Sweeper>, u32, usize)> = vec![
+            (Box::new(ScalarEngine::hot(geom, beta, 11)), 800, 600),
+            (Box::new(MultispinEngine::hot(geom, beta, 12).unwrap()), 800, 600),
+            (Box::new(HeatBathEngine::hot(geom, beta, 13)), 800, 600),
+            // Wolff's unit is a cluster update: use more of them.
+            (Box::new(WolffEngine::hot(geom, beta, 14)), 4000, 3000),
+        ];
+        for (mut engine, burn, samples) in engines {
+            let name = engine.name();
+            let meas = observables::measure(engine.as_mut(), burn, samples, 1);
+            let tol = meas.err_e().max(0.002) * 6.0 + 0.01;
+            assert!(
+                (meas.mean_e() - exact).abs() < tol,
+                "{name} at T = {t}: <e> = {:.4} vs exact {exact:.4} (tol {tol:.4})",
+                meas.mean_e(),
+            );
+        }
+    }
+}
+
+/// Magnetization below T_c matches Eq. 7; above T_c it vanishes.
+#[test]
+fn magnetization_tracks_onsager() {
+    let geom = Geometry::square(32).unwrap();
+    // Ordered phase.
+    let mut eng = MultispinEngine::hot(geom, (1.0f64 / 1.8) as f32, 21).unwrap();
+    let meas = observables::measure(&mut eng, 1500, 500, 1);
+    let exact = analytic::magnetization(1.8);
+    assert!(
+        (meas.mean_abs_m() - exact).abs() < 0.03,
+        "T=1.8: {} vs {exact}",
+        meas.mean_abs_m()
+    );
+    // Disordered phase: |m| ~ O(1/L), small.
+    let mut eng = MultispinEngine::hot(geom, (1.0f64 / 3.2) as f32, 22).unwrap();
+    let meas = observables::measure(&mut eng, 500, 500, 1);
+    assert!(meas.mean_abs_m() < 0.12, "T=3.2: {}", meas.mean_abs_m());
+}
+
+/// The paper's §2 motivation: near T_c, local (Metropolis) dynamics
+/// decorrelate far slower than Wolff cluster dynamics.
+#[test]
+fn critical_slowing_down_contrast() {
+    let geom = Geometry::square(24).unwrap();
+    let beta_c = analytic::critical_beta() as f32;
+
+    let mut metro = ScalarEngine::hot(geom, beta_c, 31);
+    let meas_m = observables::measure(&mut metro, 2000, 1500, 1);
+    let tau_metro = tau_int(&meas_m.m.iter().map(|m| m.abs()).collect::<Vec<_>>());
+
+    let mut wolff = WolffEngine::hot(geom, beta_c, 32);
+    let meas_w = observables::measure(&mut wolff, 4000, 1500, 1);
+    let tau_wolff = tau_int(&meas_w.m.iter().map(|m| m.abs()).collect::<Vec<_>>());
+
+    assert!(
+        tau_metro > 2.0 * tau_wolff,
+        "expected Metropolis slowdown: tau_metro = {tau_metro:.2}, tau_wolff = {tau_wolff:.2}"
+    );
+}
+
+/// Binder cumulant limits: ~2/3 deep in the ordered phase, ~0 deep in
+/// the disordered phase (paper Fig. 6 asymptotes).
+#[test]
+fn binder_limits() {
+    let geom = Geometry::square(32).unwrap();
+    let mut cold = MultispinEngine::hot(geom, (1.0f64 / 1.5) as f32, 41).unwrap();
+    let meas = observables::measure(&mut cold, 1500, 400, 1);
+    let u = meas.binder().binder();
+    assert!((u - 2.0 / 3.0).abs() < 0.02, "ordered U = {u}");
+
+    let mut hot = MultispinEngine::hot(geom, (1.0f64 / 4.5) as f32, 42).unwrap();
+    let meas = observables::measure(&mut hot, 500, 1200, 2);
+    let u = meas.binder().binder();
+    assert!(u.abs() < 0.15, "disordered U = {u}");
+}
+
+/// Engines advertise consistent flip counts (used by flips/ns reporting).
+#[test]
+fn flips_per_sweep_consistency() {
+    let geom = Geometry::square(32).unwrap();
+    let scalar = ScalarEngine::hot(geom, 0.4, 1);
+    assert_eq!(scalar.flips_per_sweep(), geom.sites() as u64);
+    let ms = MultispinEngine::hot(geom, 0.4, 1).unwrap();
+    assert_eq!(ms.flips_per_sweep(), geom.sites() as u64);
+}

@@ -1,0 +1,121 @@
+//! End-to-end runtime integration: AOT artifacts (JAX/Pallas kernels,
+//! lowered to HLO text) executed through PJRT must reproduce the native
+//! Rust engines' trajectories.
+//!
+//! Requires `make artifacts` (the quick set: 64/128 lattices). Tests
+//! skip with a message when artifacts are absent so `cargo test` stays
+//! runnable before the Python build step.
+
+use ising_dgx::algorithms::{metropolis, AcceptanceTable, Sweeper};
+use ising_dgx::lattice::{init, Geometry};
+use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
+use std::path::Path;
+use std::rc::Rc;
+
+fn engine() -> Option<Rc<Engine>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    Some(Rc::new(Engine::new(&dir).expect("engine")))
+}
+
+/// The headline cross-language integration test: the PJRT basic engine
+/// (Pallas kernel) walks the same trajectory as the native scalar engine
+/// for a pinned seed.
+#[test]
+fn pjrt_basic_matches_native_scalar() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(64).unwrap();
+    let (beta, seed) = (0.42f32, 2024u32);
+
+    let mut pjrt = PjrtEngine::hot(eng, Variant::Basic, geom, beta, seed).unwrap();
+    let mut native = init::hot(geom, seed);
+    let table = AcceptanceTable::new(beta);
+
+    pjrt.sweep_n(10);
+    metropolis::run(&mut native, &table, seed, 0, 10);
+
+    assert_eq!(
+        pjrt.to_checkerboard().unwrap(),
+        native,
+        "PJRT(Pallas) and native Rust diverged"
+    );
+}
+
+#[test]
+fn pjrt_multispin_matches_native_multispin() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(64).unwrap();
+    let (beta, seed) = (0.4406868f32, 7u32);
+
+    let mut pjrt = PjrtEngine::hot(eng, Variant::Multispin, geom, beta, seed).unwrap();
+    let mut native =
+        ising_dgx::algorithms::MultispinEngine::hot(geom, beta, seed).unwrap();
+    pjrt.sweep_n(8);
+    native.sweep_n(8);
+    assert_eq!(pjrt.spins(), native.spins());
+}
+
+#[test]
+fn pjrt_tensorcore_matches_native_scalar() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(64).unwrap();
+    let (beta, seed) = (0.38f32, 11u32);
+
+    let mut pjrt = PjrtEngine::hot(eng, Variant::Tensorcore, geom, beta, seed).unwrap();
+    let mut native = init::hot(geom, seed);
+    let table = AcceptanceTable::new(beta);
+    pjrt.sweep_n(6);
+    metropolis::run(&mut native, &table, seed, 0, 6);
+    assert_eq!(pjrt.to_checkerboard().unwrap(), native);
+}
+
+#[test]
+fn pjrt_measure_agrees_with_host() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(64).unwrap();
+    let mut pjrt = PjrtEngine::hot(eng, Variant::Basic, geom, 0.44, 5).unwrap();
+    pjrt.sweep_n(3);
+    let (msum, esum) = pjrt.measure().unwrap();
+    let lat = pjrt.to_checkerboard().unwrap();
+    assert_eq!(msum, lat.magnetization_sum());
+    assert_eq!(esum, lat.energy_sum());
+}
+
+#[test]
+fn sweeps_per_call_chunking_is_invisible() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(64).unwrap();
+    let mut a = PjrtEngine::hot(eng.clone(), Variant::Basic, geom, 0.42, 9).unwrap();
+    let mut b = PjrtEngine::hot(eng, Variant::Basic, geom, 0.42, 9).unwrap();
+    a.sweeps_per_call = 3; // uneven chunking: 3+3+1
+    b.sweeps_per_call = 16;
+    a.sweep_n(7);
+    b.sweep_n(7);
+    assert_eq!(a.spins(), b.spins());
+}
+
+#[test]
+fn executable_cache_deduplicates() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(64).unwrap();
+    let before = eng.cached();
+    let _a = PjrtEngine::hot(eng.clone(), Variant::Basic, geom, 0.4, 1).unwrap();
+    let mid = eng.cached();
+    let _b = PjrtEngine::hot(eng.clone(), Variant::Basic, geom, 0.5, 2).unwrap();
+    assert_eq!(eng.cached(), mid, "second engine must reuse the cache");
+    assert!(mid > before);
+}
+
+#[test]
+fn missing_program_is_a_clear_error() {
+    let Some(eng) = engine() else { return };
+    let geom = Geometry::square(62).unwrap(); // no artifact for 62²
+    let msg = match PjrtEngine::hot(eng, Variant::Basic, geom, 0.4, 1) {
+        Ok(_) => panic!("expected a missing-artifact error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(msg.contains("no artifact"), "got: {msg}");
+}

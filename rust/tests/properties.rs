@@ -1,0 +1,133 @@
+//! Property-based tests (util::proptest harness) over the core
+//! invariants: packing, partitioning, RNG conventions, acceptance math,
+//! and engine equivalences under randomized configurations.
+
+use ising_dgx::algorithms::{metropolis, multispin, AcceptanceTable};
+use ising_dgx::lattice::{init, Checkerboard, Color, Geometry, PackedLattice};
+use ising_dgx::rng::{philox, threshold, u32_to_f32};
+use ising_dgx::util::proptest::check;
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check("pack/unpack roundtrip", 40, |g| {
+        let h = g.even_in(2, 16);
+        let w = 32 * g.int_in(1, 4) as usize;
+        let geom = Geometry::new(h, w).unwrap();
+        let board = init::hot(geom, g.u32());
+        let packed = PackedLattice::from_checkerboard(&board).unwrap();
+        assert_eq!(packed.to_checkerboard(), board);
+        assert_eq!(packed.magnetization_sum(), board.magnetization_sum());
+        assert_eq!(packed.energy_sum(), board.energy_sum());
+    });
+}
+
+#[test]
+fn prop_scalar_multispin_equivalence() {
+    check("scalar == multispin over random configs", 25, |g| {
+        let h = g.even_in(2, 12);
+        let w = 32 * g.int_in(1, 3) as usize;
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.0, 1.5);
+        let sweeps = g.int_in(1, 6) as u32;
+        let table = AcceptanceTable::new(beta);
+        let mut scalar = init::hot(geom, seed);
+        let mut packed = init::hot_packed(geom, seed).unwrap();
+        for t in 0..sweeps {
+            metropolis::sweep(&mut scalar, &table, seed, t);
+            multispin::sweep(&mut packed, &table, seed, t);
+        }
+        assert_eq!(packed.to_checkerboard(), scalar);
+    });
+}
+
+#[test]
+fn prop_row_partition_invariance() {
+    check("row-range partitioning is invisible", 25, |g| {
+        let h = g.even_in(4, 16);
+        let w = 32 * g.int_in(1, 3) as usize;
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.1, 1.0);
+        let table = AcceptanceTable::new(beta);
+        let mut whole = init::hot_packed(geom, seed).unwrap();
+        let mut parts = whole.clone();
+        let wpr = whole.wpr();
+        // Random split point (even rows).
+        let cut = g.even_in(2, h.max(4) - 2).min(h - 2);
+        multispin::update_color(&mut whole, Color::Black, &table, seed, 0);
+        {
+            let (t, s) = parts.split_planes(Color::Black);
+            multispin::update_color_rows(t, 0, s, h, wpr, 0..cut, Color::Black, &table, seed, 0);
+            multispin::update_color_rows(t, 0, s, h, wpr, cut..h, Color::Black, &table, seed, 0);
+        }
+        assert_eq!(whole, parts);
+    });
+}
+
+#[test]
+fn prop_threshold_equivalence() {
+    check("integer threshold == float compare", 200, |g| {
+        let p = g.f32_in(0.0, 1.2);
+        let r = g.u32();
+        let int_path = (r >> 8) < threshold(p);
+        let float_path = u32_to_f32(r) < p;
+        assert_eq!(int_path, float_path, "p={p} r={r}");
+    });
+}
+
+#[test]
+fn prop_philox_stream_properties() {
+    check("philox purity + lane consistency", 100, |g| {
+        let (seed, color, row, k, sweep) =
+            (g.u32(), g.u32() & 1, g.u32(), g.u32() & 0xFFFF, g.u32());
+        let a = philox::site_u32(seed, color, row, k, sweep);
+        let b = philox::site_u32(seed, color, row, k, sweep);
+        assert_eq!(a, b);
+        let block = philox::site_group(seed, color, row, k >> 2, sweep);
+        assert_eq!(a, block[(k & 3) as usize]);
+    });
+}
+
+#[test]
+fn prop_update_preserves_spin_domain() {
+    check("spins stay in {-1, +1}", 30, |g| {
+        let h = g.even_in(2, 10);
+        let w = g.even_in(4, 16).max(8);
+        // w2 must be divisible by 4 for the site-group convention.
+        let w = (w + 7) / 8 * 8;
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let table = AcceptanceTable::new(g.f32_in(0.0, 2.0));
+        let mut lat = init::hot(geom, seed);
+        metropolis::sweep(&mut lat, &table, seed, 0);
+        for s in lat.to_spins() {
+            assert!(s == 1 || s == -1);
+        }
+    });
+}
+
+#[test]
+fn prop_energy_magnetization_bounds() {
+    check("observable bounds", 40, |g| {
+        let h = g.even_in(2, 12);
+        let w = g.even_in(4, 16).max(8);
+        let w = (w + 7) / 8 * 8;
+        let geom = Geometry::new(h, w).unwrap();
+        let lat = init::hot(geom, g.u32());
+        let m = lat.magnetization();
+        let e = lat.energy_per_site();
+        assert!((-1.0..=1.0).contains(&m));
+        assert!((-2.0..=2.0).contains(&e));
+        // Global spin flip: m negates, e invariant.
+        let mut flipped = Checkerboard::cold(geom);
+        let spins = lat.to_spins();
+        for i in 0..geom.h {
+            for j in 0..geom.w {
+                flipped.set(i, j, -spins[i * geom.w + j]);
+            }
+        }
+        assert_eq!(flipped.magnetization_sum(), -lat.magnetization_sum());
+        assert_eq!(flipped.energy_sum(), lat.energy_sum());
+    });
+}
