@@ -13,11 +13,14 @@
 use ising_dgx::algorithms::{MultispinEngine, ScalarEngine};
 use ising_dgx::lattice::Geometry;
 use ising_dgx::rng::{site_group, site_group_x4};
-use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
 use ising_dgx::util::bench::sweeper_flips_per_ns;
 use ising_dgx::util::{units, Timer};
 use std::hint::black_box;
+#[cfg(feature = "pjrt")]
+use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 fn main() -> ising_dgx::Result<()> {
@@ -55,6 +58,7 @@ fn main() -> ising_dgx::Result<()> {
         units::fmt_sig(s_rate, 4), units::fmt_sig(m_rate, 4), m_rate / s_rate);
 
     // --- 3. PJRT dispatch ablation.
+    #[cfg(feature = "pjrt")]
     if let Ok(engine) = Engine::new(Path::new("artifacts")) {
         let engine = Rc::new(engine);
         let geom = Geometry::square(128)?;
@@ -66,5 +70,7 @@ fn main() -> ising_dgx::Result<()> {
             println!("  n={spc:3}: {} flips/ns", units::fmt_sig(rate, 4));
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(built without the `pjrt` feature — PJRT dispatch ablation skipped)");
     Ok(())
 }

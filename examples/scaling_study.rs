@@ -4,14 +4,22 @@
 //!
 //!     cargo run --release --example scaling_study
 
-use ising_dgx::algorithms::{metropolis, AcceptanceTable};
 use ising_dgx::coordinator::{
-    strong_scaling, weak_scaling, NativeCluster, SlabCluster, SpinWidth, Topology,
+    strong_scaling, weak_scaling, NativeCluster, SpinWidth, Topology,
 };
-use ising_dgx::lattice::{init, Geometry};
-use ising_dgx::runtime::{Engine, Variant};
+use ising_dgx::lattice::Geometry;
 use ising_dgx::util::{units, Table};
+#[cfg(feature = "pjrt")]
+use ising_dgx::algorithms::{metropolis, AcceptanceTable};
+#[cfg(feature = "pjrt")]
+use ising_dgx::coordinator::SlabCluster;
+#[cfg(feature = "pjrt")]
+use ising_dgx::lattice::init;
+#[cfg(feature = "pjrt")]
+use ising_dgx::runtime::{Engine, Variant};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 fn main() -> ising_dgx::Result<()> {
@@ -35,6 +43,7 @@ fn main() -> ising_dgx::Result<()> {
     }
 
     // --- PJRT slab cluster: the Pallas kernels under the coordinator.
+    #[cfg(feature = "pjrt")]
     if let Ok(engine) = Engine::new(Path::new("artifacts")) {
         let engine = Rc::new(engine);
         println!("\n== PJRT slab cluster (128^2, basic kernel) ==");
@@ -55,6 +64,8 @@ fn main() -> ising_dgx::Result<()> {
     } else {
         println!("\n(artifacts missing — skipping PJRT cluster; run `make artifacts`)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(built without the `pjrt` feature — skipping the PJRT slab cluster)");
 
     // --- DGX-2 event model at paper scale.
     println!("\n== DGX-2 event model, paper lattice (123x2048)^2 ==");

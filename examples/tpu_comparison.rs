@@ -7,10 +7,13 @@
 
 use ising_dgx::algorithms::{MultispinEngine, ScalarEngine, Sweeper};
 use ising_dgx::lattice::Geometry;
-use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
 use ising_dgx::util::bench::sweeper_flips_per_ns;
 use ising_dgx::util::{units, Table};
+#[cfg(feature = "pjrt")]
+use ising_dgx::runtime::{Engine, PjrtEngine, Variant};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 fn main() -> ising_dgx::Result<()> {
@@ -34,6 +37,7 @@ fn main() -> ising_dgx::Result<()> {
         format!("{:.2}x", r / base),
     ]);
 
+    #[cfg(feature = "pjrt")]
     if let Ok(engine) = Engine::new(Path::new("artifacts")) {
         let engine = Rc::new(engine);
         for (variant, label) in [
@@ -49,6 +53,8 @@ fn main() -> ising_dgx::Result<()> {
     } else {
         eprintln!("(artifacts missing — run `make artifacts` for the PJRT rows)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("(built without the `pjrt` feature — PJRT rows skipped)");
     table.print();
 
     println!("paper (V100 vs TPUv3 core): basic-CUDA 66.95 vs 12.88 flips/ns (5.2x),");

@@ -1,6 +1,37 @@
-"""pytest config: make `compile` importable when running from python/."""
+"""pytest config: make `compile` importable when running from python/ or the
+repo root, and auto-skip accelerator-marked tests on CPU-only hosts."""
 
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "accelerator: needs a real GPU/TPU jax backend "
+        "(auto-skipped on CPU-only hosts such as CI runners)",
+    )
+
+
+def _have_accelerator():
+    try:
+        import jax
+
+        return any(d.platform in ("gpu", "tpu") for d in jax.devices())
+    except Exception:
+        return False
+
+
+def pytest_collection_modifyitems(config, items):
+    if _have_accelerator():
+        return
+    skip = pytest.mark.skip(
+        reason="requires a real accelerator (jax backend is CPU-only here)"
+    )
+    for item in items:
+        if "accelerator" in item.keywords:
+            item.add_marker(skip)

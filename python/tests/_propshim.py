@@ -1,0 +1,92 @@
+"""Property-testing shim: re-export hypothesis when available, otherwise a
+deterministic mini-implementation of the subset these tests use.
+
+CI installs the real ``hypothesis`` (see ``python/requirements.txt``) and
+gets full shrinking/coverage; offline images without it still run every
+property over a fixed pseudo-random sample instead of skipping the suite.
+
+Supported subset: ``given``, ``settings(max_examples=..., deadline=...)``,
+and ``strategies.{integers, floats, tuples, sampled_from}`` plus ``.map``.
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 25
+    _SEED = 0x1519_C0DE  # fixed: failures replay identically
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda rnd: fn(self._draw(rnd)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kwargs):
+            # Bias endpoints in: they are the interesting cases for the
+            # acceptance/threshold math these tests cover.
+            def draw(rnd):
+                r = rnd.random()
+                if r < 0.05:
+                    return float(min_value)
+                if r < 0.10:
+                    return float(max_value)
+                return rnd.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rnd: tuple(s._draw(rnd) for s in strategies))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rnd: elements[rnd.randrange(len(elements))])
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def decorate(fn):
+            # No functools.wraps: it would copy __wrapped__ and the original
+            # signature, making pytest treat the drawn arguments as fixtures.
+            def wrapper():
+                rnd = random.Random(_SEED)
+                for case in range(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)):
+                    drawn = [s._draw(rnd) for s in strategies]
+                    try:
+                        fn(*drawn)
+                    except AssertionError as exc:
+                        raise AssertionError(
+                            f"property failed at case {case} with arguments "
+                            f"{tuple(drawn)!r} (propshim seed {_SEED:#x}): {exc}"
+                        ) from exc
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kwargs):
+        def decorate(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+
+        return decorate

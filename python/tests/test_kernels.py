@@ -6,8 +6,7 @@ assert-allclose against ref — here strengthened to array_equal, since the
 kernels share the exact f32 decision math)."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propshim import given, settings, st
 
 from compile.kernels import matmul_nn, metropolis, multispin, ref
 

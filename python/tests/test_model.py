@@ -1,8 +1,7 @@
 """L2 model programs: slab composition, sweep_n, measurement."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propshim import given, settings, st
 
 from compile import model
 from compile.kernels import multispin, ref

@@ -3,8 +3,7 @@ cross-language convention vectors pinned against the Rust side."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propshim import given, settings, st
 
 from compile.kernels import philox
 

@@ -3,8 +3,7 @@
 import math
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propshim import given, settings, st
 
 from compile.kernels import philox, ref
 

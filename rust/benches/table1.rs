@@ -11,12 +11,42 @@
 
 use ising_dgx::algorithms::ScalarEngine;
 use ising_dgx::lattice::Geometry;
-use ising_dgx::runtime::{Engine, PjrtEngine, ProgramKind, Variant};
 use ising_dgx::util::bench::{quick_mode, sweeper_flips_per_ns, write_report};
 use ising_dgx::util::json::{obj, Json};
 use ising_dgx::util::{units, Table};
-use std::path::Path;
-use std::rc::Rc;
+
+/// The PJRT columns: per lattice size, (basic, tensorcore) flips/ns.
+/// Compiled out (all `None`) when the `pjrt` feature is absent.
+#[cfg(feature = "pjrt")]
+fn pjrt_columns(sizes: &[usize], beta: f32, sweeps: u32) -> Vec<(Option<f64>, Option<f64>)> {
+    use ising_dgx::runtime::{Engine, PjrtEngine, ProgramKind, Variant};
+    use std::path::Path;
+    use std::rc::Rc;
+
+    let engine = Engine::new(Path::new("artifacts")).ok().map(Rc::new);
+    if engine.is_none() {
+        eprintln!("warning: artifacts missing — PJRT columns skipped (run `make artifacts`)");
+    }
+    sizes
+        .iter()
+        .map(|&l| {
+            let geom = Geometry::square(l).unwrap();
+            let rate = |variant: Variant| -> Option<f64> {
+                let eng = engine.clone()?;
+                eng.manifest.find(ProgramKind::Sweep, variant, l, l, None).ok()?;
+                let mut e = PjrtEngine::hot(eng, variant, geom, beta, 1).ok()?;
+                Some(sweeper_flips_per_ns(&mut e, sweeps))
+            };
+            (rate(Variant::Basic), rate(Variant::Tensorcore))
+        })
+        .collect()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_columns(sizes: &[usize], _beta: f32, _sweeps: u32) -> Vec<(Option<f64>, Option<f64>)> {
+    eprintln!("note: built without the `pjrt` feature — PJRT columns skipped");
+    vec![(None, None); sizes.len()]
+}
 
 /// Paper Table 1 (flips/ns): (k, basic_python, basic_cuda, tensorcore, tpu).
 const PAPER: &[(usize, f64, f64, f64, f64)] = &[
@@ -34,10 +64,7 @@ fn main() {
     let sweeps: u32 = if quick { 8 } else { 16 };
     let beta = 0.4406868f32;
 
-    let engine = Engine::new(Path::new("artifacts")).ok().map(Rc::new);
-    if engine.is_none() {
-        eprintln!("warning: artifacts missing — PJRT columns skipped (run `make artifacts`)");
-    }
+    let pjrt = pjrt_columns(&sizes, beta, sweeps);
 
     let mut table = Table::new(&[
         "lattice", "pjrt-basic", "native scalar", "pjrt-tensorcore",
@@ -45,19 +72,10 @@ fn main() {
     .with_title("Table 1 (measured, this testbed) — flips/ns, single device");
     let mut rows = Vec::new();
 
-    for &l in &sizes {
+    for (&l, &(basic, tensor)) in sizes.iter().zip(&pjrt) {
         let geom = Geometry::square(l).unwrap();
         let mut native = ScalarEngine::hot(geom, beta, 1);
         let scalar_rate = sweeper_flips_per_ns(&mut native, sweeps);
-
-        let pjrt_rate = |variant: Variant| -> Option<f64> {
-            let eng = engine.clone()?;
-            eng.manifest.find(ProgramKind::Sweep, variant, l, l, None).ok()?;
-            let mut e = PjrtEngine::hot(eng, variant, geom, beta, 1).ok()?;
-            Some(sweeper_flips_per_ns(&mut e, sweeps))
-        };
-        let basic = pjrt_rate(Variant::Basic);
-        let tensor = pjrt_rate(Variant::Tensorcore);
 
         let fmt = |v: Option<f64>| v.map(|x| units::fmt_sig(x, 4)).unwrap_or_else(|| "-".into());
         table.row(&[

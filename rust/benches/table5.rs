@@ -2,15 +2,14 @@
 //! implementations under the multi-device coordinator (paper: unified
 //! memory / MPI+IPC on a DGX-2; here: PJRT slab clusters with halo
 //! exchange, measured, plus byte-width event-model projections).
+//!
+//! The measured block needs the `pjrt` feature and AOT artifacts; the
+//! paper echo and the event-model projection always run.
 
-use ising_dgx::coordinator::{model_sweep, SlabCluster, SpinWidth, Topology};
-use ising_dgx::lattice::Geometry;
-use ising_dgx::runtime::{Engine, Variant};
-use ising_dgx::util::bench::{quick_mode, write_report};
+use ising_dgx::coordinator::{model_sweep, SpinWidth, Topology};
+use ising_dgx::util::bench::write_report;
 use ising_dgx::util::json::{obj, Json};
 use ising_dgx::util::{units, Table};
-use std::path::Path;
-use std::rc::Rc;
 
 /// Paper Table 5 strong-scaling block ((640·128)² fixed): (gpus, py, tc).
 const PAPER_STRONG: &[(usize, f64, f64)] = &[
@@ -21,21 +20,63 @@ const PAPER_STRONG: &[(usize, f64, f64)] = &[
     (16, 650.543, 602.083),
 ];
 
-fn main() {
-    let quick = quick_mode();
-    let size = 128usize; // slab artifacts exist for 128² and 256²
-    let sweeps = if quick { 4 } else { 8 };
-    let beta = 0.4406868f32;
+fn print_paper() {
+    let mut t = Table::new(&["gpus", "Basic(Py)", "TensorCore"])
+        .with_title("Table 5 (paper, strong block)");
+    for &(n, py, tc) in PAPER_STRONG {
+        t.row(&[n.to_string(), format!("{py}"), format!("{tc}")]);
+    }
+    t.print();
+}
 
+/// Model projection at the paper's lattice, byte-wide spins; returns the
+/// machine-readable rows for the report.
+fn print_model() -> Vec<Json> {
+    let l = 640 * 128;
+    let topo = Topology { flips_per_ns: 43.481, ..Topology::dgx2() };
+    let mut mt = Table::new(&["gpus", "paper Basic(Py)", "model", "paper TensorCore"])
+        .with_title("Table 5b — paper strong scaling vs byte-spin event model, (640x128)^2");
+    let mut model_rows = Vec::new();
+    for &(n, py, tc) in PAPER_STRONG {
+        let m = model_sweep(&topo, SpinWidth::Byte, l, l, n);
+        mt.row(&[
+            n.to_string(),
+            format!("{py}"),
+            units::fmt_sig(m.flips_per_ns, 6),
+            format!("{tc}"),
+        ]);
+        model_rows.push(obj(vec![
+            ("gpus", Json::Num(n as f64)),
+            ("paper_python", Json::Num(py)),
+            ("model", Json::Num(m.flips_per_ns)),
+            ("paper_tensorcore", Json::Num(tc)),
+        ]));
+    }
+    mt.print();
+    println!("shape check — both implementations scale ~linearly; tensor-core slightly below basic.");
+    model_rows
+}
+
+#[cfg(feature = "pjrt")]
+fn measured_rows(sweeps: u32, beta: f32) -> Vec<Json> {
+    use ising_dgx::coordinator::SlabCluster;
+    use ising_dgx::lattice::Geometry;
+    use ising_dgx::runtime::{Engine, Variant};
+    use std::path::Path;
+    use std::rc::Rc;
+
+    let size = 128usize; // slab artifacts exist for 128² and 256²
     let Ok(engine) = Engine::new(Path::new("artifacts")) else {
-        eprintln!("artifacts missing — run `make artifacts`; printing paper table only");
-        print_paper();
-        return;
+        eprintln!("artifacts missing — run `make artifacts`; measured block skipped");
+        return Vec::new();
     };
     let engine = Rc::new(engine);
 
     let mut table = Table::new(&["workers", "variant", "measured flips/ns", "bit-exact"])
-        .with_title(format!("Table 5a (measured) — PJRT slab clusters, {size}^2 strong scaling").as_str());
+        .with_title(
+            format!("Table 5a (measured) — PJRT slab clusters, {size}^2 strong scaling")
+                .as_str(),
+        );
     let mut rows = Vec::new();
     for variant in [Variant::Basic, Variant::Tensorcore] {
         let geom = Geometry::square(size).unwrap();
@@ -74,30 +115,23 @@ fn main() {
     }
     table.print();
     println!("(sequential dispatch on one core: expect flat measured rates; bit-exactness is the point)");
+    rows
+}
 
-    // Model projection at the paper's lattice, byte-wide spins.
-    let l = 640 * 128;
-    let topo = Topology { flips_per_ns: 43.481, ..Topology::dgx2() };
-    let mut mt = Table::new(&["gpus", "paper Basic(Py)", "model", "paper TensorCore"])
-        .with_title("Table 5b — paper strong scaling vs byte-spin event model, (640x128)^2");
-    let mut model_rows = Vec::new();
-    for &(n, py, tc) in PAPER_STRONG {
-        let m = model_sweep(&topo, SpinWidth::Byte, l, l, n);
-        mt.row(&[
-            n.to_string(),
-            format!("{py}"),
-            units::fmt_sig(m.flips_per_ns, 6),
-            format!("{tc}"),
-        ]);
-        model_rows.push(obj(vec![
-            ("gpus", Json::Num(n as f64)),
-            ("paper_python", Json::Num(py)),
-            ("model", Json::Num(m.flips_per_ns)),
-            ("paper_tensorcore", Json::Num(tc)),
-        ]));
-    }
-    mt.print();
-    println!("shape check — both implementations scale ~linearly; tensor-core slightly below basic.");
+#[cfg(not(feature = "pjrt"))]
+fn measured_rows(_sweeps: u32, _beta: f32) -> Vec<Json> {
+    eprintln!("table5: built without the `pjrt` feature — measured block skipped");
+    Vec::new()
+}
+
+fn main() {
+    let quick = ising_dgx::util::bench::quick_mode();
+    let sweeps = if quick { 4 } else { 8 };
+    let beta = 0.4406868f32;
+
+    let rows = measured_rows(sweeps, beta);
+    print_paper();
+    let model_rows = print_model();
 
     let _ = write_report(
         "table5",
@@ -107,13 +141,4 @@ fn main() {
             ("model", Json::Arr(model_rows)),
         ]),
     );
-}
-
-fn print_paper() {
-    let mut t = Table::new(&["gpus", "Basic(Py)", "TensorCore"])
-        .with_title("Table 5 (paper, strong block)");
-    for &(n, py, tc) in PAPER_STRONG {
-        t.row(&[n.to_string(), format!("{py}"), format!("{tc}")]);
-    }
-    t.print();
 }

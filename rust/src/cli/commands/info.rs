@@ -21,13 +21,20 @@ pub fn exec(args: &Args) -> Result<()> {
         crate::analytic::onsager::BINDER_CRITICAL,
     );
 
-    match xla::PjRtClient::cpu() {
-        Ok(client) => println!(
-            "  PJRT: platform = {}, devices = {}",
-            client.platform_name(),
-            client.device_count()
-        ),
-        Err(e) => println!("  PJRT: unavailable ({e})"),
+    #[cfg(feature = "pjrt")]
+    {
+        match xla::PjRtClient::cpu() {
+            Ok(client) => println!(
+                "  PJRT: platform = {}, devices = {}",
+                client.platform_name(),
+                client.device_count()
+            ),
+            Err(e) => println!("  PJRT: unavailable ({e})"),
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        println!("  PJRT: disabled (rebuild with --features pjrt)");
     }
 
     match Manifest::load(Path::new(dir)) {

@@ -3,6 +3,7 @@
 pub mod info;
 pub mod run;
 pub mod scaling;
+pub mod sweep;
 pub mod validate;
 
 use crate::algorithms::{
@@ -11,7 +12,9 @@ use crate::algorithms::{
 use crate::config::{EngineKind, RunConfig};
 use crate::error::Result;
 use crate::lattice::Geometry;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, PjrtEngine};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 /// Instantiate the configured engine as a boxed `Sweeper`.
@@ -25,9 +28,18 @@ pub fn build_engine(cfg: &RunConfig) -> Result<Box<dyn Sweeper>> {
         }
         EngineKind::NativeHeatbath => Box::new(HeatBathEngine::hot(geom, beta, cfg.seed)),
         EngineKind::NativeWolff => Box::new(WolffEngine::hot(geom, beta, cfg.seed)),
+        #[cfg(feature = "pjrt")]
         EngineKind::Pjrt(variant) => {
             let engine = Rc::new(Engine::new(&cfg.artifacts)?);
             Box::new(PjrtEngine::hot(engine, variant, geom, beta, cfg.seed)?)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        EngineKind::Pjrt(_) => {
+            return Err(crate::Error::Usage(format!(
+                "engine '{}' needs the PJRT runtime; rebuild with \
+                 `cargo build --release --features pjrt`",
+                cfg.engine.name()
+            )))
         }
     })
 }

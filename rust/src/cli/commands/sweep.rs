@@ -1,0 +1,115 @@
+//! `ising sweep` — run the parallel replica farm: R independent replicas
+//! over a seed × β grid (the Fig. 5/Fig. 6 workload) on the native
+//! multi-spin path, with per-β pooled observables and worker-scaling
+//! metrics.
+
+use crate::cli::args::Args;
+use crate::coordinator::farm::{default_beta_grid, run_farm, FarmConfig};
+use crate::error::{Error, Result};
+use crate::util::{units, Table};
+
+const KNOWN: &[&str] = &[
+    "size", "betas", "beta-points", "replicas", "seed", "workers", "shards",
+    "burn-in", "samples", "thin", "threaded-shards", "quiet",
+];
+
+/// Parse `--betas 0.40,0.44,0.48` into an f32 grid.
+fn parse_betas(list: &str) -> Result<Vec<f32>> {
+    list.split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<f32>()
+                .map_err(|_| Error::Usage(format!("cannot parse β value '{s}' in --betas")))
+        })
+        .collect()
+}
+
+/// Execute the subcommand.
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    let size: usize = args.opt_parse("size", 256usize)?;
+
+    let betas: Vec<f32> = match args.opt("betas") {
+        Some(list) => parse_betas(list)?,
+        None => default_beta_grid(args.opt_parse("beta-points", 4usize)?),
+    };
+    let replicas_per_beta: usize = args.opt_parse("replicas", 1usize)?;
+    let seed0: u32 = args.opt_parse("seed", 1u32)?;
+
+    let mut cfg = FarmConfig::grid(size, betas, replicas_per_beta, seed0)?;
+    let total = cfg.replica_count();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers: usize = args.opt_parse("workers", cores.min(total.max(1)))?;
+    let shards: usize = args.opt_parse("shards", 1usize)?;
+    cfg.workers = workers;
+    cfg.shards = shards;
+    cfg.burn_in = args.opt_parse("burn-in", cfg.burn_in)?;
+    cfg.samples = args.opt_parse("samples", cfg.samples)?;
+    cfg.thin = args.opt_parse("thin", cfg.thin)?;
+    // Shard threads only when the farm itself is not already using the
+    // cores for replica parallelism (or when explicitly requested).
+    cfg.threaded_shards = args.flag("threaded-shards") || (shards > 1 && workers == 1);
+
+    println!(
+        "ising sweep: {size}² lattice, {} β × {} seed(s) = {} replicas, \
+         {} worker(s), {} shard(s)/replica",
+        cfg.betas.len(),
+        cfg.seeds.len(),
+        cfg.replica_count(),
+        cfg.workers,
+        cfg.shards.max(1),
+    );
+    println!(
+        "  protocol: burn-in {} + {} samples × thin {} sweeps per replica",
+        cfg.burn_in, cfg.samples, cfg.thin
+    );
+
+    let result = run_farm(&cfg)?;
+
+    if !args.flag("quiet") {
+        let mut table = Table::new(&[
+            "beta", "T", "replicas", "<|m|>", "U_L", "U_L err", "flips/ns",
+        ])
+        .with_title("Replica farm — per-β observables (seeds pooled)");
+        for (beta, acc) in result.by_beta() {
+            // Per-β throughput: merged metrics of this β's replicas.
+            let mut per_beta = crate::coordinator::Metrics::new();
+            let mut n = 0usize;
+            for r in result.replicas.iter().filter(|r| r.beta.to_bits() == beta.to_bits()) {
+                per_beta.merge(&r.metrics);
+                n += 1;
+            }
+            table.row(&[
+                format!("{beta:.6}"),
+                format!("{:.4}", 1.0 / beta as f64),
+                n.to_string(),
+                format!("{:.4}", acc.abs_m()),
+                format!("{:.4}", acc.binder()),
+                format!("{:.4}", acc.binder_error(10)),
+                units::fmt_sig(per_beta.flips_per_ns(), 4),
+            ]);
+        }
+        table.print();
+    }
+
+    let wall = result.wall.as_secs_f64();
+    println!(
+        "  farm: {} replicas in {:.3}s wall, {} worker(s)",
+        result.replicas.len(),
+        wall,
+        result.workers
+    );
+    println!(
+        "  aggregate: {} flips, {} flips/ns (wall), per-worker sweep rate {} flips/ns",
+        result.aggregate.flips,
+        units::fmt_sig(result.flips_per_ns_wall(), 4),
+        units::fmt_sig(result.aggregate.flips_per_ns(), 4),
+    );
+    println!(
+        "  scaling: parallel efficiency {:.1}% over {} worker(s) \
+         (Σ replica sweep time / (wall × workers))",
+        result.parallel_efficiency() * 100.0,
+        result.workers
+    );
+    Ok(())
+}

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `run`      — simulate and report observables + flips/ns.
+//! * `sweep`    — parallel replica farm over a seed × β grid (Fig. 5/6).
 //! * `validate` — temperature sweep vs the Onsager solution (paper §5.3).
 //! * `scaling`  — multi-device weak/strong scaling (real slabs + DGX model).
 //! * `info`     — platform, artifact inventory, analytic constants.
@@ -22,6 +23,9 @@ COMMANDS:
   run       simulate one configuration
             --size N --temperature T|--beta B --engine E --sweeps N
             --seed S --workers W --artifacts DIR --config FILE
+  sweep     parallel replica farm over a seed x beta grid (native multi-spin)
+            --size N --betas B1,B2,... | --beta-points K --replicas R
+            --seed S --workers W --shards D --burn-in N --samples N --thin N
   validate  magnetization & Binder vs Onsager across temperatures
             --size N --engine E --samples N --quick
   scaling   weak/strong scaling study (native cluster + DGX-2 model)
@@ -30,7 +34,7 @@ COMMANDS:
             --artifacts DIR
 
 ENGINES: scalar | multispin | heatbath | wolff |
-         pjrt-basic | pjrt-multispin | pjrt-tensorcore
+         pjrt-basic | pjrt-multispin | pjrt-tensorcore (need --features pjrt)
 ";
 
 /// Entry point used by `main.rs`.
@@ -38,6 +42,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw)?;
     match args.command.as_str() {
         "run" => commands::run::exec(&args),
+        "sweep" => commands::sweep::exec(&args),
         "validate" => commands::validate::exec(&args),
         "scaling" => commands::scaling::exec(&args),
         "info" => commands::info::exec(&args),

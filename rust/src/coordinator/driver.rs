@@ -19,13 +19,20 @@ use super::metrics::Metrics;
 use super::partition::{partition, Slab};
 use crate::algorithms::acceptance::AcceptanceTable;
 use crate::algorithms::multispin;
-use crate::error::{Error, Result};
-use crate::lattice::{Checkerboard, Color, Geometry, PackedLattice};
-use crate::runtime::{buffers, Engine, Program, ProgramKind, Variant};
+use crate::error::Result;
+use crate::lattice::{Color, Geometry, PackedLattice};
 use crate::util::timer::Timer;
+#[cfg(feature = "pjrt")]
+use crate::error::Error;
+#[cfg(feature = "pjrt")]
+use crate::lattice::Checkerboard;
+#[cfg(feature = "pjrt")]
+use crate::runtime::{buffers, Engine, Program, ProgramKind, Variant};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 /// Per-device state of the PJRT slab cluster.
+#[cfg(feature = "pjrt")]
 struct SlabDevice {
     slab: Slab,
     /// (height, w2) color planes, host-resident between dispatches.
@@ -35,6 +42,7 @@ struct SlabDevice {
 }
 
 /// PJRT multi-device coordinator (basic / tensorcore variants).
+#[cfg(feature = "pjrt")]
 pub struct SlabCluster {
     geom: Geometry,
     devices: Vec<SlabDevice>,
@@ -45,6 +53,7 @@ pub struct SlabCluster {
     pub metrics: Metrics,
 }
 
+#[cfg(feature = "pjrt")]
 impl SlabCluster {
     /// Build a hot-started cluster of `n` virtual devices.
     pub fn hot(
@@ -270,7 +279,7 @@ mod tests {
     #[test]
     fn native_cluster_partition_invariance_sequential() {
         let geom = Geometry::new(16, 64).unwrap();
-        let mut single = crate::lattice::init::hot_packed(geom, 7).unwrap();
+        let single = crate::lattice::init::hot_packed(geom, 7).unwrap();
         let table = AcceptanceTable::new(0.43);
         for n in [1usize, 2, 4] {
             let mut cluster = NativeCluster::hot(geom, n, 0.43, 7).unwrap();

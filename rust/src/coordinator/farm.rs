@@ -1,0 +1,330 @@
+//! Parallel replica farm — the Fig. 5 / Fig. 6 production workload: R
+//! independent replicas over a seed × β grid, each driving its own sharded
+//! [`NativeCluster`], executed by a pool of scoped worker threads.
+//!
+//! Replicas are the parallelism unit (they are embarrassingly parallel and
+//! saturate cores without the halo coordination the in-replica shard
+//! threads need), so by default each replica's cluster runs its shards
+//! sequentially and the farm scales by running many replicas at once.
+//! Every replica trajectory is a pure function of `(geometry, β, seed)` —
+//! `NativeCluster` is partition-invariant by construction — so results are
+//! bit-identical for any worker count, which the integration tests assert.
+
+use super::driver::NativeCluster;
+use super::metrics::Metrics;
+use crate::error::{Error, Result};
+use crate::lattice::Geometry;
+use crate::observables::binder::BinderAccumulator;
+use crate::observables::stats;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The inverse critical temperature β_c = ln(1 + √2)/2 as f32 (the grid
+/// default centers on the transition, like the paper's Fig. 5/6 scans).
+pub const BETA_C: f32 = 0.4406868;
+
+/// A β grid of `n` points spanning the critical window (0.36..0.52).
+pub fn default_beta_grid(n: usize) -> Vec<f32> {
+    let n = n.max(1);
+    if n == 1 {
+        return vec![BETA_C];
+    }
+    let (lo, hi) = (0.36f32, 0.52f32);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32)
+        .collect()
+}
+
+/// Configuration of one farm run.
+#[derive(Clone, Debug)]
+pub struct FarmConfig {
+    /// Lattice geometry shared by every replica.
+    pub geom: Geometry,
+    /// Inverse temperatures to visit (outer grid dimension).
+    pub betas: Vec<f32>,
+    /// Seeds per β (inner grid dimension).
+    pub seeds: Vec<u32>,
+    /// Slab count inside each replica's `NativeCluster`.
+    pub shards: usize,
+    /// Worker threads executing replicas.
+    pub workers: usize,
+    /// Equilibration sweeps per replica.
+    pub burn_in: u32,
+    /// Measurement samples per replica.
+    pub samples: usize,
+    /// Sweeps between samples.
+    pub thin: u32,
+    /// Run each replica's shards on threads too (off by default: the farm
+    /// parallelizes across replicas; turning both on oversubscribes cores).
+    pub threaded_shards: bool,
+}
+
+impl FarmConfig {
+    /// A ready-to-run configuration: `betas` β points × `replicas` seeds
+    /// starting at `seed0`, on an `l`² lattice.
+    pub fn grid(l: usize, betas: Vec<f32>, replicas: usize, seed0: u32) -> Result<Self> {
+        Ok(Self {
+            geom: Geometry::square(l)?,
+            betas,
+            seeds: (0..replicas.max(1) as u32).map(|r| seed0.wrapping_add(r)).collect(),
+            shards: 1,
+            workers: 1,
+            burn_in: 300,
+            samples: 100,
+            thin: 2,
+            threaded_shards: false,
+        })
+    }
+
+    /// Total replica count (β × seed grid size).
+    pub fn replica_count(&self) -> usize {
+        self.betas.len() * self.seeds.len()
+    }
+}
+
+/// One replica's recorded run.
+#[derive(Clone, Debug)]
+pub struct ReplicaResult {
+    /// Inverse temperature of this replica.
+    pub beta: f32,
+    /// Seed of this replica.
+    pub seed: u32,
+    /// Per-sample magnetization per site (signed).
+    pub m_series: Vec<f64>,
+    /// Per-sample energy per site.
+    pub e_series: Vec<f64>,
+    /// Throughput accounting of this replica's cluster.
+    pub metrics: Metrics,
+}
+
+impl ReplicaResult {
+    /// ⟨|m|⟩ over the recorded samples.
+    pub fn mean_abs_m(&self) -> f64 {
+        stats::mean(&self.m_series.iter().map(|m| m.abs()).collect::<Vec<_>>())
+    }
+
+    /// Blocked error on |m|.
+    pub fn err_abs_m(&self) -> f64 {
+        stats::stderr_blocked(&self.m_series.iter().map(|m| m.abs()).collect::<Vec<_>>())
+    }
+
+    /// ⟨e⟩ over the recorded samples.
+    pub fn mean_e(&self) -> f64 {
+        stats::mean(&self.e_series)
+    }
+
+    /// Binder accumulator over the recorded magnetizations.
+    pub fn binder(&self) -> BinderAccumulator {
+        let mut acc = BinderAccumulator::new();
+        for &m in &self.m_series {
+            acc.push(m);
+        }
+        acc
+    }
+
+    /// This replica's sweep throughput.
+    pub fn flips_per_ns(&self) -> f64 {
+        self.metrics.flips_per_ns()
+    }
+}
+
+/// Aggregated outcome of a farm run.
+#[derive(Clone, Debug)]
+pub struct FarmResult {
+    /// Per-replica results in deterministic (β-major, then seed) order.
+    pub replicas: Vec<ReplicaResult>,
+    /// Wall-clock time of the whole farm.
+    pub wall: Duration,
+    /// Worker threads used.
+    pub workers: usize,
+    /// Merged metrics across replicas (`elapsed` is summed CPU sweep time).
+    pub aggregate: Metrics,
+}
+
+impl FarmResult {
+    /// Aggregate throughput against *wall clock* — the number that should
+    /// scale near-linearly with `workers` on idle cores.
+    pub fn flips_per_ns_wall(&self) -> f64 {
+        crate::util::units::flips_per_ns(self.aggregate.flips, self.wall.as_secs_f64())
+    }
+
+    /// Parallel efficiency: summed in-replica sweep time divided by
+    /// `workers × wall` (1.0 = perfectly linear scaling).
+    pub fn parallel_efficiency(&self) -> f64 {
+        let wall = self.wall.as_secs_f64();
+        if wall <= 0.0 || self.workers == 0 {
+            return f64::NAN;
+        }
+        self.aggregate.elapsed.as_secs_f64() / (wall * self.workers as f64)
+    }
+
+    /// Group replicas by β (grid order), pooling every seed's samples into
+    /// one [`BinderAccumulator`] per β — the Fig. 6 curve points.
+    pub fn by_beta(&self) -> Vec<(f32, BinderAccumulator)> {
+        let mut out: Vec<(f32, BinderAccumulator)> = Vec::new();
+        for r in &self.replicas {
+            match out.iter_mut().find(|(b, _)| b.to_bits() == r.beta.to_bits()) {
+                Some((_, acc)) => {
+                    for &m in &r.m_series {
+                        acc.push(m);
+                    }
+                }
+                None => out.push((r.beta, r.binder())),
+            }
+        }
+        out
+    }
+}
+
+/// Run one replica to completion (the per-task body of the farm).
+fn run_replica(cfg: &FarmConfig, beta: f32, seed: u32) -> Result<ReplicaResult> {
+    let mut cluster = NativeCluster::hot(cfg.geom, cfg.shards.max(1), beta, seed)?;
+    cluster.threaded = cfg.threaded_shards;
+    cluster.run(cfg.burn_in);
+    let mut m_series = Vec::with_capacity(cfg.samples);
+    let mut e_series = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        cluster.run(cfg.thin.max(1));
+        m_series.push(cluster.lattice.magnetization());
+        e_series.push(cluster.lattice.energy_per_site());
+    }
+    Ok(ReplicaResult { beta, seed, m_series, e_series, metrics: cluster.metrics })
+}
+
+/// Execute the full β × seed grid across `cfg.workers` scoped threads.
+///
+/// Work is pulled from a shared atomic cursor (replicas can have very
+/// different equilibration costs across β, so static striping would load
+/// imbalance); results land in per-task slots, so the output order is the
+/// deterministic grid order regardless of completion order.
+pub fn run_farm(cfg: &FarmConfig) -> Result<FarmResult> {
+    let tasks: Vec<(f32, u32)> = cfg
+        .betas
+        .iter()
+        .flat_map(|&b| cfg.seeds.iter().map(move |&s| (b, s)))
+        .collect();
+    if tasks.is_empty() {
+        return Err(Error::Coordinator(
+            "replica farm needs a non-empty β × seed grid".into(),
+        ));
+    }
+    let workers = cfg.workers.max(1).min(tasks.len());
+    let timer = Timer::start();
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<ReplicaResult>>>> =
+        (0..tasks.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let (beta, seed) = tasks[i];
+                let result = run_replica(cfg, beta, seed);
+                *slots[i].lock().expect("farm slot poisoned") = Some(result);
+            });
+        }
+    });
+
+    let wall = timer.elapsed();
+    let mut replicas = Vec::with_capacity(tasks.len());
+    for slot in slots {
+        let result = slot
+            .into_inner()
+            .expect("farm slot poisoned")
+            .expect("farm worker exited without reporting");
+        replicas.push(result?);
+    }
+    let mut aggregate = Metrics::new();
+    for r in &replicas {
+        aggregate.merge(&r.metrics);
+    }
+    Ok(FarmResult { replicas, wall, workers, aggregate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FarmConfig {
+        FarmConfig {
+            geom: Geometry::new(8, 32).unwrap(),
+            betas: vec![0.40, BETA_C],
+            seeds: vec![1, 2],
+            shards: 2,
+            workers: 2,
+            burn_in: 3,
+            samples: 4,
+            thin: 1,
+            threaded_shards: false,
+        }
+    }
+
+    #[test]
+    fn grid_order_and_sample_counts() {
+        let cfg = small_cfg();
+        let res = run_farm(&cfg).unwrap();
+        assert_eq!(res.replicas.len(), 4);
+        // β-major, then seed.
+        let order: Vec<(u32, u32)> =
+            res.replicas.iter().map(|r| (r.beta.to_bits(), r.seed)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0.40f32.to_bits(), 1),
+                (0.40f32.to_bits(), 2),
+                (BETA_C.to_bits(), 1),
+                (BETA_C.to_bits(), 2),
+            ]
+        );
+        for r in &res.replicas {
+            assert_eq!(r.m_series.len(), 4);
+            assert_eq!(r.e_series.len(), 4);
+            // burn_in + samples × thin sweeps accounted.
+            assert_eq!(r.metrics.sweeps, 3 + 4);
+        }
+        assert_eq!(
+            res.aggregate.flips,
+            4 * 7 * cfg.geom.sites() as u64,
+            "4 replicas × 7 sweeps × sites"
+        );
+        assert!(res.parallel_efficiency() > 0.0);
+    }
+
+    #[test]
+    fn by_beta_pools_seeds() {
+        let res = run_farm(&small_cfg()).unwrap();
+        let grouped = res.by_beta();
+        assert_eq!(grouped.len(), 2);
+        for (_, acc) in &grouped {
+            assert_eq!(acc.count(), 8, "2 seeds × 4 samples pooled");
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_an_error() {
+        let mut cfg = small_cfg();
+        cfg.betas.clear();
+        assert!(run_farm(&cfg).is_err());
+    }
+
+    #[test]
+    fn bad_shard_count_surfaces_the_cluster_error() {
+        let mut cfg = small_cfg();
+        cfg.shards = 3; // 8 rows % 3 != 0
+        assert!(run_farm(&cfg).is_err());
+    }
+
+    #[test]
+    fn default_grid_brackets_beta_c() {
+        let g = default_beta_grid(5);
+        assert_eq!(g.len(), 5);
+        assert!(g[0] < BETA_C && BETA_C < g[4]);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(default_beta_grid(1), vec![BETA_C]);
+    }
+}

@@ -30,6 +30,18 @@ impl Metrics {
         self.sweeps += 1;
     }
 
+    /// Fold another accumulator into this one (farm/fleet aggregation):
+    /// flips and sweeps add; `elapsed` becomes summed per-worker CPU sweep
+    /// time, which callers divide by wall clock for parallel efficiency.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.flips += other.flips;
+        self.elapsed += other.elapsed;
+        self.sweeps += other.sweeps;
+        for (name, d) in other.phases.iter() {
+            self.phases.add(name, d);
+        }
+    }
+
     /// The paper's headline metric.
     pub fn flips_per_ns(&self) -> f64 {
         crate::util::units::flips_per_ns(self.flips, self.elapsed.as_secs_f64())
@@ -70,5 +82,23 @@ mod tests {
         assert!((m.flips_per_ns() - 1.0).abs() < 1e-9);
         assert!((m.secs_per_sweep() - 0.001).abs() < 1e-9);
         assert!(m.summary().contains("flips/ns"));
+    }
+
+    #[test]
+    fn merge_accumulates_including_phases() {
+        let mut a = Metrics::new();
+        a.record_sweep(100, Duration::from_millis(2));
+        a.phases.add("black", Duration::from_millis(1));
+        let mut b = Metrics::new();
+        b.record_sweep(50, Duration::from_millis(1));
+        b.phases.add("black", Duration::from_millis(3));
+        b.phases.add("halo", Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.flips, 150);
+        assert_eq!(a.sweeps, 2);
+        assert_eq!(a.elapsed, Duration::from_millis(3));
+        let black = a.phases.iter().find(|(n, _)| *n == "black").unwrap().1;
+        assert_eq!(black, Duration::from_millis(4));
+        assert_eq!(a.phases.total(), Duration::from_millis(6));
     }
 }

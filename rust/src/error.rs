@@ -1,47 +1,85 @@
-//! Crate-wide error type.
+//! Crate-wide error type (std-only — the offline image has no `thiserror`,
+//! so `Display`/`Error` are implemented by hand).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the ising-dgx library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Lattice dimensions violate a layout constraint.
-    #[error("invalid lattice geometry: {0}")]
     Geometry(String),
 
     /// Configuration file / value errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// TOML syntax errors with line information.
-    #[error("toml parse error at line {line}: {msg}")]
-    Toml { line: usize, msg: String },
+    Toml {
+        /// 1-based source line.
+        line: usize,
+        /// Parser message.
+        msg: String,
+    },
 
     /// JSON syntax errors with byte offset.
-    #[error("json parse error at offset {offset}: {msg}")]
-    Json { offset: usize, msg: String },
+    Json {
+        /// Byte offset into the document.
+        offset: usize,
+        /// Parser message.
+        msg: String,
+    },
 
     /// Artifact manifest problems (missing program, shape mismatch, ...).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT runtime failures (wraps the xla crate's error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator-level failures (worker panic, halo mismatch, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// CLI usage errors.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Geometry(m) => write!(f, "invalid lattice geometry: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Toml { line, msg } => {
+                write!(f, "toml parse error at line {line}: {msg}")
+            }
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at offset {offset}: {msg}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -50,3 +88,33 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_keep_their_prefixes() {
+        assert_eq!(
+            Error::Geometry("3x4".into()).to_string(),
+            "invalid lattice geometry: 3x4"
+        );
+        assert_eq!(
+            Error::Toml { line: 7, msg: "bad".into() }.to_string(),
+            "toml parse error at line 7: bad"
+        );
+        assert_eq!(
+            Error::Json { offset: 12, msg: "eof".into() }.to_string(),
+            "json parse error at offset 12: eof"
+        );
+        assert!(Error::Usage("x".into()).to_string().starts_with("usage error"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -2,12 +2,24 @@
 //! by `python/compile/aot.py` and executes them on the CPU PJRT client.
 //! Python never runs at request time — the Rust binary is self-contained
 //! once `make artifacts` has been built.
+//!
+//! The artifact *manifest* layer ([`artifact`]) is pure std and always
+//! compiles — the config and CLI layers use [`Variant`]/[`ProgramKind`]
+//! as vocabulary. The execution layer ([`buffers`], [`engine`],
+//! [`engines`]) needs the `xla` crate and is gated behind the `pjrt`
+//! cargo feature, so the native multi-spin path builds on machines with
+//! no XLA toolchain (CI included).
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod buffers;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod engines;
 
 pub use artifact::{Manifest, PlaneDtype, ProgramKind, ProgramMeta, Variant};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Program};
+#[cfg(feature = "pjrt")]
 pub use engines::PjrtEngine;

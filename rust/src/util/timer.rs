@@ -73,11 +73,40 @@ impl PhaseTimes {
 mod tests {
     use super::*;
 
+    /// CI-safe: no sleeps and no wall-clock thresholds (loaded runners
+    /// make "slept 2ms ⇒ at least 1ms elapsed"-style assertions flaky).
+    /// A bounded spin waits for the monotonic clock to visibly advance,
+    /// so a frozen/broken clock fails the test instead of hanging or
+    /// passing vacuously.
     #[test]
-    fn timer_progresses() {
+    fn timer_progresses_monotonically() {
+        let mut t = Timer::start();
+        let mut spins = 0u64;
+        while t.elapsed().is_zero() && spins < 100_000_000 {
+            spins += 1;
+        }
+        let a = t.elapsed();
+        assert!(!a.is_zero(), "clock never advanced after {spins} spins");
+        let b = t.elapsed();
+        assert!(b >= a, "elapsed must be monotone: {a:?} then {b:?}");
+        assert!(t.secs() > 0.0);
+        assert!(t.nanos() >= b.as_nanos() as f64, "nanos sampled after b");
+
+        // lap() returns the time since start and restarts the stopwatch.
+        let lap = t.lap();
+        assert!(lap >= b, "lap covers at least the observed elapsed time");
+        assert!(!lap.is_zero());
+    }
+
+    /// secs/nanos are consistent views of the same clock (sampled in
+    /// order, so each later view must be at least the earlier one).
+    #[test]
+    fn unit_conversions_are_ordered() {
         let t = Timer::start();
-        std::thread::sleep(Duration::from_millis(2));
-        assert!(t.secs() >= 0.001);
+        let s = t.secs();
+        let n = t.nanos();
+        assert!(s >= 0.0);
+        assert!(n >= s * 1e9, "nanos sampled after secs: {n} vs {s}");
     }
 
     #[test]

@@ -1,28 +1,47 @@
 //! Coordinator integration: slab clusters (PJRT and native) must be
-//! bit-exact against single-device execution, and the perf model must
-//! reproduce the paper's scaling shapes.
+//! bit-exact against single-device execution, the replica farm must be
+//! deterministic and agree with a bare `NativeCluster`, and the perf
+//! model must reproduce the paper's scaling shapes.
 
-use ising_dgx::algorithms::{metropolis, multispin, AcceptanceTable};
+use ising_dgx::algorithms::{multispin, AcceptanceTable};
 use ising_dgx::coordinator::{
-    model_sweep, partition, NativeCluster, SlabCluster, SpinWidth, Topology,
+    model_sweep, partition, run_farm, FarmConfig, NativeCluster, SpinWidth, Topology,
 };
 use ising_dgx::lattice::{init, Geometry};
+
+#[cfg(feature = "pjrt")]
+use ising_dgx::algorithms::metropolis;
+#[cfg(feature = "pjrt")]
+use ising_dgx::coordinator::SlabCluster;
+#[cfg(feature = "pjrt")]
 use ising_dgx::runtime::{Engine, Variant};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
+#[cfg(feature = "pjrt")]
 fn engine() -> Option<Rc<Engine>> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts — run `make artifacts`");
         return None;
     }
-    Some(Rc::new(Engine::new(&dir).expect("engine")))
+    // Also self-skip when the `xla` dependency is the bundled stub (its
+    // PJRT client constructor always errors) rather than a real runtime.
+    match Engine::new(&dir) {
+        Ok(e) => Some(Rc::new(e)),
+        Err(e) => {
+            eprintln!("SKIP: PJRT engine unavailable ({e})");
+            None
+        }
+    }
 }
 
 /// Paper §4 invariant, PJRT path: a 2-device basic cluster over 128²
 /// equals the native single-device trajectory (slab programs + halo
 /// exchange + Pallas kernels + PJRT, all in one assertion).
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_slab_cluster_bit_exact_vs_native() {
     let Some(eng) = engine() else { return };
@@ -42,6 +61,7 @@ fn pjrt_slab_cluster_bit_exact_vs_native() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_tensorcore_cluster_bit_exact() {
     let Some(eng) = engine() else { return };
@@ -92,6 +112,89 @@ fn metrics_accumulate_over_cluster_run() {
     assert_eq!(cluster.metrics.sweeps, 10);
     assert_eq!(cluster.metrics.flips, 10 * geom.sites() as u64);
     assert!(cluster.metrics.flips_per_ns() > 0.0);
+}
+
+/// Farm determinism: the same seed × β grid produces bit-identical
+/// magnetization/energy series no matter how many farm workers execute
+/// it — 1 vs N workers, and with in-replica shard threading on or off.
+#[test]
+fn farm_is_deterministic_across_worker_counts() {
+    let geom = Geometry::new(16, 64).unwrap();
+    let base = FarmConfig {
+        geom,
+        betas: vec![0.40, 0.4406868, 0.48],
+        seeds: vec![5, 6],
+        shards: 2,
+        workers: 1,
+        burn_in: 4,
+        samples: 6,
+        thin: 1,
+        threaded_shards: false,
+    };
+    let reference = run_farm(&base).unwrap();
+    assert_eq!(reference.replicas.len(), 6);
+
+    for (workers, threaded_shards) in [(2usize, false), (4, false), (8, false), (2, true)] {
+        let cfg = FarmConfig { workers, threaded_shards, ..base.clone() };
+        let got = run_farm(&cfg).unwrap();
+        assert_eq!(got.workers, workers.min(6));
+        assert_eq!(got.replicas.len(), reference.replicas.len());
+        for (want, have) in reference.replicas.iter().zip(&got.replicas) {
+            assert_eq!(want.beta.to_bits(), have.beta.to_bits());
+            assert_eq!(want.seed, have.seed);
+            assert_eq!(
+                want.m_series, have.m_series,
+                "magnetization series diverged (β = {}, seed = {}, workers = {workers})",
+                want.beta, want.seed
+            );
+            assert_eq!(want.e_series, have.e_series);
+        }
+    }
+}
+
+/// Cross-check: a single-replica farm reproduces a hand-driven
+/// `NativeCluster` running the same burn-in / thin / sample protocol —
+/// even with different shard counts (partition invariance).
+#[test]
+fn farm_matches_native_cluster_reference() {
+    let geom = Geometry::new(16, 64).unwrap();
+    let (beta, seed) = (0.43f32, 9u32);
+    let (burn_in, samples, thin) = (5u32, 8usize, 2u32);
+
+    let cfg = FarmConfig {
+        geom,
+        betas: vec![beta],
+        seeds: vec![seed],
+        shards: 4,
+        workers: 3,
+        burn_in,
+        samples,
+        thin,
+        threaded_shards: false,
+    };
+    let farm = run_farm(&cfg).unwrap();
+    assert_eq!(farm.replicas.len(), 1);
+    let replica = &farm.replicas[0];
+
+    let mut cluster = NativeCluster::hot(geom, 1, beta, seed).unwrap();
+    cluster.threaded = false;
+    cluster.run(burn_in);
+    let mut m = Vec::new();
+    let mut e = Vec::new();
+    for _ in 0..samples {
+        cluster.run(thin);
+        m.push(cluster.lattice.magnetization());
+        e.push(cluster.lattice.energy_per_site());
+    }
+
+    assert_eq!(replica.m_series, m, "farm replica diverged from bare cluster");
+    assert_eq!(replica.e_series, e);
+
+    // Metrics accounting: burn-in + samples × thin sweeps, all flips.
+    let sweeps = (burn_in + samples as u32 * thin) as u64;
+    assert_eq!(replica.metrics.sweeps, sweeps);
+    assert_eq!(farm.aggregate.flips, sweeps * geom.sites() as u64);
+    assert!(farm.parallel_efficiency() > 0.0);
 }
 
 /// The event model vs the paper's published endpoints (Tables 3/4):

@@ -1,0 +1,320 @@
+//! Compile-time stub of the subset of the `xla` crate (xla-rs) API that
+//! `ising_dgx`'s `pjrt` feature uses.
+//!
+//! The real crate links libxla plus a PJRT plugin, neither of which can be
+//! vendored into this offline tree. This stub keeps the entire `pjrt`
+//! feature *compilable* everywhere (CI included): host-side [`Literal`]
+//! construction and extraction are fully functional, while every operation
+//! that needs a real XLA runtime — client creation, compilation, execution —
+//! returns a descriptive [`Error`]. Deployments with a real XLA toolchain
+//! point the `xla` path dependency at an xla-rs checkout instead; the API
+//! here is call-compatible with the subset the runtime layer exercises.
+
+use std::fmt;
+
+/// Stub error type (the real crate wraps `absl::Status`).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    /// Construct an error with a message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: the bundled `xla` stub has no PJRT runtime; point the \
+             workspace's `xla` path dependency at a real xla-rs checkout to \
+             execute AOT artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (the subset the artifact programs use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// Predicate (bool).
+    Pred,
+    /// Signed 8-bit.
+    S8,
+    /// Signed 32-bit.
+    S32,
+    /// Unsigned 32-bit.
+    U32,
+    /// IEEE-754 binary32.
+    F32,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 => 1,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Host value types that can fill a [`Literal`].
+pub trait NativeType: Copy {
+    /// The corresponding XLA element type.
+    const TY: ElementType;
+    /// Append the little-endian bytes of `self`.
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Decode one value from little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.push(self as u8);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        bytes[0] as i8
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// A host-resident array value: element type, dimensions, raw bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Scalar literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut data = Vec::with_capacity(T::TY.byte_size());
+        v.write_le(&mut data);
+        Literal { ty: T::TY, dims: Vec::new(), data }
+    }
+
+    /// Build an array literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let count: usize = dims.iter().product();
+        if data.len() != count * ty.byte_size() {
+            return Err(Error::new(format!(
+                "shape {dims:?} of {ty:?} needs {} bytes, got {}",
+                count * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Element type.
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of elements.
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Extract all elements as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::new(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let sz = self.ty.byte_size();
+        Ok(self.data.chunks_exact(sz).map(T::read_le).collect())
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if self.ty != T::TY {
+            return Err(Error::new(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        if self.data.len() < self.ty.byte_size() {
+            return Err(Error::new("empty literal"));
+        }
+        Ok(T::read_le(&self.data))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they only
+    /// come back from execution, which the stub cannot perform).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module text (the stub stores the text verbatim).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("cannot read HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    /// The module text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _hlo: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _hlo: proto.clone() }
+    }
+}
+
+/// PJRT client handle. The stub cannot create one.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU client — always unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Device count.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation — unavailable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable. The stub cannot run one.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments — unavailable in the stub.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer. The stub cannot produce one.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal — unavailable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_host_side() {
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::U32,
+            &[2, 2],
+            &[1, 0, 0, 0, 2, 0, 0, 0, 3, 0, 0, 0, 4, 0, 0, 0],
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(lit.element_count(), 4);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype checked");
+
+        let s = Literal::scalar(-3i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), -3);
+        let f = Literal::scalar(0.5f32);
+        assert_eq!(f.get_first_element::<f32>().unwrap(), 0.5);
+
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S8, &[3], &[0; 2])
+            .is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_clearly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+    }
+}
