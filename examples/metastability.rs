@@ -19,7 +19,7 @@ fn main() -> ising_dgx::Result<()> {
     let mut striped = 0;
     let seeds = 1u32..=8;
     // Stripes form during coarsening and persist far beyond ~L²/4 sweeps.
-    let budget = (l * l / 4) as u32;
+    let budget = (l * l / 4) as u64;
     for seed in seeds.clone() {
         let mut eng = MultispinEngine::hot(geom, (1.0 / t_quench) as f32, seed)?;
         eng.sweep_n(budget);

@@ -54,10 +54,12 @@ pub fn update_color(
     }
 }
 
-/// One full heat-bath sweep.
-pub fn sweep(lat: &mut Checkerboard, table: &HeatBathTable, seed: u32, step: u32) {
-    update_color(lat, Color::Black, table, seed, step);
-    update_color(lat, Color::White, table, seed, step);
+/// One full heat-bath sweep. The counter is u64 (long-run safe); its low
+/// 32 bits feed the Philox counter lane.
+pub fn sweep(lat: &mut Checkerboard, table: &HeatBathTable, seed: u32, step: u64) {
+    let s = step as u32;
+    update_color(lat, Color::Black, table, seed, s);
+    update_color(lat, Color::White, table, seed, s);
 }
 
 /// Self-contained heat-bath engine implementing [`super::sweeper::Sweeper`].
@@ -69,7 +71,7 @@ pub struct HeatBathEngine {
     /// Philox seed.
     pub seed: u32,
     /// Next sweep number.
-    pub step: u32,
+    pub step: u64,
 }
 
 impl HeatBathEngine {
@@ -82,6 +84,28 @@ impl HeatBathEngine {
             step: 0,
         }
     }
+
+    /// Full engine state as a checkpointable snapshot.
+    pub fn snapshot(&self) -> crate::util::snapshot::EngineSnapshot {
+        crate::util::snapshot::EngineSnapshot::from_checkerboard(
+            &self.lattice,
+            self.table.beta,
+            self.seed,
+            self.step,
+        )
+    }
+
+    /// Rebuild an engine from a snapshot; continues bit-identically.
+    pub fn from_snapshot(
+        snap: &crate::util::snapshot::EngineSnapshot,
+    ) -> crate::error::Result<Self> {
+        Ok(Self {
+            lattice: snap.to_checkerboard()?,
+            table: HeatBathTable::new(snap.beta()),
+            seed: snap.seed,
+            step: snap.step,
+        })
+    }
 }
 
 impl super::sweeper::Sweeper for HeatBathEngine {
@@ -93,7 +117,7 @@ impl super::sweeper::Sweeper for HeatBathEngine {
         self.lattice.geometry()
     }
 
-    fn sweep_n(&mut self, n: u32) {
+    fn sweep_n(&mut self, n: u64) {
         for t in self.step..self.step + n {
             sweep(&mut self.lattice, &self.table, self.seed, t);
         }
@@ -114,6 +138,10 @@ impl super::sweeper::Sweeper for HeatBathEngine {
 
     fn set_beta(&mut self, beta: f32) {
         self.table = HeatBathTable::new(beta);
+    }
+
+    fn export_snapshot(&self) -> Option<crate::util::snapshot::EngineSnapshot> {
+        Some(HeatBathEngine::snapshot(self))
     }
 }
 

@@ -121,10 +121,14 @@ pub fn update_color(
     update_color_rows(target, 0, source, h, wpr, 0..h, color, table, seed, step);
 }
 
-/// One full sweep (black then white).
-pub fn sweep(lat: &mut PackedLattice, table: &AcceptanceTable, seed: u32, step: u32) {
-    update_color(lat, Color::Black, table, seed, step);
-    update_color(lat, Color::White, table, seed, step);
+/// One full sweep (black then white). The sweep counter is u64 (long
+/// runs overflow u32 — the old counter panicked in debug / wrapped in
+/// release near `u32::MAX`); its low 32 bits feed the Philox counter
+/// lane, matching the scalar engine bit-for-bit.
+pub fn sweep(lat: &mut PackedLattice, table: &AcceptanceTable, seed: u32, step: u64) {
+    let s = step as u32;
+    update_color(lat, Color::Black, table, seed, s);
+    update_color(lat, Color::White, table, seed, s);
 }
 
 /// Run `n` sweeps from counter `step0`; returns the next counter.
@@ -132,9 +136,9 @@ pub fn run(
     lat: &mut PackedLattice,
     table: &AcceptanceTable,
     seed: u32,
-    step0: u32,
-    n: u32,
-) -> u32 {
+    step0: u64,
+    n: u64,
+) -> u64 {
     for t in step0..step0 + n {
         sweep(lat, table, seed, t);
     }
@@ -159,7 +163,7 @@ pub struct MultispinEngine {
     /// Philox seed.
     pub seed: u32,
     /// Next sweep number.
-    pub step: u32,
+    pub step: u64,
 }
 
 impl MultispinEngine {
@@ -182,6 +186,38 @@ impl MultispinEngine {
             step: 0,
         })
     }
+
+    /// Full engine state as a checkpointable snapshot.
+    pub fn snapshot(&self) -> crate::util::snapshot::EngineSnapshot {
+        crate::util::snapshot::EngineSnapshot::from_packed(
+            &self.lattice,
+            self.table.beta,
+            self.seed,
+            self.step,
+        )
+    }
+
+    /// Rebuild an engine from a snapshot; continues bit-identically.
+    pub fn from_snapshot(
+        snap: &crate::util::snapshot::EngineSnapshot,
+    ) -> crate::error::Result<Self> {
+        Ok(Self {
+            lattice: snap.to_packed()?,
+            table: AcceptanceTable::new(snap.beta()),
+            seed: snap.seed,
+            step: snap.step,
+        })
+    }
+
+    /// Save the engine state to a snapshot file.
+    pub fn save(&self, path: &std::path::Path) -> crate::error::Result<()> {
+        self.snapshot().save(path)
+    }
+
+    /// Load an engine from a snapshot file.
+    pub fn load(path: &std::path::Path) -> crate::error::Result<Self> {
+        Self::from_snapshot(&crate::util::snapshot::EngineSnapshot::load(path)?)
+    }
 }
 
 impl super::sweeper::Sweeper for MultispinEngine {
@@ -193,7 +229,7 @@ impl super::sweeper::Sweeper for MultispinEngine {
         self.lattice.geometry()
     }
 
-    fn sweep_n(&mut self, n: u32) {
+    fn sweep_n(&mut self, n: u64) {
         self.step = run(&mut self.lattice, &self.table, self.seed, self.step, n);
     }
 
@@ -211,6 +247,10 @@ impl super::sweeper::Sweeper for MultispinEngine {
 
     fn set_beta(&mut self, beta: f32) {
         self.table = AcceptanceTable::new(beta);
+    }
+
+    fn export_snapshot(&self) -> Option<crate::util::snapshot::EngineSnapshot> {
+        Some(MultispinEngine::snapshot(self))
     }
 }
 
@@ -297,6 +337,48 @@ mod tests {
                 assert_eq!(w & !NIBBLE_LSB, 0, "stray bits in word {w:#x}");
             }
         }
+    }
+
+    /// Regression: the old u32 counter computed `step0..step0 + n`, which
+    /// panics in debug / wraps in release once step0 nears `u32::MAX` —
+    /// exactly the long-run regime. The u64 plumbing must sail across the
+    /// boundary, with the low 32 bits feeding Philox.
+    #[test]
+    fn sweep_counter_crosses_the_u32_boundary() {
+        let g = Geometry::new(4, 32).unwrap();
+        let table = AcceptanceTable::new(0.44);
+        let seed = 6;
+        let step0 = u32::MAX as u64 - 2;
+        let mut packed = init::hot_packed(g, seed).unwrap();
+        let next = run(&mut packed, &table, seed, step0, 6);
+        assert_eq!(next, step0 + 6, "counter advances past 2^32 without wrapping");
+        // The scalar engine, driven over the same boundary, stays
+        // bit-identical (both mask the same low 32 bits into Philox).
+        let mut scalar = init::hot(g, seed);
+        metropolis::run(&mut scalar, &table, seed, step0, 6);
+        assert_eq!(packed.to_checkerboard(), scalar);
+        // State, not counter bits, is what distinguishes trajectories:
+        // a lattice at step 2^32 + k keeps evolving validly.
+        for c in Color::BOTH {
+            for &w in packed.plane(c) {
+                assert_eq!(w & !NIBBLE_LSB, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_snapshot_roundtrip_continues_identically() {
+        use crate::algorithms::sweeper::Sweeper;
+        let g = Geometry::new(8, 32).unwrap();
+        let mut a = MultispinEngine::hot(g, 0.44, 21).unwrap();
+        a.sweep_n(5);
+        let snap = a.export_snapshot().expect("multispin engine is checkpointable");
+        let mut b = MultispinEngine::from_snapshot(&snap).unwrap();
+        assert_eq!(b.step, 5);
+        assert_eq!(b.lattice, a.lattice);
+        a.sweep_n(6);
+        b.sweep_n(6);
+        assert_eq!(a.lattice, b.lattice, "restored engine must continue bit-identically");
     }
 
     #[test]

@@ -15,8 +15,11 @@ pub trait Sweeper {
     fn geometry(&self) -> Geometry;
 
     /// Advance `n` full lattice sweeps (or, for cluster algorithms, `n`
-    /// cluster updates — see the implementor's docs).
-    fn sweep_n(&mut self, n: u32);
+    /// cluster updates — see the implementor's docs). The count is 64-bit:
+    /// week-long runs overflow a u32 sweep counter, which is why the whole
+    /// counter plumbing is u64 (the low 32 bits feed the Philox counter
+    /// lane).
+    fn sweep_n(&mut self, n: u64);
 
     /// Magnetization per site in `[-1, 1]`.
     fn magnetization(&self) -> f64;
@@ -33,5 +36,14 @@ pub trait Sweeper {
     /// Spin flips attempted per sweep (defaults to one per site).
     fn flips_per_sweep(&self) -> u64 {
         self.geometry().sites() as u64
+    }
+
+    /// Export the engine state as a checkpointable snapshot
+    /// (`util::snapshot`), when the engine supports bit-exact
+    /// save/restore. `None` for engines whose state is not (yet)
+    /// serializable — Wolff carries a private sequential RNG stream, and
+    /// the PJRT engines hold device-mirrored planes.
+    fn export_snapshot(&self) -> Option<crate::util::snapshot::EngineSnapshot> {
+        None
     }
 }

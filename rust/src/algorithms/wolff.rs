@@ -88,7 +88,7 @@ impl super::sweeper::Sweeper for WolffEngine {
 
     /// For Wolff, one "sweep" is one cluster update (the conventional unit;
     /// observable comparisons rescale by mean cluster size).
-    fn sweep_n(&mut self, n: u32) {
+    fn sweep_n(&mut self, n: u64) {
         for _ in 0..n {
             self.cluster_update();
         }
@@ -195,7 +195,7 @@ mod tests {
             metropolis::sweep(&mut mp, &table, 42, t);
         }
         let mut me = 0.0;
-        for t in 300..300 + 400u32 {
+        for t in 300..300 + 400u64 {
             metropolis::sweep(&mut mp, &table, 42, t);
             me += mp.energy_per_site();
         }

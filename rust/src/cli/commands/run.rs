@@ -62,7 +62,7 @@ pub fn exec(args: &Args) -> Result<()> {
 
     // Throughput phase.
     let timer = Timer::start();
-    engine.sweep_n(sweeps);
+    engine.sweep_n(sweeps as u64);
     let secs = timer.secs();
     let flips = engine.flips_per_sweep() * sweeps as u64;
 

@@ -19,7 +19,7 @@ pub fn exec(args: &Args) -> Result<()> {
     let mode = args.opt("mode").unwrap_or("strong").to_string();
     let size: usize = args.opt_parse("size", 512usize)?;
     let max_workers: usize = args.opt_parse("max-workers", 8usize)?;
-    let sweeps: u32 = args.opt_parse("sweeps", 32u32)?;
+    let sweeps: u64 = args.opt_parse("sweeps", 32u64)?;
     let seed: u32 = args.opt_parse("seed", 3u32)?;
     let beta = 0.4406868f32;
 

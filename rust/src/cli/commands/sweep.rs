@@ -1,27 +1,73 @@
 //! `ising sweep` — run the parallel replica farm: R independent replicas
 //! over a seed × β grid (the Fig. 5/Fig. 6 workload) on the native
-//! multi-spin path, with per-β pooled observables and worker-scaling
-//! metrics.
+//! multi-spin path, with per-β pooled observables, worker-scaling
+//! metrics, and checkpoint/restart for long runs
+//! (`--checkpoint-dir DIR --checkpoint-every N`, resume with `--resume`).
 
 use crate::cli::args::Args;
-use crate::coordinator::farm::{default_beta_grid, run_farm, FarmConfig};
+use crate::coordinator::checkpoint::CheckpointSpec;
+use crate::coordinator::farm::{
+    default_beta_grid, run_farm_checkpointed, FarmConfig, FarmOutcome, FarmResult,
+};
 use crate::error::{Error, Result};
 use crate::util::{units, Table};
+use std::path::PathBuf;
 
 const KNOWN: &[&str] = &[
     "size", "betas", "beta-points", "replicas", "seed", "workers", "shards",
     "burn-in", "samples", "thin", "threaded-shards", "quiet",
+    "checkpoint-dir", "checkpoint-every", "resume", "max-samples", "report",
 ];
 
-/// Parse `--betas 0.40,0.44,0.48` into an f32 grid.
+/// Parse `--betas 0.40,0.44,0.48` into an f32 grid, rejecting values that
+/// would silently poison the acceptance tables (`nan`/`inf` parse as
+/// valid f32 literals!) or that are unphysical for this model (β ≤ 0 —
+/// the grid scans the critical window, not the antiferromagnet).
 fn parse_betas(list: &str) -> Result<Vec<f32>> {
     list.split(',')
         .map(|s| {
             let s = s.trim();
-            s.parse::<f32>()
-                .map_err(|_| Error::Usage(format!("cannot parse β value '{s}' in --betas")))
+            let b: f32 = s
+                .parse()
+                .map_err(|_| Error::Usage(format!("cannot parse β value '{s}' in --betas")))?;
+            if !b.is_finite() || b <= 0.0 {
+                return Err(Error::Usage(format!(
+                    "β value '{s}' in --betas must be finite and > 0"
+                )));
+            }
+            Ok(b)
         })
         .collect()
+}
+
+/// Write the bit-exact per-replica report: β/m/e as hex bit patterns, so
+/// two runs of the same grid can be compared with a plain `diff` (decimal
+/// formatting would hide 1-ulp divergence; wall-clock metrics are
+/// deliberately excluded). This is what the CI checkpoint smoke step
+/// diffs between an interrupted+resumed run and a straight-through one.
+fn write_report(result: &FarmResult, path: &str) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str("# ising sweep replica report v1 (f32/f64 values as hex bit patterns)\n");
+    for r in &result.replicas {
+        let _ = write!(out, "beta_bits={:08x} seed={} m=", r.beta.to_bits(), r.seed);
+        for (i, v) in r.m_series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{:016x}", v.to_bits());
+        }
+        out.push_str(" e=");
+        for (i, v) in r.e_series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{:016x}", v.to_bits());
+        }
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
 }
 
 /// Execute the subcommand.
@@ -33,6 +79,9 @@ pub fn exec(args: &Args) -> Result<()> {
         Some(list) => parse_betas(list)?,
         None => default_beta_grid(args.opt_parse("beta-points", 4usize)?),
     };
+    if betas.is_empty() {
+        return Err(Error::Usage("--betas needs at least one value".into()));
+    }
     let replicas_per_beta: usize = args.opt_parse("replicas", 1usize)?;
     let seed0: u32 = args.opt_parse("seed", 1u32)?;
 
@@ -41,6 +90,14 @@ pub fn exec(args: &Args) -> Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let workers: usize = args.opt_parse("workers", cores.min(total.max(1)))?;
     let shards: usize = args.opt_parse("shards", 1usize)?;
+    // Validate at parse time: a zero here used to fail deep inside the
+    // farm with an opaque coordinator error.
+    if workers == 0 {
+        return Err(Error::Usage("--workers must be >= 1".into()));
+    }
+    if shards == 0 {
+        return Err(Error::Usage("--shards must be >= 1".into()));
+    }
     cfg.workers = workers;
     cfg.shards = shards;
     cfg.burn_in = args.opt_parse("burn-in", cfg.burn_in)?;
@@ -49,6 +106,33 @@ pub fn exec(args: &Args) -> Result<()> {
     // Shard threads only when the farm itself is not already using the
     // cores for replica parallelism (or when explicitly requested).
     cfg.threaded_shards = args.flag("threaded-shards") || (shards > 1 && workers == 1);
+
+    // Checkpoint wiring.
+    let ckpt_dir = args.opt("checkpoint-dir");
+    let every: u32 = args.opt_parse("checkpoint-every", 1u32)?;
+    let resume = args.flag("resume");
+    let max_samples: Option<u64> = match args.opt("max-samples") {
+        Some(s) => Some(s.parse().map_err(|_| {
+            Error::Usage(format!("cannot parse --max-samples value '{s}'"))
+        })?),
+        None => None,
+    };
+    if ckpt_dir.is_none()
+        && (args.opt("checkpoint-every").is_some() || resume || max_samples.is_some())
+    {
+        return Err(Error::Usage(
+            "--checkpoint-every / --resume / --max-samples need --checkpoint-dir".into(),
+        ));
+    }
+    if every == 0 {
+        return Err(Error::Usage("--checkpoint-every must be >= 1".into()));
+    }
+    let spec = ckpt_dir.map(|dir| CheckpointSpec {
+        dir: PathBuf::from(dir),
+        every,
+        resume,
+        sample_budget: max_samples,
+    });
 
     println!(
         "ising sweep: {size}² lattice, {} β × {} seed(s) = {} replicas, \
@@ -63,8 +147,31 @@ pub fn exec(args: &Args) -> Result<()> {
         "  protocol: burn-in {} + {} samples × thin {} sweeps per replica",
         cfg.burn_in, cfg.samples, cfg.thin
     );
+    if let Some(s) = &spec {
+        println!(
+            "  checkpoint: dir {} every {} sample(s){}{}",
+            s.dir.display(),
+            s.every,
+            if s.resume { ", resuming" } else { "" },
+            match s.sample_budget {
+                Some(n) => format!(", stopping after {n} new samples"),
+                None => String::new(),
+            }
+        );
+    }
 
-    let result = run_farm(&cfg)?;
+    let result = match run_farm_checkpointed(&cfg, spec.as_ref())? {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { completed, total } => {
+            let dir = spec.as_ref().expect("interrupt implies checkpointing").dir.display();
+            println!(
+                "  farm interrupted by --max-samples: {completed}/{total} replicas \
+                 complete; progress checkpointed in {dir}"
+            );
+            println!("  rerun the same command with --resume to finish");
+            return Ok(());
+        }
+    };
 
     if !args.flag("quiet") {
         let mut table = Table::new(&[
@@ -111,5 +218,9 @@ pub fn exec(args: &Args) -> Result<()> {
         result.parallel_efficiency() * 100.0,
         result.workers
     );
+    if let Some(path) = args.opt("report") {
+        write_report(&result, path)?;
+        println!("  report: bit-exact replica series written to {path}");
+    }
     Ok(())
 }

@@ -26,6 +26,8 @@ COMMANDS:
   sweep     parallel replica farm over a seed x beta grid (native multi-spin)
             --size N --betas B1,B2,... | --beta-points K --replicas R
             --seed S --workers W --shards D --burn-in N --samples N --thin N
+            checkpoint/restart: --checkpoint-dir DIR [--checkpoint-every N]
+            [--resume] [--max-samples N] [--report FILE]
   validate  magnetization & Binder vs Onsager across temperatures
             --size N --engine E --samples N --quick
   scaling   weak/strong scaling study (native cluster + DGX-2 model)

@@ -1,0 +1,546 @@
+//! Farm checkpoint/restart — the layer that turns week-long, FPGA-scale
+//! sweeps from a gamble into a supported scenario.
+//!
+//! A checkpoint directory holds:
+//!
+//! * `farm.json` — the manifest: the β × seed grid and measurement
+//!   protocol this directory belongs to, plus the indices of completed
+//!   replicas. Resuming validates the requested configuration against it,
+//!   so a snapshot can never silently continue under different physics.
+//! * `replica-NNNNN.snap` — one CRC-checked binary file per started
+//!   replica (`util::snapshot`, kind [`KIND_REPLICA`]): the engine state
+//!   (`EngineSnapshot`), the in-flight m/e sample series, and cumulative
+//!   metrics. Files are written via temp + rename, so a `kill -9` between
+//!   writes leaves the previous consistent state.
+//!
+//! Because each replica trajectory is a pure function of
+//! `(geometry, β, seed, step)`, resuming from these files and finishing
+//! the grid produces per-replica observable series **bit-identical** to
+//! an uninterrupted run — asserted by `tests/integration_coordinator.rs`.
+
+use super::driver::NativeCluster;
+use super::farm::FarmConfig;
+use super::metrics::Metrics;
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+use crate::util::snapshot::{
+    read_file, write_file, ByteReader, ByteWriter, EngineSnapshot, KIND_REPLICA,
+};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Manifest format version.
+const MANIFEST_VERSION: usize = 1;
+
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "farm.json";
+
+/// How a farm run should checkpoint itself.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Checkpoint directory (created if missing).
+    pub dir: PathBuf,
+    /// Snapshot each replica every this many samples (≥ 1; replicas are
+    /// also snapshotted at completion and on interruption).
+    pub every: u32,
+    /// Continue an existing checkpoint directory instead of starting a
+    /// fresh one. Refusing to overwrite without this flag protects a
+    /// half-finished week of work from a mistyped command.
+    pub resume: bool,
+    /// Collect at most this many *new* samples across the whole farm in
+    /// this invocation, then checkpoint and stop (time-boxed runs; also
+    /// how the tests interrupt a farm deterministically).
+    pub sample_budget: Option<u64>,
+}
+
+impl CheckpointSpec {
+    /// Fresh-start spec with snapshot cadence `every`.
+    pub fn new(dir: PathBuf, every: u32) -> Self {
+        Self { dir, every, resume: false, sample_budget: None }
+    }
+}
+
+/// The manifest: grid + protocol fingerprint and completion record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Lattice rows.
+    pub h: usize,
+    /// Lattice columns.
+    pub w: usize,
+    /// β grid as f32 bit patterns (exact, unlike decimal round-trips).
+    pub betas_bits: Vec<u32>,
+    /// Seed grid.
+    pub seeds: Vec<u32>,
+    /// Equilibration sweeps per replica.
+    pub burn_in: u64,
+    /// Measurement samples per replica.
+    pub samples: usize,
+    /// Sweeps between samples.
+    pub thin: u64,
+    /// Task indices of completed replicas (β-major grid order).
+    pub done: BTreeSet<usize>,
+}
+
+impl Manifest {
+    /// Fingerprint a farm configuration.
+    pub fn from_config(cfg: &FarmConfig) -> Self {
+        Self {
+            h: cfg.geom.h,
+            w: cfg.geom.w,
+            betas_bits: cfg.betas.iter().map(|b| b.to_bits()).collect(),
+            seeds: cfg.seeds.clone(),
+            burn_in: cfg.burn_in,
+            samples: cfg.samples,
+            thin: cfg.thin.max(1),
+            done: BTreeSet::new(),
+        }
+    }
+
+    /// Does this manifest describe the same grid + protocol?
+    /// (Worker/shard counts are excluded on purpose: trajectories are
+    /// partition-invariant, so resuming under a different parallel layout
+    /// is legitimate and still bit-identical.)
+    pub fn matches(&self, cfg: &FarmConfig) -> bool {
+        let want = Self::from_config(cfg);
+        self.h == want.h
+            && self.w == want.w
+            && self.betas_bits == want.betas_bits
+            && self.seeds == want.seeds
+            && self.burn_in == want.burn_in
+            && self.samples == want.samples
+            && self.thin == want.thin
+    }
+
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("h", Json::Num(self.h as f64)),
+            ("w", Json::Num(self.w as f64)),
+            (
+                "betas_bits",
+                Json::Arr(self.betas_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("burn_in", Json::Num(self.burn_in as f64)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("thin", Json::Num(self.thin as f64)),
+            (
+                "done",
+                Json::Arr(self.done.iter().map(|&i| Json::Num(i as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Parse from the manifest JSON document.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let version = doc.field("version")?.as_usize()?;
+        if version != MANIFEST_VERSION {
+            return Err(Error::Snapshot(format!(
+                "unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+            )));
+        }
+        let nums = |key: &str| -> Result<Vec<u32>> {
+            doc.field(key)?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize().map(|n| n as u32))
+                .collect()
+        };
+        Ok(Self {
+            h: doc.field("h")?.as_usize()?,
+            w: doc.field("w")?.as_usize()?,
+            betas_bits: nums("betas_bits")?,
+            seeds: nums("seeds")?,
+            burn_in: doc.field("burn_in")?.as_usize()? as u64,
+            samples: doc.field("samples")?.as_usize()?,
+            thin: doc.field("thin")?.as_usize()? as u64,
+            done: doc
+                .field("done")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<BTreeSet<usize>>>()?,
+        })
+    }
+
+    fn store(&self, path: &Path) -> Result<()> {
+        crate::util::snapshot::atomic_write(path, self.to_json().to_string_pretty().as_bytes())
+    }
+
+    fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// One replica's persisted progress: engine state + in-flight series +
+/// cumulative metrics.
+#[derive(Clone, Debug)]
+pub struct ReplicaProgress {
+    /// Restorable engine state (lattice, β, seed, step).
+    pub engine: EngineSnapshot,
+    /// Magnetization samples collected so far.
+    pub m_series: Vec<f64>,
+    /// Energy samples collected so far.
+    pub e_series: Vec<f64>,
+    /// Cumulative throughput accounting across restarts.
+    pub metrics: Metrics,
+}
+
+impl ReplicaProgress {
+    /// Encode as a `KIND_REPLICA` payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let engine = self.engine.encode();
+        let mut wr = ByteWriter::new();
+        wr.put_u64(engine.len() as u64);
+        wr.put_bytes(&engine);
+        wr.put_u64(self.m_series.len() as u64);
+        wr.put_f64_slice(&self.m_series);
+        wr.put_f64_slice(&self.e_series);
+        wr.put_u64(self.metrics.flips);
+        wr.put_u64(self.metrics.sweeps);
+        wr.put_u64(self.metrics.elapsed.as_nanos() as u64);
+        wr.into_bytes()
+    }
+
+    /// Decode a `KIND_REPLICA` payload.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let engine_len = r.get_u64()? as usize;
+        let engine = EngineSnapshot::decode(r.get_bytes(engine_len)?)?;
+        let n = r.get_u64()? as usize;
+        let m_series = r.get_f64_vec(n)?;
+        let e_series = r.get_f64_vec(n)?;
+        let mut metrics = Metrics::new();
+        metrics.flips = r.get_u64()?;
+        metrics.sweeps = r.get_u64()?;
+        metrics.elapsed = Duration::from_nanos(r.get_u64()?);
+        r.finish()?;
+        Ok(Self { engine, m_series, e_series, metrics })
+    }
+}
+
+/// Shared checkpointing state for one farm invocation (thread-safe: the
+/// farm's scoped workers all hold `&Checkpointer`).
+pub struct Checkpointer {
+    dir: PathBuf,
+    every: u32,
+    budget: Option<AtomicI64>,
+    manifest: Mutex<Manifest>,
+}
+
+impl Checkpointer {
+    /// Open (or create) a checkpoint directory for `cfg` as described by
+    /// `spec`. Fresh starts refuse a directory that already has a
+    /// manifest; resumes require one and validate it against `cfg`.
+    pub fn open(spec: &CheckpointSpec, cfg: &FarmConfig) -> Result<Self> {
+        std::fs::create_dir_all(&spec.dir)?;
+        let path = spec.dir.join(MANIFEST_FILE);
+        let manifest = if path.exists() {
+            if !spec.resume {
+                return Err(Error::Usage(format!(
+                    "checkpoint dir '{}' already holds a farm manifest; \
+                     pass --resume to continue it or choose a fresh dir",
+                    spec.dir.display()
+                )));
+            }
+            let m = Manifest::load(&path)?;
+            if !m.matches(cfg) {
+                return Err(Error::Snapshot(format!(
+                    "checkpoint manifest '{}' describes a different farm \
+                     (grid or protocol mismatch); refusing to resume",
+                    path.display()
+                )));
+            }
+            m
+        } else {
+            if spec.resume {
+                return Err(Error::Usage(format!(
+                    "--resume: no '{MANIFEST_FILE}' in checkpoint dir '{}'",
+                    spec.dir.display()
+                )));
+            }
+            let m = Manifest::from_config(cfg);
+            m.store(&path)?;
+            m
+        };
+        Ok(Self {
+            dir: spec.dir.clone(),
+            every: spec.every.max(1),
+            budget: spec.sample_budget.map(|n| AtomicI64::new(n.min(i64::MAX as u64) as i64)),
+            manifest: Mutex::new(manifest),
+        })
+    }
+
+    /// Checkpoint directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot cadence in samples (normalized ≥ 1).
+    pub fn every(&self) -> u32 {
+        self.every
+    }
+
+    /// Replica snapshot path for grid task `idx`.
+    pub fn replica_path(&self, idx: usize) -> PathBuf {
+        self.dir.join(format!("replica-{idx:05}.snap"))
+    }
+
+    /// Has the sample budget run out? (Never true without a budget.)
+    pub fn budget_exhausted(&self) -> bool {
+        self.budget
+            .as_ref()
+            .map(|b| b.load(Ordering::Relaxed) <= 0)
+            .unwrap_or(false)
+    }
+
+    /// Claim one sample from the budget; `false` means stop and pause.
+    pub fn take_sample(&self) -> bool {
+        match &self.budget {
+            None => true,
+            Some(b) => b.fetch_sub(1, Ordering::Relaxed) > 0,
+        }
+    }
+
+    /// Is a periodic snapshot due after `samples_done` samples?
+    pub fn due(&self, samples_done: usize) -> bool {
+        samples_done % self.every as usize == 0
+    }
+
+    /// Persist one replica's progress (atomic write).
+    pub fn save_replica(
+        &self,
+        idx: usize,
+        cluster: &NativeCluster,
+        m_series: &[f64],
+        e_series: &[f64],
+    ) -> Result<()> {
+        let progress = ReplicaProgress {
+            engine: cluster.snapshot(),
+            m_series: m_series.to_vec(),
+            e_series: e_series.to_vec(),
+            metrics: cluster.metrics.clone(),
+        };
+        write_file(&self.replica_path(idx), KIND_REPLICA, &progress.encode())
+    }
+
+    /// Load and validate one replica's progress; `None` if the replica
+    /// was never started. Validation cross-checks the snapshot against
+    /// the grid task `(β, seed)` and the measurement protocol, so a
+    /// misplaced or corrupted file fails loudly instead of diverging.
+    pub fn load_replica(
+        &self,
+        idx: usize,
+        cfg: &FarmConfig,
+        beta: f32,
+        seed: u32,
+    ) -> Result<Option<ReplicaProgress>> {
+        let path = self.replica_path(idx);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let progress = ReplicaProgress::decode(&read_file(&path, KIND_REPLICA)?)?;
+        let snap = &progress.engine;
+        if snap.h != cfg.geom.h || snap.w != cfg.geom.w {
+            return Err(Error::Snapshot(format!(
+                "replica {idx}: snapshot is {}x{}, farm wants {}x{}",
+                snap.h, snap.w, cfg.geom.h, cfg.geom.w
+            )));
+        }
+        if snap.beta_bits != beta.to_bits() || snap.seed != seed {
+            return Err(Error::Snapshot(format!(
+                "replica {idx}: snapshot is (β bits {:08x}, seed {}), \
+                 grid task wants (β bits {:08x}, seed {seed})",
+                snap.beta_bits,
+                snap.seed,
+                beta.to_bits()
+            )));
+        }
+        let n = progress.m_series.len();
+        if progress.e_series.len() != n || n > cfg.samples {
+            return Err(Error::Snapshot(format!(
+                "replica {idx}: inconsistent sample series ({n} m, {} e, {} max)",
+                progress.e_series.len(),
+                cfg.samples
+            )));
+        }
+        let thin = cfg.thin.max(1);
+        let consistent = if n == 0 {
+            snap.step <= cfg.burn_in
+        } else {
+            snap.step == cfg.burn_in + n as u64 * thin
+        };
+        if !consistent {
+            return Err(Error::Snapshot(format!(
+                "replica {idx}: sweep counter {} does not match {n} samples \
+                 under burn-in {} / thin {thin}",
+                snap.step, cfg.burn_in
+            )));
+        }
+        Ok(Some(progress))
+    }
+
+    /// Record a replica as complete in the manifest.
+    pub fn mark_done(&self, idx: usize) -> Result<()> {
+        let mut m = self.manifest.lock().expect("manifest lock poisoned");
+        if m.done.insert(idx) {
+            m.store(&self.dir.join(MANIFEST_FILE))?;
+        }
+        Ok(())
+    }
+
+    /// Completed-replica count recorded in the manifest.
+    pub fn done_count(&self) -> usize {
+        self.manifest.lock().expect("manifest lock poisoned").done.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::Geometry;
+
+    fn cfg() -> FarmConfig {
+        FarmConfig {
+            geom: Geometry::new(8, 32).unwrap(),
+            betas: vec![0.40, 0.44],
+            seeds: vec![1, 2],
+            shards: 1,
+            workers: 1,
+            burn_in: 4,
+            samples: 6,
+            thin: 2,
+            threaded_shards: false,
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ising-ckpt-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_matching() {
+        let cfg = cfg();
+        let mut m = Manifest::from_config(&cfg);
+        m.done.insert(3);
+        let back = Manifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(m, back);
+        assert!(back.matches(&cfg));
+        // A different grid must not match.
+        let mut other = cfg.clone();
+        other.betas.push(0.48);
+        assert!(!back.matches(&other));
+        let mut other = cfg.clone();
+        other.samples += 1;
+        assert!(!back.matches(&other));
+        // Worker/shard layout is not part of the fingerprint.
+        let mut other = cfg;
+        other.workers = 7;
+        other.shards = 2;
+        assert!(back.matches(&other));
+    }
+
+    #[test]
+    fn replica_progress_roundtrip() {
+        let cfg = cfg();
+        let mut cluster = NativeCluster::hot(cfg.geom, 1, 0.40, 1).unwrap();
+        cluster.threaded = false;
+        cluster.run(6);
+        let progress = ReplicaProgress {
+            engine: cluster.snapshot(),
+            m_series: vec![0.25, -0.5],
+            e_series: vec![-1.0, -1.25],
+            metrics: cluster.metrics.clone(),
+        };
+        let back = ReplicaProgress::decode(&progress.encode()).unwrap();
+        assert_eq!(back.engine, progress.engine);
+        assert_eq!(back.m_series, progress.m_series);
+        assert_eq!(back.e_series, progress.e_series);
+        assert_eq!(back.metrics.sweeps, 6);
+        assert_eq!(back.metrics.flips, progress.metrics.flips);
+        // Truncated payloads are rejected.
+        let bytes = progress.encode();
+        assert!(ReplicaProgress::decode(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    #[test]
+    fn open_enforces_resume_discipline() {
+        let cfg = cfg();
+        let dir = temp_dir("discipline");
+        // Resume without a manifest: error.
+        let spec = CheckpointSpec { resume: true, ..CheckpointSpec::new(dir.clone(), 1) };
+        assert!(Checkpointer::open(&spec, &cfg).is_err());
+        // Fresh start writes the manifest.
+        let spec = CheckpointSpec::new(dir.clone(), 2);
+        let c = Checkpointer::open(&spec, &cfg).unwrap();
+        assert_eq!(c.every(), 2);
+        assert!(!c.budget_exhausted());
+        // Starting again without --resume: refused.
+        assert!(Checkpointer::open(&spec, &cfg).is_err());
+        // Resume with a matching config: fine.
+        let spec = CheckpointSpec { resume: true, ..spec };
+        assert!(Checkpointer::open(&spec, &cfg).is_ok());
+        // Resume with a different protocol: refused.
+        let mut other = cfg;
+        other.burn_in += 1;
+        assert!(Checkpointer::open(&spec, &other).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_load_replica_validates_task_identity() {
+        let cfg = cfg();
+        let dir = temp_dir("identity");
+        let c = Checkpointer::open(&CheckpointSpec::new(dir.clone(), 1), &cfg).unwrap();
+        assert!(c.load_replica(0, &cfg, 0.40, 1).unwrap().is_none());
+
+        let mut cluster = NativeCluster::hot(cfg.geom, 1, 0.40, 1).unwrap();
+        cluster.threaded = false;
+        cluster.run(cfg.burn_in + 2 * cfg.thin);
+        c.save_replica(0, &cluster, &[0.1, 0.2], &[-1.0, -1.1]).unwrap();
+
+        let p = c.load_replica(0, &cfg, 0.40, 1).unwrap().expect("saved progress");
+        assert_eq!(p.m_series, vec![0.1, 0.2]);
+        assert_eq!(p.engine.step, cfg.burn_in + 2 * cfg.thin);
+        // Wrong task identity fails loudly.
+        assert!(c.load_replica(0, &cfg, 0.44, 1).is_err());
+        assert!(c.load_replica(0, &cfg, 0.40, 2).is_err());
+        // Step/sample inconsistency fails loudly.
+        c.save_replica(0, &cluster, &[0.1], &[-1.0]).unwrap();
+        assert!(c.load_replica(0, &cfg, 0.40, 1).is_err());
+
+        c.mark_done(0).unwrap();
+        c.mark_done(0).unwrap();
+        assert_eq!(c.done_count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sample_budget_counts_down() {
+        let cfg = cfg();
+        let dir = temp_dir("budget");
+        let spec = CheckpointSpec {
+            sample_budget: Some(2),
+            ..CheckpointSpec::new(dir.clone(), 1)
+        };
+        let c = Checkpointer::open(&spec, &cfg).unwrap();
+        assert!(!c.budget_exhausted());
+        assert!(c.take_sample());
+        assert!(c.take_sample());
+        assert!(!c.take_sample());
+        assert!(c.budget_exhausted());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

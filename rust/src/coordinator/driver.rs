@@ -171,7 +171,9 @@ pub struct NativeCluster {
     slabs: Vec<Slab>,
     table: AcceptanceTable,
     seed: u32,
-    step: u32,
+    /// Next sweep number — u64 so week-long runs never wrap; the low 32
+    /// bits feed the Philox counter lane.
+    step: u64,
     /// Throughput accounting.
     pub metrics: Metrics,
     /// Use threads (true) or sequential dispatch (false, deterministic
@@ -194,6 +196,63 @@ impl NativeCluster {
         })
     }
 
+    /// Full cluster state as a checkpointable snapshot. The slab count is
+    /// *not* recorded: trajectories are partition-invariant, so a snapshot
+    /// may be restored under any shard layout (even a different worker
+    /// topology) and still continue bit-identically.
+    pub fn snapshot(&self) -> crate::util::snapshot::EngineSnapshot {
+        crate::util::snapshot::EngineSnapshot::from_packed(
+            &self.lattice,
+            self.table.beta,
+            self.seed,
+            self.step,
+        )
+    }
+
+    /// Rebuild a cluster from a snapshot with `n` slabs. Metrics start
+    /// fresh — cumulative accounting across restarts is the farm
+    /// checkpoint layer's job.
+    pub fn from_snapshot(
+        snap: &crate::util::snapshot::EngineSnapshot,
+        n: usize,
+    ) -> Result<Self> {
+        let geom = snap.geometry()?;
+        Ok(Self {
+            lattice: snap.to_packed()?,
+            slabs: partition(geom, n)?,
+            table: AcceptanceTable::new(snap.beta()),
+            seed: snap.seed,
+            step: snap.step,
+            metrics: Metrics::new(),
+            threaded: true,
+        })
+    }
+
+    /// Save the cluster state to a snapshot file.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.snapshot().save(path)
+    }
+
+    /// Load a cluster from a snapshot file with `n` slabs.
+    pub fn load(path: &std::path::Path, n: usize) -> Result<Self> {
+        Self::from_snapshot(&crate::util::snapshot::EngineSnapshot::load(path)?, n)
+    }
+
+    /// Sweep counter (next sweep number).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Inverse temperature.
+    pub fn beta(&self) -> f32 {
+        self.table.beta
+    }
+
+    /// Philox seed.
+    pub fn seed(&self) -> u32 {
+        self.seed
+    }
+
     /// One full sweep (two color phases, barrier between).
     pub fn sweep(&mut self) {
         let timer = Timer::start();
@@ -212,7 +271,7 @@ impl NativeCluster {
                     rest = tail;
                 }
                 let table = &self.table;
-                let (seed, step) = (self.seed, self.step);
+                let (seed, step) = (self.seed, self.step as u32);
                 std::thread::scope(|scope| {
                     for (slab, chunk) in self.slabs.iter().zip(chunks) {
                         let src = &*source;
@@ -248,7 +307,7 @@ impl NativeCluster {
                         color,
                         &self.table,
                         self.seed,
-                        self.step,
+                        self.step as u32,
                     );
                 }
             }
@@ -258,7 +317,7 @@ impl NativeCluster {
     }
 
     /// Run `n` sweeps.
-    pub fn run(&mut self, n: u32) {
+    pub fn run(&mut self, n: u64) {
         for _ in 0..n {
             self.sweep();
         }
@@ -291,6 +350,27 @@ mod tests {
             }
             assert_eq!(cluster.lattice, want, "n = {n}");
         }
+    }
+
+    #[test]
+    fn native_cluster_snapshot_resumes_under_any_partition() {
+        // Snapshot at sweep 4 under 2 slabs, restore under 4 slabs: the
+        // continuation must be bit-identical (partition invariance).
+        let geom = Geometry::new(16, 64).unwrap();
+        let mut a = NativeCluster::hot(geom, 2, 0.44, 11).unwrap();
+        a.threaded = false;
+        a.run(4);
+        let snap = a.snapshot();
+        assert_eq!(snap.step, 4);
+        let mut b = NativeCluster::from_snapshot(&snap, 4).unwrap();
+        b.threaded = false;
+        assert_eq!(a.lattice, b.lattice);
+        a.run(5);
+        b.run(5);
+        assert_eq!(a.lattice, b.lattice);
+        assert_eq!(a.step(), b.step());
+        assert_eq!(b.beta(), 0.44);
+        assert_eq!(b.seed(), 11);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! `NativeCluster` is partition-invariant by construction — so results are
 //! bit-identical for any worker count, which the integration tests assert.
 
+use super::checkpoint::{CheckpointSpec, Checkpointer};
 use super::driver::NativeCluster;
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
@@ -50,12 +51,13 @@ pub struct FarmConfig {
     pub shards: usize,
     /// Worker threads executing replicas.
     pub workers: usize,
-    /// Equilibration sweeps per replica.
-    pub burn_in: u32,
+    /// Equilibration sweeps per replica (u64: the long-run regime is the
+    /// whole point of the farm).
+    pub burn_in: u64,
     /// Measurement samples per replica.
     pub samples: usize,
     /// Sweeps between samples.
-    pub thin: u32,
+    pub thin: u64,
     /// Run each replica's shards on threads too (off by default: the farm
     /// parallelizes across replicas; turning both on oversubscribes cores).
     pub threaded_shards: bool,
@@ -102,12 +104,12 @@ pub struct ReplicaResult {
 impl ReplicaResult {
     /// ⟨|m|⟩ over the recorded samples.
     pub fn mean_abs_m(&self) -> f64 {
-        stats::mean(&self.m_series.iter().map(|m| m.abs()).collect::<Vec<_>>())
+        stats::mean_abs(&self.m_series)
     }
 
-    /// Blocked error on |m|.
+    /// Blocked error on |m| (naive fallback below 8 samples).
     pub fn err_abs_m(&self) -> f64 {
-        stats::stderr_blocked(&self.m_series.iter().map(|m| m.abs()).collect::<Vec<_>>())
+        stats::stderr_blocked_abs(&self.m_series)
     }
 
     /// ⟨e⟩ over the recorded samples.
@@ -178,28 +180,125 @@ impl FarmResult {
     }
 }
 
-/// Run one replica to completion (the per-task body of the farm).
-fn run_replica(cfg: &FarmConfig, beta: f32, seed: u32) -> Result<ReplicaResult> {
-    let mut cluster = NativeCluster::hot(cfg.geom, cfg.shards.max(1), beta, seed)?;
-    cluster.threaded = cfg.threaded_shards;
-    cluster.run(cfg.burn_in);
-    let mut m_series = Vec::with_capacity(cfg.samples);
-    let mut e_series = Vec::with_capacity(cfg.samples);
-    for _ in 0..cfg.samples {
-        cluster.run(cfg.thin.max(1));
-        m_series.push(cluster.lattice.magnetization());
-        e_series.push(cluster.lattice.energy_per_site());
-    }
-    Ok(ReplicaResult { beta, seed, m_series, e_series, metrics: cluster.metrics })
+/// Outcome of a (possibly checkpointed) farm invocation.
+#[derive(Debug)]
+pub enum FarmOutcome {
+    /// Every replica finished; full results.
+    Complete(FarmResult),
+    /// The sample budget ran out first; all progress is persisted in the
+    /// checkpoint directory and a `resume` invocation will finish the
+    /// grid bit-identically.
+    Interrupted {
+        /// Replicas fully done per the manifest — across *all* passes
+        /// over this checkpoint dir, not just tasks claimed in this one
+        /// (an exhausted budget stops workers before they even claim
+        /// already-complete replicas).
+        completed: usize,
+        /// Total grid size.
+        total: usize,
+    },
 }
 
-/// Execute the full β × seed grid across `cfg.workers` scoped threads.
+/// Per-task result as seen by the farm loop.
+enum ReplicaStatus {
+    Done(ReplicaResult),
+    Paused,
+}
+
+/// Run one replica (the per-task body of the farm), resuming from and
+/// writing checkpoints when a [`Checkpointer`] is present.
+fn run_replica(
+    cfg: &FarmConfig,
+    beta: f32,
+    seed: u32,
+    idx: usize,
+    ckpt: Option<&Checkpointer>,
+) -> Result<ReplicaStatus> {
+    let thin = cfg.thin.max(1);
+    let shards = cfg.shards.max(1);
+    let restored = match ckpt {
+        Some(c) => c.load_replica(idx, cfg, beta, seed)?,
+        None => None,
+    };
+    let (mut cluster, mut m_series, mut e_series) = match restored {
+        Some(p) => {
+            let mut cluster = NativeCluster::from_snapshot(&p.engine, shards)?;
+            cluster.threaded = cfg.threaded_shards;
+            cluster.metrics = p.metrics;
+            (cluster, p.m_series, p.e_series)
+        }
+        None => {
+            let mut cluster = NativeCluster::hot(cfg.geom, shards, beta, seed)?;
+            cluster.threaded = cfg.threaded_shards;
+            (
+                cluster,
+                Vec::with_capacity(cfg.samples),
+                Vec::with_capacity(cfg.samples),
+            )
+        }
+    };
+
+    // Burn-in — chunked so long equilibrations checkpoint too.
+    while cluster.step() < cfg.burn_in {
+        match ckpt {
+            Some(c) => {
+                if c.budget_exhausted() {
+                    c.save_replica(idx, &cluster, &m_series, &e_series)?;
+                    return Ok(ReplicaStatus::Paused);
+                }
+                let chunk =
+                    (c.every() as u64 * thin).max(1).min(cfg.burn_in - cluster.step());
+                cluster.run(chunk);
+                c.save_replica(idx, &cluster, &m_series, &e_series)?;
+            }
+            None => cluster.run(cfg.burn_in - cluster.step()),
+        }
+    }
+
+    // Sampling (resumes mid-series: the sweep counter already sits at
+    // `burn_in + len * thin`, so the continuation is bit-identical).
+    while m_series.len() < cfg.samples {
+        if let Some(c) = ckpt {
+            if !c.take_sample() {
+                c.save_replica(idx, &cluster, &m_series, &e_series)?;
+                return Ok(ReplicaStatus::Paused);
+            }
+        }
+        cluster.run(thin);
+        m_series.push(cluster.lattice.magnetization());
+        e_series.push(cluster.lattice.energy_per_site());
+        if let Some(c) = ckpt {
+            if c.due(m_series.len()) || m_series.len() == cfg.samples {
+                c.save_replica(idx, &cluster, &m_series, &e_series)?;
+            }
+        }
+    }
+    if let Some(c) = ckpt {
+        c.mark_done(idx)?;
+    }
+    Ok(ReplicaStatus::Done(ReplicaResult {
+        beta,
+        seed,
+        m_series,
+        e_series,
+        metrics: cluster.metrics,
+    }))
+}
+
+/// Execute the full β × seed grid across `cfg.workers` scoped threads,
+/// optionally checkpointing into (and resuming from) a directory.
 ///
 /// Work is pulled from a shared atomic cursor (replicas can have very
 /// different equilibration costs across β, so static striping would load
 /// imbalance); results land in per-task slots, so the output order is the
-/// deterministic grid order regardless of completion order.
-pub fn run_farm(cfg: &FarmConfig) -> Result<FarmResult> {
+/// deterministic grid order regardless of completion order. With a
+/// [`CheckpointSpec`], replicas resume from their snapshots and an
+/// exhausted sample budget yields [`FarmOutcome::Interrupted`] with all
+/// progress on disk.
+pub fn run_farm_checkpointed(
+    cfg: &FarmConfig,
+    spec: Option<&CheckpointSpec>,
+) -> Result<FarmOutcome> {
     let tasks: Vec<(f32, u32)> = cfg
         .betas
         .iter()
@@ -210,21 +309,31 @@ pub fn run_farm(cfg: &FarmConfig) -> Result<FarmResult> {
             "replica farm needs a non-empty β × seed grid".into(),
         ));
     }
+    let ckpt = match spec {
+        Some(s) => Some(Checkpointer::open(s, cfg)?),
+        None => None,
+    };
+    let ckpt = ckpt.as_ref();
     let workers = cfg.workers.max(1).min(tasks.len());
     let timer = Timer::start();
 
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<ReplicaResult>>>> =
+    let slots: Vec<Mutex<Option<Result<ReplicaStatus>>>> =
         (0..tasks.len()).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                // Once the budget is gone, stop claiming fresh tasks —
+                // unclaimed replicas simply stay pending for the resume.
+                if ckpt.map(|c| c.budget_exhausted()).unwrap_or(false) {
+                    break;
+                }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= tasks.len() {
                     break;
                 }
                 let (beta, seed) = tasks[i];
-                let result = run_replica(cfg, beta, seed);
+                let result = run_replica(cfg, beta, seed, i, ckpt);
                 *slots[i].lock().expect("farm slot poisoned") = Some(result);
             });
         }
@@ -232,18 +341,39 @@ pub fn run_farm(cfg: &FarmConfig) -> Result<FarmResult> {
 
     let wall = timer.elapsed();
     let mut replicas = Vec::with_capacity(tasks.len());
+    let mut pending = 0usize;
     for slot in slots {
-        let result = slot
-            .into_inner()
-            .expect("farm slot poisoned")
-            .expect("farm worker exited without reporting");
-        replicas.push(result?);
+        match slot.into_inner().expect("farm slot poisoned") {
+            Some(Ok(ReplicaStatus::Done(r))) => replicas.push(r),
+            Some(Ok(ReplicaStatus::Paused)) | None => pending += 1,
+            Some(Err(e)) => return Err(e),
+        }
+    }
+    if pending > 0 {
+        // Report completion from the manifest: replicas finished in
+        // earlier passes stay unclaimed once the budget is exhausted, so
+        // counting this invocation's slots would undercount.
+        return Ok(FarmOutcome::Interrupted {
+            completed: ckpt.map(|c| c.done_count()).unwrap_or(replicas.len()),
+            total: tasks.len(),
+        });
     }
     let mut aggregate = Metrics::new();
     for r in &replicas {
         aggregate.merge(&r.metrics);
     }
-    Ok(FarmResult { replicas, wall, workers, aggregate })
+    Ok(FarmOutcome::Complete(FarmResult { replicas, wall, workers, aggregate }))
+}
+
+/// Execute the full β × seed grid with no checkpointing (always runs to
+/// completion or error).
+pub fn run_farm(cfg: &FarmConfig) -> Result<FarmResult> {
+    match run_farm_checkpointed(cfg, None)? {
+        FarmOutcome::Complete(r) => Ok(r),
+        FarmOutcome::Interrupted { .. } => Err(Error::Coordinator(
+            "farm interrupted without a sample budget (unreachable)".into(),
+        )),
+    }
 }
 
 #[cfg(test)]

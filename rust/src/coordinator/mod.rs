@@ -1,9 +1,11 @@
 //! The multi-device coordinator (paper §4): slab decomposition, halo
 //! exchange, two-phase color scheduling, throughput metrics, the parallel
-//! replica farm (the Fig. 5/6 production workload), and the calibrated
-//! DGX-2 performance model that substitutes for hardware this testbed
-//! does not have (DESIGN.md §2).
+//! replica farm (the Fig. 5/6 production workload) with its
+//! checkpoint/restart layer (long runs survive kills and resume
+//! bit-identically), and the calibrated DGX-2 performance model that
+//! substitutes for hardware this testbed does not have (DESIGN.md §2).
 
+pub mod checkpoint;
 pub mod driver;
 pub mod farm;
 pub mod metrics;
@@ -11,10 +13,14 @@ pub mod partition;
 pub mod perfmodel;
 pub mod topology;
 
+pub use checkpoint::{CheckpointSpec, Checkpointer, Manifest, ReplicaProgress};
 pub use driver::NativeCluster;
 #[cfg(feature = "pjrt")]
 pub use driver::SlabCluster;
-pub use farm::{default_beta_grid, run_farm, FarmConfig, FarmResult, ReplicaResult};
+pub use farm::{
+    default_beta_grid, run_farm, run_farm_checkpointed, FarmConfig, FarmOutcome,
+    FarmResult, ReplicaResult,
+};
 pub use metrics::Metrics;
 pub use partition::{partition, Slab};
 pub use perfmodel::{model_sweep, strong_scaling, weak_scaling, ModelResult, SpinWidth};

@@ -37,6 +37,10 @@ pub enum Error {
     /// Coordinator-level failures (worker panic, halo mismatch, ...).
     Coordinator(String),
 
+    /// Snapshot/checkpoint problems (bad magic, CRC mismatch, version or
+    /// state inconsistencies).
+    Snapshot(String),
+
     /// CLI usage errors.
     Usage(String),
 
@@ -58,6 +62,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Snapshot(m) => write!(f, "snapshot error: {m}"),
             Error::Usage(m) => write!(f, "usage error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

@@ -79,6 +79,29 @@ impl Checkerboard {
         self.set_plane(c, i, k, v);
     }
 
+    /// Build from raw color planes (snapshot restore). Rejects wrong plane
+    /// lengths and spin values outside {−1, +1}.
+    pub fn from_planes(geom: Geometry, black: &[i8], white: &[i8]) -> Result<Self> {
+        let n = geom.sites_per_color();
+        for (name, plane) in [("black", black), ("white", white)] {
+            if plane.len() != n {
+                return Err(Error::Geometry(format!(
+                    "{name} plane has {} spins, geometry needs {n}",
+                    plane.len()
+                )));
+            }
+            if let Some(bad) = plane.iter().find(|&&s| s != 1 && s != -1) {
+                return Err(Error::Geometry(format!(
+                    "{name} plane spin value {bad} not in {{-1, 1}}"
+                )));
+            }
+        }
+        let mut out = Self::cold(geom);
+        out.plane_mut(Color::Black).copy_from_slice(black);
+        out.plane_mut(Color::White).copy_from_slice(white);
+        Ok(out)
+    }
+
     /// Build from a row-major `H × W` array of ±1 spins.
     pub fn from_spins(geom: Geometry, spins: &[i8]) -> Result<Self> {
         if spins.len() != geom.sites() {
@@ -194,6 +217,28 @@ mod tests {
         let mut spins = vec![1i8; g.sites()];
         spins[5] = 0;
         assert!(Checkerboard::from_spins(g, &spins).is_err());
+    }
+
+    #[test]
+    fn from_planes_roundtrip_and_validation() {
+        let g = geom();
+        let spins: Vec<i8> = (0..g.sites())
+            .map(|s| if (s * 7) % 3 == 0 { 1 } else { -1 })
+            .collect();
+        let lat = Checkerboard::from_spins(g, &spins).unwrap();
+        let rebuilt =
+            Checkerboard::from_planes(g, lat.plane(Color::Black), lat.plane(Color::White))
+                .unwrap();
+        assert_eq!(rebuilt, lat);
+        assert!(Checkerboard::from_planes(
+            g,
+            &lat.plane(Color::Black)[1..],
+            lat.plane(Color::White)
+        )
+        .is_err());
+        let mut bad = lat.plane(Color::White).to_vec();
+        bad[0] = 0;
+        assert!(Checkerboard::from_planes(g, lat.plane(Color::Black), &bad).is_err());
     }
 
     /// Energy from the plane-based bond walk must match a brute-force

@@ -112,6 +112,31 @@ impl PackedLattice {
         (self.get01(c, i, k) as i8) * 2 - 1
     }
 
+    /// Build from raw plane words (snapshot restore). Rejects wrong plane
+    /// lengths and words with bits outside the nibble LSBs, so a corrupted
+    /// snapshot can never smuggle invalid state into the hot loops.
+    pub fn from_plane_words(geom: Geometry, black: &[u64], white: &[u64]) -> Result<Self> {
+        let wpr = Self::words_per_row(geom)?;
+        let n = geom.h * wpr;
+        for (name, plane) in [("black", black), ("white", white)] {
+            if plane.len() != n {
+                return Err(Error::Geometry(format!(
+                    "{name} plane has {} words, geometry needs {n}",
+                    plane.len()
+                )));
+            }
+            if let Some(w) = plane.iter().find(|&&w| w & !NIBBLE_LSB != 0) {
+                return Err(Error::Geometry(format!(
+                    "{name} plane contains stray nibble bits: {w:#018x}"
+                )));
+            }
+        }
+        let mut out = Self::cold(geom)?;
+        out.plane_mut(Color::Black).copy_from_slice(black);
+        out.plane_mut(Color::White).copy_from_slice(white);
+        Ok(out)
+    }
+
     /// Convert from a byte-per-spin lattice.
     pub fn from_checkerboard(src: &Checkerboard) -> Result<Self> {
         let geom = src.geometry();
@@ -233,6 +258,30 @@ mod tests {
         assert_eq!(p.magnetization(), 1.0);
         assert_eq!(p.energy_per_site(), -2.0);
         assert_eq!(p.up_count(), g.sites() as u64);
+    }
+
+    #[test]
+    fn from_plane_words_validates() {
+        let g = Geometry::new(8, 64).unwrap();
+        let lat = PackedLattice::from_checkerboard(&random_board(g, 5)).unwrap();
+        let rebuilt = PackedLattice::from_plane_words(
+            g,
+            lat.plane(Color::Black),
+            lat.plane(Color::White),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, lat);
+        // Wrong length.
+        assert!(PackedLattice::from_plane_words(
+            g,
+            &lat.plane(Color::Black)[1..],
+            lat.plane(Color::White)
+        )
+        .is_err());
+        // Stray bits outside the nibble LSBs.
+        let mut bad = lat.plane(Color::Black).to_vec();
+        bad[0] |= 0x2;
+        assert!(PackedLattice::from_plane_words(g, &bad, lat.plane(Color::White)).is_err());
     }
 
     #[test]

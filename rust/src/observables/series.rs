@@ -16,7 +16,7 @@ pub struct Measurements {
 impl Measurements {
     /// ⟨|m|⟩.
     pub fn mean_abs_m(&self) -> f64 {
-        super::stats::mean(&self.m.iter().map(|m| m.abs()).collect::<Vec<_>>())
+        super::stats::mean_abs(&self.m)
     }
 
     /// ⟨e⟩.
@@ -26,7 +26,7 @@ impl Measurements {
 
     /// Blocked error on |m|.
     pub fn err_abs_m(&self) -> f64 {
-        super::stats::stderr_blocked(&self.m.iter().map(|m| m.abs()).collect::<Vec<_>>())
+        super::stats::stderr_blocked_abs(&self.m)
     }
 
     /// Blocked error on e.
@@ -52,12 +52,12 @@ pub fn measure<S: Sweeper + ?Sized>(
     samples: usize,
     thin: u32,
 ) -> Measurements {
-    engine.sweep_n(burn_in);
+    engine.sweep_n(burn_in as u64);
     let mut out = Measurements::default();
     out.m.reserve(samples);
     out.e.reserve(samples);
     for _ in 0..samples {
-        engine.sweep_n(thin);
+        engine.sweep_n(thin as u64);
         out.m.push(engine.magnetization());
         out.e.push(engine.energy_per_site());
     }

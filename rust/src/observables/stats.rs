@@ -19,17 +19,23 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
 }
 
+/// Mean of |x| without materializing a mapped copy of the series.
+pub fn mean_abs(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().map(|x| x.abs()).sum::<f64>() / xs.len() as f64
+}
+
 /// Naive standard error of the mean (assumes independent samples).
 pub fn stderr_naive(xs: &[f64]) -> f64 {
     (variance(xs) / xs.len() as f64).sqrt()
 }
 
-/// Blocking (binning) analysis: error of the mean as a function of block
-/// size; the plateau value is the autocorrelation-corrected error.
-/// Returns `(block_size, stderr)` pairs for power-of-two block sizes.
-pub fn blocking(xs: &[f64]) -> Vec<(usize, f64)> {
+/// Core of the blocking analysis over an owned buffer (consumed level by
+/// level — callers that already own a scratch vector avoid a copy).
+fn blocking_levels(mut data: Vec<f64>) -> Vec<(usize, f64)> {
     let mut out = Vec::new();
-    let mut data = xs.to_vec();
     let mut block = 1usize;
     while data.len() >= 8 {
         out.push((block, stderr_naive(&data)));
@@ -40,13 +46,38 @@ pub fn blocking(xs: &[f64]) -> Vec<(usize, f64)> {
     out
 }
 
-/// Autocorrelation-corrected standard error: the maximum over blocking
-/// levels (a conservative plateau estimate).
-pub fn stderr_blocked(xs: &[f64]) -> f64 {
-    blocking(xs)
+/// Blocking (binning) analysis: error of the mean as a function of block
+/// size; the plateau value is the autocorrelation-corrected error.
+/// Returns `(block_size, stderr)` pairs for power-of-two block sizes.
+pub fn blocking(xs: &[f64]) -> Vec<(usize, f64)> {
+    blocking_levels(xs.to_vec())
+}
+
+/// [`stderr_blocked`] over an owned buffer (no extra copy).
+pub fn stderr_blocked_owned(data: Vec<f64>) -> f64 {
+    // Fewer than 8 samples yield no blocking levels at all; falling back
+    // to the naive error keeps short series out of NaN-land (report
+    // tables used to print NaN for every < 8-sample column).
+    if data.len() < 8 {
+        return stderr_naive(&data);
+    }
+    blocking_levels(data)
         .into_iter()
         .map(|(_, e)| e)
         .fold(f64::NAN, f64::max)
+}
+
+/// Autocorrelation-corrected standard error: the maximum over blocking
+/// levels (a conservative plateau estimate). Falls back to
+/// [`stderr_naive`] for series shorter than 8 samples.
+pub fn stderr_blocked(xs: &[f64]) -> f64 {
+    stderr_blocked_owned(xs.to_vec())
+}
+
+/// Blocked error of |x| — one intermediate buffer, handed straight to the
+/// blocking pass.
+pub fn stderr_blocked_abs(xs: &[f64]) -> f64 {
+    stderr_blocked_owned(xs.iter().map(|x| x.abs()).collect())
 }
 
 /// Jackknife estimate and error of an arbitrary statistic `f` computed
@@ -108,6 +139,30 @@ mod tests {
             })
             .collect();
         assert!(stderr_blocked(&xs) > 2.0 * stderr_naive(&xs));
+    }
+
+    #[test]
+    fn short_series_error_falls_back_to_naive() {
+        // Regression: < 8 samples used to produce no blocking levels and a
+        // NaN error that poisoned every downstream report table.
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let blocked = stderr_blocked(&xs);
+        assert!(blocked.is_finite());
+        assert!((blocked - stderr_naive(&xs)).abs() < 1e-15);
+        // One sample: the error is genuinely undefined.
+        assert!(stderr_blocked(&[5.0]).is_nan());
+        // At >= 8 samples the blocking path takes over again.
+        let xs8: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert!(stderr_blocked(&xs8).is_finite());
+    }
+
+    #[test]
+    fn abs_helpers_match_mapped_series() {
+        let xs = [-1.0, 2.0, -3.0, 4.0, -5.0, 6.0, -7.0, 8.0, -9.0, 10.0];
+        let mapped: Vec<f64> = xs.iter().map(|x| x.abs()).collect();
+        assert_eq!(mean_abs(&xs), mean(&mapped));
+        assert_eq!(stderr_blocked_abs(&xs), stderr_blocked(&mapped));
+        assert!(mean_abs(&[]).is_nan());
     }
 
     #[test]

@@ -30,7 +30,9 @@ pub struct PjrtEngine {
     measure_prog: Program,
     beta: f32,
     seed: u32,
-    step: u32,
+    /// Next sweep number (u64 plumbing; the program scalar takes the low
+    /// 32 bits, the same masking the native engines apply).
+    step: u64,
     /// Sweeps executed per program call (dispatch amortization).
     pub sweeps_per_call: u32,
 }
@@ -102,22 +104,22 @@ impl PjrtEngine {
 
     /// Run `n` sweeps through the fused program (chunks of
     /// `sweeps_per_call`).
-    pub fn run_sweeps(&mut self, n: u32) -> Result<()> {
+    pub fn run_sweeps(&mut self, n: u64) -> Result<()> {
         let mut left = n;
         while left > 0 {
-            let chunk = left.min(self.sweeps_per_call);
+            let chunk = left.min(self.sweeps_per_call.max(1) as u64) as u32;
             let (b, w) = self.plane_literals()?;
             let out = self.sweep_prog.run(&[
                 b,
                 w,
                 buffers::scalar_f32(self.beta),
                 buffers::scalar_u32(self.seed),
-                buffers::scalar_u32(self.step),
+                buffers::scalar_u32(self.step as u32),
                 buffers::scalar_i32(chunk as i32),
             ])?;
             self.store_planes(&out[0], &out[1])?;
-            self.step += chunk;
-            left -= chunk;
+            self.step += chunk as u64;
+            left -= chunk as u64;
         }
         Ok(())
     }
@@ -171,7 +173,7 @@ impl Sweeper for PjrtEngine {
         self.geom
     }
 
-    fn sweep_n(&mut self, n: u32) {
+    fn sweep_n(&mut self, n: u64) {
         self.run_sweeps(n).expect("pjrt sweep failed");
     }
 

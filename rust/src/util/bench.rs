@@ -112,7 +112,7 @@ pub fn sweeper_flips_per_ns(
 ) -> f64 {
     let flips = engine.flips_per_sweep() * sweeps as u64;
     let t = Timer::start();
-    engine.sweep_n(sweeps);
+    engine.sweep_n(sweeps as u64);
     crate::util::units::flips_per_ns(flips, t.secs())
 }
 

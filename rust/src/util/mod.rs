@@ -1,10 +1,12 @@
 //! Std-only substrates the offline image requires us to own (DESIGN.md §2):
-//! JSON, timing, unit formatting, ASCII tables, a bench harness and a
-//! property-testing harness.
+//! JSON, timing, unit formatting, ASCII tables, a bench harness, a
+//! property-testing harness, and the CRC-checked snapshot format behind
+//! checkpoint/restart.
 
 pub mod bench;
 pub mod json;
 pub mod proptest;
+pub mod snapshot;
 pub mod table;
 pub mod timer;
 pub mod units;

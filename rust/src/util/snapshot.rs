@@ -1,0 +1,648 @@
+//! Versioned, CRC-checked binary snapshots of simulation state — the
+//! substrate of the checkpoint/restart subsystem (std-only: no serde,
+//! no external CRC crate).
+//!
+//! Because every engine trajectory is a pure function of
+//! `(geometry, β, seed, step)`, a snapshot of the spin planes plus those
+//! four counters is sufficient to resume a run **bit-identically**: the
+//! continuation of a restored engine equals the uninterrupted run, which
+//! the coordinator integration tests assert.
+//!
+//! # File format (little-endian)
+//!
+//! ```text
+//! magic    8 bytes   "ISNGSNAP"
+//! version  u16       format version (currently 1)
+//! kind     u16       payload kind (engine state, farm replica, ...)
+//! length   u64       payload byte count
+//! payload  [u8]      kind-specific body
+//! crc32    u32       IEEE CRC-32 over everything after the magic
+//! ```
+//!
+//! Readers reject bad magic, unknown versions, length mismatches and CRC
+//! failures with [`Error::Snapshot`], so a truncated or bit-rotted file
+//! can never be silently resumed. Writers go through a temp file +
+//! rename, so a crash mid-write leaves the previous snapshot intact.
+//!
+//! The engine-level payload is [`EngineSnapshot`]: lattice planes (packed
+//! nibbles or ±1 bytes) plus `(β bits, seed, step)`. Higher layers (the
+//! farm's per-replica files) nest an encoded `EngineSnapshot` inside
+//! their own payloads.
+
+use crate::error::{Error, Result};
+use crate::lattice::{Checkerboard, Color, Geometry, PackedLattice};
+use std::path::Path;
+
+/// File magic.
+pub const MAGIC: [u8; 8] = *b"ISNGSNAP";
+
+/// Current format version.
+pub const VERSION: u16 = 1;
+
+/// Payload kind: a single engine's state ([`EngineSnapshot`]).
+pub const KIND_ENGINE: u16 = 1;
+
+/// Payload kind: one farm replica's progress (`coordinator::checkpoint`).
+pub const KIND_REPLICA: u16 = 2;
+
+/// Lattice payload tag: packed multi-spin nibble planes.
+const LATTICE_PACKED: u8 = 1;
+
+/// Lattice payload tag: byte-per-spin ±1 planes.
+const LATTICE_BYTES: u8 = 2;
+
+const HEADER_LEN: usize = 8 + 2 + 2 + 8;
+const TRAILER_LEN: usize = 4;
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE CRC-32 (the zlib/PNG polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Little-endian byte-stream writer for snapshot payloads.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a u32.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a u64.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an f64 as its bit pattern (exact roundtrip, NaN included).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Append a u64 slice.
+    pub fn put_u64_slice(&mut self, ws: &[u64]) {
+        for &w in ws {
+            self.put_u64(w);
+        }
+    }
+
+    /// Append an f64 slice (bit patterns).
+    pub fn put_f64_slice(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    /// Append an i8 slice as raw bytes.
+    pub fn put_i8_slice(&mut self, xs: &[i8]) {
+        for &x in xs {
+            self.buf.push(x as u8);
+        }
+    }
+
+    /// Append raw bytes.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Finish, returning the accumulated payload.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian byte-stream reader; every read is bounds-checked so a
+/// truncated payload surfaces as [`Error::Snapshot`], never a panic.
+pub struct ByteReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Read from a byte slice.
+    pub fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                Error::Snapshot(format!(
+                    "truncated payload: wanted {n} bytes at offset {} of {}",
+                    self.pos,
+                    self.b.len()
+                ))
+            })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Next byte.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Next u32.
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Next u64.
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Next f64 (from its bit pattern).
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Remaining unread bytes.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    /// Guard a count field against the bytes actually present, so a
+    /// corrupted count errors instead of driving a huge allocation.
+    fn check_count(&self, n: usize, width: usize) -> Result<()> {
+        if n.checked_mul(width).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(Error::Snapshot(format!(
+                "count {n} x {width}-byte items exceeds the {} bytes remaining",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Next `n` u64 words.
+    pub fn get_u64_vec(&mut self, n: usize) -> Result<Vec<u64>> {
+        self.check_count(n, 8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Next `n` f64 values.
+    pub fn get_f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        self.check_count(n, 8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Next `n` i8 values.
+    pub fn get_i8_vec(&mut self, n: usize) -> Result<Vec<i8>> {
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Next `n` raw bytes.
+    pub fn get_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Error unless the payload was consumed exactly.
+    pub fn finish(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(Error::Snapshot(format!(
+                "{} trailing bytes after payload",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Frame a payload into the on-disk container (magic/version/kind/CRC).
+pub fn encode_container(kind: u16, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[MAGIC.len()..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Validate a container and return its payload slice.
+pub fn decode_container(bytes: &[u8], want_kind: u16) -> Result<&[u8]> {
+    if bytes.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(Error::Snapshot(format!(
+            "file too short to be a snapshot ({} bytes)",
+            bytes.len()
+        )));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(Error::Snapshot("bad magic (not a snapshot file)".into()));
+    }
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Snapshot(format!(
+            "unsupported snapshot version {version} (this build reads version {VERSION})"
+        )));
+    }
+    let kind = u16::from_le_bytes(bytes[10..12].try_into().unwrap());
+    if kind != want_kind {
+        return Err(Error::Snapshot(format!(
+            "snapshot kind {kind} where kind {want_kind} was expected"
+        )));
+    }
+    let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let want_total = len.checked_add((HEADER_LEN + TRAILER_LEN) as u64);
+    if want_total != Some(bytes.len() as u64) {
+        return Err(Error::Snapshot(format!(
+            "length field says {len} payload bytes, file has {}",
+            bytes.len()
+        )));
+    }
+    let body_end = bytes.len() - TRAILER_LEN;
+    let stored = u32::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let computed = crc32(&bytes[MAGIC.len()..body_end]);
+    if stored != computed {
+        return Err(Error::Snapshot(format!(
+            "CRC mismatch: stored {stored:08x}, computed {computed:08x}"
+        )));
+    }
+    Ok(&bytes[HEADER_LEN..body_end])
+}
+
+/// Write `bytes` to `path` atomically (temp file + rename), so a crash
+/// mid-write leaves any previous file intact. Shared by the binary
+/// snapshot writer and the farm manifest.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Write `payload` to `path` atomically as a framed snapshot file.
+pub fn write_file(path: &Path, kind: u16, payload: &[u8]) -> Result<()> {
+    atomic_write(path, &encode_container(kind, payload))
+}
+
+/// Read and validate a snapshot file, returning its payload.
+pub fn read_file(path: &Path, kind: u16) -> Result<Vec<u8>> {
+    let bytes = std::fs::read(path)?;
+    decode_container(&bytes, kind).map(|p| p.to_vec())
+}
+
+/// Spin-state payload of an [`EngineSnapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum LatticeState {
+    /// Multi-spin nibble planes (16 spins per u64 word), black then white.
+    Packed {
+        /// Black plane words.
+        black: Vec<u64>,
+        /// White plane words.
+        white: Vec<u64>,
+    },
+    /// Byte-per-spin ±1 planes, black then white.
+    Bytes {
+        /// Black plane spins.
+        black: Vec<i8>,
+        /// White plane spins.
+        white: Vec<i8>,
+    },
+}
+
+/// A complete, restorable engine state: spin planes plus the
+/// `(geometry, β, seed, step)` tuple that determines the trajectory's
+/// future bit-exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineSnapshot {
+    /// Lattice rows.
+    pub h: usize,
+    /// Lattice columns.
+    pub w: usize,
+    /// β as its f32 bit pattern (exact roundtrip).
+    pub beta_bits: u32,
+    /// Philox seed.
+    pub seed: u32,
+    /// Next sweep number (64-bit: long runs overflow u32).
+    pub step: u64,
+    /// Spin planes.
+    pub lattice: LatticeState,
+}
+
+impl EngineSnapshot {
+    /// Snapshot a packed multi-spin lattice.
+    pub fn from_packed(lat: &PackedLattice, beta: f32, seed: u32, step: u64) -> Self {
+        let g = lat.geometry();
+        Self {
+            h: g.h,
+            w: g.w,
+            beta_bits: beta.to_bits(),
+            seed,
+            step,
+            lattice: LatticeState::Packed {
+                black: lat.plane(Color::Black).to_vec(),
+                white: lat.plane(Color::White).to_vec(),
+            },
+        }
+    }
+
+    /// Snapshot a byte-per-spin lattice.
+    pub fn from_checkerboard(lat: &Checkerboard, beta: f32, seed: u32, step: u64) -> Self {
+        let g = lat.geometry();
+        Self {
+            h: g.h,
+            w: g.w,
+            beta_bits: beta.to_bits(),
+            seed,
+            step,
+            lattice: LatticeState::Bytes {
+                black: lat.plane(Color::Black).to_vec(),
+                white: lat.plane(Color::White).to_vec(),
+            },
+        }
+    }
+
+    /// Inverse temperature.
+    pub fn beta(&self) -> f32 {
+        f32::from_bits(self.beta_bits)
+    }
+
+    /// Validated geometry.
+    pub fn geometry(&self) -> Result<Geometry> {
+        Geometry::new(self.h, self.w)
+    }
+
+    /// Rebuild the packed lattice (snapshot must hold packed planes).
+    pub fn to_packed(&self) -> Result<PackedLattice> {
+        let geom = self.geometry()?;
+        match &self.lattice {
+            LatticeState::Packed { black, white } => {
+                PackedLattice::from_plane_words(geom, black, white)
+            }
+            LatticeState::Bytes { .. } => Err(Error::Snapshot(
+                "snapshot holds byte spins, not a packed lattice".into(),
+            )),
+        }
+    }
+
+    /// Rebuild a byte-per-spin lattice (converts packed planes if needed).
+    pub fn to_checkerboard(&self) -> Result<Checkerboard> {
+        let geom = self.geometry()?;
+        match &self.lattice {
+            LatticeState::Bytes { black, white } => {
+                Checkerboard::from_planes(geom, black, white)
+            }
+            LatticeState::Packed { .. } => Ok(self.to_packed()?.to_checkerboard()),
+        }
+    }
+
+    /// Encode the payload body (container framing is added by `save`).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut wr = ByteWriter::new();
+        wr.put_u64(self.h as u64);
+        wr.put_u64(self.w as u64);
+        wr.put_u32(self.beta_bits);
+        wr.put_u32(self.seed);
+        wr.put_u64(self.step);
+        match &self.lattice {
+            LatticeState::Packed { black, white } => {
+                wr.put_u8(LATTICE_PACKED);
+                wr.put_u64(black.len() as u64);
+                wr.put_u64_slice(black);
+                wr.put_u64_slice(white);
+            }
+            LatticeState::Bytes { black, white } => {
+                wr.put_u8(LATTICE_BYTES);
+                wr.put_u64(black.len() as u64);
+                wr.put_i8_slice(black);
+                wr.put_i8_slice(white);
+            }
+        }
+        wr.into_bytes()
+    }
+
+    /// Decode a payload body, validating geometry/plane-length coherence.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let h = r.get_u64()? as usize;
+        let w = r.get_u64()? as usize;
+        let beta_bits = r.get_u32()?;
+        let seed = r.get_u32()?;
+        let step = r.get_u64()?;
+        let geom = Geometry::new(h, w)?;
+        let tag = r.get_u8()?;
+        let n = r.get_u64()? as usize;
+        let lattice = match tag {
+            LATTICE_PACKED => {
+                let wpr = PackedLattice::words_per_row(geom)?;
+                if n != geom.h * wpr {
+                    return Err(Error::Snapshot(format!(
+                        "packed plane has {n} words, {h}x{w} needs {}",
+                        geom.h * wpr
+                    )));
+                }
+                LatticeState::Packed {
+                    black: r.get_u64_vec(n)?,
+                    white: r.get_u64_vec(n)?,
+                }
+            }
+            LATTICE_BYTES => {
+                if n != geom.sites_per_color() {
+                    return Err(Error::Snapshot(format!(
+                        "byte plane has {n} spins, {h}x{w} needs {}",
+                        geom.sites_per_color()
+                    )));
+                }
+                LatticeState::Bytes {
+                    black: r.get_i8_vec(n)?,
+                    white: r.get_i8_vec(n)?,
+                }
+            }
+            t => return Err(Error::Snapshot(format!("unknown lattice tag {t}"))),
+        };
+        r.finish()?;
+        Ok(Self { h, w, beta_bits, seed, step, lattice })
+    }
+
+    /// Save to a snapshot file (atomic temp + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_file(path, KIND_ENGINE, &self.encode())
+    }
+
+    /// Load from a snapshot file (magic/version/CRC validated).
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::decode(&read_file(path, KIND_ENGINE)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_packed() -> EngineSnapshot {
+        let geom = Geometry::new(4, 32).unwrap();
+        let lat = crate::lattice::init::hot_packed(geom, 7).unwrap();
+        EngineSnapshot::from_packed(&lat, 0.44, 7, 123)
+    }
+
+    #[test]
+    fn crc32_known_answers() {
+        // Published IEEE CRC-32 vectors.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn byte_stream_roundtrip() {
+        let mut wr = ByteWriter::new();
+        wr.put_u8(7);
+        wr.put_u32(0xDEAD_BEEF);
+        wr.put_u64(u64::MAX - 1);
+        wr.put_f64(-0.25);
+        wr.put_f64(f64::NAN);
+        wr.put_i8_slice(&[-1, 1, -1]);
+        let bytes = wr.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f64().unwrap(), -0.25);
+        assert!(r.get_f64().unwrap().is_nan(), "NaN bit pattern preserved");
+        assert_eq!(r.get_i8_vec(3).unwrap(), vec![-1, 1, -1]);
+        r.finish().unwrap();
+        // Over-read is an error, not a panic.
+        assert!(ByteReader::new(&bytes[..2]).get_u32().is_err());
+    }
+
+    #[test]
+    fn container_roundtrip_and_rejections() {
+        let payload = b"hello snapshot".to_vec();
+        let file = encode_container(KIND_ENGINE, &payload);
+        assert_eq!(decode_container(&file, KIND_ENGINE).unwrap(), &payload[..]);
+        // Wrong kind.
+        assert!(decode_container(&file, KIND_REPLICA).is_err());
+        // Flipped payload bit -> CRC failure.
+        let mut bad = file.clone();
+        bad[HEADER_LEN] ^= 1;
+        assert!(decode_container(&bad, KIND_ENGINE).is_err());
+        // Truncation.
+        assert!(decode_container(&file[..file.len() - 1], KIND_ENGINE).is_err());
+        assert!(decode_container(&file[..10], KIND_ENGINE).is_err());
+        // Bad magic.
+        let mut bad = file.clone();
+        bad[0] = b'X';
+        assert!(decode_container(&bad, KIND_ENGINE).is_err());
+        // Future version: CRC is recomputed so only the version check trips.
+        let mut future = file;
+        future[8..10].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        let body_end = future.len() - TRAILER_LEN;
+        let crc = crc32(&future[MAGIC.len()..body_end]);
+        future[body_end..].copy_from_slice(&crc.to_le_bytes());
+        let err = decode_container(&future, KIND_ENGINE).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn engine_snapshot_packed_roundtrip() {
+        let snap = sample_packed();
+        let back = EngineSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(snap, back);
+        let lat = back.to_packed().unwrap();
+        assert_eq!(lat.geometry(), Geometry::new(4, 32).unwrap());
+        // A packed snapshot still converts to a checkerboard view.
+        assert_eq!(back.to_checkerboard().unwrap(), lat.to_checkerboard());
+    }
+
+    #[test]
+    fn engine_snapshot_bytes_roundtrip() {
+        let geom = Geometry::new(6, 8).unwrap();
+        let lat = crate::lattice::init::hot(geom, 3);
+        let snap = EngineSnapshot::from_checkerboard(&lat, 0.38, 3, 9);
+        let back = EngineSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.to_checkerboard().unwrap(), lat);
+        assert_eq!(back.step, 9);
+        assert_eq!(back.beta(), 0.38);
+        // Byte snapshots refuse to masquerade as packed lattices.
+        assert!(back.to_packed().is_err());
+    }
+
+    #[test]
+    fn decode_rejects_incoherent_payloads() {
+        let snap = sample_packed();
+        let good = snap.encode();
+        // Corrupt the plane-length field (offset 8+8+4+4+8+1 = 33).
+        let mut bad = good.clone();
+        bad[33] = bad[33].wrapping_add(1);
+        assert!(EngineSnapshot::decode(&bad).is_err());
+        // Truncated payload.
+        assert!(EngineSnapshot::decode(&good[..good.len() - 3]).is_err());
+        // Unknown lattice tag (offset 32).
+        let mut bad = good.clone();
+        bad[32] = 99;
+        assert!(EngineSnapshot::decode(&bad).is_err());
+        // Trailing garbage.
+        let mut bad = good;
+        bad.push(0);
+        assert!(EngineSnapshot::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_corruption() {
+        let dir = std::env::temp_dir()
+            .join(format!("ising-snap-unit-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("engine.snap");
+        let snap = sample_packed();
+        snap.save(&path).unwrap();
+        assert_eq!(EngineSnapshot::load(&path).unwrap(), snap);
+        // Corrupt one byte on disk: load must fail the CRC.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(EngineSnapshot::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

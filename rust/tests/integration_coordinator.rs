@@ -5,9 +5,11 @@
 
 use ising_dgx::algorithms::{multispin, AcceptanceTable};
 use ising_dgx::coordinator::{
-    model_sweep, partition, run_farm, FarmConfig, NativeCluster, SpinWidth, Topology,
+    model_sweep, partition, run_farm, run_farm_checkpointed, CheckpointSpec, FarmConfig,
+    FarmOutcome, FarmResult, NativeCluster, SpinWidth, Topology,
 };
 use ising_dgx::lattice::{init, Geometry};
+use std::path::PathBuf;
 
 #[cfg(feature = "pjrt")]
 use ising_dgx::algorithms::metropolis;
@@ -159,7 +161,7 @@ fn farm_is_deterministic_across_worker_counts() {
 fn farm_matches_native_cluster_reference() {
     let geom = Geometry::new(16, 64).unwrap();
     let (beta, seed) = (0.43f32, 9u32);
-    let (burn_in, samples, thin) = (5u32, 8usize, 2u32);
+    let (burn_in, samples, thin) = (5u64, 8usize, 2u64);
 
     let cfg = FarmConfig {
         geom,
@@ -191,10 +193,144 @@ fn farm_matches_native_cluster_reference() {
     assert_eq!(replica.e_series, e);
 
     // Metrics accounting: burn-in + samples × thin sweeps, all flips.
-    let sweeps = (burn_in + samples as u32 * thin) as u64;
+    let sweeps = burn_in + samples as u64 * thin;
     assert_eq!(replica.metrics.sweeps, sweeps);
     assert_eq!(farm.aggregate.flips, sweeps * geom.sites() as u64);
     assert!(farm.parallel_efficiency() > 0.0);
+}
+
+fn ckpt_temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ising-farm-ckpt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ckpt_cfg() -> FarmConfig {
+    FarmConfig {
+        geom: Geometry::new(16, 64).unwrap(),
+        betas: vec![0.40, 0.4406868],
+        seeds: vec![3, 4],
+        shards: 2,
+        workers: 2,
+        burn_in: 6,
+        samples: 8,
+        thin: 2,
+        threaded_shards: false,
+    }
+}
+
+fn assert_same_observables(a: &FarmResult, b: &FarmResult) {
+    assert_eq!(a.replicas.len(), b.replicas.len());
+    for (want, have) in a.replicas.iter().zip(&b.replicas) {
+        assert_eq!(want.beta.to_bits(), have.beta.to_bits());
+        assert_eq!(want.seed, have.seed);
+        assert_eq!(
+            want.m_series, have.m_series,
+            "m series diverged (β = {}, seed = {})",
+            want.beta, want.seed
+        );
+        assert_eq!(want.e_series, have.e_series);
+        assert_eq!(want.metrics.sweeps, have.metrics.sweeps);
+        assert_eq!(want.metrics.flips, have.metrics.flips);
+    }
+}
+
+/// The acceptance criterion of the checkpoint subsystem: a farm
+/// interrupted mid-grid (twice!) and resumed from its checkpoint
+/// directory produces per-replica observable series bit-identical to the
+/// same configuration run straight through.
+#[test]
+fn interrupted_farm_resumes_bit_identically() {
+    let cfg = ckpt_cfg();
+    let straight = run_farm(&cfg).unwrap();
+
+    let dir = ckpt_temp_dir("resume");
+    // Pass 1: a 5-sample budget against the 4 × 8 = 32 samples the grid
+    // needs — guaranteed interruption, possibly mid-burn-in.
+    let spec = CheckpointSpec {
+        dir: dir.clone(),
+        every: 2,
+        resume: false,
+        sample_budget: Some(5),
+    };
+    match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Interrupted { total, .. } => assert_eq!(total, 4),
+        FarmOutcome::Complete(_) => panic!("5-sample budget must interrupt a 32-sample farm"),
+    }
+    // Pass 2: resume, and get interrupted again (5 + 9 < 32).
+    let spec = CheckpointSpec { resume: true, sample_budget: Some(9), ..spec };
+    match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Interrupted { .. } => {}
+        FarmOutcome::Complete(_) => panic!("14 total samples cannot finish 32"),
+    }
+    // Final pass: no budget — must complete.
+    let spec = CheckpointSpec { sample_budget: None, ..spec };
+    let resumed = match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { .. } => panic!("unbudgeted resume must finish the grid"),
+    };
+    assert_same_observables(&straight, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resuming a *finished* checkpoint directory reloads every replica from
+/// its snapshot without re-simulating — and still reports the identical
+/// observables.
+#[test]
+fn completed_checkpoint_dir_reloads_identically() {
+    let cfg = ckpt_cfg();
+    let dir = ckpt_temp_dir("reload");
+    let spec = CheckpointSpec {
+        dir: dir.clone(),
+        every: 4,
+        resume: false,
+        sample_budget: None,
+    };
+    let first = match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { .. } => panic!("unbudgeted run must complete"),
+    };
+    let spec = CheckpointSpec { resume: true, ..spec };
+    let reloaded = match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { .. } => panic!("reload must complete"),
+    };
+    assert_same_observables(&first, &reloaded);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoint discipline: a fresh start refuses an existing manifest, a
+/// resume refuses a missing one, and a resume under a different grid or
+/// protocol refuses to continue.
+#[test]
+fn checkpoint_dir_misuse_is_rejected() {
+    let cfg = ckpt_cfg();
+    let dir = ckpt_temp_dir("misuse");
+    let spec = CheckpointSpec {
+        dir: dir.clone(),
+        every: 1,
+        resume: false,
+        sample_budget: Some(3),
+    };
+    // Resume before any run: refused.
+    let premature = CheckpointSpec { resume: true, ..spec.clone() };
+    assert!(run_farm_checkpointed(&cfg, Some(&premature)).is_err());
+    // Interrupt a run to populate the directory.
+    match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Interrupted { .. } => {}
+        FarmOutcome::Complete(_) => panic!("3-sample budget must interrupt"),
+    }
+    // Fresh start on a populated directory: refused.
+    assert!(run_farm_checkpointed(&cfg, Some(&spec)).is_err());
+    // Resume with a different protocol: refused.
+    let mut other = cfg.clone();
+    other.burn_in = 7;
+    assert!(run_farm_checkpointed(&other, Some(&premature)).is_err());
+    let mut other = cfg;
+    other.betas = vec![0.40];
+    assert!(run_farm_checkpointed(&other, Some(&premature)).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The event model vs the paper's published endpoints (Tables 3/4):

@@ -1,11 +1,15 @@
 //! Property-based tests (util::proptest harness) over the core
 //! invariants: packing, partitioning, RNG conventions, acceptance math,
-//! and engine equivalences under randomized configurations.
+//! engine equivalences, and snapshot roundtrips under randomized
+//! configurations.
 
-use ising_dgx::algorithms::{metropolis, multispin, AcceptanceTable};
+use ising_dgx::algorithms::{
+    metropolis, multispin, AcceptanceTable, MultispinEngine, ScalarEngine, Sweeper,
+};
 use ising_dgx::lattice::{init, Checkerboard, Color, Geometry, PackedLattice};
 use ising_dgx::rng::{philox, threshold, u32_to_f32};
 use ising_dgx::util::proptest::check;
+use ising_dgx::util::snapshot::EngineSnapshot;
 
 #[test]
 fn prop_pack_unpack_roundtrip() {
@@ -104,6 +108,72 @@ fn prop_update_preserves_spin_domain() {
         for s in lat.to_spins() {
             assert!(s == 1 || s == -1);
         }
+    });
+}
+
+#[test]
+fn prop_engine_snapshot_roundtrip() {
+    // Hot and cold starts, both native engines, random advance: the
+    // snapshot must decode to the identical state and the restored engine
+    // must continue bit-identically.
+    check("snapshot roundtrip: hot/cold, both engines", 15, |g| {
+        let h = g.even_in(2, 12);
+        let w = 32 * g.int_in(1, 3) as usize;
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.05, 1.5);
+        let sweeps = g.int_in(0, 5) as u64;
+        let hot = g.u32() & 1 == 1;
+
+        let mut ms = if hot {
+            MultispinEngine::hot(geom, beta, seed).unwrap()
+        } else {
+            MultispinEngine::cold(geom, beta, seed).unwrap()
+        };
+        ms.sweep_n(sweeps);
+        let snap = ms.snapshot();
+        let back = EngineSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back, snap);
+        let mut restored = MultispinEngine::from_snapshot(&back).unwrap();
+        assert_eq!(restored.lattice, ms.lattice);
+        assert_eq!(restored.step, sweeps);
+        ms.sweep_n(3);
+        restored.sweep_n(3);
+        assert_eq!(restored.lattice, ms.lattice, "multispin continuation diverged");
+
+        let mut sc = if hot {
+            ScalarEngine::hot(geom, beta, seed)
+        } else {
+            ScalarEngine::cold(geom, beta, seed)
+        };
+        sc.sweep_n(sweeps);
+        let snap = sc.snapshot();
+        let mut restored =
+            ScalarEngine::from_snapshot(&EngineSnapshot::decode(&snap.encode()).unwrap())
+                .unwrap();
+        assert_eq!(restored.lattice, sc.lattice);
+        sc.sweep_n(3);
+        restored.sweep_n(3);
+        assert_eq!(restored.lattice, sc.lattice, "scalar continuation diverged");
+    });
+}
+
+#[test]
+fn prop_snapshot_container_detects_any_bit_flip() {
+    use ising_dgx::util::snapshot::{decode_container, encode_container, KIND_ENGINE};
+    check("single bit flips never decode", 40, |g| {
+        let geom = Geometry::new(g.even_in(2, 8), 32).unwrap();
+        let lat = init::hot_packed(geom, g.u32()).unwrap();
+        let snap = EngineSnapshot::from_packed(&lat, g.f32_in(0.1, 1.0), 1, 0);
+        let file = encode_container(KIND_ENGINE, &snap.encode());
+        assert!(decode_container(&file, KIND_ENGINE).is_ok());
+        let bit = g.int_in(0, (file.len() * 8 - 1) as i64) as usize;
+        let mut bad = file;
+        bad[bit / 8] ^= 1 << (bit % 8);
+        assert!(
+            decode_container(&bad, KIND_ENGINE).is_err(),
+            "bit {bit} flipped silently"
+        );
     });
 }
 
