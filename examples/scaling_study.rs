@@ -38,7 +38,7 @@ fn main() -> ising_dgx::Result<()> {
         }
         println!(
             "  {n:2} workers: {} flips/ns (state bit-identical to 1 worker)",
-            units::fmt_sig(cluster.metrics.flips_per_ns(), 4)
+            units::fmt_rate(cluster.metrics.flips_per_ns())
         );
     }
 
@@ -57,7 +57,7 @@ fn main() -> ising_dgx::Result<()> {
             let ok = cluster.gather() == native;
             println!(
                 "  {n} devices: {} flips/ns, matches native single-device: {ok}",
-                units::fmt_sig(cluster.metrics.flips_per_ns(), 4)
+                units::fmt_rate(cluster.metrics.flips_per_ns())
             );
             assert!(ok);
         }

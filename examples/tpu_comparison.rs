@@ -27,13 +27,13 @@ fn main() -> ising_dgx::Result<()> {
 
     let mut scalar = ScalarEngine::hot(geom, beta, 1);
     let base = sweeper_flips_per_ns(&mut scalar, sweeps);
-    table.row(&["native scalar (≙ Basic CUDA C)".into(), units::fmt_sig(base, 4), "1.00x".into()]);
+    table.row(&["native scalar (≙ Basic CUDA C)".into(), units::fmt_rate(base), "1.00x".into()]);
 
     let mut ms = MultispinEngine::hot(geom, beta, 1)?;
     let r = sweeper_flips_per_ns(&mut ms, sweeps);
     table.row(&[
         "native multi-spin (≙ optimized)".into(),
-        units::fmt_sig(r, 4),
+        units::fmt_rate(r),
         format!("{:.2}x", r / base),
     ]);
 
@@ -47,7 +47,7 @@ fn main() -> ising_dgx::Result<()> {
         ] {
             if let Ok(mut e) = PjrtEngine::hot(engine.clone(), variant, geom, beta, 1) {
                 let r = sweeper_flips_per_ns(&mut e, sweeps);
-                table.row(&[label.into(), units::fmt_sig(r, 4), format!("{:.2}x", r / base)]);
+                table.row(&[label.into(), units::fmt_rate(r), format!("{:.2}x", r / base)]);
             }
         }
     } else {

@@ -77,11 +77,11 @@ fn main() {
         let mut native = ScalarEngine::hot(geom, beta, 1);
         let scalar_rate = sweeper_flips_per_ns(&mut native, sweeps);
 
-        let fmt = |v: Option<f64>| v.map(|x| units::fmt_sig(x, 4)).unwrap_or_else(|| "-".into());
+        let fmt = |v: Option<f64>| v.map(units::fmt_rate).unwrap_or_else(|| "-".into());
         table.row(&[
             units::fmt_lattice(l),
             fmt(basic),
-            units::fmt_sig(scalar_rate, 4),
+            units::fmt_rate(scalar_rate),
             fmt(tensor),
         ]);
         rows.push(obj(vec![

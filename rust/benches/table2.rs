@@ -44,7 +44,7 @@ fn main() {
         table.row(&[
             units::fmt_lattice(l),
             units::fmt_bytes(units::lattice_bytes(l, 4)),
-            units::fmt_sig(rate, 4),
+            units::fmt_rate(rate),
         ]);
         rows.push(obj(vec![
             ("lattice", Json::Num(l as f64)),

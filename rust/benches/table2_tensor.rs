@@ -1,0 +1,110 @@
+//! Table 2 (tensor core) — the §3.2 stencil-as-GEMM implementation in
+//! both precision modes, vs the paper's published tensor-core rates.
+//!
+//! The paper benchmarks its Tensor Core implementation with FP16 inputs
+//! (FP32 accumulate) on (k·128)² lattices; the FP16 reference column
+//! below is that published data. The FP32 reference is an **estimate**
+//! at 0.5× FP16: the paper attributes the FP16 advantage to operand
+//! bytes halving through the MMA pipeline, so doubling the operand
+//! width bounds FP32 at about half the rate (§3.2 discussion) — the
+//! shape we check, not an exact endpoint.
+//!
+//! Here both modes run the same cache-blocked CPU SGEMM with f32
+//! accumulation; the f16-emulation mode packs its operands to binary16
+//! first (an identity on ±1 spins and 0/1/2 band weights, plus a cheap
+//! per-phase pack pass), so the measured FP16/FP32 ratio sits near 1 —
+//! a CPU cannot reproduce the bandwidth win the paper's MMA pipeline
+//! gets from halving operand bytes, which is exactly the point the
+//! comparison against the paper's reference rows makes. Both rows sit
+//! orders of magnitude under the multi-spin engine, matching the
+//! paper's ordering (tensor core < optimized multi-spin). Rates well
+//! below 1 flips/ns print via `units::fmt_rate`, which keeps
+//! significant digits instead of collapsing to `0.0`.
+
+use ising_dgx::lattice::Geometry;
+use ising_dgx::tensor::{Precision, TensorEngine};
+use ising_dgx::util::bench::{quick_mode, sweeper_flips_per_ns, write_report};
+use ising_dgx::util::json::{obj, Json};
+use ising_dgx::util::{units, Table};
+
+/// Paper tensor-core reference (flips/ns on V100-SXM), FP16 inputs:
+/// (k, rate) for (k·128)² lattices.
+const PAPER_TENSOR_FP16: &[(usize, f64)] = &[
+    (20, 31.010),
+    (40, 35.356),
+    (80, 38.726),
+    (160, 39.152),
+    (320, 39.208),
+    (640, 38.749),
+];
+
+/// FP32 / FP16 rate ratio estimate (operand bytes double — see the
+/// module docs; a shape reference, not a published endpoint).
+const FP32_RATIO_ESTIMATE: f64 = 0.5;
+
+fn main() {
+    let quick = quick_mode();
+    let sizes: Vec<usize> = if quick { vec![64, 128] } else { vec![64, 128, 256, 512] };
+    let beta = 0.4406868f32;
+
+    let mut table = Table::new(&["lattice", "fp32 flips/ns", "fp16 flips/ns", "fp16/fp32"])
+        .with_title("Table 2 (measured) — native tensor engine (stencil-as-GEMM), single core");
+    let mut rows = Vec::new();
+    for &l in &sizes {
+        let geom = Geometry::square(l).unwrap();
+        // Modest sweep counts: the GEMM path does O(L³) work per sweep.
+        let sweeps = ((1 << 19) / geom.sites()).clamp(2, 32) as u32;
+        let rate = |precision: Precision| -> f64 {
+            let mut engine = TensorEngine::with_precision(geom, beta, 1, precision);
+            sweeper_flips_per_ns(&mut engine, sweeps)
+        };
+        let r32 = rate(Precision::F32);
+        let r16 = rate(Precision::F16);
+        table.row(&[
+            units::fmt_lattice(l),
+            units::fmt_rate(r32),
+            units::fmt_rate(r16),
+            format!("{:.2}", r16 / r32.max(1e-12)),
+        ]);
+        rows.push(obj(vec![
+            ("lattice", Json::Num(l as f64)),
+            ("fp32_flips_per_ns", Json::Num(r32)),
+            ("fp16_flips_per_ns", Json::Num(r16)),
+        ]));
+    }
+    table.print();
+
+    let mut paper = Table::new(&["lattice", "fp16 (paper)", "fp32 (est. 0.5x)"])
+        .with_title("Table 2 (paper reference) — V100-SXM tensor core");
+    let mut reference = Vec::new();
+    for &(k, fp16) in PAPER_TENSOR_FP16 {
+        paper.row(&[
+            format!("({k}x128)^2"),
+            format!("{fp16}"),
+            units::fmt_rate(fp16 * FP32_RATIO_ESTIMATE),
+        ]);
+        reference.push(obj(vec![
+            ("k", Json::Num(k as f64)),
+            ("fp16_flips_per_ns", Json::Num(fp16)),
+            ("fp32_flips_per_ns_estimate", Json::Num(fp16 * FP32_RATIO_ESTIMATE)),
+        ]));
+    }
+    paper.print();
+
+    println!(
+        "shape checks — paper: tensor core saturates near 39 flips/ns, an order under the\n\
+         417.57 multi-spin rate (Table 2); ours: the GEMM path likewise trails the native\n\
+         multi-spin engine, and emulated fp16 ≈ fp32 (a CPU has no MMA pipeline, so\n\
+         halving operand width buys no bandwidth — unlike the paper's FP16 rows)."
+    );
+
+    let _ = write_report(
+        "table2_tensor",
+        &obj(vec![
+            ("bench", Json::Str("table2_tensor".into())),
+            ("beta", Json::Num(beta as f64)),
+            ("rows", Json::Arr(rows)),
+            ("paper_reference", Json::Arr(reference)),
+        ]),
+    );
+}

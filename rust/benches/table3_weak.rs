@@ -40,7 +40,7 @@ fn main() {
         table.row(&[
             n.to_string(),
             format!("{}x{}", per_worker * n, per_worker),
-            units::fmt_sig(rate, 4),
+            units::fmt_rate(rate),
         ]);
         rows.push(obj(vec![
             ("workers", Json::Num(n as f64)),

@@ -40,7 +40,7 @@ fn main() {
             Some(want) => &cluster.lattice == want,
         };
         assert!(same, "partition invariance violated at n = {n}");
-        table.row(&[n.to_string(), units::fmt_sig(rate, 4), "yes".into()]);
+        table.row(&[n.to_string(), units::fmt_rate(rate), "yes".into()]);
         rows.push(obj(vec![
             ("workers", Json::Num(n as f64)),
             ("flips_per_ns", Json::Num(rate)),

@@ -103,7 +103,7 @@ fn measured_rows(sweeps: u32, beta: f32) -> Vec<Json> {
             table.row(&[
                 n.to_string(),
                 variant.as_str().into(),
-                units::fmt_sig(rate, 4),
+                units::fmt_rate(rate),
                 "yes".into(),
             ]);
             rows.push(obj(vec![

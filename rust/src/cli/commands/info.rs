@@ -37,6 +37,24 @@ pub fn exec(args: &Args) -> Result<()> {
         println!("  PJRT: disabled (rebuild with --features pjrt)");
     }
 
+    // The engine matrix, straight from the canonical registry — the same
+    // source that feeds `EngineKind::parse` hints and the CLI help.
+    let mut engines = Table::new(&[
+        "engine", "paper", "layout", "rng", "snapshot", "pjrt",
+    ])
+    .with_title("Engines (--engine NAME)");
+    for spec in crate::config::ENGINES {
+        engines.row(&[
+            spec.name.to_string(),
+            spec.paper.to_string(),
+            spec.layout.to_string(),
+            spec.rng.to_string(),
+            (if spec.snapshot { "yes" } else { "-" }).to_string(),
+            (if spec.needs_pjrt { "feature" } else { "native" }).to_string(),
+        ]);
+    }
+    engines.print();
+
     match Manifest::load(Path::new(dir)) {
         Err(e) => println!("  artifacts: {e}"),
         Ok(m) => {

@@ -28,6 +28,9 @@ pub fn build_engine(cfg: &RunConfig) -> Result<Box<dyn Sweeper>> {
         }
         EngineKind::NativeHeatbath => Box::new(HeatBathEngine::hot(geom, beta, cfg.seed)),
         EngineKind::NativeWolff => Box::new(WolffEngine::hot(geom, beta, cfg.seed)),
+        EngineKind::NativeTensor(precision) => Box::new(
+            crate::tensor::TensorEngine::with_precision(geom, beta, cfg.seed, precision),
+        ),
         #[cfg(feature = "pjrt")]
         EngineKind::Pjrt(variant) => {
             let engine = Rc::new(Engine::new(&cfg.artifacts)?);

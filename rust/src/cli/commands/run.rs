@@ -74,7 +74,7 @@ pub fn exec(args: &Args) -> Result<()> {
         println!("  sweeps          : {sweeps} in {secs:.3}s");
         println!(
             "  throughput      : {} flips/ns",
-            units::fmt_sig(units::flips_per_ns(flips, secs), 4)
+            units::fmt_rate(units::flips_per_ns(flips, secs))
         );
         println!("  ⟨|m|⟩           : {:.6} ± {:.6}", meas.mean_abs_m(), meas.err_abs_m());
         println!("  ⟨e⟩             : {:.6} ± {:.6}", meas.mean_e(), meas.err_e());

@@ -1,23 +1,48 @@
 //! `ising sweep` — run the parallel replica farm: R independent replicas
 //! over a seed × β grid (the Fig. 5/Fig. 6 workload) on the native
-//! multi-spin path, with per-β pooled observables, worker-scaling
-//! metrics, and checkpoint/restart for long runs
+//! multi-spin path (`--engine multispin`, default) or the §3.2 tensor
+//! path (`--engine tensor`), with per-β pooled observables,
+//! worker-scaling metrics, and checkpoint/restart for long runs
 //! (`--checkpoint-dir DIR --checkpoint-every N`, resume with `--resume`).
 
 use crate::cli::args::Args;
+use crate::config::EngineKind;
 use crate::coordinator::checkpoint::CheckpointSpec;
 use crate::coordinator::farm::{
-    default_beta_grid, run_farm_checkpointed, FarmConfig, FarmOutcome, FarmResult,
+    default_beta_grid, run_farm_checkpointed, FarmConfig, FarmEngine, FarmOutcome,
+    FarmResult,
 };
 use crate::error::{Error, Result};
 use crate::util::{units, Table};
 use std::path::PathBuf;
 
 const KNOWN: &[&str] = &[
-    "size", "betas", "beta-points", "replicas", "seed", "workers", "shards",
+    "size", "engine", "betas", "beta-points", "replicas", "seed", "workers", "shards",
     "burn-in", "samples", "thin", "threaded-shards", "quiet",
     "checkpoint-dir", "checkpoint-every", "resume", "max-samples", "report",
 ];
+
+/// Map `--engine` (parsed against the canonical registry, aliases
+/// included) onto the farm's engine families.
+fn parse_farm_engine(s: &str) -> Result<FarmEngine> {
+    use crate::tensor::Precision;
+    match EngineKind::parse(s)? {
+        EngineKind::NativeMultispin => Ok(FarmEngine::Multispin),
+        EngineKind::NativeTensor(Precision::F32) => Ok(FarmEngine::Tensor),
+        // Refuse rather than silently coerce: a tensor-fp16 sweep would
+        // report f32-path rates under an fp16 label.
+        EngineKind::NativeTensor(Precision::F16) => Err(Error::Usage(
+            "the farm runs the tensor engine's bit-exact f32 GEMM path; use \
+             --engine tensor (fp16 emulation is a single-run benchmark mode: \
+             `ising run --engine tensor-fp16`)"
+                .into(),
+        )),
+        other => Err(Error::Usage(format!(
+            "the replica farm drives 'multispin' or 'tensor' replicas, not '{}'",
+            other.name()
+        ))),
+    }
+}
 
 /// Parse `--betas 0.40,0.44,0.48` into an f32 grid, rejecting values that
 /// would silently poison the acceptance tables (`nan`/`inf` parse as
@@ -86,6 +111,9 @@ pub fn exec(args: &Args) -> Result<()> {
     let seed0: u32 = args.opt_parse("seed", 1u32)?;
 
     let mut cfg = FarmConfig::grid(size, betas, replicas_per_beta, seed0)?;
+    if let Some(name) = args.opt("engine") {
+        cfg.engine = parse_farm_engine(name)?;
+    }
     let total = cfg.replica_count();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let workers: usize = args.opt_parse("workers", cores.min(total.max(1)))?;
@@ -97,6 +125,13 @@ pub fn exec(args: &Args) -> Result<()> {
     }
     if shards == 0 {
         return Err(Error::Usage("--shards must be >= 1".into()));
+    }
+    if cfg.engine == FarmEngine::Tensor && (shards > 1 || args.flag("threaded-shards")) {
+        return Err(Error::Usage(
+            "--shards/--threaded-shards apply to the multispin engine; \
+             tensor replicas are single-block"
+                .into(),
+        ));
     }
     cfg.workers = workers;
     cfg.shards = shards;
@@ -135,8 +170,9 @@ pub fn exec(args: &Args) -> Result<()> {
     });
 
     println!(
-        "ising sweep: {size}² lattice, {} β × {} seed(s) = {} replicas, \
+        "ising sweep: {size}² lattice, engine {}, {} β × {} seed(s) = {} replicas, \
          {} worker(s), {} shard(s)/replica",
+        cfg.engine.name(),
         cfg.betas.len(),
         cfg.seeds.len(),
         cfg.replica_count(),
@@ -193,7 +229,7 @@ pub fn exec(args: &Args) -> Result<()> {
                 format!("{:.4}", acc.abs_m()),
                 format!("{:.4}", acc.binder()),
                 format!("{:.4}", acc.binder_error(10)),
-                units::fmt_sig(per_beta.flips_per_ns(), 4),
+                units::fmt_rate(per_beta.flips_per_ns()),
             ]);
         }
         table.print();
@@ -209,8 +245,8 @@ pub fn exec(args: &Args) -> Result<()> {
     println!(
         "  aggregate: {} flips, {} flips/ns (wall), per-worker sweep rate {} flips/ns",
         result.aggregate.flips,
-        units::fmt_sig(result.flips_per_ns_wall(), 4),
-        units::fmt_sig(result.aggregate.flips_per_ns(), 4),
+        units::fmt_rate(result.flips_per_ns_wall()),
+        units::fmt_rate(result.aggregate.flips_per_ns()),
     );
     println!(
         "  scaling: parallel efficiency {:.1}% over {} worker(s) \
@@ -223,4 +259,22 @@ pub fn exec(args: &Args) -> Result<()> {
         println!("  report: bit-exact replica series written to {path}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn farm_engine_mapping() {
+        assert_eq!(parse_farm_engine("multispin").unwrap(), FarmEngine::Multispin);
+        assert_eq!(parse_farm_engine("optimized").unwrap(), FarmEngine::Multispin);
+        assert_eq!(parse_farm_engine("tensor").unwrap(), FarmEngine::Tensor);
+        assert_eq!(parse_farm_engine("tensor-fp32").unwrap(), FarmEngine::Tensor);
+        // fp16 is refused (would mislabel f32-path rates), as are
+        // non-farm engines and unknown names.
+        assert!(parse_farm_engine("tensor-fp16").is_err());
+        assert!(parse_farm_engine("wolff").is_err());
+        assert!(parse_farm_engine("no-such-engine").is_err());
+    }
 }

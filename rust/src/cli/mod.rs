@@ -13,8 +13,8 @@ pub mod commands;
 use crate::error::{Error, Result};
 use args::Args;
 
-/// Top-level usage text.
-pub const USAGE: &str = "\
+/// Top-level usage text, minus the engine list (see [`usage`]).
+const USAGE_HEAD: &str = "\
 ising — 2D Ising on a Rust + JAX + Pallas stack (Romero et al. 2019 reproduction)
 
 USAGE: ising <command> [options]
@@ -23,8 +23,9 @@ COMMANDS:
   run       simulate one configuration
             --size N --temperature T|--beta B --engine E --sweeps N
             --seed S --workers W --artifacts DIR --config FILE
-  sweep     parallel replica farm over a seed x beta grid (native multi-spin)
-            --size N --betas B1,B2,... | --beta-points K --replicas R
+  sweep     parallel replica farm over a seed x beta grid
+            --size N --engine multispin|tensor --replicas R
+            --betas B1,B2,... | --beta-points K
             --seed S --workers W --shards D --burn-in N --samples N --thin N
             checkpoint/restart: --checkpoint-dir DIR [--checkpoint-every N]
             [--resume] [--max-samples N] [--report FILE]
@@ -32,12 +33,30 @@ COMMANDS:
             --size N --engine E --samples N --quick
   scaling   weak/strong scaling study (native cluster + DGX-2 model)
             --mode weak|strong --size N --max-workers W
-  info      platform, artifacts, constants
+  info      platform, artifacts, constants, engine matrix
             --artifacts DIR
-
-ENGINES: scalar | multispin | heatbath | wolff |
-         pjrt-basic | pjrt-multispin | pjrt-tensorcore (need --features pjrt)
 ";
+
+/// Render the full usage text. The engine list is derived from the
+/// canonical registry (`config::ENGINES`), so help, parse hints and
+/// `ising info` can never disagree about the available engines.
+pub fn usage() -> String {
+    let native: Vec<&str> = crate::config::ENGINES
+        .iter()
+        .filter(|s| !s.needs_pjrt)
+        .map(|s| s.name)
+        .collect();
+    let pjrt: Vec<&str> = crate::config::ENGINES
+        .iter()
+        .filter(|s| s.needs_pjrt)
+        .map(|s| s.name)
+        .collect();
+    format!(
+        "{USAGE_HEAD}\nENGINES: {}\n         {} (need --features pjrt)\n",
+        native.join(" | "),
+        pjrt.join(" | ")
+    )
+}
 
 /// Entry point used by `main.rs`.
 pub fn main_with_args(raw: Vec<String>) -> Result<()> {
@@ -49,9 +68,22 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "scaling" => commands::scaling::exec(&args),
         "info" => commands::info::exec(&args),
         "" | "help" | "--help" => {
-            print!("{USAGE}");
+            print!("{}", usage());
             Ok(())
         }
-        other => Err(Error::Usage(format!("unknown command '{other}'\n\n{USAGE}"))),
+        other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    /// The help text lists every registry engine — derived, not typed.
+    #[test]
+    fn usage_lists_every_engine() {
+        let text = super::usage();
+        for spec in crate::config::ENGINES {
+            assert!(text.contains(spec.name), "usage must list '{}'", spec.name);
+        }
+        assert!(text.contains("USAGE: ising"));
     }
 }

@@ -4,4 +4,7 @@ pub mod toml;
 pub mod types;
 
 pub use toml::{Toml, Value};
-pub use types::{default_temperature_grid, EngineKind, RunConfig, SweepConfig};
+pub use types::{
+    default_temperature_grid, engine_names_hint, EngineKind, EngineSpec, RunConfig,
+    SweepConfig, ENGINES,
+};

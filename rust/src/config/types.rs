@@ -4,6 +4,7 @@
 use super::toml::Toml;
 use crate::error::{Error, Result};
 use crate::runtime::Variant;
+use crate::tensor::Precision;
 use std::path::PathBuf;
 
 /// Which execution engine drives the simulation.
@@ -17,42 +18,178 @@ pub enum EngineKind {
     NativeHeatbath,
     /// Native Wolff cluster.
     NativeWolff,
+    /// Native stencil-as-GEMM tensor engine (paper §3.2), with the GEMM
+    /// precision mode (fp32 / emulated fp16 input).
+    NativeTensor(Precision),
     /// PJRT artifact execution of an L1 kernel variant.
     Pjrt(Variant),
 }
 
+/// One row of the canonical engine registry — the single source of
+/// truth behind [`EngineKind::parse`], its error hint, the CLI help
+/// text, and the `ising info` engine matrix, so the three can never
+/// drift apart again.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineSpec {
+    /// Parsed engine kind.
+    pub kind: EngineKind,
+    /// Canonical CLI/TOML name.
+    pub name: &'static str,
+    /// Accepted alternative spellings.
+    pub aliases: &'static [&'static str],
+    /// Paper section (or source) the engine reproduces.
+    pub paper: &'static str,
+    /// Spin storage layout.
+    pub layout: &'static str,
+    /// RNG convention driving the trajectory.
+    pub rng: &'static str,
+    /// Supports bit-exact checkpoint snapshots (`export_snapshot`)?
+    pub snapshot: bool,
+    /// Requires the `pjrt` cargo feature to execute.
+    pub needs_pjrt: bool,
+}
+
+/// The canonical engine registry, in display order.
+pub const ENGINES: &[EngineSpec] = &[
+    EngineSpec {
+        kind: EngineKind::NativeScalar,
+        name: "scalar",
+        aliases: &["native-scalar"],
+        paper: "§3.1 basic stencil",
+        layout: "byte planes",
+        rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::NativeMultispin,
+        name: "multispin",
+        aliases: &["native-multispin", "optimized"],
+        paper: "§3.3 multi-spin",
+        layout: "packed nibbles",
+        rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::NativeTensor(Precision::F32),
+        name: "tensor",
+        aliases: &["tensor-fp32", "native-tensor"],
+        paper: "§3.2 stencil-as-GEMM",
+        layout: "byte planes",
+        rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::NativeTensor(Precision::F16),
+        name: "tensor-fp16",
+        aliases: &["tensor-f16"],
+        paper: "§3.2 (FP16 GEMM)",
+        layout: "byte planes",
+        rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::NativeHeatbath,
+        name: "heatbath",
+        aliases: &[],
+        paper: "§2 heat-bath",
+        layout: "byte planes",
+        rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::NativeWolff,
+        name: "wolff",
+        aliases: &[],
+        paper: "§2 Wolff cluster",
+        layout: "byte planes",
+        rng: "sequential xoshiro256",
+        snapshot: false,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::Pjrt(Variant::Basic),
+        name: "pjrt-basic",
+        aliases: &[],
+        paper: "§3.1 via XLA",
+        layout: "byte planes (device)",
+        rng: "Philox site-group",
+        snapshot: false,
+        needs_pjrt: true,
+    },
+    EngineSpec {
+        kind: EngineKind::Pjrt(Variant::Multispin),
+        name: "pjrt-multispin",
+        aliases: &[],
+        paper: "§3.3 via XLA",
+        layout: "packed nibbles (device)",
+        rng: "Philox site-group",
+        snapshot: false,
+        needs_pjrt: true,
+    },
+    EngineSpec {
+        kind: EngineKind::Pjrt(Variant::Tensorcore),
+        name: "pjrt-tensorcore",
+        aliases: &[],
+        paper: "§3.2 via XLA (MXU)",
+        layout: "byte planes (device)",
+        rng: "Philox site-group",
+        snapshot: false,
+        needs_pjrt: true,
+    },
+];
+
+/// Comma-joined canonical engine names (parse hints, CLI help).
+pub fn engine_names_hint() -> String {
+    let names: Vec<&str> = ENGINES.iter().map(|e| e.name).collect();
+    names.join(", ")
+}
+
 impl EngineKind {
-    /// Parse the CLI/config name.
+    /// Parse the CLI/config name against the canonical registry
+    /// ([`ENGINES`]): canonical names first, then aliases.
     pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "scalar" | "native-scalar" => Self::NativeScalar,
-            "multispin" | "native-multispin" | "optimized" => Self::NativeMultispin,
-            "heatbath" => Self::NativeHeatbath,
-            "wolff" => Self::NativeWolff,
-            "pjrt-basic" => Self::Pjrt(Variant::Basic),
-            "pjrt-multispin" => Self::Pjrt(Variant::Multispin),
-            "pjrt-tensorcore" => Self::Pjrt(Variant::Tensorcore),
-            other => {
-                return Err(Error::Usage(format!(
-                    "unknown engine '{other}' (try: scalar, multispin, heatbath, wolff, \
-                     pjrt-basic, pjrt-multispin, pjrt-tensorcore)"
-                )))
+        for spec in ENGINES {
+            if spec.name == s || spec.aliases.contains(&s) {
+                return Ok(spec.kind);
             }
-        })
+        }
+        Err(Error::Usage(format!(
+            "unknown engine '{s}' (try: {})",
+            engine_names_hint()
+        )))
     }
 
-    /// Canonical name.
+    /// Canonical name from the registry.
     pub fn name(&self) -> &'static str {
-        match self {
-            Self::NativeScalar => "scalar",
-            Self::NativeMultispin => "multispin",
-            Self::NativeHeatbath => "heatbath",
-            Self::NativeWolff => "wolff",
-            Self::Pjrt(Variant::Basic) => "pjrt-basic",
-            Self::Pjrt(Variant::Multispin) => "pjrt-multispin",
-            Self::Pjrt(Variant::Tensorcore) => "pjrt-tensorcore",
-            Self::Pjrt(Variant::Any) => "pjrt",
+        match self.spec() {
+            Some(spec) => spec.name,
+            // The fallback match is deliberately exhaustive per variant:
+            // a future EngineKind added to the enum but not to ENGINES
+            // fails to compile here instead of silently naming itself
+            // "pjrt". Only `Pjrt(Variant::Any)` (artifact-manifest
+            // vocabulary, never a configured engine) legitimately lacks
+            // a registry row.
+            None => match self {
+                EngineKind::Pjrt(_) => "pjrt",
+                EngineKind::NativeScalar
+                | EngineKind::NativeMultispin
+                | EngineKind::NativeHeatbath
+                | EngineKind::NativeWolff
+                | EngineKind::NativeTensor(_) => {
+                    unreachable!("native engine missing from the ENGINES registry")
+                }
+            },
         }
+    }
+
+    /// Registry row for this kind (`None` only for `Pjrt(Variant::Any)`).
+    pub fn spec(&self) -> Option<&'static EngineSpec> {
+        ENGINES.iter().find(|spec| spec.kind == *self)
     }
 }
 
@@ -212,13 +349,41 @@ mod tests {
 
     #[test]
     fn engine_names_roundtrip() {
-        for name in [
-            "scalar", "multispin", "heatbath", "wolff",
-            "pjrt-basic", "pjrt-multispin", "pjrt-tensorcore",
-        ] {
-            assert_eq!(EngineKind::parse(name).unwrap().name(), name);
+        // Every registry row roundtrips through parse → name, and every
+        // alias parses to the same kind as its canonical name.
+        for spec in ENGINES {
+            assert_eq!(EngineKind::parse(spec.name).unwrap().name(), spec.name);
+            assert_eq!(EngineKind::parse(spec.name).unwrap(), spec.kind);
+            for alias in spec.aliases {
+                assert_eq!(EngineKind::parse(alias).unwrap(), spec.kind);
+            }
+            assert_eq!(spec.kind.spec().unwrap().name, spec.name);
         }
         assert!(EngineKind::parse("cuda").is_err());
+        // The error hint is derived from the registry, so it names every
+        // canonical engine (the anti-drift guarantee).
+        let hint = EngineKind::parse("cuda").unwrap_err().to_string();
+        for spec in ENGINES {
+            assert!(hint.contains(spec.name), "hint must mention {}", spec.name);
+        }
+    }
+
+    #[test]
+    fn engine_registry_has_no_duplicate_names() {
+        let mut seen: Vec<&str> = Vec::new();
+        for spec in ENGINES {
+            for name in std::iter::once(&spec.name).chain(spec.aliases) {
+                assert!(!seen.contains(name), "duplicate engine name '{name}'");
+                seen.push(name);
+            }
+        }
+        // Registry covers the tensor engine in both precision modes.
+        assert!(ENGINES
+            .iter()
+            .any(|s| s.kind == EngineKind::NativeTensor(crate::tensor::Precision::F32)));
+        assert!(ENGINES
+            .iter()
+            .any(|s| s.kind == EngineKind::NativeTensor(crate::tensor::Precision::F16)));
     }
 
     #[test]

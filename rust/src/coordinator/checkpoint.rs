@@ -18,7 +18,6 @@
 //! the grid produces per-replica observable series **bit-identical** to
 //! an uninterrupted run — asserted by `tests/integration_coordinator.rs`.
 
-use super::driver::NativeCluster;
 use super::farm::FarmConfig;
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
@@ -66,6 +65,11 @@ impl CheckpointSpec {
 /// The manifest: grid + protocol fingerprint and completion record.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
+    /// Engine family driving the replicas (`FarmEngine::name`):
+    /// resuming a multispin farm with the tensor engine (or vice versa)
+    /// is refused — snapshots carry different lattice payloads and the
+    /// observables would not be comparable.
+    pub engine: String,
     /// Lattice rows.
     pub h: usize,
     /// Lattice columns.
@@ -88,6 +92,7 @@ impl Manifest {
     /// Fingerprint a farm configuration.
     pub fn from_config(cfg: &FarmConfig) -> Self {
         Self {
+            engine: cfg.engine.name().to_string(),
             h: cfg.geom.h,
             w: cfg.geom.w,
             betas_bits: cfg.betas.iter().map(|b| b.to_bits()).collect(),
@@ -105,7 +110,8 @@ impl Manifest {
     /// is legitimate and still bit-identical.)
     pub fn matches(&self, cfg: &FarmConfig) -> bool {
         let want = Self::from_config(cfg);
-        self.h == want.h
+        self.engine == want.engine
+            && self.h == want.h
             && self.w == want.w
             && self.betas_bits == want.betas_bits
             && self.seeds == want.seeds
@@ -118,6 +124,7 @@ impl Manifest {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("version", Json::Num(MANIFEST_VERSION as f64)),
+            ("engine", Json::Str(self.engine.clone())),
             ("h", Json::Num(self.h as f64)),
             ("w", Json::Num(self.w as f64)),
             (
@@ -153,7 +160,14 @@ impl Manifest {
                 .map(|v| v.as_usize().map(|n| n as u32))
                 .collect()
         };
+        // Manifests written before the tensor farm landed carry no
+        // engine field; they were all multispin.
+        let engine = match doc.field("engine") {
+            Ok(v) => v.as_str()?.to_string(),
+            Err(_) => "multispin".to_string(),
+        };
         Ok(Self {
+            engine,
             h: doc.field("h")?.as_usize()?,
             w: doc.field("w")?.as_usize()?,
             betas_bits: nums("betas_bits")?,
@@ -253,6 +267,21 @@ impl Checkpointer {
             }
             let m = Manifest::load(&path)?;
             if !m.matches(cfg) {
+                // Name the engine mismatch specifically: "resumed with
+                // the wrong --engine" is the easy mistake to make, and a
+                // generic grid/protocol message sends the user off to
+                // re-check betas instead of the flag.
+                let want = Manifest::from_config(cfg);
+                if m.engine != want.engine {
+                    return Err(Error::Snapshot(format!(
+                        "checkpoint manifest '{}' was written by an \
+                         '--engine {}' farm; this invocation runs \
+                         '--engine {}' — refusing to resume",
+                        path.display(),
+                        m.engine,
+                        want.engine
+                    )));
+                }
                 return Err(Error::Snapshot(format!(
                     "checkpoint manifest '{}' describes a different farm \
                      (grid or protocol mismatch); refusing to resume",
@@ -315,19 +344,23 @@ impl Checkpointer {
         samples_done % self.every as usize == 0
     }
 
-    /// Persist one replica's progress (atomic write).
+    /// Persist one replica's progress (atomic write). Takes the engine
+    /// state as a plain [`EngineSnapshot`], so any engine family the
+    /// farm drives (multispin clusters, tensor engines) checkpoints
+    /// through the same path.
     pub fn save_replica(
         &self,
         idx: usize,
-        cluster: &NativeCluster,
+        engine: EngineSnapshot,
+        metrics: &Metrics,
         m_series: &[f64],
         e_series: &[f64],
     ) -> Result<()> {
         let progress = ReplicaProgress {
-            engine: cluster.snapshot(),
+            engine,
             m_series: m_series.to_vec(),
             e_series: e_series.to_vec(),
-            metrics: cluster.metrics.clone(),
+            metrics: metrics.clone(),
         };
         write_file(&self.replica_path(idx), KIND_REPLICA, &progress.encode())
     }
@@ -406,6 +439,8 @@ impl Checkpointer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::driver::NativeCluster;
+    use crate::coordinator::farm::FarmEngine;
     use crate::lattice::Geometry;
 
     fn cfg() -> FarmConfig {
@@ -419,6 +454,7 @@ mod tests {
             samples: 6,
             thin: 2,
             threaded_shards: false,
+            engine: FarmEngine::Multispin,
         }
     }
 
@@ -445,11 +481,32 @@ mod tests {
         let mut other = cfg.clone();
         other.samples += 1;
         assert!(!back.matches(&other));
+        // A different engine family must not match.
+        let mut other = cfg.clone();
+        other.engine = FarmEngine::Tensor;
+        assert!(!back.matches(&other));
         // Worker/shard layout is not part of the fingerprint.
         let mut other = cfg;
         other.workers = 7;
         other.shards = 2;
         assert!(back.matches(&other));
+    }
+
+    /// Pre-tensor manifests carry no `engine` field: they must load as
+    /// multispin farms (back-compat for existing checkpoint dirs).
+    #[test]
+    fn engineless_manifest_defaults_to_multispin() {
+        let cfg = cfg();
+        let mut doc = Manifest::from_config(&cfg).to_json();
+        match &mut doc {
+            Json::Obj(fields) => {
+                fields.remove("engine").expect("manifest records its engine");
+            }
+            other => panic!("manifest serializes to an object, got {other:?}"),
+        }
+        let back = Manifest::from_json(&doc).unwrap();
+        assert_eq!(back.engine, "multispin");
+        assert!(back.matches(&cfg));
     }
 
     #[test]
@@ -509,7 +566,8 @@ mod tests {
         let mut cluster = NativeCluster::hot(cfg.geom, 1, 0.40, 1).unwrap();
         cluster.threaded = false;
         cluster.run(cfg.burn_in + 2 * cfg.thin);
-        c.save_replica(0, &cluster, &[0.1, 0.2], &[-1.0, -1.1]).unwrap();
+        c.save_replica(0, cluster.snapshot(), &cluster.metrics, &[0.1, 0.2], &[-1.0, -1.1])
+            .unwrap();
 
         let p = c.load_replica(0, &cfg, 0.40, 1).unwrap().expect("saved progress");
         assert_eq!(p.m_series, vec![0.1, 0.2]);
@@ -518,7 +576,7 @@ mod tests {
         assert!(c.load_replica(0, &cfg, 0.44, 1).is_err());
         assert!(c.load_replica(0, &cfg, 0.40, 2).is_err());
         // Step/sample inconsistency fails loudly.
-        c.save_replica(0, &cluster, &[0.1], &[-1.0]).unwrap();
+        c.save_replica(0, cluster.snapshot(), &cluster.metrics, &[0.1], &[-1.0]).unwrap();
         assert!(c.load_replica(0, &cfg, 0.40, 1).is_err());
 
         c.mark_done(0).unwrap();

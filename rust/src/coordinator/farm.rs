@@ -17,6 +17,8 @@ use crate::error::{Error, Result};
 use crate::lattice::Geometry;
 use crate::observables::binder::BinderAccumulator;
 use crate::observables::stats;
+use crate::tensor::{Precision, TensorEngine};
+use crate::util::snapshot::EngineSnapshot;
 use crate::util::timer::Timer;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -36,6 +38,35 @@ pub fn default_beta_grid(n: usize) -> Vec<f32> {
     (0..n)
         .map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32)
         .collect()
+}
+
+/// Which engine family drives each replica of the farm.
+///
+/// The farm's parallelism unit is the replica, so any deterministic
+/// single-replica engine slots in; the two supported families are the
+/// optimized multi-spin cluster (the paper's §3.3 production path) and
+/// the tensor (stencil-as-GEMM) engine of §3.2. Both follow the shared
+/// Philox site-group convention, so for the same `(geometry, β, seed)`
+/// they produce **bit-identical observable series** — asserted by the
+/// farm integration tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FarmEngine {
+    /// Sharded [`NativeCluster`] over the packed multi-spin lattice.
+    Multispin,
+    /// [`TensorEngine`] (banded-GEMM neighbor sums, f32 mode).
+    Tensor,
+}
+
+impl FarmEngine {
+    /// Manifest/fingerprint name. CLI parsing goes through the
+    /// canonical engine registry (`config::ENGINES`) in
+    /// `cli::commands::sweep`, not through a second name table here.
+    pub fn name(self) -> &'static str {
+        match self {
+            FarmEngine::Multispin => "multispin",
+            FarmEngine::Tensor => "tensor",
+        }
+    }
 }
 
 /// Configuration of one farm run.
@@ -61,6 +92,9 @@ pub struct FarmConfig {
     /// Run each replica's shards on threads too (off by default: the farm
     /// parallelizes across replicas; turning both on oversubscribes cores).
     pub threaded_shards: bool,
+    /// Engine family per replica (`shards`/`threaded_shards` apply to the
+    /// multispin cluster only; the tensor engine is single-block).
+    pub engine: FarmEngine,
 }
 
 impl FarmConfig {
@@ -77,6 +111,7 @@ impl FarmConfig {
             samples: 100,
             thin: 2,
             threaded_shards: false,
+            engine: FarmEngine::Multispin,
         })
     }
 
@@ -205,6 +240,121 @@ enum ReplicaStatus {
     Paused,
 }
 
+/// One replica's simulator — the engine-family dispatch behind the farm
+/// loop. Both variants expose the same protocol surface (step counter,
+/// chunked runs, observables, snapshot, cumulative metrics), so
+/// `run_replica` is engine-agnostic.
+enum ReplicaSim {
+    /// Sharded multi-spin cluster (tracks its own metrics).
+    Cluster(Box<NativeCluster>),
+    /// Tensor engine plus farm-side metrics accounting (boxed: the
+    /// engine carries band + scratch buffers).
+    Tensor(Box<TensorReplica>),
+}
+
+struct TensorReplica {
+    engine: TensorEngine,
+    metrics: Metrics,
+}
+
+impl ReplicaSim {
+    /// Hot-start a replica for grid task `(beta, seed)`.
+    fn hot(cfg: &FarmConfig, beta: f32, seed: u32) -> Result<Self> {
+        match cfg.engine {
+            FarmEngine::Multispin => {
+                let mut cluster =
+                    NativeCluster::hot(cfg.geom, cfg.shards.max(1), beta, seed)?;
+                cluster.threaded = cfg.threaded_shards;
+                Ok(ReplicaSim::Cluster(Box::new(cluster)))
+            }
+            FarmEngine::Tensor => Ok(ReplicaSim::Tensor(Box::new(TensorReplica {
+                engine: TensorEngine::with_precision(cfg.geom, beta, seed, Precision::F32),
+                metrics: Metrics::new(),
+            }))),
+        }
+    }
+
+    /// Restore a replica from its checkpoint snapshot, carrying the
+    /// cumulative metrics across the restart.
+    fn from_snapshot(cfg: &FarmConfig, snap: &EngineSnapshot, metrics: Metrics) -> Result<Self> {
+        match cfg.engine {
+            FarmEngine::Multispin => {
+                let mut cluster = NativeCluster::from_snapshot(snap, cfg.shards.max(1))?;
+                cluster.threaded = cfg.threaded_shards;
+                cluster.metrics = metrics;
+                Ok(ReplicaSim::Cluster(Box::new(cluster)))
+            }
+            FarmEngine::Tensor => Ok(ReplicaSim::Tensor(Box::new(TensorReplica {
+                engine: TensorEngine::from_snapshot(snap, Precision::F32)?,
+                metrics,
+            }))),
+        }
+    }
+
+    /// Sweep counter (next sweep number).
+    fn step(&self) -> u64 {
+        match self {
+            ReplicaSim::Cluster(c) => c.step(),
+            ReplicaSim::Tensor(t) => t.engine.step,
+        }
+    }
+
+    /// Run `n` sweeps, accounting them in the cumulative metrics.
+    fn run(&mut self, n: u64) {
+        match self {
+            ReplicaSim::Cluster(c) => c.run(n),
+            ReplicaSim::Tensor(t) => {
+                let timer = Timer::start();
+                t.engine.run(n);
+                let sites = t.engine.lattice.geometry().sites() as u64;
+                t.metrics.flips += n * sites;
+                t.metrics.sweeps += n;
+                t.metrics.elapsed += timer.elapsed();
+            }
+        }
+    }
+
+    /// Magnetization per site.
+    fn magnetization(&self) -> f64 {
+        match self {
+            ReplicaSim::Cluster(c) => c.lattice.magnetization(),
+            ReplicaSim::Tensor(t) => t.engine.lattice.magnetization(),
+        }
+    }
+
+    /// Energy per site.
+    fn energy_per_site(&self) -> f64 {
+        match self {
+            ReplicaSim::Cluster(c) => c.lattice.energy_per_site(),
+            ReplicaSim::Tensor(t) => t.engine.lattice.energy_per_site(),
+        }
+    }
+
+    /// Checkpointable engine state.
+    fn snapshot(&self) -> EngineSnapshot {
+        match self {
+            ReplicaSim::Cluster(c) => c.snapshot(),
+            ReplicaSim::Tensor(t) => t.engine.snapshot(),
+        }
+    }
+
+    /// Cumulative metrics.
+    fn metrics(&self) -> &Metrics {
+        match self {
+            ReplicaSim::Cluster(c) => &c.metrics,
+            ReplicaSim::Tensor(t) => &t.metrics,
+        }
+    }
+
+    /// Consume into the cumulative metrics (final result assembly).
+    fn into_metrics(self) -> Metrics {
+        match self {
+            ReplicaSim::Cluster(c) => c.metrics,
+            ReplicaSim::Tensor(t) => t.metrics,
+        }
+    }
+}
+
 /// Run one replica (the per-task body of the farm), resuming from and
 /// writing checkpoints when a [`Checkpointer`] is present.
 fn run_replica(
@@ -215,43 +365,36 @@ fn run_replica(
     ckpt: Option<&Checkpointer>,
 ) -> Result<ReplicaStatus> {
     let thin = cfg.thin.max(1);
-    let shards = cfg.shards.max(1);
     let restored = match ckpt {
         Some(c) => c.load_replica(idx, cfg, beta, seed)?,
         None => None,
     };
-    let (mut cluster, mut m_series, mut e_series) = match restored {
+    let (mut sim, mut m_series, mut e_series) = match restored {
         Some(p) => {
-            let mut cluster = NativeCluster::from_snapshot(&p.engine, shards)?;
-            cluster.threaded = cfg.threaded_shards;
-            cluster.metrics = p.metrics;
-            (cluster, p.m_series, p.e_series)
+            let sim = ReplicaSim::from_snapshot(cfg, &p.engine, p.metrics)?;
+            (sim, p.m_series, p.e_series)
         }
-        None => {
-            let mut cluster = NativeCluster::hot(cfg.geom, shards, beta, seed)?;
-            cluster.threaded = cfg.threaded_shards;
-            (
-                cluster,
-                Vec::with_capacity(cfg.samples),
-                Vec::with_capacity(cfg.samples),
-            )
-        }
+        None => (
+            ReplicaSim::hot(cfg, beta, seed)?,
+            Vec::with_capacity(cfg.samples),
+            Vec::with_capacity(cfg.samples),
+        ),
     };
 
     // Burn-in — chunked so long equilibrations checkpoint too.
-    while cluster.step() < cfg.burn_in {
+    while sim.step() < cfg.burn_in {
         match ckpt {
             Some(c) => {
                 if c.budget_exhausted() {
-                    c.save_replica(idx, &cluster, &m_series, &e_series)?;
+                    c.save_replica(idx, sim.snapshot(), sim.metrics(), &m_series, &e_series)?;
                     return Ok(ReplicaStatus::Paused);
                 }
                 let chunk =
-                    (c.every() as u64 * thin).max(1).min(cfg.burn_in - cluster.step());
-                cluster.run(chunk);
-                c.save_replica(idx, &cluster, &m_series, &e_series)?;
+                    (c.every() as u64 * thin).max(1).min(cfg.burn_in - sim.step());
+                sim.run(chunk);
+                c.save_replica(idx, sim.snapshot(), sim.metrics(), &m_series, &e_series)?;
             }
-            None => cluster.run(cfg.burn_in - cluster.step()),
+            None => sim.run(cfg.burn_in - sim.step()),
         }
     }
 
@@ -260,16 +403,16 @@ fn run_replica(
     while m_series.len() < cfg.samples {
         if let Some(c) = ckpt {
             if !c.take_sample() {
-                c.save_replica(idx, &cluster, &m_series, &e_series)?;
+                c.save_replica(idx, sim.snapshot(), sim.metrics(), &m_series, &e_series)?;
                 return Ok(ReplicaStatus::Paused);
             }
         }
-        cluster.run(thin);
-        m_series.push(cluster.lattice.magnetization());
-        e_series.push(cluster.lattice.energy_per_site());
+        sim.run(thin);
+        m_series.push(sim.magnetization());
+        e_series.push(sim.energy_per_site());
         if let Some(c) = ckpt {
             if c.due(m_series.len()) || m_series.len() == cfg.samples {
-                c.save_replica(idx, &cluster, &m_series, &e_series)?;
+                c.save_replica(idx, sim.snapshot(), sim.metrics(), &m_series, &e_series)?;
             }
         }
     }
@@ -281,7 +424,7 @@ fn run_replica(
         seed,
         m_series,
         e_series,
-        metrics: cluster.metrics,
+        metrics: sim.into_metrics(),
     }))
 }
 
@@ -307,6 +450,15 @@ pub fn run_farm_checkpointed(
     if tasks.is_empty() {
         return Err(Error::Coordinator(
             "replica farm needs a non-empty β × seed grid".into(),
+        ));
+    }
+    // Enforced here, not just in the CLI, so library callers cannot
+    // configure intra-replica sharding the tensor engine would ignore.
+    if cfg.engine == FarmEngine::Tensor && (cfg.shards > 1 || cfg.threaded_shards) {
+        return Err(Error::Coordinator(
+            "tensor replicas are single-block: shards must be ≤ 1 and \
+             threaded_shards false"
+                .into(),
         ));
     }
     let ckpt = match spec {
@@ -391,6 +543,7 @@ mod tests {
             samples: 4,
             thin: 1,
             threaded_shards: false,
+            engine: FarmEngine::Multispin,
         }
     }
 
@@ -447,6 +600,79 @@ mod tests {
         let mut cfg = small_cfg();
         cfg.shards = 3; // 8 rows % 3 != 0
         assert!(run_farm(&cfg).is_err());
+    }
+
+    /// Engine-family cross-check: the tensor farm reproduces the
+    /// multispin farm's observable series bit-exactly (both follow the
+    /// shared Philox site-group trajectory), and metrics account the
+    /// same sweep counts.
+    #[test]
+    fn tensor_farm_matches_multispin_farm_bit_exactly() {
+        let multispin = run_farm(&small_cfg()).unwrap();
+        let mut cfg = small_cfg();
+        cfg.engine = FarmEngine::Tensor;
+        cfg.shards = 1;
+        let tensor = run_farm(&cfg).unwrap();
+        assert_eq!(tensor.replicas.len(), multispin.replicas.len());
+        for (a, b) in multispin.replicas.iter().zip(&tensor.replicas) {
+            assert_eq!(a.beta.to_bits(), b.beta.to_bits());
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.m_series, b.m_series, "β = {}, seed = {}", a.beta, a.seed);
+            assert_eq!(a.e_series, b.e_series);
+            assert_eq!(a.metrics.sweeps, b.metrics.sweeps);
+            assert_eq!(a.metrics.flips, b.metrics.flips);
+        }
+    }
+
+    /// Sharding knobs the tensor engine would silently ignore are
+    /// rejected at the farm layer, not just by the CLI.
+    #[test]
+    fn tensor_farm_rejects_sharding() {
+        let mut cfg = small_cfg();
+        cfg.engine = FarmEngine::Tensor; // small_cfg has shards: 2
+        assert!(run_farm(&cfg).is_err());
+        let mut cfg = small_cfg();
+        cfg.engine = FarmEngine::Tensor;
+        cfg.shards = 1;
+        cfg.threaded_shards = true;
+        assert!(run_farm(&cfg).is_err());
+    }
+
+    #[test]
+    fn farm_engine_names_are_registry_names() {
+        // The manifest fingerprint names must stay in sync with the
+        // canonical engine registry the CLI parses against.
+        use crate::config::EngineKind;
+        assert_eq!(
+            EngineKind::parse(FarmEngine::Multispin.name()).unwrap(),
+            EngineKind::NativeMultispin
+        );
+        assert_eq!(
+            EngineKind::parse(FarmEngine::Tensor.name()).unwrap(),
+            EngineKind::NativeTensor(Precision::F32)
+        );
+    }
+
+    /// The tensor farm has no %32 width constraint — any even lattice
+    /// runs (here 10×10, impossible for the packed multispin path).
+    #[test]
+    fn tensor_farm_runs_on_non_multispin_geometries() {
+        let cfg = FarmConfig {
+            geom: Geometry::new(10, 10).unwrap(),
+            betas: vec![BETA_C],
+            seeds: vec![1],
+            shards: 1,
+            workers: 1,
+            burn_in: 2,
+            samples: 3,
+            thin: 1,
+            threaded_shards: false,
+            engine: FarmEngine::Tensor,
+        };
+        let res = run_farm(&cfg).unwrap();
+        assert_eq!(res.replicas.len(), 1);
+        assert_eq!(res.replicas[0].m_series.len(), 3);
+        assert_eq!(res.replicas[0].metrics.sweeps, 2 + 3);
     }
 
     #[test]

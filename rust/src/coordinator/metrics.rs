@@ -62,7 +62,7 @@ impl Metrics {
             self.sweeps,
             self.flips,
             self.elapsed.as_secs_f64(),
-            crate::util::units::fmt_sig(self.flips_per_ns(), 4)
+            crate::util::units::fmt_rate(self.flips_per_ns())
         )
     }
 }

@@ -1,0 +1,188 @@
+//! Circulant band matrices for periodic neighbor sums (paper §3.2).
+//!
+//! The checkerboard stencil splits, per color plane, into a **vertical**
+//! and a **horizontal** banded multiply once the plane's rows are
+//! separated by parity (the paper's 2×2 sub-block decomposition written
+//! globally; Yang et al.'s TPU formulation uses the same trick). With the
+//! source plane's even rows `S_e` and odd rows `S_o` (each `(h/2, w/2)`),
+//! the target-color neighbor sums are
+//!
+//! ```text
+//! nn_even = (I + D) · S_o  +  S_e · (I + Σ)
+//! nn_odd  = (I + Dᵀ) · S_e  +  S_o · (I + Σ')
+//! ```
+//!
+//! where `D` is the cyclic down-shift and `Σ/Σ'` the cyclic column
+//! shifts whose direction depends on the color (the checkerboard "side"
+//! rule). All four factors are **circulant band matrices**: an identity
+//! diagonal plus one cyclic off-diagonal, i.e. two nonzeros per row —
+//! including the periodic corner entry, which folds the paper's separate
+//! boundary kernel into the multiply itself.
+//!
+//! Matrices are materialized dense (row-major `f32`) because they feed
+//! the blocked SGEMM in [`super::gemm`], exactly as the paper feeds its
+//! banded K to cublas. The `n == 1` degenerate case (a 2-row lattice or
+//! a 2-column plane) folds both band entries onto one element, giving
+//! the value 2 — which is correct: both periodic neighbors are the same
+//! site.
+
+use crate::lattice::{Color, Geometry};
+
+/// Dense row-major `I + D` with `D` the cyclic down-shift: row `r` has
+/// ones at columns `r` and `(r-1) mod n`, so `(I + D)·X` sums rows `r`
+/// and `r-1` of `X` (the vertical band for even-parity targets).
+pub fn eye_plus_down(n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n * n];
+    for r in 0..n {
+        m[r * n + r] += 1.0;
+        m[r * n + (r + n - 1) % n] += 1.0;
+    }
+    m
+}
+
+/// Dense row-major `I + Dᵀ`: row `r` has ones at columns `r` and
+/// `(r+1) mod n`, summing rows `r` and `r+1` (the vertical band for
+/// odd-parity targets).
+pub fn eye_plus_up(n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n * n];
+    for r in 0..n {
+        m[r * n + r] += 1.0;
+        m[r * n + (r + 1) % n] += 1.0;
+    }
+    m
+}
+
+/// Dense row-major right-multiplication band adding the **left**
+/// neighbor: `(X · M)[i, k] = X[i, k] + X[i, (k-1) mod n]`. Ones sit at
+/// `(j, j)` and `(j, (j+1) mod n)`.
+pub fn eye_plus_left(n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n * n];
+    for j in 0..n {
+        m[j * n + j] += 1.0;
+        m[j * n + (j + 1) % n] += 1.0;
+    }
+    m
+}
+
+/// Dense row-major right-multiplication band adding the **right**
+/// neighbor: `(X · M)[i, k] = X[i, k] + X[i, (k+1) mod n]`. Ones sit at
+/// `(j, j)` and `(j, (j-1) mod n)`.
+pub fn eye_plus_right(n: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; n * n];
+    for j in 0..n {
+        m[j * n + j] += 1.0;
+        m[j * n + (j + n - 1) % n] += 1.0;
+    }
+    m
+}
+
+/// The four band matrices a geometry needs, built once per engine.
+#[derive(Clone, Debug)]
+pub struct NeighborBands {
+    /// Parity-block height `h / 2`.
+    pub h2: usize,
+    /// Plane width `w / 2`.
+    pub w2: usize,
+    /// `(h2)²` vertical band for even-row targets (`I + D`).
+    pub kv_down: Vec<f32>,
+    /// `(h2)²` vertical band for odd-row targets (`I + Dᵀ`).
+    pub kv_up: Vec<f32>,
+    /// `(w2)²` horizontal band adding the left neighbor.
+    pub kh_left: Vec<f32>,
+    /// `(w2)²` horizontal band adding the right neighbor.
+    pub kh_right: Vec<f32>,
+}
+
+impl NeighborBands {
+    /// Build the band set for one lattice geometry (`h` is even by
+    /// [`Geometry`] construction, so the parity split is exact).
+    pub fn for_geometry(geom: Geometry) -> Self {
+        let h2 = geom.h / 2;
+        let w2 = geom.w2();
+        Self {
+            h2,
+            w2,
+            kv_down: eye_plus_down(h2),
+            kv_up: eye_plus_up(h2),
+            kh_left: eye_plus_left(w2),
+            kh_right: eye_plus_right(w2),
+        }
+    }
+
+    /// The horizontal bands for a target `color`, in (even-row, odd-row)
+    /// order. Even rows of a black plane have column parity `q = 0`
+    /// (side neighbor to the left); white planes flip the pairing.
+    pub fn horizontal(&self, color: Color) -> (&[f32], &[f32]) {
+        match color {
+            Color::Black => (&self.kh_left, &self.kh_right),
+            Color::White => (&self.kh_right, &self.kh_left),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every band matrix is an identity plus exactly one cyclic
+    /// off-diagonal: two entries per row, all ones (n > 1).
+    #[test]
+    fn band_structure() {
+        for n in [2usize, 3, 5, 8] {
+            for m in [
+                eye_plus_down(n),
+                eye_plus_up(n),
+                eye_plus_left(n),
+                eye_plus_right(n),
+            ] {
+                for r in 0..n {
+                    let row = &m[r * n..(r + 1) * n];
+                    let nz: Vec<usize> =
+                        (0..n).filter(|&c| row[c] != 0.0).collect();
+                    assert_eq!(nz.len(), 2, "two band entries per row");
+                    assert!(nz.contains(&r), "identity diagonal present");
+                    assert!(row.iter().all(|&v| v == 0.0 || v == 1.0));
+                }
+            }
+        }
+    }
+
+    /// Degenerate n = 1: both neighbors are the same site, entry 2.
+    #[test]
+    fn degenerate_single_row() {
+        assert_eq!(eye_plus_down(1), vec![2.0]);
+        assert_eq!(eye_plus_up(1), vec![2.0]);
+        assert_eq!(eye_plus_left(1), vec![2.0]);
+        assert_eq!(eye_plus_right(1), vec![2.0]);
+    }
+
+    /// The right-multiplication bands shift in the documented direction.
+    #[test]
+    fn column_shift_directions() {
+        let n = 4;
+        let x: Vec<f32> = vec![10.0, 20.0, 30.0, 40.0]; // one row
+        let mul = |mat: &[f32]| -> Vec<f32> {
+            (0..n)
+                .map(|k| (0..n).map(|j| x[j] * mat[j * n + k]).sum())
+                .collect()
+        };
+        // Left band: X[k] + X[k-1].
+        assert_eq!(mul(&eye_plus_left(n)), vec![50.0, 30.0, 50.0, 70.0]);
+        // Right band: X[k] + X[k+1].
+        assert_eq!(mul(&eye_plus_right(n)), vec![30.0, 50.0, 70.0, 50.0]);
+    }
+
+    #[test]
+    fn bands_for_geometry_shapes() {
+        let g = Geometry::new(6, 8).unwrap();
+        let b = NeighborBands::for_geometry(g);
+        assert_eq!(b.h2, 3);
+        assert_eq!(b.w2, 4);
+        assert_eq!(b.kv_down.len(), 9);
+        assert_eq!(b.kh_left.len(), 16);
+        let (even, _) = b.horizontal(Color::Black);
+        assert_eq!(even, &b.kh_left[..]);
+        let (even, _) = b.horizontal(Color::White);
+        assert_eq!(even, &b.kh_right[..]);
+    }
+}

@@ -1,0 +1,356 @@
+//! The native tensor engine: checkerboard Metropolis whose neighbor sums
+//! are computed as banded matrix multiplies (paper §3.2).
+//!
+//! Per color phase the source plane is split by row parity into `S_e` /
+//! `S_o` blocks, the circulant bands of [`super::band`] produce the
+//! stencil sums through two SGEMM calls per block
+//! (`nn = K_v · S_opp + S_own · K_h`, see the module docs there), and the
+//! spin update then replays the **exact** scalar-engine decision: the same
+//! Philox site-group stream, the same integer acceptance thresholds. All
+//! products are small integers (band weights 0/1/2 × spins ±1, |nn| ≤ 4),
+//! exact in f32 *and* in the f16-emulation mode, so the trajectory is
+//! **bit-identical to [`ScalarEngine`](crate::algorithms::ScalarEngine)**
+//! in both precision modes — asserted by unit, property and integration
+//! tests. What the precision mode changes is the arithmetic being
+//! benchmarked, mirroring the paper's FP16/FP32 Tensor Core rows.
+
+use super::band::NeighborBands;
+use super::gemm::{gemm, Precision};
+use crate::algorithms::acceptance::AcceptanceTable;
+use crate::lattice::{Checkerboard, Color, Geometry};
+use crate::rng::philox::site_group;
+
+/// Tensor (stencil-as-GEMM) Metropolis engine, implementing
+/// [`Sweeper`](crate::algorithms::Sweeper) with checkpoint support.
+pub struct TensorEngine {
+    /// Spin state (byte-per-spin planes, like the scalar engine).
+    pub lattice: Checkerboard,
+    /// Acceptance table (β).
+    pub table: AcceptanceTable,
+    /// Philox seed.
+    pub seed: u32,
+    /// Next sweep number (u64; the low 32 bits feed Philox).
+    pub step: u64,
+    precision: Precision,
+    bands: NeighborBands,
+    /// Scratch: even/odd-row blocks of the source plane, f32 ±1.
+    s_even: Vec<f32>,
+    s_odd: Vec<f32>,
+    /// Scratch: even/odd-row neighbor-sum blocks.
+    nn_even: Vec<f32>,
+    nn_odd: Vec<f32>,
+}
+
+impl TensorEngine {
+    fn build(lattice: Checkerboard, beta: f32, seed: u32, step: u64, precision: Precision) -> Self {
+        let geom = lattice.geometry();
+        let mut bands = NeighborBands::for_geometry(geom);
+        if precision == Precision::F16 {
+            // Band weights are 0/1/2 — exactly representable in binary16 —
+            // but round them once up front so the hot path feeds the GEMM
+            // pre-rounded operands, like packing into an FP16 buffer.
+            for m in [
+                &mut bands.kv_down,
+                &mut bands.kv_up,
+                &mut bands.kh_left,
+                &mut bands.kh_right,
+            ] {
+                for v in m.iter_mut() {
+                    *v = super::gemm::f16_round(*v);
+                }
+            }
+        }
+        let block = bands.h2 * bands.w2;
+        Self {
+            lattice,
+            table: AcceptanceTable::new(beta),
+            seed,
+            step,
+            precision,
+            bands,
+            s_even: vec![0.0; block],
+            s_odd: vec![0.0; block],
+            nn_even: vec![0.0; block],
+            nn_odd: vec![0.0; block],
+        }
+    }
+
+    /// Hot-start engine at inverse temperature `beta` (f32 mode — the
+    /// bit-exact default).
+    pub fn hot(geom: Geometry, beta: f32, seed: u32) -> Self {
+        Self::with_precision(geom, beta, seed, Precision::F32)
+    }
+
+    /// Hot-start engine with an explicit GEMM precision mode.
+    pub fn with_precision(geom: Geometry, beta: f32, seed: u32, precision: Precision) -> Self {
+        Self::build(crate::lattice::init::hot(geom, seed), beta, seed, 0, precision)
+    }
+
+    /// Cold-start engine.
+    pub fn cold(geom: Geometry, beta: f32, seed: u32) -> Self {
+        Self::build(Checkerboard::cold(geom), beta, seed, 0, Precision::F32)
+    }
+
+    /// The configured GEMM precision mode.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Full engine state as a checkpointable snapshot (same byte-plane
+    /// payload as the scalar engine — precision is a runtime choice, not
+    /// part of the trajectory state).
+    pub fn snapshot(&self) -> crate::util::snapshot::EngineSnapshot {
+        crate::util::snapshot::EngineSnapshot::from_checkerboard(
+            &self.lattice,
+            self.table.beta,
+            self.seed,
+            self.step,
+        )
+    }
+
+    /// Rebuild an engine from a snapshot; continues bit-identically.
+    /// Accepts packed-lattice snapshots too (they convert exactly), so a
+    /// tensor engine can take over a scalar/multispin checkpoint.
+    pub fn from_snapshot(
+        snap: &crate::util::snapshot::EngineSnapshot,
+        precision: Precision,
+    ) -> crate::error::Result<Self> {
+        Ok(Self::build(
+            snap.to_checkerboard()?,
+            snap.beta(),
+            snap.seed,
+            snap.step,
+            precision,
+        ))
+    }
+
+    /// Save the engine state to a snapshot file.
+    pub fn save(&self, path: &std::path::Path) -> crate::error::Result<()> {
+        self.snapshot().save(path)
+    }
+
+    /// Load an engine from a snapshot file (f32 mode).
+    pub fn load(path: &std::path::Path) -> crate::error::Result<Self> {
+        Self::from_snapshot(
+            &crate::util::snapshot::EngineSnapshot::load(path)?,
+            Precision::F32,
+        )
+    }
+
+    /// Run `n` sweeps (inherent mirror of `Sweeper::sweep_n`, so callers
+    /// like the farm need not import the trait).
+    pub fn run(&mut self, n: u64) {
+        for _ in 0..n {
+            let step32 = self.step as u32;
+            self.update_color(Color::Black, step32);
+            self.update_color(Color::White, step32);
+            self.step += 1;
+        }
+    }
+
+    /// Neighbor sums of the target `color` via banded GEMMs, into the
+    /// `nn_even` / `nn_odd` scratch blocks.
+    fn neighbor_sums(&mut self, color: Color) {
+        let w2 = self.bands.w2;
+        let h2 = self.bands.h2;
+        // Gather the source plane into parity blocks (±1 as f32).
+        let source = self.lattice.plane(color.other());
+        for r in 0..h2 {
+            let even = &source[(2 * r) * w2..(2 * r + 1) * w2];
+            let odd = &source[(2 * r + 1) * w2..(2 * r + 2) * w2];
+            for k in 0..w2 {
+                self.s_even[r * w2 + k] = even[k] as f32;
+                self.s_odd[r * w2 + k] = odd[k] as f32;
+            }
+        }
+        if self.precision == Precision::F16 {
+            // FP16 "pack" pass — the paper's operand-buffer conversion.
+            // Spins are ±1 (exactly representable), so this is a
+            // semantic identity; with operands packed here and the band
+            // matrices pre-rounded at build, the multiply below can use
+            // the plain blocked kernel without re-rounding (and without
+            // the per-call scratch allocations gemm's own F16 mode
+            // makes for arbitrary operands).
+            for v in self.s_even.iter_mut().chain(self.s_odd.iter_mut()) {
+                *v = super::gemm::f16_round(*v);
+            }
+        }
+        let (kh_even, kh_odd) = self.bands.horizontal(color);
+        // Operands are binary16-exact in both modes by this point;
+        // accumulation is f32 in both modes (the paper's FP32 accumulate).
+        let p = Precision::F32;
+        // nn_e = K_down · S_o + S_e · K_h(even rows)
+        gemm(p, h2, h2, w2, &self.bands.kv_down, &self.s_odd, &mut self.nn_even, false);
+        gemm(p, h2, w2, w2, &self.s_even, kh_even, &mut self.nn_even, true);
+        // nn_o = K_up · S_e + S_o · K_h(odd rows)
+        gemm(p, h2, h2, w2, &self.bands.kv_up, &self.s_even, &mut self.nn_odd, false);
+        gemm(p, h2, w2, w2, &self.s_odd, kh_odd, &mut self.nn_odd, true);
+    }
+
+    /// Update every site of `color` for sweep number `step32`: GEMM
+    /// neighbor sums, then the scalar engine's exact decision replay.
+    fn update_color(&mut self, color: Color, step32: u32) {
+        self.neighbor_sums(color);
+        let g = self.lattice.geometry();
+        let w2 = g.w2();
+        let (target, _) = self.lattice.split_planes(color);
+        for i in 0..g.h {
+            let nn_row = if i % 2 == 0 { &self.nn_even } else { &self.nn_odd };
+            let nn_row = &nn_row[(i / 2) * w2..(i / 2) * w2 + w2];
+            let row = i * w2;
+            let mut k = 0usize;
+            while k < w2 {
+                // One Philox block serves four consecutive color columns —
+                // the identical stream the scalar/multispin engines draw.
+                let lanes =
+                    site_group(self.seed, color.index() as u32, i as u32, (k >> 2) as u32, step32);
+                let kend = (k + 4).min(w2);
+                while k < kend {
+                    // GEMM sums are exact small integers; round() maps the
+                    // f32 back to the stencil's nn ∈ {-4..4}.
+                    let nn = nn_row[k].round() as i32;
+                    let s01 = ((nn + 4) / 2) as usize;
+                    let sigma = target[row + k];
+                    let sigma01 = ((sigma as i32 + 1) / 2) as usize;
+                    if self.table.accept(sigma01, s01, lanes[k & 3]) {
+                        target[row + k] = -sigma;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+impl crate::algorithms::Sweeper for TensorEngine {
+    fn name(&self) -> &'static str {
+        match self.precision {
+            Precision::F32 => "tensor-gemm",
+            Precision::F16 => "tensor-gemm-fp16",
+        }
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.lattice.geometry()
+    }
+
+    fn sweep_n(&mut self, n: u64) {
+        self.run(n);
+    }
+
+    fn magnetization(&self) -> f64 {
+        self.lattice.magnetization()
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        self.lattice.energy_per_site()
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.lattice.to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.table = AcceptanceTable::new(beta);
+    }
+
+    fn export_snapshot(&self) -> Option<crate::util::snapshot::EngineSnapshot> {
+        Some(TensorEngine::snapshot(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{metropolis, ScalarEngine, Sweeper};
+    use crate::lattice::init;
+
+    /// The §3.2 acceptance criterion in miniature: tensor == scalar,
+    /// bit for bit, in both precision modes, across odd-shaped lattices.
+    #[test]
+    fn tensor_matches_scalar_bit_exactly() {
+        for (h, w) in [(2usize, 4usize), (4, 4), (6, 8), (8, 6), (16, 10)] {
+            let geom = Geometry::new(h, w).unwrap();
+            let (beta, seed) = (0.44f32, 7u32);
+            for precision in [Precision::F32, Precision::F16] {
+                let mut tensor = TensorEngine::with_precision(geom, beta, seed, precision);
+                let mut scalar = init::hot(geom, seed);
+                let table = AcceptanceTable::new(beta);
+                for t in 0..5u64 {
+                    tensor.run(1);
+                    metropolis::sweep(&mut scalar, &table, seed, t);
+                    assert_eq!(
+                        tensor.lattice, scalar,
+                        "{h}x{w} sweep {t} ({})",
+                        precision.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beta_zero_randomizes_and_restores() {
+        // T = ∞: every move accepted; two sweeps restore the state (the
+        // same involution the scalar engine exhibits).
+        let geom = Geometry::new(8, 8).unwrap();
+        let mut e = TensorEngine::with_precision(geom, 0.0, 3, Precision::F32);
+        let orig = e.lattice.clone();
+        e.run(1);
+        assert_ne!(e.lattice, orig);
+        e.run(1);
+        assert_eq!(e.lattice, orig);
+    }
+
+    #[test]
+    fn cold_state_frozen_at_low_temperature() {
+        let geom = Geometry::new(8, 8).unwrap();
+        let mut e = TensorEngine::cold(geom, 10.0, 1);
+        e.run(20);
+        assert_eq!(e.lattice.magnetization(), 1.0);
+    }
+
+    #[test]
+    fn snapshot_restores_and_continues_identically() {
+        let geom = Geometry::new(8, 10).unwrap();
+        let mut a = TensorEngine::hot(geom, 0.42, 13);
+        a.sweep_n(7);
+        let snap = a.export_snapshot().expect("tensor engine is checkpointable");
+        assert_eq!(snap.step, 7);
+        let mut b = TensorEngine::from_snapshot(&snap, Precision::F32).unwrap();
+        assert_eq!(b.lattice, a.lattice);
+        a.sweep_n(9);
+        b.sweep_n(9);
+        assert_eq!(a.lattice, b.lattice, "restored engine must continue bit-identically");
+        assert_eq!(a.step, b.step);
+    }
+
+    #[test]
+    fn takes_over_a_scalar_checkpoint() {
+        // Same byte-plane snapshot format: a ScalarEngine checkpoint
+        // resumes on the tensor engine with an identical continuation.
+        let geom = Geometry::new(6, 8).unwrap();
+        let mut scalar = ScalarEngine::hot(geom, 0.5, 21);
+        scalar.sweep_n(4);
+        let snap = scalar.snapshot();
+        let mut tensor = TensorEngine::from_snapshot(&snap, Precision::F32).unwrap();
+        scalar.sweep_n(3);
+        tensor.run(3);
+        assert_eq!(tensor.lattice, scalar.lattice);
+    }
+
+    #[test]
+    fn sweeper_surface() {
+        let geom = Geometry::new(4, 6).unwrap();
+        let mut e = TensorEngine::hot(geom, 0.4, 2);
+        assert_eq!(e.name(), "tensor-gemm");
+        assert_eq!(e.geometry(), geom);
+        assert_eq!(e.flips_per_sweep(), 24);
+        assert_eq!(e.spins().len(), 24);
+        e.set_beta(0.9);
+        assert_eq!(e.table.beta, 0.9);
+        let f16 = TensorEngine::with_precision(geom, 0.4, 2, Precision::F16);
+        assert_eq!(Sweeper::name(&f16), "tensor-gemm-fp16");
+        assert_eq!(f16.precision(), Precision::F16);
+    }
+}

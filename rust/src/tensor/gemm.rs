@@ -1,0 +1,360 @@
+//! Cache-blocked SGEMM with an f16-emulation precision mode — the compute
+//! core of the native tensor engine (paper §3.2).
+//!
+//! The paper's Tensor Core path multiplies **FP16 inputs with FP32
+//! accumulation** (`cublasHgemmBatched`-style); the [`Precision::F16`]
+//! mode mirrors that numerically by rounding both operands to IEEE
+//! binary16 (round-to-nearest-even) before the multiply while keeping
+//! every partial sum in f32. [`Precision::F32`] is the plain SGEMM the
+//! paper also benchmarks.
+//!
+//! Determinism contract: for fixed inputs the accumulation order over
+//! `k` is ascending regardless of blocking, so results are reproducible
+//! across block-size choices. Zero entries of `A` are skipped — the
+//! band matrices of [`super::band`] have two nonzeros per row, so the
+//! vertical multiply runs in O(rows · band · cols) like the paper's
+//! banded GEMM — which is exact for finite inputs (skipping `0·x` only
+//! drops a `+0.0` term).
+//!
+//! Neighbor sums are small integers (|nn| ≤ 4 with ±1 spins and 0/1/2
+//! band weights), exactly representable in both f16 and f32, so **both
+//! precision modes reproduce the stencil sums bit-exactly** — the
+//! property the engine's cross-checks against `ScalarEngine` assert.
+//! On general matrices the f16 mode carries the documented error bound
+//! of [`F16_RELATIVE_ERROR`] per rounded operand.
+
+/// GEMM input precision mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f32 inputs, f32 accumulation (plain SGEMM).
+    F32,
+    /// Inputs rounded to IEEE binary16, f32 accumulation — the paper's
+    /// FP16 Tensor Core arithmetic, emulated.
+    F16,
+}
+
+impl Precision {
+    /// Report label ("fp32" / "fp16"), matching the paper's Table rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "fp32",
+            Precision::F16 => "fp16",
+        }
+    }
+}
+
+/// Unit roundoff of IEEE binary16 (2⁻¹¹): the relative error bound per
+/// operand introduced by [`Precision::F16`] rounding in the normal
+/// range. A `k`-term product sum therefore deviates from the f32 result
+/// by at most `≈ 2 · F16_RELATIVE_ERROR · Σ|aᵢ||bᵢ|` — the tolerance
+/// the property tests assert.
+pub const F16_RELATIVE_ERROR: f32 = 4.8828125e-4;
+
+// Cache block sizes: MC×KC panels of A and KC×NC panels of B live in L1
+// during the inner loops (64·64·4 B = 16 KB per panel).
+const MC: usize = 64;
+const KC: usize = 64;
+const NC: usize = 256;
+
+/// Round one f32 to the nearest IEEE binary16 (ties to even) and back.
+/// Overflow saturates to ±∞ like hardware FP16 conversion.
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 → binary16 bit pattern, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xFF) as i32;
+    let man32 = bits & 0x007F_FFFF;
+
+    if exp32 == 0xFF {
+        // Inf stays inf; NaN becomes a quiet NaN.
+        return if man32 != 0 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let e = exp32 - 127;
+    if e > 15 {
+        return sign | 0x7C00; // |x| ≥ 2¹⁶: past max finite, to infinity
+    }
+    if e >= -14 {
+        // Normal f16 range: round the 23-bit mantissa to 10 bits.
+        let man = man32 | 0x0080_0000; // implicit leading 1
+        let mut man16 = round_shift_even(man, 13);
+        let mut exp16 = (e + 15) as u32;
+        if man16 >= 0x800 {
+            // Mantissa carry (e.g. 2047.6 → 2048): bump the exponent.
+            man16 >>= 1;
+            exp16 += 1;
+        }
+        if exp16 >= 0x1F {
+            return sign | 0x7C00; // rounded past max finite (≥ 65520)
+        }
+        return sign | ((exp16 as u16) << 10) | ((man16 & 0x3FF) as u16);
+    }
+    if e < -25 {
+        // Below half the smallest subnormal (f32 subnormals included:
+        // they have e = -127): rounds to zero.
+        return sign;
+    }
+    // Subnormal f16: value = m · 2⁻²⁴ with m rounded to ≤ 10 bits. A
+    // carry to 2¹⁰ lands exactly on the smallest normal encoding.
+    let man = man32 | 0x0080_0000;
+    let shift = (-(e + 1)) as u32; // 14..=24 for e in -15..=-25
+    let man16 = round_shift_even(man, shift);
+    sign | (man16 as u16)
+}
+
+/// binary16 bit pattern → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: normalize into an f32 exponent.
+            let mut e = -14i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (((e + 127) as u32) << 23) | ((m & 0x3FF) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// `v >> shift` with round-to-nearest, ties to even (`shift ≥ 1`).
+fn round_shift_even(v: u32, shift: u32) -> u32 {
+    let floor = v >> shift;
+    let rem = v & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && floor & 1 == 1) {
+        floor + 1
+    } else {
+        floor
+    }
+}
+
+/// Round every element to binary16 and back (F16 operand preparation).
+pub fn round_slice_f16(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| f16_round(x)).collect()
+}
+
+/// `C = A·B` (or `C += A·B` with `accumulate`) for row-major `A (m×k)`,
+/// `B (k×n)`, `C (m×n)`, cache-blocked, with f32 accumulation in both
+/// precision modes.
+pub fn gemm(
+    prec: Precision,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    match prec {
+        Precision::F32 => gemm_blocked(m, k, n, a, b, c, accumulate),
+        Precision::F16 => {
+            let ar = round_slice_f16(a);
+            let br = round_slice_f16(b);
+            gemm_blocked(m, k, n, &ar, &br, c, accumulate)
+        }
+    }
+}
+
+fn gemm_blocked(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let j1 = (j0 + NC).min(n);
+                for i in i0..i1 {
+                    let arow = &a[i * k..i * k + k];
+                    let crow = &mut c[i * n..i * n + n];
+                    for (kk, &aik) in arow.iter().enumerate().take(k1).skip(k0) {
+                        if aik == 0.0 {
+                            continue; // band sparsity (exact for finite B)
+                        }
+                        let brow = &b[kk * n..kk * n + n];
+                        for j in j0..j1 {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference triple-loop GEMM (test oracle; same ascending-`k` order).
+pub fn gemm_naive(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j];
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random f32 in (-1, 1) for test matrices.
+    fn lcg_fill(seed: u64, len: usize) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 40) as f32 / (1u32 << 24) as f32) * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn f16_exact_on_small_integers() {
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(f16_round(x), x, "binary16 is exact on |n| ≤ 2048");
+        }
+        assert_eq!(f16_round(0.5), 0.5);
+        assert_eq!(f16_round(-0.25), -0.25);
+    }
+
+    #[test]
+    fn f16_known_vectors() {
+        // 0.1 → 0x2E66 → 0.0999755859375 (classic binary16 vector).
+        assert_eq!(f32_to_f16_bits(0.1), 0x2E66);
+        assert_eq!(f16_round(0.1).to_bits(), 0x3DCC_C000);
+        // Max finite and the overflow threshold.
+        assert_eq!(f16_round(65504.0), 65504.0);
+        assert_eq!(f16_round(65519.0), 65504.0);
+        assert!(f16_round(65520.0).is_infinite());
+        assert!(f16_round(-1e9).is_infinite());
+        // Smallest subnormal survives; half of it rounds to zero (even).
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_round(tiny), tiny);
+        assert_eq!(f16_round(tiny * 0.5), 0.0);
+        assert_eq!(f16_round(tiny * 0.76), tiny);
+        // NaN stays NaN, infinities pass through, signs survive.
+        assert!(f16_round(f32::NAN).is_nan());
+        assert_eq!(f16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(f16_round(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn f16_rounding_is_idempotent_and_bounded() {
+        for &x in &[0.1f32, 0.3333, 1.7, 3.14159, 1000.5, 2.0e-3, 0.999] {
+            let r = f16_round(x);
+            assert_eq!(f16_round(r), r, "idempotent");
+            assert!(
+                (r - x).abs() <= F16_RELATIVE_ERROR * x.abs(),
+                "|{r} - {x}| within the documented bound"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_f32_exactly() {
+        // Shapes straddling the block boundaries.
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (64, 64, 64), (65, 70, 300), (130, 17, 257)] {
+            let a = lcg_fill(m as u64 * 31 + k as u64, m * k);
+            let b = lcg_fill(n as u64 * 17 + 3, k * n);
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            gemm(Precision::F32, m, k, n, &a, &b, &mut c1, false);
+            gemm_naive(m, k, n, &a, &b, &mut c2, false);
+            assert_eq!(c1, c2, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_onto_c() {
+        let (m, k, n) = (4, 6, 5);
+        let a = lcg_fill(1, m * k);
+        let b = lcg_fill(2, k * n);
+        let mut c = vec![1.0f32; m * n];
+        let mut want = vec![1.0f32; m * n];
+        gemm(Precision::F32, m, k, n, &a, &b, &mut c, true);
+        gemm_naive(m, k, n, &a, &b, &mut want, true);
+        assert_eq!(c, want);
+        // Overwrite mode clears stale C.
+        let mut c = vec![7.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        gemm(Precision::F32, m, k, n, &a, &b, &mut c, false);
+        gemm_naive(m, k, n, &a, &b, &mut want, false);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn f16_mode_within_documented_tolerance() {
+        let (m, k, n) = (20, 33, 28);
+        let a = lcg_fill(11, m * k);
+        let b = lcg_fill(12, k * n);
+        let mut c32 = vec![0.0f32; m * n];
+        let mut c16 = vec![0.0f32; m * n];
+        gemm(Precision::F32, m, k, n, &a, &b, &mut c32, false);
+        gemm(Precision::F16, m, k, n, &a, &b, &mut c16, false);
+        // Inputs are in (-1, 1): Σ|a||b| ≤ k, so the bound is 2·u·k.
+        let tol = 2.0 * F16_RELATIVE_ERROR * k as f32;
+        for (x, y) in c32.iter().zip(&c16) {
+            assert!((x - y).abs() <= tol, "{x} vs {y} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn f16_mode_exact_on_band_times_spins() {
+        // The engine's actual operands: 0/1/2 band weights × ±1 spins.
+        let n = 16;
+        let band = crate::tensor::band::eye_plus_down(n);
+        let spins: Vec<f32> = (0..n * n)
+            .map(|i| if (i * 2654435761usize) % 3 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let mut c32 = vec![0.0f32; n * n];
+        let mut c16 = vec![0.0f32; n * n];
+        gemm(Precision::F32, n, n, n, &band, &spins, &mut c32, false);
+        gemm(Precision::F16, n, n, n, &band, &spins, &mut c16, false);
+        assert_eq!(c32, c16, "small-integer products are exact in f16");
+    }
+}

@@ -1,0 +1,31 @@
+//! Native tensor engine — the paper's §3.2 stencil-as-GEMM
+//! implementation, reproduced without a GPU.
+//!
+//! The paper's second implementation idea recasts the checkerboard
+//! neighbor stencil as banded matrix multiplies (`A·S + S·B`) so Tensor
+//! Cores can execute it; Yang et al.'s TPU reproduction
+//! (arXiv:1903.11714) is built on the same matmul-centric formulation.
+//! This subsystem lands that idea natively, next to the scalar (§3.1)
+//! and multi-spin (§3.3) engines:
+//!
+//! * [`band`] — circulant band matrices (`I` + one cyclic off-diagonal)
+//!   for periodic neighbor sums, with the paper's boundary kernel folded
+//!   into the corner entries.
+//! * [`gemm`] — a cache-blocked SGEMM with [`Precision`] modes: plain
+//!   f32, and an f16-emulation mode (binary16-rounded inputs, f32
+//!   accumulation) mirroring the paper's FP16 Tensor Core arithmetic.
+//! * [`engine`] — [`TensorEngine`], a full
+//!   [`Sweeper`](crate::algorithms::Sweeper) with snapshot/restore,
+//!   whose trajectory is **bit-identical to the scalar engine** in both
+//!   precision modes (neighbor sums are small integers, exact in f16).
+//!
+//! `benches/table2_tensor.rs` drives this engine against the paper's
+//! Table 2 tensor-core reference rows.
+
+pub mod band;
+pub mod engine;
+pub mod gemm;
+
+pub use band::NeighborBands;
+pub use engine::TensorEngine;
+pub use gemm::{f16_round, Precision, F16_RELATIVE_ERROR};

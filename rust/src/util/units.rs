@@ -17,7 +17,28 @@ pub fn fmt_sig(x: f64, digits: usize) -> String {
     }
     let mag = x.abs().log10().floor() as i32;
     let dec = (digits as i32 - 1 - mag).max(0) as usize;
-    format!("{x:.dec$}")
+    let s = format!("{x:.dec$}");
+    // Rounding can carry across a power of ten (0.09996 at 2 digits
+    // would print "0.100"): re-derive the decimal count from the rounded
+    // value so the printed digit count stays significant.
+    let rounded: f64 = s.parse().unwrap_or(x);
+    let new_mag = rounded.abs().log10().floor() as i32;
+    if rounded != 0.0 && new_mag != mag {
+        let dec = (digits as i32 - 1 - new_mag).max(0) as usize;
+        return format!("{rounded:.dec$}");
+    }
+    s
+}
+
+/// Format a flips/ns rate for tables and reports: 4 significant digits,
+/// falling back to scientific notation below 10⁻³ so slow engines (the
+/// tensor rows run orders of magnitude under the multi-spin path) keep
+/// their significant digits instead of degenerating toward `0.000…`.
+pub fn fmt_rate(x: f64) -> String {
+    if x != 0.0 && x.is_finite() && x.abs() < 1e-3 {
+        return format!("{x:.3e}");
+    }
+    fmt_sig(x, 4)
 }
 
 /// Format a byte count (`30.3 GB` style, decimal units like the paper).
@@ -64,6 +85,36 @@ mod tests {
         assert_eq!(fmt_sig(417.5739, 5), "417.57");
         assert_eq!(fmt_sig(0.0123456, 3), "0.0123");
         assert_eq!(fmt_sig(66954.0, 5), "66954");
+    }
+
+    /// Sub-1.0 rates (the tensor-engine regime) keep their significant
+    /// digits — no row may collapse to `0.0`.
+    #[test]
+    fn sub_unit_rates_keep_significant_digits() {
+        assert_eq!(fmt_sig(0.4217, 4), "0.4217");
+        assert_eq!(fmt_sig(0.0217, 4), "0.02170");
+        assert_eq!(fmt_sig(0.002_173, 4), "0.002173");
+        // Rounding across a power of ten stays significant.
+        assert_eq!(fmt_sig(0.09996, 2), "0.10");
+        assert_eq!(fmt_sig(0.999_96, 3), "1.00");
+        for x in [0.5, 0.05, 0.005, 0.000_47] {
+            let s = fmt_sig(x, 4);
+            assert!(
+                s.trim_start_matches(['0', '.']).len() >= 3,
+                "{x} printed as '{s}' lost its digits"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(417.5739), "417.6");
+        assert_eq!(fmt_rate(0.4217), "0.4217");
+        assert_eq!(fmt_rate(0.021_734), "0.02173");
+        // Below 1e-3 the rate switches to scientific notation.
+        assert_eq!(fmt_rate(0.000_217_3), "2.173e-4");
+        assert_eq!(fmt_rate(0.0), "0");
+        assert!(fmt_rate(f64::NAN).contains("NaN"));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use ising_dgx::algorithms::{multispin, AcceptanceTable};
 use ising_dgx::coordinator::{
     model_sweep, partition, run_farm, run_farm_checkpointed, CheckpointSpec, FarmConfig,
-    FarmOutcome, FarmResult, NativeCluster, SpinWidth, Topology,
+    FarmEngine, FarmOutcome, FarmResult, NativeCluster, SpinWidth, Topology,
 };
 use ising_dgx::lattice::{init, Geometry};
 use std::path::PathBuf;
@@ -132,6 +132,7 @@ fn farm_is_deterministic_across_worker_counts() {
         samples: 6,
         thin: 1,
         threaded_shards: false,
+        engine: FarmEngine::Multispin,
     };
     let reference = run_farm(&base).unwrap();
     assert_eq!(reference.replicas.len(), 6);
@@ -173,6 +174,7 @@ fn farm_matches_native_cluster_reference() {
         samples,
         thin,
         threaded_shards: false,
+        engine: FarmEngine::Multispin,
     };
     let farm = run_farm(&cfg).unwrap();
     assert_eq!(farm.replicas.len(), 1);
@@ -217,6 +219,7 @@ fn ckpt_cfg() -> FarmConfig {
         samples: 8,
         thin: 2,
         threaded_shards: false,
+        engine: FarmEngine::Multispin,
     }
 }
 
@@ -267,6 +270,49 @@ fn interrupted_farm_resumes_bit_identically() {
     // Final pass: no budget — must complete.
     let spec = CheckpointSpec { sample_budget: None, ..spec };
     let resumed = match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { .. } => panic!("unbudgeted resume must finish the grid"),
+    };
+    assert_same_observables(&straight, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The tensor engine through the full checkpointed-farm path: interrupt
+/// a `--engine tensor` grid mid-run, resume it to completion, and demand
+/// observable series bit-identical to the straight-through tensor farm —
+/// which in turn must be bit-identical to the multispin farm on the same
+/// grid (the shared-trajectory guarantee of the §3.2 engine).
+#[test]
+fn tensor_farm_interrupt_resume_bit_identical() {
+    let mut cfg = ckpt_cfg();
+    cfg.engine = FarmEngine::Tensor;
+    cfg.shards = 1;
+    let straight = run_farm(&cfg).unwrap();
+
+    // Cross-engine reference: the multispin farm on the identical grid.
+    let multispin = run_farm(&ckpt_cfg()).unwrap();
+    assert_same_observables(&straight, &multispin);
+
+    let dir = ckpt_temp_dir("tensor-resume");
+    let spec = CheckpointSpec {
+        dir: dir.clone(),
+        every: 2,
+        resume: false,
+        sample_budget: Some(5),
+    };
+    match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Interrupted { total, .. } => assert_eq!(total, 4),
+        FarmOutcome::Complete(_) => panic!("5-sample budget must interrupt a 32-sample farm"),
+    }
+    // A multispin resume of a tensor checkpoint dir must be refused
+    // (manifest engine mismatch).
+    let resume_spec = CheckpointSpec { resume: true, sample_budget: None, ..spec };
+    assert!(
+        run_farm_checkpointed(&ckpt_cfg(), Some(&resume_spec)).is_err(),
+        "engine mismatch must refuse to resume"
+    );
+    // Resume with the tensor engine: completes and diffs clean.
+    let resumed = match run_farm_checkpointed(&cfg, Some(&resume_spec)).unwrap() {
         FarmOutcome::Complete(r) => r,
         FarmOutcome::Interrupted { .. } => panic!("unbudgeted resume must finish the grid"),
     };

@@ -201,3 +201,108 @@ fn prop_energy_magnetization_bounds() {
         assert_eq!(flipped.energy_sum(), lat.energy_sum());
     });
 }
+
+// ---------------------------------------------------------------------------
+// Tensor subsystem (stencil-as-GEMM, paper §3.2)
+// ---------------------------------------------------------------------------
+
+/// Banded-matmul neighbor sums equal the scalar checkerboard stencil
+/// **exactly**, over random geometries, seeds and temperatures, in both
+/// GEMM precision modes: the whole-trajectory formulation of the §3.2
+/// acceptance criterion (neighbor sums are small integers, exact even
+/// in emulated f16).
+#[test]
+fn prop_tensor_matches_scalar_over_random_geometries() {
+    use ising_dgx::tensor::{Precision, TensorEngine};
+    check("tensor == scalar over random configs", 20, |g| {
+        let h = g.even_in(2, 12);
+        let w = g.even_in(4, 16);
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.0, 1.5);
+        let sweeps = g.int_in(1, 5) as u64;
+        let precision = *g.choose(&[Precision::F32, Precision::F16]);
+        let table = AcceptanceTable::new(beta);
+        let mut scalar = init::hot(geom, seed);
+        let mut tensor = TensorEngine::with_precision(geom, beta, seed, precision);
+        for t in 0..sweeps {
+            metropolis::sweep(&mut scalar, &table, seed, t);
+        }
+        tensor.sweep_n(sweeps);
+        assert_eq!(
+            tensor.lattice, scalar,
+            "{h}x{w} β={beta} seed={seed} ({})",
+            precision.name()
+        );
+    });
+}
+
+/// The blocked GEMM agrees with the naive oracle bitwise in f32 and
+/// stays within the documented binary16 tolerance in f16-emulation
+/// mode, across random (non-blocked-friendly) shapes.
+#[test]
+fn prop_gemm_blocked_vs_naive_and_f16_tolerance() {
+    use ising_dgx::tensor::gemm::{gemm, gemm_naive, Precision, F16_RELATIVE_ERROR};
+    check("gemm blocked == naive; f16 within tolerance", 15, |g| {
+        let m = g.int_in(1, 70) as usize;
+        let k = g.int_in(1, 70) as usize;
+        let n = g.int_in(1, 300) as usize;
+        let a: Vec<f32> = (0..m * k).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let mut c_blocked = vec![0.0f32; m * n];
+        let mut c_naive = vec![0.0f32; m * n];
+        gemm(Precision::F32, m, k, n, &a, &b, &mut c_blocked, false);
+        gemm_naive(m, k, n, &a, &b, &mut c_naive, false);
+        assert_eq!(c_blocked, c_naive, "({m},{k},{n})");
+
+        let mut c_f16 = vec![0.0f32; m * n];
+        gemm(Precision::F16, m, k, n, &a, &b, &mut c_f16, false);
+        // Operands are in (-1, 1): |Σ aᵢbᵢ − Σ rd(aᵢ)rd(bᵢ)| ≤ 2uk.
+        let tol = 2.0 * F16_RELATIVE_ERROR * k as f32;
+        for (x, y) in c_naive.iter().zip(&c_f16) {
+            assert!((x - y).abs() <= tol, "f16 gemm drift {x} vs {y} (tol {tol})");
+        }
+    });
+}
+
+/// TensorEngine snapshot save → load → resume is bit-identical to the
+/// uninterrupted run (file-level roundtrip, not just in-memory).
+#[test]
+fn prop_tensor_snapshot_save_resume_bit_identity() {
+    use ising_dgx::tensor::{Precision, TensorEngine};
+    check("tensor snapshot save/resume", 10, |g| {
+        let h = g.even_in(2, 10);
+        let w = g.even_in(4, 12);
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.1, 1.0);
+        let pre = g.int_in(0, 6) as u64;
+        let post = g.int_in(1, 6) as u64;
+
+        let dir = std::env::temp_dir()
+            .join(format!("ising-tensor-prop-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("tensor-{h}x{w}-{seed}.snap"));
+
+        let mut a = TensorEngine::hot(geom, beta, seed);
+        a.sweep_n(pre);
+        a.save(&path).unwrap();
+        let mut b = TensorEngine::load(&path).unwrap();
+        assert_eq!(b.step, pre);
+        assert_eq!(b.lattice, a.lattice);
+        a.sweep_n(post);
+        b.sweep_n(post);
+        assert_eq!(a.lattice, b.lattice, "resumed trajectory diverged");
+        assert_eq!(a.step, b.step);
+        // The f16-emulation engine resumes the same snapshot onto the
+        // same trajectory (precision is not trajectory state).
+        let mut c = TensorEngine::from_snapshot(
+            &ising_dgx::util::snapshot::EngineSnapshot::load(&path).unwrap(),
+            Precision::F16,
+        )
+        .unwrap();
+        c.sweep_n(post);
+        assert_eq!(c.lattice, a.lattice);
+        let _ = std::fs::remove_file(&path);
+    });
+}
