@@ -3,6 +3,7 @@
 pub mod info;
 pub mod run;
 pub mod scaling;
+pub mod serve;
 pub mod sweep;
 pub mod validate;
 

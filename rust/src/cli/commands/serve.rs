@@ -1,0 +1,99 @@
+//! `ising serve` — run the HTTP simulation service: a bounded job queue
+//! + worker pool over the replica farm, with a content-addressed result
+//! cache and checkpoint-through-restart job durability. Configuration
+//! comes from the `[server]` section of a TOML file (`--config`), with
+//! every CLI flag overriding it.
+
+use crate::cli::args::Args;
+use crate::config::{ServerConfig, Toml};
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+const KNOWN: &[&str] = &[
+    "addr", "workers", "queue-depth", "checkpoint-dir", "checkpoint-every",
+    "slice-samples", "config",
+];
+
+/// Resolve flags + optional config file into a validated `ServerConfig`.
+fn resolve(args: &Args) -> Result<ServerConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ServerConfig::from_toml(&Toml::load(Path::new(path))?)?,
+        None => ServerConfig::default(),
+    };
+    if let Some(addr) = args.opt("addr") {
+        cfg.addr = addr.to_string();
+    }
+    cfg.workers = args.opt_parse("workers", cfg.workers)?;
+    cfg.queue_depth = args.opt_parse("queue-depth", cfg.queue_depth)?;
+    if let Some(dir) = args.opt("checkpoint-dir") {
+        cfg.checkpoint_dir = PathBuf::from(dir);
+    }
+    cfg.checkpoint_every = args.opt_parse("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(s) = args.opt("slice-samples") {
+        let n: u64 = s.parse().map_err(|_| {
+            Error::Usage(format!("cannot parse --slice-samples value '{s}'"))
+        })?;
+        cfg.slice_samples = Some(n);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Execute the subcommand (blocks until `POST /v1/shutdown`).
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    crate::server::serve(resolve(args)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_override_defaults() {
+        let args = parse(
+            "serve --addr 0.0.0.0:9000 --workers 3 --queue-depth 5 \
+             --checkpoint-dir jobs --checkpoint-every 4 --slice-samples 32",
+        );
+        let cfg = resolve(&args).unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.queue_depth, 5);
+        assert_eq!(cfg.checkpoint_dir, PathBuf::from("jobs"));
+        assert_eq!(cfg.checkpoint_every, 4);
+        assert_eq!(cfg.slice_samples, Some(32));
+        assert_eq!(resolve(&parse("serve")).unwrap(), ServerConfig::default());
+    }
+
+    #[test]
+    fn invalid_values_are_rejected() {
+        for bad in [
+            "serve --workers 0",
+            "serve --queue-depth 0",
+            "serve --checkpoint-every 0",
+            "serve --slice-samples 0",
+            "serve --slice-samples abc",
+            "serve --addr noport",
+        ] {
+            assert!(resolve(&parse(bad)).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn config_file_is_loaded_and_overridden() {
+        let dir = std::env::temp_dir()
+            .join(format!("ising-serve-cli-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("server.toml");
+        std::fs::write(&path, "[server]\nworkers = 7\nqueue_depth = 3\n").unwrap();
+        let args = parse(&format!("serve --config {} --workers 2", path.display()));
+        let cfg = resolve(&args).unwrap();
+        assert_eq!(cfg.workers, 2, "flag beats file");
+        assert_eq!(cfg.queue_depth, 3, "file beats default");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -6,7 +6,6 @@
 //! (`--checkpoint-dir DIR --checkpoint-every N`, resume with `--resume`).
 
 use crate::cli::args::Args;
-use crate::config::EngineKind;
 use crate::coordinator::checkpoint::CheckpointSpec;
 use crate::coordinator::farm::{
     default_beta_grid, run_farm_checkpointed, FarmConfig, FarmEngine, FarmOutcome,
@@ -21,28 +20,6 @@ const KNOWN: &[&str] = &[
     "burn-in", "samples", "thin", "threaded-shards", "quiet",
     "checkpoint-dir", "checkpoint-every", "resume", "max-samples", "report",
 ];
-
-/// Map `--engine` (parsed against the canonical registry, aliases
-/// included) onto the farm's engine families.
-fn parse_farm_engine(s: &str) -> Result<FarmEngine> {
-    use crate::tensor::Precision;
-    match EngineKind::parse(s)? {
-        EngineKind::NativeMultispin => Ok(FarmEngine::Multispin),
-        EngineKind::NativeTensor(Precision::F32) => Ok(FarmEngine::Tensor),
-        // Refuse rather than silently coerce: a tensor-fp16 sweep would
-        // report f32-path rates under an fp16 label.
-        EngineKind::NativeTensor(Precision::F16) => Err(Error::Usage(
-            "the farm runs the tensor engine's bit-exact f32 GEMM path; use \
-             --engine tensor (fp16 emulation is a single-run benchmark mode: \
-             `ising run --engine tensor-fp16`)"
-                .into(),
-        )),
-        other => Err(Error::Usage(format!(
-            "the replica farm drives 'multispin' or 'tensor' replicas, not '{}'",
-            other.name()
-        ))),
-    }
-}
 
 /// Parse `--betas 0.40,0.44,0.48` into an f32 grid, rejecting values that
 /// would silently poison the acceptance tables (`nan`/`inf` parse as
@@ -65,33 +42,12 @@ fn parse_betas(list: &str) -> Result<Vec<f32>> {
         .collect()
 }
 
-/// Write the bit-exact per-replica report: β/m/e as hex bit patterns, so
-/// two runs of the same grid can be compared with a plain `diff` (decimal
-/// formatting would hide 1-ulp divergence; wall-clock metrics are
-/// deliberately excluded). This is what the CI checkpoint smoke step
-/// diffs between an interrupted+resumed run and a straight-through one.
+/// Write the bit-exact per-replica report ([`FarmResult::replica_report`],
+/// the same bytes the `ising serve` result endpoint returns). This is
+/// what the CI checkpoint smoke step diffs between an interrupted+resumed
+/// run and a straight-through one.
 fn write_report(result: &FarmResult, path: &str) -> Result<()> {
-    use std::fmt::Write as _;
-    let mut out = String::new();
-    out.push_str("# ising sweep replica report v1 (f32/f64 values as hex bit patterns)\n");
-    for r in &result.replicas {
-        let _ = write!(out, "beta_bits={:08x} seed={} m=", r.beta.to_bits(), r.seed);
-        for (i, v) in r.m_series.iter().enumerate() {
-            if i > 0 {
-                out.push(',');
-            }
-            let _ = write!(out, "{:016x}", v.to_bits());
-        }
-        out.push_str(" e=");
-        for (i, v) in r.e_series.iter().enumerate() {
-            if i > 0 {
-                out.push(',');
-            }
-            let _ = write!(out, "{:016x}", v.to_bits());
-        }
-        out.push('\n');
-    }
-    std::fs::write(path, out)?;
+    std::fs::write(path, result.replica_report())?;
     Ok(())
 }
 
@@ -112,7 +68,7 @@ pub fn exec(args: &Args) -> Result<()> {
 
     let mut cfg = FarmConfig::grid(size, betas, replicas_per_beta, seed0)?;
     if let Some(name) = args.opt("engine") {
-        cfg.engine = parse_farm_engine(name)?;
+        cfg.engine = FarmEngine::parse(name)?;
     }
     let total = cfg.replica_count();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -163,10 +119,9 @@ pub fn exec(args: &Args) -> Result<()> {
         return Err(Error::Usage("--checkpoint-every must be >= 1".into()));
     }
     let spec = ckpt_dir.map(|dir| CheckpointSpec {
-        dir: PathBuf::from(dir),
-        every,
         resume,
         sample_budget: max_samples,
+        ..CheckpointSpec::new(PathBuf::from(dir), every)
     });
 
     println!(
@@ -266,15 +221,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn farm_engine_mapping() {
-        assert_eq!(parse_farm_engine("multispin").unwrap(), FarmEngine::Multispin);
-        assert_eq!(parse_farm_engine("optimized").unwrap(), FarmEngine::Multispin);
-        assert_eq!(parse_farm_engine("tensor").unwrap(), FarmEngine::Tensor);
-        assert_eq!(parse_farm_engine("tensor-fp32").unwrap(), FarmEngine::Tensor);
-        // fp16 is refused (would mislabel f32-path rates), as are
-        // non-farm engines and unknown names.
-        assert!(parse_farm_engine("tensor-fp16").is_err());
-        assert!(parse_farm_engine("wolff").is_err());
-        assert!(parse_farm_engine("no-such-engine").is_err());
+    fn betas_parse_and_reject_unphysical_values() {
+        assert_eq!(parse_betas("0.40, 0.44").unwrap(), vec![0.40f32, 0.44]);
+        for bad in ["nan", "inf", "-0.4", "0", "abc", "0.4,,0.5"] {
+            assert!(parse_betas(bad).is_err(), "must reject '{bad}'");
+        }
     }
 }

@@ -3,6 +3,7 @@
 //! Subcommands:
 //! * `run`      — simulate and report observables + flips/ns.
 //! * `sweep`    — parallel replica farm over a seed × β grid (Fig. 5/6).
+//! * `serve`    — HTTP job service over the farm (queue + result cache).
 //! * `validate` — temperature sweep vs the Onsager solution (paper §5.3).
 //! * `scaling`  — multi-device weak/strong scaling (real slabs + DGX model).
 //! * `info`     — platform, artifact inventory, analytic constants.
@@ -29,6 +30,10 @@ COMMANDS:
             --seed S --workers W --shards D --burn-in N --samples N --thin N
             checkpoint/restart: --checkpoint-dir DIR [--checkpoint-every N]
             [--resume] [--max-samples N] [--report FILE]
+  serve     HTTP simulation service over the replica farm
+            --addr HOST:PORT --workers W --queue-depth N
+            --checkpoint-dir DIR [--checkpoint-every N] [--slice-samples N]
+            [--config FILE]   (see README \"Serving\" for the API)
   validate  magnetization & Binder vs Onsager across temperatures
             --size N --engine E --samples N --quick
   scaling   weak/strong scaling study (native cluster + DGX-2 model)
@@ -58,12 +63,46 @@ pub fn usage() -> String {
     )
 }
 
+/// The subcommand registry: every routable name, including the help
+/// aliases — the source for unknown-command suggestions.
+pub const COMMANDS: &[&str] =
+    &["run", "sweep", "serve", "validate", "scaling", "info", "help"];
+
+/// Levenshtein edit distance (std-only; the strings are subcommand-sized,
+/// so the O(len²) two-row DP is plenty).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let subst = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = subst.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Nearest registry subcommand within edit distance 2 (ties break in
+/// registry order), or `None` if the typo is nothing like any command.
+pub fn suggest_command(input: &str) -> Option<&'static str> {
+    COMMANDS
+        .iter()
+        .map(|&name| (edit_distance(input, name), name))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, name)| name)
+}
+
 /// Entry point used by `main.rs`.
 pub fn main_with_args(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw)?;
     match args.command.as_str() {
         "run" => commands::run::exec(&args),
         "sweep" => commands::sweep::exec(&args),
+        "serve" => commands::serve::exec(&args),
         "validate" => commands::validate::exec(&args),
         "scaling" => commands::scaling::exec(&args),
         "info" => commands::info::exec(&args),
@@ -71,12 +110,23 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
             print!("{}", usage());
             Ok(())
         }
-        other => Err(Error::Usage(format!("unknown command '{other}'\n\n{}", usage()))),
+        other => {
+            let hint = match suggest_command(other) {
+                Some(name) => format!(" (did you mean '{name}'?)"),
+                None => String::new(),
+            };
+            Err(Error::Usage(format!(
+                "unknown command '{other}'{hint}\n\n{}",
+                usage()
+            )))
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     /// The help text lists every registry engine — derived, not typed.
     #[test]
     fn usage_lists_every_engine() {
@@ -85,5 +135,43 @@ mod tests {
             assert!(text.contains(spec.name), "usage must list '{}'", spec.name);
         }
         assert!(text.contains("USAGE: ising"));
+    }
+
+    /// The usage text names every routable subcommand.
+    #[test]
+    fn usage_lists_every_command() {
+        let text = super::usage();
+        for &name in COMMANDS.iter().filter(|&&n| n != "help") {
+            assert!(
+                text.contains(&format!("\n  {name}")),
+                "usage must list '{name}'"
+            );
+        }
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("sweep", "sweep"), 0);
+        assert_eq!(edit_distance("swep", "sweep"), 1);
+        assert_eq!(edit_distance("serve", "sweep"), 4);
+        assert_eq!(edit_distance("", "run"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    /// Typos map to the nearest subcommand; unrelated input gets nothing.
+    #[test]
+    fn unknown_commands_get_a_suggestion() {
+        assert_eq!(suggest_command("swep"), Some("sweep"));
+        assert_eq!(suggest_command("serv"), Some("serve"));
+        assert_eq!(suggest_command("sevre"), Some("serve"));
+        assert_eq!(suggest_command("ifno"), Some("info"));
+        assert_eq!(suggest_command("validat"), Some("validate"));
+        assert_eq!(suggest_command("rnu"), Some("run"));
+        assert_eq!(suggest_command("wibble"), None);
+        // The hint reaches the user-facing error.
+        let err = main_with_args(vec!["swep".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'sweep'"), "got: {err}");
+        let err = main_with_args(vec!["qqqqq".to_string()]).unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "got: {err}");
     }
 }

@@ -6,5 +6,5 @@ pub mod types;
 pub use toml::{Toml, Value};
 pub use types::{
     default_temperature_grid, engine_names_hint, EngineKind, EngineSpec, RunConfig,
-    SweepConfig, ENGINES,
+    ServerConfig, SweepConfig, ENGINES,
 };

@@ -296,6 +296,116 @@ impl RunConfig {
     }
 }
 
+/// `ising serve` configuration: the `[server]` TOML section / CLI flags
+/// behind the std-only HTTP simulation service.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    /// Listen address (`host:port`; port 0 binds an ephemeral port).
+    pub addr: String,
+    /// Scheduler worker threads executing jobs (each job's farm runs its
+    /// replicas with the job's own `workers` count inside one scheduler
+    /// worker).
+    pub workers: usize,
+    /// Bounded job-queue depth; submissions beyond it get HTTP 429.
+    pub queue_depth: usize,
+    /// Root directory for job state: per-job spec, checkpoints, and the
+    /// content-addressed result cache.
+    pub checkpoint_dir: PathBuf,
+    /// Snapshot cadence (samples) for in-flight jobs.
+    pub checkpoint_every: u32,
+    /// Fairness slice: at most this many new samples per scheduling pass
+    /// before a job is checkpointed and requeued at the back (`None` =
+    /// run each job to completion once claimed).
+    pub slice_samples: Option<u64>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7626".into(),
+            workers: 2,
+            queue_depth: 16,
+            checkpoint_dir: PathBuf::from("server-jobs"),
+            checkpoint_every: 8,
+            slice_samples: None,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from the `[server]` section of a TOML file, rejecting unknown
+    /// keys (typo protection, like the CLI's `ensure_known`).
+    pub fn from_toml(doc: &Toml) -> Result<Self> {
+        const KNOWN: &[&str] = &[
+            "addr", "workers", "queue_depth", "checkpoint_dir", "checkpoint_every",
+            "slice_samples",
+        ];
+        for key in doc.section_keys("server") {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!(
+                    "unknown [server] key '{key}' (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("server", "addr") {
+            cfg.addr = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("server", "workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("server", "queue_depth") {
+            cfg.queue_depth = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("server", "checkpoint_dir") {
+            cfg.checkpoint_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = doc.get("server", "checkpoint_every") {
+            cfg.checkpoint_every = u32::try_from(v.as_int()?)
+                .map_err(|_| Error::Config("checkpoint_every out of range".into()))?;
+        }
+        if let Some(v) = doc.get("server", "slice_samples") {
+            let n = v.as_int()?;
+            cfg.slice_samples = Some(u64::try_from(n).map_err(|_| {
+                Error::Config(format!("slice_samples {n} must be non-negative"))
+            })?);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks with actionable messages (shared by the TOML and
+    /// CLI paths — `ising serve` validates before binding).
+    pub fn validate(&self) -> Result<()> {
+        if !self.addr.contains(':') {
+            return Err(Error::Config(format!(
+                "server addr '{}' must be host:port",
+                self.addr
+            )));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("server workers must be ≥ 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("server queue_depth must be ≥ 1".into()));
+        }
+        if self.checkpoint_every == 0 {
+            return Err(Error::Config("server checkpoint_every must be ≥ 1".into()));
+        }
+        if self.slice_samples == Some(0) {
+            return Err(Error::Config(
+                "server slice_samples must be ≥ 1 (omit it to run jobs to completion)"
+                    .into(),
+            ));
+        }
+        if self.checkpoint_dir.as_os_str().is_empty() {
+            return Err(Error::Config("server checkpoint_dir must be non-empty".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Temperature-sweep configuration (validation / fig5 / fig6 drivers).
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -404,6 +514,38 @@ mod tests {
     }
 
     #[test]
+    fn server_config_from_toml_and_validation() {
+        let doc = Toml::parse(
+            "[server]\naddr = \"0.0.0.0:8080\"\nworkers = 4\nqueue_depth = 8\n\
+             checkpoint_dir = \"jobs\"\ncheckpoint_every = 2\nslice_samples = 64\n",
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:8080");
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.queue_depth, 8);
+        assert_eq!(cfg.checkpoint_dir, PathBuf::from("jobs"));
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.slice_samples, Some(64));
+        // No [server] section at all: defaults.
+        let cfg = ServerConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg, ServerConfig::default());
+        cfg.validate().unwrap();
+        // Bad values and unknown keys are rejected.
+        for bad in [
+            "[server]\nworkers = 0\n",
+            "[server]\nqueue_depth = 0\n",
+            "[server]\ncheckpoint_every = 0\n",
+            "[server]\nslice_samples = 0\n",
+            "[server]\naddr = \"noport\"\n",
+            "[server]\nwrokers = 2\n",
+        ] {
+            let doc = Toml::parse(bad).unwrap();
+            assert!(ServerConfig::from_toml(&doc).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
     fn beta_key_sets_temperature() {
         let doc = Toml::parse("[run]\nbeta = 0.5\n").unwrap();
         let cfg = RunConfig::from_toml(&doc).unwrap();
@@ -435,5 +577,17 @@ mod config_file_tests {
             cfg.run.validate().unwrap();
             assert!(!cfg.temperatures.is_empty());
         }
+    }
+
+    /// The shipped server config example must stay loadable and valid.
+    #[test]
+    fn server_config_example_parses() {
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/server.toml");
+        let doc = Toml::load(&path).expect("configs/server.toml must parse");
+        let cfg = ServerConfig::from_toml(&doc).expect("configs/server.toml must validate");
+        cfg.validate().unwrap();
+        assert!(cfg.addr.contains(':'));
+        assert!(cfg.workers >= 1 && cfg.queue_depth >= 1);
     }
 }

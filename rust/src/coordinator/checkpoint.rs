@@ -27,8 +27,8 @@ use crate::util::snapshot::{
 };
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Manifest format version.
@@ -53,12 +53,19 @@ pub struct CheckpointSpec {
     /// this invocation, then checkpoint and stop (time-boxed runs; also
     /// how the tests interrupt a farm deterministically).
     pub sample_budget: Option<u64>,
+    /// Cooperative stop flag shared with the caller (the serving
+    /// scheduler's graceful-shutdown path). Once set, workers checkpoint
+    /// their in-flight replicas and the farm returns
+    /// [`FarmOutcome::Interrupted`](super::farm::FarmOutcome), exactly
+    /// like an exhausted sample budget — so a restarted invocation
+    /// resumes bit-identically.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl CheckpointSpec {
     /// Fresh-start spec with snapshot cadence `every`.
     pub fn new(dir: PathBuf, every: u32) -> Self {
-        Self { dir, every, resume: false, sample_budget: None }
+        Self { dir, every, resume: false, sample_budget: None, stop: None }
     }
 }
 
@@ -118,6 +125,40 @@ impl Manifest {
             && self.burn_in == want.burn_in
             && self.samples == want.samples
             && self.thin == want.thin
+    }
+
+    /// Content-addressed fingerprint of the physics this manifest pins:
+    /// engine family, geometry, exact β bit patterns, seed grid, and the
+    /// measurement protocol. Execution layout (workers/shards) and the
+    /// completion record (`done`) are excluded, matching
+    /// [`Manifest::matches`] — two configs with the same fingerprint
+    /// produce bit-identical observable series. This is the job key of
+    /// the serving layer's result cache (16 lowercase hex chars, FNV-1a
+    /// 64 over a length-prefixed field encoding).
+    pub fn fingerprint(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        eat(&(self.engine.len() as u64).to_le_bytes());
+        eat(self.engine.as_bytes());
+        eat(&(self.h as u64).to_le_bytes());
+        eat(&(self.w as u64).to_le_bytes());
+        eat(&(self.betas_bits.len() as u64).to_le_bytes());
+        for &b in &self.betas_bits {
+            eat(&b.to_le_bytes());
+        }
+        eat(&(self.seeds.len() as u64).to_le_bytes());
+        for &s in &self.seeds {
+            eat(&s.to_le_bytes());
+        }
+        eat(&self.burn_in.to_le_bytes());
+        eat(&(self.samples as u64).to_le_bytes());
+        eat(&self.thin.to_le_bytes());
+        format!("{h:016x}")
     }
 
     /// Serialize to the manifest JSON document.
@@ -247,6 +288,7 @@ pub struct Checkpointer {
     dir: PathBuf,
     every: u32,
     budget: Option<AtomicI64>,
+    stop: Option<Arc<AtomicBool>>,
     manifest: Mutex<Manifest>,
 }
 
@@ -304,6 +346,7 @@ impl Checkpointer {
             dir: spec.dir.clone(),
             every: spec.every.max(1),
             budget: spec.sample_budget.map(|n| AtomicI64::new(n.min(i64::MAX as u64) as i64)),
+            stop: spec.stop.clone(),
             manifest: Mutex::new(manifest),
         })
     }
@@ -323,16 +366,31 @@ impl Checkpointer {
         self.dir.join(format!("replica-{idx:05}.snap"))
     }
 
-    /// Has the sample budget run out? (Never true without a budget.)
-    pub fn budget_exhausted(&self) -> bool {
-        self.budget
+    /// Was a cooperative stop requested? (Never true without a flag.)
+    pub fn stop_requested(&self) -> bool {
+        self.stop
             .as_ref()
-            .map(|b| b.load(Ordering::Relaxed) <= 0)
+            .map(|s| s.load(Ordering::Relaxed))
             .unwrap_or(false)
+    }
+
+    /// Should workers pause? True once the sample budget runs out *or*
+    /// the cooperative stop flag is raised (both paths checkpoint and
+    /// surface as an interrupted farm).
+    pub fn budget_exhausted(&self) -> bool {
+        self.stop_requested()
+            || self
+                .budget
+                .as_ref()
+                .map(|b| b.load(Ordering::Relaxed) <= 0)
+                .unwrap_or(false)
     }
 
     /// Claim one sample from the budget; `false` means stop and pause.
     pub fn take_sample(&self) -> bool {
+        if self.stop_requested() {
+            return false;
+        }
         match &self.budget {
             None => true,
             Some(b) => b.fetch_sub(1, Ordering::Relaxed) > 0,
@@ -582,6 +640,58 @@ mod tests {
         c.mark_done(0).unwrap();
         c.mark_done(0).unwrap();
         assert_eq!(c.done_count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_tracks_physics_not_layout() {
+        let base = Manifest::from_config(&cfg());
+        let fp = base.fingerprint();
+        assert_eq!(fp.len(), 16);
+        assert!(fp.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase()));
+        // Execution layout and completion state do not change the key.
+        let mut layout = cfg();
+        layout.workers = 9;
+        layout.shards = 2;
+        layout.threaded_shards = true;
+        assert_eq!(Manifest::from_config(&layout).fingerprint(), fp);
+        let mut done = base.clone();
+        done.done.insert(1);
+        assert_eq!(done.fingerprint(), fp);
+        // Every physics/protocol field does.
+        let mutations: [fn(&mut FarmConfig); 7] = [
+            |c| c.engine = FarmEngine::Tensor,
+            |c| c.geom = Geometry::new(8, 64).unwrap(),
+            |c| c.betas[0] = 0.41,
+            |c| c.seeds.push(3),
+            |c| c.burn_in += 1,
+            |c| c.samples += 1,
+            |c| c.thin += 1,
+        ];
+        for mutate in mutations {
+            let mut other = cfg();
+            mutate(&mut other);
+            assert_ne!(Manifest::from_config(&other).fingerprint(), fp);
+        }
+    }
+
+    #[test]
+    fn stop_flag_pauses_like_an_exhausted_budget() {
+        let cfg = cfg();
+        let dir = temp_dir("stopflag");
+        let stop = Arc::new(AtomicBool::new(false));
+        let spec = CheckpointSpec {
+            stop: Some(stop.clone()),
+            ..CheckpointSpec::new(dir.clone(), 1)
+        };
+        let c = Checkpointer::open(&spec, &cfg).unwrap();
+        assert!(!c.stop_requested());
+        assert!(!c.budget_exhausted());
+        assert!(c.take_sample());
+        stop.store(true, Ordering::Relaxed);
+        assert!(c.stop_requested());
+        assert!(c.budget_exhausted());
+        assert!(!c.take_sample());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -58,13 +58,36 @@ pub enum FarmEngine {
 }
 
 impl FarmEngine {
-    /// Manifest/fingerprint name. CLI parsing goes through the
-    /// canonical engine registry (`config::ENGINES`) in
-    /// `cli::commands::sweep`, not through a second name table here.
+    /// Manifest/fingerprint name. Parsing goes through the canonical
+    /// engine registry (`config::ENGINES`) via [`FarmEngine::parse`],
+    /// not through a second name table here.
     pub fn name(self) -> &'static str {
         match self {
             FarmEngine::Multispin => "multispin",
             FarmEngine::Tensor => "tensor",
+        }
+    }
+
+    /// Map an engine name (parsed against the canonical registry,
+    /// aliases included) onto the farm's engine families — shared by the
+    /// `ising sweep` CLI and the job API of `ising serve`.
+    pub fn parse(s: &str) -> Result<Self> {
+        use crate::config::EngineKind;
+        match EngineKind::parse(s)? {
+            EngineKind::NativeMultispin => Ok(FarmEngine::Multispin),
+            EngineKind::NativeTensor(Precision::F32) => Ok(FarmEngine::Tensor),
+            // Refuse rather than silently coerce: a tensor-fp16 sweep
+            // would report f32-path rates under an fp16 label.
+            EngineKind::NativeTensor(Precision::F16) => Err(Error::Usage(
+                "the farm runs the tensor engine's bit-exact f32 GEMM path; use \
+                 --engine tensor (fp16 emulation is a single-run benchmark mode: \
+                 `ising run --engine tensor-fp16`)"
+                    .into(),
+            )),
+            other => Err(Error::Usage(format!(
+                "the replica farm drives 'multispin' or 'tensor' replicas, not '{}'",
+                other.name()
+            ))),
         }
     }
 }
@@ -195,6 +218,38 @@ impl FarmResult {
             return f64::NAN;
         }
         self.aggregate.elapsed.as_secs_f64() / (wall * self.workers as f64)
+    }
+
+    /// The bit-exact per-replica report: β/m/e as hex bit patterns, so
+    /// two runs of the same grid can be compared with a plain `diff`
+    /// (decimal formatting would hide 1-ulp divergence; wall-clock
+    /// metrics are deliberately excluded). `ising sweep --report` writes
+    /// exactly this string, and the job API's result endpoint serves it
+    /// byte-identically — the CI smoke steps diff the two.
+    pub fn replica_report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        out.push_str(
+            "# ising sweep replica report v1 (f32/f64 values as hex bit patterns)\n",
+        );
+        for r in &self.replicas {
+            let _ = write!(out, "beta_bits={:08x} seed={} m=", r.beta.to_bits(), r.seed);
+            for (i, v) in r.m_series.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{:016x}", v.to_bits());
+            }
+            out.push_str(" e=");
+            for (i, v) in r.e_series.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{:016x}", v.to_bits());
+            }
+            out.push('\n');
+        }
+        out
     }
 
     /// Group replicas by β (grid order), pooling every seed's samples into
@@ -673,6 +728,36 @@ mod tests {
         assert_eq!(res.replicas.len(), 1);
         assert_eq!(res.replicas[0].m_series.len(), 3);
         assert_eq!(res.replicas[0].metrics.sweeps, 2 + 3);
+    }
+
+    #[test]
+    fn farm_engine_parse_maps_registry_names() {
+        assert_eq!(FarmEngine::parse("multispin").unwrap(), FarmEngine::Multispin);
+        assert_eq!(FarmEngine::parse("optimized").unwrap(), FarmEngine::Multispin);
+        assert_eq!(FarmEngine::parse("tensor").unwrap(), FarmEngine::Tensor);
+        assert_eq!(FarmEngine::parse("tensor-fp32").unwrap(), FarmEngine::Tensor);
+        // fp16 is refused (would mislabel f32-path rates), as are
+        // non-farm engines and unknown names.
+        assert!(FarmEngine::parse("tensor-fp16").is_err());
+        assert!(FarmEngine::parse("wolff").is_err());
+        assert!(FarmEngine::parse("no-such-engine").is_err());
+    }
+
+    #[test]
+    fn replica_report_is_bit_exact_and_stable() {
+        let res = run_farm(&small_cfg()).unwrap();
+        let report = res.replica_report();
+        assert!(report.starts_with("# ising sweep replica report v1"));
+        // One line per replica plus the header.
+        assert_eq!(report.lines().count(), 1 + res.replicas.len());
+        // Bit patterns round-trip: the first replica's first m sample.
+        let line = report.lines().nth(1).unwrap();
+        let m_hex = line.split("m=").nth(1).unwrap().split(',').next().unwrap();
+        let bits = u64::from_str_radix(m_hex, 16).unwrap();
+        assert_eq!(f64::from_bits(bits), res.replicas[0].m_series[0]);
+        // Deterministic: a second identical farm produces the same bytes.
+        let again = run_farm(&small_cfg()).unwrap();
+        assert_eq!(again.replica_report(), report);
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub mod lattice;
 pub mod observables;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod util;
 

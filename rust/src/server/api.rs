@@ -1,0 +1,435 @@
+//! The `/v1` JSON job API: request routing + the submit-spec ↔
+//! `FarmConfig` mapping.
+//!
+//! | Method | Path                  | Meaning                               |
+//! |--------|-----------------------|---------------------------------------|
+//! | POST   | `/v1/jobs`            | submit a sweep job (JSON body)        |
+//! | GET    | `/v1/jobs/{id}`       | job status                            |
+//! | GET    | `/v1/jobs/{id}/result`| bit-exact replica report (text/plain) |
+//! | GET    | `/v1/healthz`         | liveness + queue/registry counts      |
+//! | GET    | `/v1/info`            | engine matrix + analytic constants    |
+//! | POST   | `/v1/shutdown`        | graceful stop (checkpoints in-flight) |
+//!
+//! The submit body carries the same TOML-equivalent sweep configuration
+//! the `ising sweep` CLI takes (`size`, `engine`, `betas`/`beta_points`,
+//! `replicas`, `seed`, `burn_in`, `samples`, `thin`, `workers`,
+//! `shards`), validated with the same rules. The result body is the
+//! exact byte string `ising sweep --report` writes for the same config.
+
+use super::http::{Request, Response};
+use super::queue::{Scheduler, Submit};
+use crate::config::ServerConfig;
+use crate::coordinator::farm::{default_beta_grid, FarmConfig, FarmEngine};
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+use std::sync::Arc;
+
+/// Shared handler context.
+pub struct ApiCtx {
+    /// The job scheduler (also carries the stop flag the shutdown
+    /// endpoint raises).
+    pub scheduler: Arc<Scheduler>,
+    /// Serving configuration (echoed by the health endpoint).
+    pub server: ServerConfig,
+}
+
+/// Parse a submitted job spec (the POST `/v1/jobs` body) into a farm
+/// configuration, enforcing the same validation as the `ising sweep`
+/// CLI: known keys only, finite positive β, engine/geometry
+/// compatibility, workers/shards ≥ 1.
+pub fn job_config_from_json(doc: &Json) -> Result<FarmConfig> {
+    const KNOWN: &[&str] = &[
+        "size", "engine", "betas", "beta_points", "replicas", "seed", "burn_in",
+        "samples", "thin", "workers", "shards",
+    ];
+    let fields = doc.as_obj().map_err(|_| Error::Usage("job spec must be a JSON object".into()))?;
+    for key in fields.keys() {
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(Error::Usage(format!(
+                "unknown job key '{key}' (known: {})",
+                KNOWN.join(", ")
+            )));
+        }
+    }
+    let get_u64 = |key: &str, default: u64| -> Result<u64> {
+        match doc.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_u64()
+                .map_err(|_| Error::Usage(format!("job key '{key}' must be a non-negative integer"))),
+        }
+    };
+
+    let size = get_u64("size", 256)? as usize;
+    let engine = match doc.get("engine") {
+        None => FarmEngine::Multispin,
+        Some(v) => FarmEngine::parse(
+            v.as_str().map_err(|_| Error::Usage("job key 'engine' must be a string".into()))?,
+        )?,
+    };
+    let betas: Vec<f32> = match doc.get("betas") {
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .map_err(|_| Error::Usage("job key 'betas' must be an array of numbers".into()))?;
+            let mut betas = Vec::with_capacity(arr.len());
+            for item in arr {
+                let b = item.as_f64().map_err(|_| {
+                    Error::Usage("job key 'betas' must be an array of numbers".into())
+                })? as f32;
+                if !b.is_finite() || b <= 0.0 {
+                    return Err(Error::Usage(format!(
+                        "β value {b} in 'betas' must be finite and > 0"
+                    )));
+                }
+                betas.push(b);
+            }
+            if betas.is_empty() {
+                return Err(Error::Usage("'betas' needs at least one value".into()));
+            }
+            betas
+        }
+        None => {
+            // Cap before generating: a huge beta_points must fail with a
+            // 400, not an allocation.
+            let n = get_u64("beta_points", 4)?.max(1) as usize;
+            if n > super::queue::limits::MAX_BETAS {
+                return Err(Error::Usage(format!(
+                    "{n} beta_points exceed the service cap of {}",
+                    super::queue::limits::MAX_BETAS
+                )));
+            }
+            default_beta_grid(n)
+        }
+    };
+    // Same pre-allocation cap for the seed grid `FarmConfig::grid` builds.
+    let replicas = get_u64("replicas", 1)?.max(1) as usize;
+    if replicas > super::queue::limits::MAX_REPLICAS {
+        return Err(Error::Usage(format!(
+            "{replicas} replicas exceed the service cap of {}",
+            super::queue::limits::MAX_REPLICAS
+        )));
+    }
+    let seed = u32::try_from(get_u64("seed", 1)?)
+        .map_err(|_| Error::Usage("job key 'seed' must fit in u32".into()))?;
+
+    let mut cfg = FarmConfig::grid(size, betas, replicas, seed)?;
+    cfg.engine = engine;
+    cfg.burn_in = get_u64("burn_in", cfg.burn_in)?;
+    cfg.samples = get_u64("samples", cfg.samples as u64)? as usize;
+    cfg.thin = get_u64("thin", cfg.thin)?;
+    cfg.workers = get_u64("workers", 1)? as usize;
+    cfg.shards = get_u64("shards", 1)? as usize;
+
+    if cfg.workers == 0 {
+        return Err(Error::Usage("job key 'workers' must be ≥ 1".into()));
+    }
+    if cfg.shards == 0 {
+        return Err(Error::Usage("job key 'shards' must be ≥ 1".into()));
+    }
+    if cfg.samples == 0 {
+        return Err(Error::Usage("job key 'samples' must be ≥ 1".into()));
+    }
+    if cfg.engine == FarmEngine::Tensor && cfg.shards > 1 {
+        return Err(Error::Usage(
+            "'shards' applies to the multispin engine; tensor replicas are single-block"
+                .into(),
+        ));
+    }
+    // Preflight the geometry constraints the engines would reject deep
+    // inside the farm, so submitters get a 400 instead of a failed job.
+    if size < 2 || size % 2 != 0 {
+        return Err(Error::Usage(format!("'size' {size} must be even and ≥ 2")));
+    }
+    if cfg.engine == FarmEngine::Multispin && size % 32 != 0 {
+        return Err(Error::Usage(format!(
+            "engine 'multispin' needs size % 32 == 0, got {size}"
+        )));
+    }
+    // Service resource caps: one request must not be able to OOM the
+    // server (the scheduler re-checks these as a backstop).
+    super::queue::enforce_job_limits(&cfg)?;
+    Ok(cfg)
+}
+
+/// Route one request. Infallible by construction: every failure becomes
+/// a status-coded JSON body.
+pub fn handle(req: &Request, ctx: &ApiCtx) -> Response {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "jobs"]) => submit(req, ctx),
+        ("GET", ["v1", "jobs", id]) => job_status(id, ctx),
+        ("GET", ["v1", "jobs", id, "result"]) => job_result(id, ctx),
+        ("GET", ["v1", "healthz"]) => healthz(ctx),
+        ("GET", ["v1", "info"]) => info(ctx),
+        ("POST", ["v1", "shutdown"]) => {
+            ctx.scheduler.request_stop();
+            Response::json(200, &obj(vec![("status", Json::Str("stopping".into()))]))
+        }
+        // Known paths with the wrong verb get 405, everything else 404.
+        (_, ["v1", "jobs"]) | (_, ["v1", "shutdown"]) => error_response(
+            405,
+            "use POST for this endpoint",
+        ),
+        (_, ["v1", "jobs", _]) | (_, ["v1", "jobs", _, "result"])
+        | (_, ["v1", "healthz"]) | (_, ["v1", "info"]) => {
+            error_response(405, "use GET for this endpoint")
+        }
+        _ => error_response(404, &format!("no route for '{}'", req.path)),
+    }
+}
+
+fn error_response(status: u16, msg: &str) -> Response {
+    Response::json(status, &obj(vec![("error", Json::Str(msg.to_string()))]))
+}
+
+fn submit(req: &Request, ctx: &ApiCtx) -> Response {
+    let body = match req.body_str() {
+        Ok(s) => s,
+        Err(e) => return e.into_response(),
+    };
+    let doc = match Json::parse(body) {
+        Ok(d) => d,
+        Err(e) => return error_response(400, &format!("invalid JSON body: {e}")),
+    };
+    let cfg = match job_config_from_json(&doc) {
+        Ok(c) => c,
+        Err(e) => return error_response(400, &e.to_string()),
+    };
+    match ctx.scheduler.submit(cfg) {
+        Ok(Submit::Accepted { id }) => Response::json(
+            202,
+            &obj(vec![
+                ("id", Json::Str(id)),
+                ("status", Json::Str("queued".into())),
+            ]),
+        ),
+        Ok(Submit::Existing { id, status }) => Response::json(
+            200,
+            &obj(vec![
+                ("id", Json::Str(id)),
+                ("status", Json::Str(status.name().into())),
+            ]),
+        ),
+        Ok(Submit::Busy) => error_response(
+            429,
+            &format!(
+                "job queue full (depth {}) or shutting down; retry later",
+                ctx.server.queue_depth
+            ),
+        ),
+        // The scheduler's own validation backstop is caller error (400);
+        // anything else (I/O on the job store) is genuinely ours (500).
+        Err(Error::Usage(msg)) => error_response(400, &msg),
+        Err(e) => error_response(500, &e.to_string()),
+    }
+}
+
+fn job_status(id: &str, ctx: &ApiCtx) -> Response {
+    if !super::cache::is_valid_id(id) {
+        return error_response(400, "job id must be 16 lowercase hex characters");
+    }
+    match ctx.scheduler.job_summary(id) {
+        None => error_response(404, &format!("unknown job '{id}'")),
+        Some((status, engine, replicas, samples)) => {
+            let mut fields = vec![
+                ("id", Json::Str(id.to_string())),
+                ("status", Json::Str(status.name().into())),
+                ("engine", Json::Str(engine)),
+                ("replicas", Json::Num(replicas as f64)),
+                ("samples_per_replica", Json::Num(samples as f64)),
+            ];
+            if let super::queue::JobStatus::Failed(msg) = &status {
+                fields.push(("error", Json::Str(msg.clone())));
+            }
+            Response::json(200, &obj(fields))
+        }
+    }
+}
+
+fn job_result(id: &str, ctx: &ApiCtx) -> Response {
+    if !super::cache::is_valid_id(id) {
+        return error_response(400, "job id must be 16 lowercase hex characters");
+    }
+    match ctx.scheduler.status(id) {
+        None => error_response(404, &format!("unknown job '{id}'")),
+        Some(status) => match ctx.scheduler.result(id) {
+            // Byte-identical to `ising sweep --report` for this config.
+            Some(report) => Response::text(200, report),
+            None => Response::json(
+                409,
+                &obj(vec![
+                    ("id", Json::Str(id.to_string())),
+                    ("status", Json::Str(status.name().into())),
+                    ("error", Json::Str("job has no result yet".into())),
+                ]),
+            ),
+        },
+    }
+}
+
+fn healthz(ctx: &ApiCtx) -> Response {
+    let counts = ctx.scheduler.counts();
+    Response::json(
+        200,
+        &obj(vec![
+            (
+                "status",
+                Json::Str(if ctx.scheduler.stopping() { "stopping" } else { "ok" }.into()),
+            ),
+            ("queued", Json::Num(counts.queued as f64)),
+            ("running", Json::Num(counts.running as f64)),
+            ("done", Json::Num(counts.done as f64)),
+            ("failed", Json::Num(counts.failed as f64)),
+            ("passes", Json::Num(ctx.scheduler.passes() as f64)),
+            ("queue_depth", Json::Num(ctx.server.queue_depth as f64)),
+            ("workers", Json::Num(ctx.server.workers as f64)),
+        ]),
+    )
+}
+
+/// `/v1/info` — the same canonical engine registry that drives the CLI
+/// help, parse hints and `ising info`, plus the analytic constants.
+fn info(ctx: &ApiCtx) -> Response {
+    let engines: Vec<Json> = crate::config::ENGINES
+        .iter()
+        .map(|spec| {
+            obj(vec![
+                ("name", Json::Str(spec.name.to_string())),
+                ("paper", Json::Str(spec.paper.to_string())),
+                ("layout", Json::Str(spec.layout.to_string())),
+                ("rng", Json::Str(spec.rng.to_string())),
+                ("snapshot", Json::Bool(spec.snapshot)),
+                ("needs_pjrt", Json::Bool(spec.needs_pjrt)),
+                (
+                    "farm",
+                    Json::Bool(FarmEngine::parse(spec.name).is_ok()),
+                ),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &obj(vec![
+            ("name", Json::Str("ising-dgx".into())),
+            ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            ("t_c", Json::Num(crate::analytic::critical_temperature())),
+            ("beta_c", Json::Num(crate::analytic::critical_beta())),
+            ("engines", Json::Arr(engines)),
+            ("queue_depth", Json::Num(ctx.server.queue_depth as f64)),
+            ("slice_samples", match ctx.server.slice_samples {
+                Some(n) => Json::Num(n as f64),
+                None => Json::Null,
+            }),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::queue::fingerprint;
+
+    #[test]
+    fn job_spec_defaults_mirror_the_sweep_cli() {
+        let cfg = job_config_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.geom.h, 256);
+        assert_eq!(cfg.engine, FarmEngine::Multispin);
+        assert_eq!(cfg.betas, default_beta_grid(4));
+        assert_eq!(cfg.seeds, vec![1]);
+        assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.shards, 1);
+        assert!(!cfg.threaded_shards);
+    }
+
+    #[test]
+    fn job_spec_full_parse() {
+        let doc = Json::parse(
+            r#"{"size": 64, "engine": "tensor", "betas": [0.42, 0.46], "replicas": 3,
+                "seed": 7, "burn_in": 11, "samples": 13, "thin": 2, "workers": 2}"#,
+        )
+        .unwrap();
+        let cfg = job_config_from_json(&doc).unwrap();
+        assert_eq!(cfg.geom.h, 64);
+        assert_eq!(cfg.engine, FarmEngine::Tensor);
+        assert_eq!(cfg.betas, vec![0.42f32, 0.46]);
+        assert_eq!(cfg.seeds, vec![7, 8, 9]);
+        assert_eq!(cfg.burn_in, 11);
+        assert_eq!(cfg.samples, 13);
+        assert_eq!(cfg.thin, 2);
+        assert_eq!(cfg.workers, 2);
+    }
+
+    #[test]
+    fn job_spec_rejections() {
+        for bad in [
+            r#"[]"#,                                        // not an object
+            r#"{"sizes": 64}"#,                             // unknown key
+            r#"{"engine": "wolff"}"#,                       // non-farm engine
+            r#"{"engine": "tensor-fp16"}"#,                 // refused precision
+            r#"{"betas": []}"#,                             // empty grid
+            r#"{"betas": [0.0]}"#,                          // unphysical β
+            r#"{"betas": [-1]}"#,                           // unphysical β
+            r#"{"betas": "0.4"}"#,                          // wrong type
+            r#"{"size": 63}"#,                              // odd size
+            r#"{"size": 48}"#,                              // multispin % 32
+            r#"{"size": 64, "workers": 0}"#,                // zero workers
+            r#"{"size": 64, "shards": 0}"#,                 // zero shards
+            r#"{"size": 64, "samples": 0}"#,                // zero samples
+            r#"{"size": 64, "seed": 4294967296}"#,          // seed > u32
+            r#"{"size": 64, "engine": "tensor", "shards": 2}"#, // tensor sharding
+            r#"{"size": -64}"#,                             // negative size
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(job_config_from_json(&doc).is_err(), "must reject: {bad}");
+        }
+        // Tensor has no %32 constraint: 48 is fine there.
+        let ok = Json::parse(r#"{"size": 48, "engine": "tensor"}"#).unwrap();
+        assert_eq!(job_config_from_json(&ok).unwrap().geom.h, 48);
+    }
+
+    /// One request must not be able to OOM the server: the service caps
+    /// reject allocation-scale inputs at submit time (400, not a
+    /// crash-looping persisted job).
+    #[test]
+    fn job_spec_resource_caps() {
+        use crate::server::queue::limits;
+        for bad in [
+            format!(r#"{{"size": {}}}"#, (limits::MAX_SIZE + 2).next_multiple_of(32)),
+            format!(r#"{{"size": 64, "samples": {}}}"#, limits::MAX_SAMPLES + 1),
+            format!(r#"{{"size": 64, "replicas": {}}}"#, limits::MAX_REPLICAS + 1),
+            format!(r#"{{"size": 64, "workers": {}}}"#, limits::MAX_WORKERS + 1),
+            format!(r#"{{"size": 64, "shards": {}}}"#, limits::MAX_WORKERS + 1),
+            // Individually legal, jointly over the series cap.
+            format!(
+                r#"{{"size": 64, "betas": [0.44], "replicas": {}, "samples": {}}}"#,
+                limits::MAX_REPLICAS,
+                limits::MAX_SAMPLES
+            ),
+        ] {
+            let doc = Json::parse(&bad).unwrap();
+            let err = job_config_from_json(&doc).unwrap_err().to_string();
+            assert!(err.contains("cap"), "must cap-reject {bad}: {err}");
+        }
+        // The caps leave the realistic paper regime untouched.
+        let ok = Json::parse(r#"{"size": 4096, "replicas": 8, "samples": 2000}"#).unwrap();
+        assert!(job_config_from_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn equivalent_specs_share_a_fingerprint() {
+        let a = job_config_from_json(
+            &Json::parse(r#"{"size": 64, "betas": [0.44], "samples": 5}"#).unwrap(),
+        )
+        .unwrap();
+        // Different execution layout, same physics: same job key.
+        let b = job_config_from_json(
+            &Json::parse(
+                r#"{"size": 64, "betas": [0.44], "samples": 5, "workers": 4, "shards": 2}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+}

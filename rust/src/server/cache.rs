@@ -1,0 +1,157 @@
+//! Content-addressed result cache for the job service.
+//!
+//! Jobs are keyed by the farm-manifest fingerprint
+//! ([`Manifest::fingerprint`](crate::coordinator::checkpoint::Manifest) —
+//! engine/geometry/β-grid/seeds/protocol, 16 hex chars), so the key *is*
+//! the physics: duplicate submissions hit the cache instead of re-running
+//! the farm, and a result can never be served for a different grid. Each
+//! job owns one directory under the cache root:
+//!
+//! ```text
+//! <root>/<fingerprint>/job.json     canonical job spec (restart scan)
+//! <root>/<fingerprint>/ckpt/        farm checkpoint dir while running
+//! <root>/<fingerprint>/result.txt   bit-exact replica report when done
+//! ```
+//!
+//! `result.txt` is written atomically (temp + rename), so its presence is
+//! the durable "done" bit a restarted server trusts.
+
+use crate::error::Result;
+use std::path::{Path, PathBuf};
+
+/// Canonical job-spec file inside a job directory.
+pub const SPEC_FILE: &str = "job.json";
+/// Cached result file inside a job directory.
+pub const RESULT_FILE: &str = "result.txt";
+/// Farm checkpoint subdirectory inside a job directory.
+pub const CKPT_SUBDIR: &str = "ckpt";
+
+/// Is `id` a well-formed job key (16 lowercase hex chars)? Enforced
+/// before any id coming off the wire touches the filesystem, so a URL
+/// like `/v1/jobs/../../etc/result` cannot escape the cache root.
+pub fn is_valid_id(id: &str) -> bool {
+    id.len() == 16 && id.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+}
+
+/// The on-disk job store.
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    root: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating the root if missing).
+    pub fn open(root: PathBuf) -> Result<Self> {
+        std::fs::create_dir_all(&root)?;
+        Ok(Self { root })
+    }
+
+    /// Cache root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Directory owned by job `id`.
+    pub fn job_dir(&self, id: &str) -> PathBuf {
+        debug_assert!(is_valid_id(id), "job id must be validated before use");
+        self.root.join(id)
+    }
+
+    /// Farm checkpoint directory of job `id`.
+    pub fn checkpoint_dir(&self, id: &str) -> PathBuf {
+        self.job_dir(id).join(CKPT_SUBDIR)
+    }
+
+    /// Cached result of job `id`, if complete.
+    pub fn lookup(&self, id: &str) -> Option<String> {
+        std::fs::read_to_string(self.job_dir(id).join(RESULT_FILE)).ok()
+    }
+
+    /// Persist a completed job's report atomically, then drop its farm
+    /// checkpoints (the result is the durable artifact; stale snapshots
+    /// would only waste disk).
+    pub fn store(&self, id: &str, report: &str) -> Result<()> {
+        let dir = self.job_dir(id);
+        std::fs::create_dir_all(&dir)?;
+        crate::util::snapshot::atomic_write(&dir.join(RESULT_FILE), report.as_bytes())?;
+        let _ = std::fs::remove_dir_all(self.checkpoint_dir(id));
+        Ok(())
+    }
+
+    /// Persist the canonical job spec (submit time — what the restart
+    /// scan rebuilds the queue from).
+    pub fn store_spec(&self, id: &str, spec_json: &str) -> Result<()> {
+        let dir = self.job_dir(id);
+        std::fs::create_dir_all(&dir)?;
+        crate::util::snapshot::atomic_write(&dir.join(SPEC_FILE), spec_json.as_bytes())
+    }
+
+    /// Load the canonical job spec, if present.
+    pub fn load_spec(&self, id: &str) -> Option<String> {
+        std::fs::read_to_string(self.job_dir(id).join(SPEC_FILE)).ok()
+    }
+
+    /// All job ids with a persisted spec, sorted (deterministic restart
+    /// scan order). Entries that aren't well-formed ids are ignored.
+    pub fn job_ids(&self) -> Vec<String> {
+        let mut ids = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.root) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if is_valid_id(name) && entry.path().join(SPEC_FILE).is_file() {
+                    ids.push(name.to_string());
+                }
+            }
+        }
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("ising-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn id_validation_blocks_path_escapes() {
+        assert!(is_valid_id("0123456789abcdef"));
+        for bad in [
+            "", "short", "0123456789ABCDEF", "0123456789abcde/", "../../../../etc/pw",
+            "0123456789abcdefg", "xyzw456789abcdef",
+        ] {
+            assert!(!is_valid_id(bad), "must reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn store_lookup_scan_roundtrip() {
+        let root = temp_root("roundtrip");
+        let cache = ResultCache::open(root.clone()).unwrap();
+        let id = "00112233aabbccdd";
+        assert!(cache.lookup(id).is_none());
+        assert!(cache.load_spec(id).is_none());
+        assert!(cache.job_ids().is_empty());
+
+        cache.store_spec(id, "{\"h\":8}").unwrap();
+        assert_eq!(cache.load_spec(id).unwrap(), "{\"h\":8}");
+        assert_eq!(cache.job_ids(), vec![id.to_string()]);
+        // A checkpoint dir appears while running, disappears on store.
+        std::fs::create_dir_all(cache.checkpoint_dir(id)).unwrap();
+        cache.store(id, "report\n").unwrap();
+        assert_eq!(cache.lookup(id).unwrap(), "report\n");
+        assert!(!cache.checkpoint_dir(id).exists());
+
+        // Junk entries are not scanned as jobs.
+        std::fs::create_dir_all(root.join("not-a-job")).unwrap();
+        assert_eq!(cache.job_ids(), vec![id.to_string()]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,399 @@
+//! Minimal HTTP/1.1 server-side message layer over std (`ising serve`'s
+//! wire protocol — the offline image has no hyper).
+//!
+//! Scope: request line + headers + `Content-Length` bodies, with hard
+//! caps on every dimension (request-line bytes, header count and size,
+//! body bytes). Parsing consumes exactly one message — never a byte past
+//! the declared `Content-Length` — so keep-alive connections stay in
+//! sync and pipelined requests parse back-to-back. Malformed input maps
+//! onto the HTTP status the connection handler should answer with; the
+//! parser itself never panics (fuzzed in `tests/fuzz_parsers.rs`).
+
+use crate::util::json::{obj, Json};
+use std::io::{BufRead, Read, Write};
+
+/// Request-line byte cap.
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Single header-line byte cap.
+pub const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Header count cap.
+pub const MAX_HEADERS: usize = 100;
+/// Body byte cap (JSON job specs are tiny; 1 MiB is generous).
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// A parse/protocol failure mapped onto the HTTP status it produces.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpError {
+    /// Status code to answer with (400, 413, 431, 501, 505, ...).
+    pub status: u16,
+    /// Human-readable reason (becomes the JSON error body).
+    pub msg: String,
+}
+
+impl HttpError {
+    fn new(status: u16, msg: impl Into<String>) -> Self {
+        Self { status, msg: msg.into() }
+    }
+
+    /// Render as a JSON error response.
+    pub fn into_response(self) -> Response {
+        Response::json(self.status, &obj(vec![("error", Json::Str(self.msg))]))
+    }
+}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Uppercase method token (`GET`, `POST`, ...).
+    pub method: String,
+    /// Decoded path, query string stripped (always starts with `/`).
+    pub path: String,
+    /// Raw query string after `?`, if any (unused by the API, kept so
+    /// the split is lossless).
+    pub query: Option<String>,
+    /// Headers in arrival order, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes (exactly `Content-Length` of them).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Bodyless request skeleton (handler tests).
+    pub fn new(method: &str, path: &str) -> Self {
+        Self {
+            method: method.to_string(),
+            path: path.to_string(),
+            query: None,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    /// First header value by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (400 on invalid bytes).
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::new(400, "request body is not valid UTF-8"))
+    }
+
+    /// Does this request ask to close the connection after the response?
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Read one line (LF-terminated, optional CR stripped) without ever
+/// consuming past the newline, bounded at `max` bytes. `Ok(None)` means
+/// clean EOF before any byte.
+fn read_line_bounded(
+    r: &mut impl BufRead,
+    max: usize,
+    what: &str,
+) -> Result<Option<Vec<u8>>, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (found, take): (bool, usize) = {
+            let buf = r
+                .fill_buf()
+                .map_err(|e| HttpError::new(400, format!("read error in {what}: {e}")))?;
+            if buf.is_empty() {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::new(400, format!("unexpected EOF in {what}")));
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(p) => {
+                    line.extend_from_slice(&buf[..p]);
+                    (true, p + 1)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        if line.len() > max {
+            return Err(HttpError::new(431, format!("{what} exceeds {max} bytes")));
+        }
+        r.consume(take);
+        if found {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return Ok(Some(line));
+        }
+    }
+}
+
+fn ascii_line(bytes: Vec<u8>, what: &str) -> Result<String, HttpError> {
+    String::from_utf8(bytes).map_err(|_| HttpError::new(400, format!("{what} is not UTF-8")))
+}
+
+/// Read and parse one request. `Ok(None)` = the peer closed the
+/// connection cleanly before sending anything (normal keep-alive end).
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>, HttpError> {
+    // Request line: METHOD SP TARGET SP VERSION.
+    let line = match read_line_bounded(r, MAX_REQUEST_LINE, "request line")? {
+        None => return Ok(None),
+        Some(l) => ascii_line(l, "request line")?,
+    };
+    let mut parts = line.split(' ').filter(|s| !s.is_empty());
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(HttpError::new(400, format!("malformed request line '{line}'"))),
+    };
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, format!("bad method '{method}'")));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(505, format!("unsupported version '{version}'")));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::new(400, format!("bad request target '{target}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    // Headers until the empty line.
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line_bounded(r, MAX_HEADER_LINE, "header line")? {
+            None => return Err(HttpError::new(400, "unexpected EOF in headers")),
+            Some(l) => ascii_line(l, "header line")?,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::new(431, format!("more than {MAX_HEADERS} headers")));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, format!("malformed header '{line}'")))?;
+        let name = name.trim();
+        if name.is_empty() || !name.bytes().all(|b| b.is_ascii_graphic()) {
+            return Err(HttpError::new(400, format!("bad header name '{name}'")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // Body: Content-Length only (chunked is out of scope — refuse, don't
+    // desync the connection by guessing).
+    if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+        return Err(HttpError::new(501, "transfer-encoding is not supported"));
+    }
+    let mut content_length: Option<usize> = None;
+    for (n, v) in &headers {
+        if n == "content-length" {
+            let parsed: usize = v
+                .parse()
+                .map_err(|_| HttpError::new(400, format!("bad content-length '{v}'")))?;
+            match content_length {
+                Some(prev) if prev != parsed => {
+                    return Err(HttpError::new(400, "conflicting content-length headers"));
+                }
+                _ => content_length = Some(parsed),
+            }
+        }
+    }
+    let body = match content_length {
+        None | Some(0) => Vec::new(),
+        Some(n) if n > MAX_BODY => {
+            return Err(HttpError::new(413, format!("body of {n} bytes exceeds {MAX_BODY}")));
+        }
+        Some(n) => {
+            // Read exactly n bytes — never over-read past Content-Length.
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)
+                .map_err(|_| HttpError::new(400, "body shorter than content-length"))?;
+            body
+        }
+    };
+
+    Ok(Some(Request { method: method.to_string(), path, query, headers, body }))
+}
+
+/// Reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Status",
+    }
+}
+
+/// One response, always written with an explicit `Content-Length`.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// JSON response (compact + trailing newline, curl-friendly).
+    pub fn json(status: u16, doc: &Json) -> Self {
+        let mut body = doc.to_string_compact().into_bytes();
+        body.push(b'\n');
+        Self { status, content_type: "application/json", body }
+    }
+
+    /// Plain-text response; the body bytes are written verbatim (this is
+    /// what keeps the result endpoint byte-identical to the offline
+    /// report file).
+    pub fn text(status: u16, body: impl Into<Vec<u8>>) -> Self {
+        Self { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+    }
+
+    /// Serialize onto the wire.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(bytes: &[u8]) -> Result<Option<Request>, HttpError> {
+        read_request(&mut &bytes[..])
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = b"POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/jobs");
+        assert_eq!(req.query, None);
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"hello");
+        assert_eq!(req.body_str().unwrap(), "hello");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn query_split_and_lf_only_lines() {
+        // Bare-LF line endings are tolerated; query is split off.
+        let raw = b"GET /v1/jobs/ab?verbose=1 HTTP/1.0\nConnection: close\n\n";
+        let req = parse(raw).unwrap().unwrap();
+        assert_eq!(req.path, "/v1/jobs/ab");
+        assert_eq!(req.query.as_deref(), Some("verbose=1"));
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn never_consumes_past_content_length() {
+        let raw: &[u8] =
+            b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nabcTAIL";
+        let mut cursor = raw;
+        let req = read_request(&mut cursor).unwrap().unwrap();
+        assert_eq!(req.body, b"abc");
+        assert_eq!(cursor, b"TAIL", "parser must stop exactly at content-length");
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw: &[u8] = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                           GET /b HTTP/1.1\r\n\r\n";
+        let mut cursor = raw;
+        let first = read_request(&mut cursor).unwrap().unwrap();
+        let second = read_request(&mut cursor).unwrap().unwrap();
+        assert_eq!(first.path, "/a");
+        assert_eq!(second.path, "/b");
+        assert!(read_request(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn limits_are_enforced() {
+        // Oversized request line.
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(MAX_REQUEST_LINE));
+        assert_eq!(parse(long.as_bytes()).unwrap_err().status, 431);
+        // Oversized single header.
+        let long = format!("GET / HTTP/1.1\r\nA: {}\r\n\r\n", "y".repeat(MAX_HEADER_LINE));
+        assert_eq!(parse(long.as_bytes()).unwrap_err().status, 431);
+        // Too many headers.
+        let mut doc = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..=MAX_HEADERS {
+            doc.push_str(&format!("H{i}: v\r\n"));
+        }
+        doc.push_str("\r\n");
+        assert_eq!(parse(doc.as_bytes()).unwrap_err().status, 431);
+        // Declared body over the cap.
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert_eq!(parse(raw.as_bytes()).unwrap_err().status, 413);
+        // Chunked is refused, not desynced.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse(raw).unwrap_err().status, 501);
+    }
+
+    #[test]
+    fn malformed_inputs_are_clean_errors() {
+        assert!(parse(b"").unwrap().is_none(), "clean EOF is not an error");
+        for (raw, status) in [
+            (&b"GARBAGE\r\n\r\n"[..], 400),
+            (b"GET /\r\n\r\n", 400),
+            (b"get / HTTP/1.1\r\n\r\n", 400),
+            (b"GET / SPDY/3\r\n\r\n", 505),
+            (b"GET noslash HTTP/1.1\r\n\r\n", 400),
+            (b"GET / HTTP/1.1\r\nbroken header\r\n\r\n", 400),
+            (b"GET / HTTP/1.1\r\n: novalue\r\n\r\n", 400),
+            (b"POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n", 400),
+            (b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\nhi", 400),
+            (b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort", 400),
+            (b"GET / HTTP/1.1\r\nTruncated", 400),
+        ] {
+            let err = parse(raw).unwrap_err();
+            assert_eq!(err.status, status, "input: {:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let resp = Response::text(200, "body\n");
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 5\r\n"));
+        assert!(s.ends_with("\r\n\r\nbody\n"));
+        let resp = HttpError::new(413, "too big").into_response();
+        assert_eq!(resp.status, 413);
+        assert!(String::from_utf8(resp.body).unwrap().contains("too big"));
+    }
+}

@@ -1,0 +1,189 @@
+//! `ising serve` — a std-only HTTP/1.1 simulation service over the
+//! replica farm: bounded job queue with backpressure, scheduler worker
+//! pool, content-addressed result cache, and graceful shutdown that
+//! checkpoints in-flight jobs so a restarted server resumes them
+//! bit-identically.
+//!
+//! Layering (each module is independently testable):
+//!
+//! * [`http`] — wire protocol: bounded request parser + response writer.
+//! * [`api`] — the `/v1` routes and the job-spec ↔ `FarmConfig` mapping.
+//! * [`queue`] — scheduler: registry, bounded FIFO, worker pool, stop flag.
+//! * [`cache`] — content-addressed on-disk job store (fingerprint keys).
+//!
+//! The server owns no physics: jobs run through the exact same
+//! `coordinator::run_farm_checkpointed` path as the `ising sweep` CLI,
+//! which is what makes the HTTP result byte-identical to the offline
+//! `--report` file (asserted by tests and the CI smoke step).
+
+pub mod api;
+pub mod cache;
+pub mod http;
+pub mod queue;
+
+use crate::config::ServerConfig;
+use crate::error::Result;
+use api::ApiCtx;
+use queue::Scheduler;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Concurrent-connection cap; excess connections get an immediate 503.
+/// Heavy work is bounded by the job queue — this only bounds sockets.
+const MAX_CONNECTIONS: usize = 64;
+/// Requests served per keep-alive connection before closing.
+const MAX_KEEPALIVE_REQUESTS: usize = 1000;
+/// Per-socket read timeout (stuck clients can't pin handler threads).
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Accept-loop poll interval while idle (the listener is non-blocking so
+/// a shutdown request is noticed promptly).
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// A bound, ready-to-run server.
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<ApiCtx>,
+}
+
+impl Server {
+    /// Validate config, open (or rebuild from) the job store, start the
+    /// scheduler workers, and bind the listener. Jobs interrupted by a
+    /// previous shutdown are already back in the queue when this
+    /// returns.
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        cfg.validate()?;
+        let scheduler = Arc::new(Scheduler::open(&cfg)?);
+        scheduler.spawn_workers(cfg.workers);
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Server { listener, ctx: Arc::new(ApiCtx { scheduler, server: cfg }) })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Scheduler handle (tests inspect job state through it).
+    pub fn scheduler(&self) -> Arc<Scheduler> {
+        Arc::clone(&self.ctx.scheduler)
+    }
+
+    /// Serve until a shutdown is requested (`POST /v1/shutdown`), then
+    /// stop accepting, let in-flight farms checkpoint, and join the
+    /// workers. Queued/running jobs survive on disk for the next run.
+    pub fn run(self) -> Result<()> {
+        let live = Arc::new(AtomicUsize::new(0));
+        loop {
+            if self.ctx.scheduler.stopping() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if live.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
+                        let mut stream = stream;
+                        let _ = http::Response::json(
+                            503,
+                            &crate::util::json::obj(vec![(
+                                "error",
+                                crate::util::Json::Str("connection limit reached".into()),
+                            )]),
+                        )
+                        .write_to(&mut stream);
+                        continue;
+                    }
+                    live.fetch_add(1, Ordering::Relaxed);
+                    let ctx = Arc::clone(&self.ctx);
+                    let live = Arc::clone(&live);
+                    std::thread::spawn(move || {
+                        handle_connection(stream, &ctx);
+                        live.fetch_sub(1, Ordering::Relaxed);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                // Transient accept errors (ECONNABORTED etc.) must not
+                // take the service down.
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+        }
+        // Drain in-flight connection handlers (bounded) before exiting,
+        // so late responses — including the shutdown 200 itself — are
+        // not cut off by process teardown.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while live.load(Ordering::Relaxed) > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.ctx.scheduler.join();
+        Ok(())
+    }
+}
+
+/// Serve one connection: parse → route → respond, keep-alive until the
+/// peer closes, asks to close, errors, or the server starts stopping.
+fn handle_connection(stream: TcpStream, ctx: &ApiCtx) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    for _ in 0..MAX_KEEPALIVE_REQUESTS {
+        match http::read_request(&mut reader) {
+            Ok(None) => break,
+            Ok(Some(req)) => {
+                let close = req.wants_close();
+                let resp = api::handle(&req, ctx);
+                if resp.write_to(&mut writer).is_err() {
+                    break;
+                }
+                if close || ctx.scheduler.stopping() {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Answer with the mapped status, then close: after a
+                // parse error the stream position is untrustworthy.
+                let _ = e.into_response().write_to(&mut writer);
+                break;
+            }
+        }
+    }
+}
+
+/// CLI entry point: bind, announce, serve, summarize.
+pub fn serve(cfg: ServerConfig) -> Result<()> {
+    let workers = cfg.workers;
+    let depth = cfg.queue_depth;
+    let dir = cfg.checkpoint_dir.display().to_string();
+    let slice = cfg.slice_samples;
+    let server = Server::bind(cfg)?;
+    let scheduler = server.scheduler();
+    let pending = scheduler.counts();
+    println!("ising serve: listening on http://{}", server.local_addr()?);
+    println!(
+        "  scheduler: {workers} worker(s), queue depth {depth}, jobs in {dir}{}",
+        match slice {
+            Some(n) => format!(", {n}-sample fairness slice"),
+            None => String::new(),
+        }
+    );
+    if pending.queued > 0 {
+        println!(
+            "  restart: resuming {} interrupted/pending job(s) from {dir}",
+            pending.queued
+        );
+    }
+    println!("  API: POST /v1/jobs · GET /v1/jobs/{{id}}[/result] · GET /v1/healthz · GET /v1/info · POST /v1/shutdown");
+    server.run()?;
+    let counts = scheduler.counts();
+    println!(
+        "ising serve: shutdown complete ({} done, {} failed, {} checkpointed for restart)",
+        counts.done,
+        counts.failed,
+        counts.queued + counts.running
+    );
+    Ok(())
+}

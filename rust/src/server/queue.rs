@@ -1,0 +1,575 @@
+//! Bounded job queue + worker pool — the scheduler behind `ising serve`.
+//!
+//! Jobs are farm configurations keyed by their content fingerprint
+//! ([`fingerprint`]). The queue is a bounded FIFO: submissions past
+//! `queue_depth` are refused (the API layer answers 429), duplicate
+//! fingerprints dedupe onto the existing job or its cached result, and a
+//! configurable fairness slice (`slice_samples`) checkpoints + requeues
+//! long jobs so they cannot starve short ones.
+//!
+//! Every accepted job is persisted (`job.json`) before it is queued, and
+//! all execution goes through `coordinator::run_farm_checkpointed` with a
+//! per-job checkpoint directory, so the scheduler is crash-safe end to
+//! end: graceful shutdown raises the farm's cooperative stop flag
+//! (in-flight replicas checkpoint), and a restarted scheduler rebuilds
+//! its registry and queue from disk, finishing interrupted jobs
+//! **bit-identically** to an uninterrupted run (asserted by
+//! `tests/integration_server.rs`).
+
+use super::cache::ResultCache;
+use crate::config::ServerConfig;
+use crate::coordinator::checkpoint::{CheckpointSpec, Manifest, MANIFEST_FILE};
+use crate::coordinator::farm::{run_farm_checkpointed, FarmConfig, FarmEngine, FarmOutcome};
+use crate::error::{Error, Result};
+use crate::lattice::Geometry;
+use crate::util::json::{obj, Json};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Content-addressed job key: the farm-manifest fingerprint (physics +
+/// protocol; execution layout excluded).
+pub fn fingerprint(cfg: &FarmConfig) -> String {
+    Manifest::from_config(cfg).fingerprint()
+}
+
+/// Per-job resource caps. The offline CLI deliberately has none (the
+/// operator owns the machine), but one HTTP request must not be able to
+/// abort a multi-tenant server with an allocation it can never satisfy —
+/// and a persisted over-sized spec must not re-queue into a crash loop
+/// on restart, so [`decode_config`] enforces the same caps.
+pub mod limits {
+    /// Max lattice side (8192² ≈ 67 MB of spin planes per replica).
+    pub const MAX_SIZE: usize = 8192;
+    /// Max samples per replica.
+    pub const MAX_SAMPLES: usize = 1_000_000;
+    /// Max β × seed grid size.
+    pub const MAX_REPLICAS: usize = 4096;
+    /// Max β grid points.
+    pub const MAX_BETAS: usize = 1024;
+    /// Max farm workers / shards inside one job.
+    pub const MAX_WORKERS: usize = 64;
+    /// Max total recorded samples (replicas × samples; two f64 series).
+    pub const MAX_TOTAL_SAMPLES: u64 = 10_000_000;
+}
+
+/// Enforce the service's per-job caps (submit path and restart scan).
+/// Burn-in/thin are deliberately uncapped: they cost time, not memory,
+/// and time is already bounded by fairness slices + the stop flag.
+pub fn enforce_job_limits(cfg: &FarmConfig) -> Result<()> {
+    use limits::*;
+    let err = |msg: String| Err(Error::Usage(msg));
+    if cfg.geom.h.max(cfg.geom.w) > MAX_SIZE {
+        return err(format!(
+            "lattice {}x{} exceeds the service cap of {MAX_SIZE} per side",
+            cfg.geom.h, cfg.geom.w
+        ));
+    }
+    if cfg.betas.len() > MAX_BETAS {
+        return err(format!("{} β points exceed the service cap of {MAX_BETAS}", cfg.betas.len()));
+    }
+    if cfg.replica_count() > MAX_REPLICAS {
+        return err(format!(
+            "{} replicas exceed the service cap of {MAX_REPLICAS}",
+            cfg.replica_count()
+        ));
+    }
+    if cfg.samples > MAX_SAMPLES {
+        return err(format!("{} samples exceed the service cap of {MAX_SAMPLES}", cfg.samples));
+    }
+    if cfg.replica_count() as u64 * cfg.samples as u64 > MAX_TOTAL_SAMPLES {
+        return err(format!(
+            "replicas × samples = {} exceeds the service cap of {MAX_TOTAL_SAMPLES}",
+            cfg.replica_count() as u64 * cfg.samples as u64
+        ));
+    }
+    if cfg.workers > MAX_WORKERS || cfg.shards > MAX_WORKERS {
+        return err(format!("workers/shards exceed the service cap of {MAX_WORKERS}"));
+    }
+    Ok(())
+}
+
+/// Lifecycle of one job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Waiting in the queue (also the persisted state of an interrupted
+    /// job after a shutdown).
+    Queued,
+    /// A worker is running its farm right now.
+    Running,
+    /// Finished; result in the cache.
+    Done,
+    /// The farm errored (message kept for the status endpoint).
+    Failed(String),
+}
+
+impl JobStatus {
+    /// Wire name (status endpoint).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Outcome of a submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Submit {
+    /// Fresh job, persisted and enqueued.
+    Accepted {
+        /// Job id (fingerprint).
+        id: String,
+    },
+    /// Same fingerprint already known (possibly already done — the
+    /// content-addressed cache hit).
+    Existing {
+        /// Job id (fingerprint).
+        id: String,
+        /// Its current status.
+        status: JobStatus,
+    },
+    /// Queue at capacity (or shutting down): backpressure, retry later.
+    Busy,
+}
+
+/// Registry snapshot for the health endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    /// Jobs waiting.
+    pub queued: usize,
+    /// Jobs running.
+    pub running: usize,
+    /// Jobs complete.
+    pub done: usize,
+    /// Jobs failed.
+    pub failed: usize,
+}
+
+#[derive(Clone, Debug)]
+struct Job {
+    cfg: FarmConfig,
+    status: JobStatus,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<String>,
+    jobs: BTreeMap<String, Job>,
+}
+
+struct Inner {
+    cache: ResultCache,
+    every: u32,
+    slice: Option<u64>,
+    depth: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+    /// Shared with every in-flight farm via `CheckpointSpec::stop`.
+    stop: Arc<AtomicBool>,
+    /// Scheduling passes started (a slice-interrupted job counts once per
+    /// pass) — the cache-hit tests pin this to prove no re-run happened.
+    passes: AtomicU64,
+}
+
+/// The scheduler: registry + bounded queue + worker pool.
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Open a scheduler over `cfg.checkpoint_dir`, rebuilding the
+    /// registry from disk: jobs with a cached result register as done,
+    /// jobs with a persisted spec but no result re-enter the queue (in
+    /// sorted id order) and resume from their checkpoints. Workers are
+    /// *not* started here — call [`Scheduler::spawn_workers`] (the
+    /// server does; tests drive [`Scheduler::step`] deterministically).
+    pub fn open(cfg: &ServerConfig) -> Result<Self> {
+        cfg.validate()?;
+        let cache = ResultCache::open(cfg.checkpoint_dir.clone())?;
+        let mut state = State::default();
+        for id in cache.job_ids() {
+            let Some(spec) = cache.load_spec(&id) else { continue };
+            let job_cfg = match Json::parse(&spec).and_then(|doc| decode_config(&doc)) {
+                Ok(c) => c,
+                // A corrupt spec must not take the server down; the job
+                // simply isn't resumable and stays on disk for forensics.
+                Err(_) => continue,
+            };
+            if fingerprint(&job_cfg) != id {
+                continue; // spec does not match its directory: ignore
+            }
+            let status = if cache.lookup(&id).is_some() {
+                JobStatus::Done
+            } else {
+                state.queue.push_back(id.clone());
+                JobStatus::Queued
+            };
+            state.jobs.insert(id, Job { cfg: job_cfg, status });
+        }
+        Ok(Self {
+            inner: Arc::new(Inner {
+                cache,
+                every: cfg.checkpoint_every.max(1),
+                slice: cfg.slice_samples,
+                depth: cfg.queue_depth.max(1),
+                state: Mutex::new(state),
+                cv: Condvar::new(),
+                stop: Arc::new(AtomicBool::new(false)),
+                passes: AtomicU64::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Start `n` worker threads.
+    pub fn spawn_workers(&self, n: usize) {
+        let mut handles = self.handles.lock().expect("scheduler handles poisoned");
+        for _ in 0..n.max(1) {
+            let inner = Arc::clone(&self.inner);
+            handles.push(std::thread::spawn(move || worker_loop(&inner)));
+        }
+    }
+
+    /// Submit a job. Persists + enqueues fresh fingerprints, dedupes
+    /// known ones (a completed fingerprint is an immediate cache hit —
+    /// no second farm run), and refuses when the queue is full or the
+    /// scheduler is stopping.
+    pub fn submit(&self, cfg: FarmConfig) -> Result<Submit> {
+        enforce_job_limits(&cfg)?;
+        let id = fingerprint(&cfg);
+        let mut st = self.inner.state.lock().expect("scheduler state poisoned");
+        if let Some(status) = st.jobs.get(&id).map(|j| j.status.clone()) {
+            // Failed jobs are retryable: resubmission re-queues them
+            // (mirroring what a restart scan would do) when there is
+            // queue room; everything else dedupes onto the live entry.
+            if matches!(status, JobStatus::Failed(_))
+                && !self.stopping()
+                && st.queue.len() < self.inner.depth
+            {
+                if let Some(job) = st.jobs.get_mut(&id) {
+                    job.status = JobStatus::Queued;
+                }
+                st.queue.push_back(id.clone());
+                self.inner.cv.notify_one();
+                return Ok(Submit::Existing { id, status: JobStatus::Queued });
+            }
+            return Ok(Submit::Existing { id, status });
+        }
+        // Result on disk from a previous server life whose spec file was
+        // lost: still a hit (the report is the durable artifact).
+        if self.inner.cache.lookup(&id).is_some() {
+            st.jobs.insert(id.clone(), Job { cfg, status: JobStatus::Done });
+            return Ok(Submit::Existing { id, status: JobStatus::Done });
+        }
+        if self.stopping() || st.queue.len() >= self.inner.depth {
+            return Ok(Submit::Busy);
+        }
+        self.inner
+            .cache
+            .store_spec(&id, &encode_config(&cfg).to_string_pretty())?;
+        st.jobs.insert(id.clone(), Job { cfg, status: JobStatus::Queued });
+        st.queue.push_back(id.clone());
+        self.inner.cv.notify_one();
+        Ok(Submit::Accepted { id })
+    }
+
+    /// Current status of a job, if known.
+    pub fn status(&self, id: &str) -> Option<JobStatus> {
+        let st = self.inner.state.lock().expect("scheduler state poisoned");
+        st.jobs.get(id).map(|j| j.status.clone())
+    }
+
+    /// Replica-grid size of a job, if known (status endpoint detail).
+    pub fn job_summary(&self, id: &str) -> Option<(JobStatus, String, usize, usize)> {
+        let st = self.inner.state.lock().expect("scheduler state poisoned");
+        st.jobs.get(id).map(|j| {
+            (
+                j.status.clone(),
+                j.cfg.engine.name().to_string(),
+                j.cfg.replica_count(),
+                j.cfg.samples,
+            )
+        })
+    }
+
+    /// Cached result of a completed job.
+    pub fn result(&self, id: &str) -> Option<String> {
+        self.inner.cache.lookup(id)
+    }
+
+    /// Registry counts for the health endpoint.
+    pub fn counts(&self) -> Counts {
+        let st = self.inner.state.lock().expect("scheduler state poisoned");
+        let mut c = Counts::default();
+        for job in st.jobs.values() {
+            match job.status {
+                JobStatus::Queued => c.queued += 1,
+                JobStatus::Running => c.running += 1,
+                JobStatus::Done => c.done += 1,
+                JobStatus::Failed(_) => c.failed += 1,
+            }
+        }
+        c
+    }
+
+    /// Scheduling passes started so far (test/diagnostic hook).
+    pub fn passes(&self) -> u64 {
+        self.inner.passes.load(Ordering::Relaxed)
+    }
+
+    /// Run at most one scheduling pass synchronously; `false` if the
+    /// queue was empty. Deterministic test hook — the worker threads
+    /// run exactly this against the condvar.
+    pub fn step(&self) -> bool {
+        let id = {
+            let mut st = self.inner.state.lock().expect("scheduler state poisoned");
+            match st.queue.pop_front() {
+                Some(id) => id,
+                None => return false,
+            }
+        };
+        run_pass(&self.inner, &id);
+        true
+    }
+
+    /// Raise the cooperative stop flag: workers stop claiming jobs,
+    /// in-flight farms checkpoint at the next sample boundary, and
+    /// [`Scheduler::join`] then returns promptly. Queued jobs stay
+    /// persisted and re-enter the queue on the next [`Scheduler::open`].
+    pub fn request_stop(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.cv.notify_all();
+    }
+
+    /// Has a stop been requested?
+    pub fn stopping(&self) -> bool {
+        self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    /// Join all worker threads (after [`Scheduler::request_stop`]).
+    pub fn join(&self) {
+        let handles: Vec<_> = {
+            let mut guard = self.handles.lock().expect("scheduler handles poisoned");
+            guard.drain(..).collect()
+        };
+        for handle in handles {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Arc<Inner>) {
+    loop {
+        let id = {
+            let mut st = inner.state.lock().expect("scheduler state poisoned");
+            loop {
+                if inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(id) = st.queue.pop_front() {
+                    break id;
+                }
+                st = inner.cv.wait(st).expect("scheduler state poisoned");
+            }
+        };
+        run_pass(inner, &id);
+    }
+}
+
+/// One scheduling pass over job `id`: resume (or start) its farm,
+/// bounded by the fairness slice and the stop flag; completed farms cache
+/// their report, interrupted ones requeue (unless stopping — then the
+/// persisted spec + checkpoints carry them across the restart).
+fn run_pass(inner: &Inner, id: &str) {
+    inner.passes.fetch_add(1, Ordering::Relaxed);
+    let cfg = {
+        let mut st = inner.state.lock().expect("scheduler state poisoned");
+        let Some(job) = st.jobs.get_mut(id) else { return };
+        job.status = JobStatus::Running;
+        job.cfg.clone()
+    };
+    let ckdir = inner.cache.checkpoint_dir(id);
+    let spec = CheckpointSpec {
+        resume: ckdir.join(MANIFEST_FILE).is_file(),
+        sample_budget: inner.slice,
+        stop: Some(Arc::clone(&inner.stop)),
+        ..CheckpointSpec::new(ckdir, inner.every)
+    };
+    // A panicking engine must cost one job, not a worker thread (an
+    // unwound worker would silently shrink the pool and leave the job
+    // stuck in `running` forever). No scheduler lock is held here, so
+    // catching the unwind cannot poison shared state.
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_farm_checkpointed(&cfg, Some(&spec))
+    }))
+    .unwrap_or_else(|panic| {
+        let msg = if let Some(s) = panic.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = panic.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        };
+        Err(Error::Coordinator(format!("job panicked: {msg}")))
+    });
+    let mut st = inner.state.lock().expect("scheduler state poisoned");
+    let Some(job) = st.jobs.get_mut(id) else { return };
+    match outcome {
+        Ok(FarmOutcome::Complete(result)) => {
+            match inner.cache.store(id, &result.replica_report()) {
+                Ok(()) => job.status = JobStatus::Done,
+                Err(e) => job.status = JobStatus::Failed(format!("result store: {e}")),
+            }
+        }
+        Ok(FarmOutcome::Interrupted { .. }) => {
+            // Slice exhausted or shutting down: progress is checkpointed.
+            job.status = JobStatus::Queued;
+            if !inner.stop.load(Ordering::Relaxed) {
+                st.queue.push_back(id.to_string());
+                inner.cv.notify_one();
+            }
+        }
+        Err(e) => job.status = JobStatus::Failed(e.to_string()),
+    }
+}
+
+/// Canonical persisted job spec. β values are stored as exact f32 bit
+/// patterns (`betas_bits`) alongside readable decimals, so a restarted
+/// server rebuilds the *identical* grid — the fingerprint check in
+/// [`Scheduler::open`] would reject any drift.
+pub fn encode_config(cfg: &FarmConfig) -> Json {
+    obj(vec![
+        ("engine", Json::Str(cfg.engine.name().to_string())),
+        ("h", Json::Num(cfg.geom.h as f64)),
+        ("w", Json::Num(cfg.geom.w as f64)),
+        (
+            "betas_bits",
+            Json::Arr(cfg.betas.iter().map(|b| Json::Num(b.to_bits() as f64)).collect()),
+        ),
+        (
+            "betas",
+            Json::Arr(cfg.betas.iter().map(|b| Json::Num(*b as f64)).collect()),
+        ),
+        ("seeds", Json::Arr(cfg.seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
+        ("burn_in", Json::Num(cfg.burn_in as f64)),
+        ("samples", Json::Num(cfg.samples as f64)),
+        ("thin", Json::Num(cfg.thin as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("shards", Json::Num(cfg.shards as f64)),
+    ])
+}
+
+/// Parse a canonical persisted job spec back into a farm configuration.
+pub fn decode_config(doc: &Json) -> Result<FarmConfig> {
+    let u32s = |key: &str| -> Result<Vec<u32>> {
+        doc.field(key)?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_u64().map(|n| n as u32))
+            .collect()
+    };
+    let engine = FarmEngine::parse(doc.field("engine")?.as_str()?)?;
+    let geom = Geometry::new(doc.field("h")?.as_usize()?, doc.field("w")?.as_usize()?)?;
+    let betas: Vec<f32> = u32s("betas_bits")?.into_iter().map(f32::from_bits).collect();
+    if betas.is_empty() {
+        return Err(Error::Config("job spec has an empty β grid".into()));
+    }
+    let cfg = FarmConfig {
+        geom,
+        betas,
+        seeds: u32s("seeds")?,
+        shards: doc.field("shards")?.as_usize()?,
+        workers: doc.field("workers")?.as_usize()?,
+        burn_in: doc.field("burn_in")?.as_u64()?,
+        samples: doc.field("samples")?.as_usize()?,
+        thin: doc.field("thin")?.as_u64()?,
+        threaded_shards: false,
+        engine,
+    };
+    // A hand-edited or legacy over-cap spec must not re-queue into a
+    // crash loop on restart: the scan treats it like a corrupt spec.
+    enforce_job_limits(&cfg)?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::cache::CKPT_SUBDIR;
+
+    fn small_cfg() -> FarmConfig {
+        FarmConfig {
+            geom: Geometry::new(8, 32).unwrap(),
+            betas: vec![0.42, 0.44],
+            seeds: vec![1, 2],
+            shards: 1,
+            workers: 1,
+            burn_in: 2,
+            samples: 3,
+            thin: 1,
+            threaded_shards: false,
+            engine: FarmEngine::Multispin,
+        }
+    }
+
+    #[test]
+    fn config_json_roundtrip_is_exact() {
+        let cfg = small_cfg();
+        let doc = encode_config(&cfg);
+        let back = decode_config(&Json::parse(&doc.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.geom.h, cfg.geom.h);
+        assert_eq!(back.geom.w, cfg.geom.w);
+        assert_eq!(
+            back.betas.iter().map(|b| b.to_bits()).collect::<Vec<_>>(),
+            cfg.betas.iter().map(|b| b.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.seeds, cfg.seeds);
+        assert_eq!(back.engine, cfg.engine);
+        assert_eq!(back.samples, cfg.samples);
+        assert_eq!(fingerprint(&back), fingerprint(&cfg));
+    }
+
+    #[test]
+    fn fingerprint_ignores_execution_layout() {
+        let a = small_cfg();
+        let mut b = small_cfg();
+        b.workers = 8;
+        b.shards = 2;
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        let mut c = small_cfg();
+        c.betas[0] = 0.43;
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        assert!(super::super::cache::is_valid_id(&fingerprint(&a)));
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_specs() {
+        for bad in [
+            r#"{"engine":"multispin"}"#,
+            r#"{"engine":"wolff","h":8,"w":32,"betas_bits":[1],"seeds":[1],
+                "burn_in":1,"samples":1,"thin":1,"workers":1,"shards":1}"#,
+            r#"{"engine":"multispin","h":8,"w":32,"betas_bits":[],"seeds":[1],
+                "burn_in":1,"samples":1,"thin":1,"workers":1,"shards":1}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(decode_config(&doc).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn ckpt_subdir_constant_matches_cache_layout() {
+        // run_pass builds its CheckpointSpec from the cache's layout;
+        // keep the two modules agreeing on the directory name.
+        let cache = ResultCache::open(
+            std::env::temp_dir().join(format!("ising-q-{}", std::process::id())),
+        )
+        .unwrap();
+        let id = "0000000000000000";
+        assert!(cache.checkpoint_dir(id).ends_with(CKPT_SUBDIR));
+        let _ = std::fs::remove_dir_all(cache.root());
+    }
+}

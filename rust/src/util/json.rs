@@ -85,6 +85,38 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// Expect a non-negative integer-valued number (exact up to 2^53).
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 || n < 0.0 || n > 9.007199254740992e15 {
+            return Err(Error::Json { offset: 0, msg: format!("expected u64, got {n}") });
+        }
+        Ok(n as u64)
+    }
+
+    /// Expect a boolean.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => Err(Error::Json { offset: 0, msg: format!("expected bool, got {self:?}") }),
+        }
+    }
+
+    /// Walk a dotted path (`"jobs.0.status"`): object segments index by
+    /// key, array segments by decimal position. `None` on any miss, so
+    /// handlers and tests stop pattern-matching nested documents by hand.
+    pub fn path(&self, dotted: &str) -> Option<&Json> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            cur = match cur {
+                Json::Obj(m) => m.get(part)?,
+                Json::Arr(v) => v.get(part.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
     /// Required object field.
     pub fn field(&self, key: &str) -> Result<&Json> {
         self.get(key)
@@ -416,5 +448,25 @@ mod tests {
         assert!(v.as_obj().is_err());
         assert!(Json::parse("1.5").unwrap().as_usize().is_err());
         assert!(Json::parse("-2").unwrap().as_usize().is_err());
+        assert!(Json::parse("-2").unwrap().as_u64().is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Json::parse("3").unwrap().as_bool().is_err());
+        assert_eq!(Json::parse("12345678901234").unwrap().as_u64().unwrap(), 12345678901234);
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn dotted_path_walks_objects_and_arrays() {
+        let v = Json::parse(
+            r#"{"jobs": [{"id": "ab", "status": "done", "n": 3}], "depth": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(v.path("jobs.0.status").unwrap().as_str().unwrap(), "done");
+        assert_eq!(v.path("jobs.0.n").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(v.path("depth").unwrap().as_usize().unwrap(), 4);
+        assert!(v.path("jobs.1.status").is_none());
+        assert!(v.path("jobs.x").is_none());
+        assert!(v.path("depth.more").is_none());
+        assert!(v.path("missing").is_none());
     }
 }

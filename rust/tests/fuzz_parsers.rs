@@ -2,6 +2,7 @@
 //! must never panic, and valid documents must round-trip.
 
 use ising_dgx::config::Toml;
+use ising_dgx::server::http::{read_request, MAX_BODY, MAX_HEADERS, MAX_REQUEST_LINE};
 use ising_dgx::util::json::{obj, Json};
 use ising_dgx::util::proptest::{check, Gen};
 
@@ -84,4 +85,109 @@ fn json_helper_obj_builder() {
     let j = obj(vec![("a", Json::Num(1.0)), ("b", Json::Str("x".into()))]);
     let s = j.to_string_compact();
     assert_eq!(Json::parse(&s).unwrap(), j);
+}
+
+// ---------------------------------------------------------------------
+// HTTP request parser (server::http) — arbitrary bytes must produce
+// Ok/Err, never a panic, and the parser must never read past the
+// declared Content-Length.
+
+fn random_http_bytes(g: &mut Gen, max: usize) -> Vec<u8> {
+    let n = g.int_in(0, max as i64) as usize;
+    (0..n)
+        .map(|_| {
+            // Bias toward HTTP structural bytes to reach deep parser paths.
+            match g.int_in(0, 11) {
+                0 => b'\r',
+                1 => b'\n',
+                2 => b':',
+                3 => b' ',
+                4 => b'/',
+                5 => b'?',
+                6 => 0x00,
+                7 => 0xff,
+                _ => g.int_in(32, 126) as u8,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn http_parser_never_panics_on_random_bytes() {
+    check("http fuzz", 500, |g| {
+        let bytes = random_http_bytes(g, 300);
+        let _ = read_request(&mut &bytes[..]); // Ok or Err, never panic
+    });
+}
+
+#[test]
+fn http_parser_never_panics_on_mutated_valid_requests() {
+    check("http mutate", 300, |g| {
+        let mut bytes = format!(
+            "POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            g.int_in(0, 40),
+            "b".repeat(g.int_in(0, 40) as usize),
+        )
+        .into_bytes();
+        // Flip a few bytes, sometimes truncate.
+        for _ in 0..g.int_in(0, 4) {
+            let i = g.int_in(0, bytes.len() as i64 - 1) as usize;
+            bytes[i] = g.int_in(0, 255) as u8;
+        }
+        bytes.truncate(g.int_in(0, bytes.len() as i64) as usize);
+        let _ = read_request(&mut &bytes[..]);
+    });
+}
+
+#[test]
+fn http_truncated_requests_error_cleanly() {
+    let full = b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+    let parsed = read_request(&mut &full[..]).unwrap().unwrap();
+    assert_eq!(parsed.body, b"body");
+    // Every strict prefix is a clean error (or clean EOF when empty) —
+    // never a panic, never a short body passed off as complete.
+    for cut in 0..full.len() {
+        match read_request(&mut &full[..cut]) {
+            Ok(None) => assert_eq!(cut, 0, "only the empty prefix is clean EOF"),
+            Ok(Some(req)) => panic!("prefix {cut} parsed as complete: {req:?}"),
+            Err(e) => assert!(e.status >= 400, "prefix {cut}: {e:?}"),
+        }
+    }
+}
+
+#[test]
+fn http_oversized_inputs_are_rejected_not_buffered() {
+    // Request line past the cap: rejected with 431 without slurping the
+    // (here unbounded-looking) remainder.
+    let mut raw = Vec::new();
+    raw.extend_from_slice(b"GET /");
+    raw.extend(std::iter::repeat(b'a').take(MAX_REQUEST_LINE + 10));
+    let err = read_request(&mut &raw[..]).unwrap_err();
+    assert_eq!(err.status, 431);
+    // Header flood past the count cap.
+    let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+    for i in 0..=MAX_HEADERS {
+        raw.extend_from_slice(format!("X-{i}: v\r\n").as_bytes());
+    }
+    raw.extend_from_slice(b"\r\n");
+    assert_eq!(read_request(&mut &raw[..]).unwrap_err().status, 431);
+    // Declared body beyond the cap: refused before reading it.
+    let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+    assert_eq!(read_request(&mut raw.as_bytes()).unwrap_err().status, 413);
+}
+
+#[test]
+fn http_parser_never_overreads_content_length() {
+    check("http over-read", 100, |g| {
+        let body_len = g.int_in(0, 64) as usize;
+        let body: String = (0..body_len).map(|_| 'x').collect();
+        let tail = format!("TAIL{}", g.int_in(0, 1000));
+        let raw = format!(
+            "POST /v1/jobs HTTP/1.1\r\nContent-Length: {body_len}\r\n\r\n{body}{tail}"
+        );
+        let mut cursor = raw.as_bytes();
+        let req = read_request(&mut cursor).unwrap().unwrap();
+        assert_eq!(req.body.len(), body_len);
+        assert_eq!(cursor, tail.as_bytes(), "bytes after the body must stay unread");
+    });
 }

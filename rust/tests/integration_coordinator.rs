@@ -252,10 +252,8 @@ fn interrupted_farm_resumes_bit_identically() {
     // Pass 1: a 5-sample budget against the 4 × 8 = 32 samples the grid
     // needs — guaranteed interruption, possibly mid-burn-in.
     let spec = CheckpointSpec {
-        dir: dir.clone(),
-        every: 2,
-        resume: false,
         sample_budget: Some(5),
+        ..CheckpointSpec::new(dir.clone(), 2)
     };
     match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
         FarmOutcome::Interrupted { total, .. } => assert_eq!(total, 4),
@@ -295,10 +293,8 @@ fn tensor_farm_interrupt_resume_bit_identical() {
 
     let dir = ckpt_temp_dir("tensor-resume");
     let spec = CheckpointSpec {
-        dir: dir.clone(),
-        every: 2,
-        resume: false,
         sample_budget: Some(5),
+        ..CheckpointSpec::new(dir.clone(), 2)
     };
     match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
         FarmOutcome::Interrupted { total, .. } => assert_eq!(total, 4),
@@ -327,12 +323,7 @@ fn tensor_farm_interrupt_resume_bit_identical() {
 fn completed_checkpoint_dir_reloads_identically() {
     let cfg = ckpt_cfg();
     let dir = ckpt_temp_dir("reload");
-    let spec = CheckpointSpec {
-        dir: dir.clone(),
-        every: 4,
-        resume: false,
-        sample_budget: None,
-    };
+    let spec = CheckpointSpec::new(dir.clone(), 4);
     let first = match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
         FarmOutcome::Complete(r) => r,
         FarmOutcome::Interrupted { .. } => panic!("unbudgeted run must complete"),
@@ -354,10 +345,8 @@ fn checkpoint_dir_misuse_is_rejected() {
     let cfg = ckpt_cfg();
     let dir = ckpt_temp_dir("misuse");
     let spec = CheckpointSpec {
-        dir: dir.clone(),
-        every: 1,
-        resume: false,
         sample_budget: Some(3),
+        ..CheckpointSpec::new(dir.clone(), 1)
     };
     // Resume before any run: refused.
     let premature = CheckpointSpec { resume: true, ..spec.clone() };
