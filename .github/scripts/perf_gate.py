@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the quick-mode bench JSON reports.
+
+Flattens every report's `rows` into `bench/field/row-key` metrics (all of
+them higher-is-better rates or ratios), diffs them against the committed
+`benches/baseline.json` floors, and gates:
+
+  * current < baseline * (1 - warn_pct/100)  -> warning  (default 10%)
+  * current < baseline * (1 - fail_pct/100)  -> failure  (default 25%)
+
+Only metrics present in BOTH the baseline and the current reports are
+gated, so adding a bench row never breaks CI retroactively; a baseline
+metric that vanished from the reports is itself a warning (a silently
+dropped measurement is how regressions hide).
+
+Usage:
+  perf_gate.py BASELINE REPORT [REPORT...] [--out MERGED]
+  perf_gate.py BASELINE REPORT [REPORT...] --update-baseline [--margin PCT]
+
+`--out` additionally writes one merged artifact (the BENCH_ci.json CI
+uploads). `--update-baseline` rewrites the baseline's metric floors from
+the current run, scaled down by `--margin` (default 40%) so shared-runner
+jitter on slower machines does not flap the gate — see README "CI".
+"""
+
+import argparse
+import json
+import sys
+
+ROW_KEY_FIELDS = ("replicas", "lattice", "size", "workers")
+
+
+def flatten(report):
+    """One report dict -> {metric_name: value} over its numeric row fields."""
+    name = report.get("bench", "unknown")
+    metrics = {}
+    for row in report.get("rows", []):
+        key_field = next((f for f in ROW_KEY_FIELDS if f in row), None)
+        key = row.get(key_field) if key_field else "?"
+        if isinstance(key, float) and key.is_integer():
+            key = int(key)
+        for field, value in row.items():
+            if field == key_field:
+                continue
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                continue
+            metrics[f"{name}/{field}/{key}"] = float(value)
+    return metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("reports", nargs="+")
+    ap.add_argument("--out", help="write the merged BENCH_ci.json artifact here")
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline floors from this run instead of gating",
+    )
+    ap.add_argument(
+        "--margin",
+        type=float,
+        default=40.0,
+        help="safety margin (pct) below the measured values for --update-baseline",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    warn_pct = float(baseline.get("warn_pct", 10))
+    fail_pct = float(baseline.get("fail_pct", 25))
+
+    current = {}
+    loaded_reports = {}
+    for path in args.reports:
+        with open(path) as fh:
+            report = json.load(fh)
+        loaded_reports[report.get("bench", path)] = report
+        current.update(flatten(report))
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(
+                {"metrics": current, "reports": loaded_reports}, fh, indent=2, sort_keys=True
+            )
+            fh.write("\n")
+        print(f"merged artifact -> {args.out} ({len(current)} metrics)")
+
+    if args.update_baseline:
+        floors = {
+            k: round(v * (1.0 - args.margin / 100.0), 6) for k, v in sorted(current.items())
+        }
+        baseline["metrics"] = floors
+        with open(args.baseline, "w") as fh:
+            json.dump(baseline, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline rewritten with {len(floors)} floors (margin {args.margin}%)")
+        return 0
+
+    failures, warnings = [], []
+    for key, base in sorted(baseline.get("metrics", {}).items()):
+        if base <= 0:
+            continue
+        if key not in current:
+            warnings.append(f"{key}: baselined at {base} but absent from this run")
+            continue
+        cur = current[key]
+        drop = (base - cur) / base * 100.0
+        line = f"{key}: {cur:.4g} vs baseline floor {base:.4g} ({drop:+.1f}% below floor)"
+        if cur < base * (1.0 - fail_pct / 100.0):
+            failures.append(line)
+        elif cur < base * (1.0 - warn_pct / 100.0):
+            warnings.append(line)
+        else:
+            print(f"ok   {key}: {cur:.4g} (floor {base:.4g})")
+
+    for w in warnings:
+        print(f"::warning title=perf regression::{w}")
+    for f in failures:
+        print(f"::error title=perf regression::{f}")
+    if failures:
+        print(f"perf gate: {len(failures)} metric(s) regressed > {fail_pct}% below baseline")
+        return 1
+    print(
+        f"perf gate: clean ({len(warnings)} warning(s); "
+        f"thresholds warn>{warn_pct}% fail>{fail_pct}%)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

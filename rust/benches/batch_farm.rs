@@ -1,0 +1,88 @@
+//! batch_farm — farm throughput of the bit-sliced 64-replica batch
+//! engine vs the per-replica multi-spin farm, at 16/32/64-replica
+//! single-β grids (the Block et al. arXiv:1007.3726 replica-batching
+//! axis applied to our farm workload).
+//!
+//! Both farms run with **one worker**, so the comparison isolates the
+//! batching lever itself (per-worker throughput) rather than thread
+//! scaling — multi-worker scaling is table4's subject. The headline
+//! number is aggregate flips/ns against wall clock: the batch farm
+//! advances all replicas of a group per instruction, so its rate should
+//! exceed the per-replica multispin farm by well over the 4× the CI
+//! perf gate's baseline floor encodes (one u64 update drives 64
+//! replicas vs 16 same-replica nibbles).
+
+use ising_dgx::coordinator::farm::{run_farm, FarmConfig, FarmEngine};
+use ising_dgx::lattice::Geometry;
+use ising_dgx::util::bench::{quick_mode, write_report};
+use ising_dgx::util::json::{obj, Json};
+use ising_dgx::util::{units, Table};
+
+/// One farm measurement: aggregate wall-clock flips/ns.
+fn farm_rate(engine: FarmEngine, size: usize, replicas: usize, samples: usize, thin: u64) -> f64 {
+    let cfg = FarmConfig {
+        geom: Geometry::square(size).unwrap(),
+        betas: vec![ising_dgx::coordinator::farm::BETA_C],
+        seeds: (0..replicas as u32).map(|r| 1 + r).collect(),
+        shards: 1,
+        workers: 1,
+        burn_in: 0,
+        samples,
+        thin,
+        threaded_shards: false,
+        engine,
+    };
+    let result = run_farm(&cfg).expect("bench farm must run");
+    result.flips_per_ns_wall()
+}
+
+fn main() {
+    let quick = quick_mode();
+    // Quick mode keeps CI fast; full mode is the real measurement.
+    let (size, samples, thin) = if quick { (128, 8, 8) } else { (256, 16, 16) };
+    let replica_grids: &[usize] = &[16, 32, 64];
+
+    let mut table = Table::new(&[
+        "replicas", "multispin farm", "batch farm", "speedup",
+    ])
+    .with_title(format!(
+        "batch_farm — single-β {size}² grids, 1 worker, flips/ns (wall)"
+    )
+    .as_str());
+    let mut rows = Vec::new();
+    for &replicas in replica_grids {
+        let multispin = farm_rate(FarmEngine::Multispin, size, replicas, samples, thin);
+        let batch = farm_rate(FarmEngine::Batch, size, replicas, samples, thin);
+        let speedup = batch / multispin;
+        table.row(&[
+            replicas.to_string(),
+            units::fmt_rate(multispin),
+            units::fmt_rate(batch),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(obj(vec![
+            ("replicas", Json::Num(replicas as f64)),
+            ("multispin_flips_ns", Json::Num(multispin)),
+            ("batch_flips_ns", Json::Num(batch)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    table.print();
+    println!(
+        "shape checks — batch ≥ 4x multispin at 64 replicas (one u64 update drives 64\n\
+         replicas vs 16 same-replica nibbles); speedup grows with replica count as\n\
+         lane occupancy fills."
+    );
+
+    let _ = write_report(
+        "batch_farm",
+        &obj(vec![
+            ("bench", Json::Str("batch_farm".into())),
+            ("size", Json::Num(size as f64)),
+            ("samples", Json::Num(samples as f64)),
+            ("thin", Json::Num(thin as f64)),
+            ("workers", Json::Num(1.0)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+}

@@ -1,0 +1,342 @@
+//! Replica-batched bit-sliced Metropolis — the Block, Virnau & Preis
+//! multi-spin scheme (arXiv:1007.3726) over the *batch* axis: each u64
+//! word holds the same site of 64 independent replicas
+//! ([`BitplaneLattice`]), neighbor sums are carry-save full adders over
+//! whole words ([`csa4`]), and acceptance is branchless boolean mask
+//! algebra against the existing integer Philox thresholds.
+//!
+//! # RNG convention (the Block et al. decorrelation scheme)
+//!
+//! **One draw per site drives all 64 lanes.** The stream is the shared
+//! Philox site-group convention — `site_group(stream_seed, color, row,
+//! k/4, sweep)`, lane `k % 4` — with a single *stream seed* for the whole
+//! batch (by convention the first lane's seed). Replicas decorrelate
+//! through their **initial conditions**: lane `r` starts from
+//! `init::hot(geom, lane_seeds[r])`. Consequently lane `r`'s trajectory
+//! is bit-identical to a scalar engine whose lattice was initialized
+//! from `lane_seeds[r]` but whose acceptance stream uses the batch's
+//! stream seed — the property test in `tests/properties.rs` asserts
+//! exactly this, per lane, over random geometries/β/seeds.
+//!
+//! Sharing the draw across lanes is what makes the batch one-draw-cheap,
+//! but it also correlates same-β replicas (lanes can coalesce and then
+//! travel together — the coupling-from-the-past effect); the farm
+//! therefore reports batched grids as their own RNG convention rather
+//! than pretending the lanes match per-replica `--engine multispin`
+//! runs. See README "Batched replicas".
+
+use super::acceptance::AcceptanceTable;
+use crate::error::Result;
+use crate::lattice::bitplane::{csa4, BitplaneLattice};
+use crate::lattice::{Color, Geometry};
+use crate::rng::philox::site_group;
+
+/// Replica lanes per word (re-exported for callers of the batch path).
+pub use crate::lattice::bitplane::LANES;
+
+/// All-ones/all-zeros lane mask from a boolean.
+#[inline(always)]
+fn mask(b: bool) -> u64 {
+    0u64.wrapping_sub(b as u64)
+}
+
+/// Update one color plane of all 64 replicas for sweep `step`.
+///
+/// Per site: four word loads, one carry-save neighbor sum, one shared
+/// 24-bit draw compared against the ten tabulated thresholds, and a
+/// branchless mask select — every lane's Metropolis decision lands in
+/// one XOR.
+pub fn update_color(
+    lat: &mut BitplaneLattice,
+    color: Color,
+    table: &AcceptanceTable,
+    seed: u32,
+    step: u32,
+) {
+    let g = lat.geometry();
+    let w2 = g.w2();
+    let h = g.h;
+    // Hoisted threshold rows: th0 = σ01 = 0 (down spins), th1 = up.
+    let th0 = table.thresh[0];
+    let th1 = table.thresh[1];
+    let color_tag = color.index() as u32;
+    let (target, source) = lat.split_planes(color);
+    for gi in 0..h {
+        let up = (if gi == 0 { h - 1 } else { gi - 1 }) * w2;
+        let down = (if gi + 1 == h { 0 } else { gi + 1 }) * w2;
+        let row = gi * w2;
+        let q = (gi + color.index()) % 2;
+        let up_row = &source[up..up + w2];
+        let down_row = &source[down..down + w2];
+        let ctr_row = &source[row..row + w2];
+        let tgt_row = &mut target[row..row + w2];
+        let mut k = 0usize;
+        while k < w2 {
+            // One Philox block serves four consecutive color columns —
+            // the same site-group convention as every other engine; the
+            // draw for column k is shared by all 64 replica lanes.
+            let lanes = site_group(seed, color_tag, gi as u32, (k >> 2) as u32, step);
+            let kend = (k + 4).min(w2);
+            while k < kend {
+                let side = if q == 0 {
+                    if k == 0 {
+                        w2 - 1
+                    } else {
+                        k - 1
+                    }
+                } else if k + 1 == w2 {
+                    0
+                } else {
+                    k + 1
+                };
+                // Bit-sliced neighbor sum s = s0 + 2·s1 + 4·s2 per lane.
+                let (s0, s1, s2) =
+                    csa4(up_row[k], down_row[k], ctr_row[k], ctr_row[side]);
+                // One-hot lane masks for s = 0..4 (s2 ⇒ s0 = s1 = 0).
+                let eq0 = !(s0 | s1 | s2);
+                let eq1 = s0 & !s1;
+                let eq2 = s1 & !s0;
+                let eq3 = s0 & s1;
+                let eq4 = s2;
+                let r24 = lanes[k & 3] >> 8;
+                // Accept masks per current-spin value: lanes whose
+                // (σ, s) cell clears its integer threshold flip.
+                let f0 = (eq0 & mask(r24 < th0[0]))
+                    | (eq1 & mask(r24 < th0[1]))
+                    | (eq2 & mask(r24 < th0[2]))
+                    | (eq3 & mask(r24 < th0[3]))
+                    | (eq4 & mask(r24 < th0[4]));
+                let f1 = (eq0 & mask(r24 < th1[0]))
+                    | (eq1 & mask(r24 < th1[1]))
+                    | (eq2 & mask(r24 < th1[2]))
+                    | (eq3 & mask(r24 < th1[3]))
+                    | (eq4 & mask(r24 < th1[4]));
+                let sigma = tgt_row[k];
+                tgt_row[k] = sigma ^ ((sigma & f1) | (!sigma & f0));
+                k += 1;
+            }
+        }
+    }
+}
+
+/// One full sweep of all 64 replicas (black then white). The u64 sweep
+/// counter's low 32 bits feed Philox, matching the scalar engine.
+pub fn sweep(lat: &mut BitplaneLattice, table: &AcceptanceTable, seed: u32, step: u64) {
+    let s = step as u32;
+    update_color(lat, Color::Black, table, seed, s);
+    update_color(lat, Color::White, table, seed, s);
+}
+
+/// Run `n` sweeps from counter `step0`; returns the next counter.
+pub fn run(
+    lat: &mut BitplaneLattice,
+    table: &AcceptanceTable,
+    seed: u32,
+    step0: u64,
+    n: u64,
+) -> u64 {
+    for t in step0..step0 + n {
+        sweep(lat, table, seed, t);
+    }
+    step0 + n
+}
+
+/// Self-contained 64-replica batch engine — the farm's batched
+/// `ReplicaSim` body. Not a [`super::sweeper::Sweeper`]: it advances 64
+/// trajectories at once and exposes *per-lane* observables.
+pub struct BatchEngine {
+    /// 64-lane bit-plane spin state.
+    pub lattice: BitplaneLattice,
+    /// Acceptance table.
+    pub table: AcceptanceTable,
+    /// Shared Philox stream seed (by convention the first lane's seed).
+    pub seed: u32,
+    /// Next sweep number.
+    pub step: u64,
+}
+
+impl BatchEngine {
+    /// Hot-start a batch: lane `r` from `lane_seeds[r]`, acceptance
+    /// stream from `lane_seeds[0]`.
+    pub fn hot(geom: Geometry, beta: f32, lane_seeds: &[u32]) -> Result<Self> {
+        let lattice = BitplaneLattice::hot(geom, lane_seeds)?;
+        Ok(Self {
+            lattice,
+            table: AcceptanceTable::new(beta),
+            seed: lane_seeds[0],
+            step: 0,
+        })
+    }
+
+    /// Active replica lanes.
+    pub fn lanes(&self) -> usize {
+        self.lattice.lanes()
+    }
+
+    /// Advance all lanes by `n` sweeps.
+    pub fn run(&mut self, n: u64) {
+        self.step = run(&mut self.lattice, &self.table, self.seed, self.step, n);
+    }
+
+    /// Per-lane magnetization per site (active lanes only).
+    pub fn lane_magnetizations(&self) -> Vec<f64> {
+        self.lattice.lane_magnetizations()
+    }
+
+    /// Per-lane energy per site (active lanes only).
+    pub fn lane_energies(&self) -> Vec<f64> {
+        self.lattice.lane_energies()
+    }
+
+    /// Full engine state as a checkpointable snapshot (the `seed` field
+    /// records the shared stream seed).
+    pub fn snapshot(&self) -> crate::util::snapshot::EngineSnapshot {
+        crate::util::snapshot::EngineSnapshot::from_bitplane(
+            &self.lattice,
+            self.table.beta,
+            self.seed,
+            self.step,
+        )
+    }
+
+    /// Rebuild from a snapshot; all 64 lanes continue bit-identically.
+    pub fn from_snapshot(
+        snap: &crate::util::snapshot::EngineSnapshot,
+    ) -> Result<Self> {
+        Ok(Self {
+            lattice: snap.to_bitplane()?,
+            table: AcceptanceTable::new(snap.beta()),
+            seed: snap.seed,
+            step: snap.step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::metropolis;
+    use crate::algorithms::metropolis::ScalarEngine;
+    use crate::lattice::init;
+
+    /// The scalar reference for lane `r` of a batch: initial condition
+    /// from the lane seed, acceptance stream from the batch stream seed.
+    fn lane_reference(geom: Geometry, beta: f32, stream: u32, lane_seed: u32) -> ScalarEngine {
+        ScalarEngine {
+            lattice: init::hot(geom, lane_seed),
+            table: AcceptanceTable::new(beta),
+            seed: stream,
+            step: 0,
+        }
+    }
+
+    /// The headline equivalence: every active lane reproduces its scalar
+    /// reference trajectory bit-for-bit, sweep by sweep.
+    #[test]
+    fn lanes_match_scalar_references_bit_exactly() {
+        let g = Geometry::new(6, 10).unwrap();
+        let beta = 0.42f32;
+        let seeds = [31u32, 7, 7, 900];
+        let mut batch = BatchEngine::hot(g, beta, &seeds).unwrap();
+        let mut refs: Vec<ScalarEngine> = seeds
+            .iter()
+            .map(|&s| lane_reference(g, beta, seeds[0], s))
+            .collect();
+        for t in 0..8u64 {
+            batch.run(1);
+            for r in refs.iter_mut() {
+                metropolis::sweep(&mut r.lattice, &r.table, r.seed, t);
+            }
+            for (l, r) in refs.iter().enumerate() {
+                assert_eq!(
+                    batch.lattice.extract_lane(l),
+                    r.lattice,
+                    "lane {l} diverged at sweep {t}"
+                );
+            }
+        }
+    }
+
+    /// Lanes with the same seed as lane 0 *are* ordinary scalar runs
+    /// (init seed == stream seed), the property that anchors the whole
+    /// convention.
+    #[test]
+    fn lane_zero_is_an_ordinary_scalar_run() {
+        let g = Geometry::new(8, 12).unwrap();
+        let beta = 0.44f32;
+        let seeds = [55u32, 56];
+        let mut batch = BatchEngine::hot(g, beta, &seeds).unwrap();
+        let mut scalar = init::hot(g, 55);
+        let table = AcceptanceTable::new(beta);
+        for t in 0..6u64 {
+            batch.run(1);
+            metropolis::sweep(&mut scalar, &table, 55, t);
+        }
+        assert_eq!(batch.lattice.extract_lane(0), scalar);
+    }
+
+    #[test]
+    fn per_lane_observables_track_the_lanes() {
+        let g = Geometry::new(6, 10).unwrap();
+        let seeds = [1u32, 2, 3];
+        let mut batch = BatchEngine::hot(g, 0.40, &seeds).unwrap();
+        batch.run(5);
+        let ms = batch.lane_magnetizations();
+        let es = batch.lane_energies();
+        assert_eq!(ms.len(), 3);
+        for l in 0..3 {
+            let board = batch.lattice.extract_lane(l);
+            assert_eq!(ms[l].to_bits(), board.magnetization().to_bits(), "lane {l}");
+            assert_eq!(es[l].to_bits(), board.energy_per_site().to_bits(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_continues_identically() {
+        let g = Geometry::new(6, 10).unwrap();
+        let seeds: Vec<u32> = (0..9).map(|r| 40 + r).collect();
+        let mut a = BatchEngine::hot(g, 0.44, &seeds).unwrap();
+        a.run(4);
+        let snap = a.snapshot();
+        let mut b = BatchEngine::from_snapshot(&snap).unwrap();
+        assert_eq!(b.step, 4);
+        assert_eq!(b.seed, 40);
+        assert_eq!(b.lanes(), 9);
+        assert_eq!(b.lattice, a.lattice);
+        a.run(5);
+        b.run(5);
+        assert_eq!(a.lattice, b.lattice, "restored batch must continue bit-identically");
+    }
+
+    /// β = 0 flips every lane of every site each sweep, so two sweeps
+    /// restore all 64 lanes exactly (the batch analogue of the scalar
+    /// involution test).
+    #[test]
+    fn beta_zero_involution_across_all_lanes() {
+        let g = Geometry::new(4, 6).unwrap();
+        let seeds = [9u32, 10, 11];
+        let mut batch = BatchEngine::hot(g, 0.0, &seeds).unwrap();
+        let orig = batch.lattice.clone();
+        batch.run(1);
+        assert_ne!(batch.lattice, orig);
+        batch.run(1);
+        assert_eq!(batch.lattice, orig);
+    }
+
+    #[test]
+    fn sweep_counter_crosses_the_u32_boundary() {
+        let g = Geometry::new(4, 6).unwrap();
+        let seeds = [3u32, 4];
+        let table = AcceptanceTable::new(0.44);
+        let mut lat = BitplaneLattice::hot(g, &seeds).unwrap();
+        let step0 = u32::MAX as u64 - 2;
+        let next = run(&mut lat, &table, 3, step0, 6);
+        assert_eq!(next, step0 + 6);
+        // The scalar reference for lane 1 driven across the same boundary
+        // stays bit-identical (both mask the same low 32 bits into
+        // Philox).
+        let mut scalar = init::hot(g, 4);
+        metropolis::run(&mut scalar, &table, 3, step0, 6);
+        assert_eq!(lat.extract_lane(1), scalar);
+    }
+}

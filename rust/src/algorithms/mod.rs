@@ -5,6 +5,8 @@
 //! * [`metropolis`] — scalar checkerboard Metropolis (paper "Basic CUDA C").
 //! * [`multispin`] — word-parallel multi-spin coding (paper §3.3, the
 //!   optimized implementation).
+//! * [`batch`] — replica-batched bit-sliced Metropolis: 64 independent
+//!   replicas per u64 word (Block et al., arXiv:1007.3726).
 //! * [`heatbath`] — heat-bath dynamics (paper §2).
 //! * [`wolff`] — Wolff cluster algorithm (paper §2).
 //! * [`spinglass`] — ±J Edwards–Anderson glass (paper's conclusion
@@ -12,6 +14,7 @@
 //! * [`sweeper`] — the engine trait shared with the PJRT runtime engines.
 
 pub mod acceptance;
+pub mod batch;
 pub mod heatbath;
 pub mod metropolis;
 pub mod multispin;
@@ -20,6 +23,7 @@ pub mod sweeper;
 pub mod wolff;
 
 pub use acceptance::{AcceptanceTable, HeatBathTable};
+pub use batch::BatchEngine;
 pub use heatbath::HeatBathEngine;
 pub use metropolis::ScalarEngine;
 pub use multispin::MultispinEngine;

@@ -27,6 +27,14 @@ pub fn build_engine(cfg: &RunConfig) -> Result<Box<dyn Sweeper>> {
         EngineKind::NativeMultispin => {
             Box::new(MultispinEngine::hot(geom, beta, cfg.seed)?)
         }
+        // RunConfig::validate refuses it earlier; keep the same pointer
+        // for library callers that skip validation.
+        EngineKind::NativeBatch => {
+            return Err(crate::Error::Usage(
+                "engine 'batch' drives the replica farm; use `ising sweep --engine batch`"
+                    .into(),
+            ))
+        }
         EngineKind::NativeHeatbath => Box::new(HeatBathEngine::hot(geom, beta, cfg.seed)),
         EngineKind::NativeWolff => Box::new(WolffEngine::hot(geom, beta, cfg.seed)),
         EngineKind::NativeTensor(precision) => Box::new(

@@ -1,9 +1,11 @@
 //! `ising sweep` — run the parallel replica farm: R independent replicas
 //! over a seed × β grid (the Fig. 5/Fig. 6 workload) on the native
-//! multi-spin path (`--engine multispin`, default) or the §3.2 tensor
-//! path (`--engine tensor`), with per-β pooled observables,
-//! worker-scaling metrics, and checkpoint/restart for long runs
-//! (`--checkpoint-dir DIR --checkpoint-every N`, resume with `--resume`).
+//! multi-spin path (`--engine multispin`, default), the bit-sliced
+//! 64-replica batch path (`--engine batch` — same-β replicas grouped 64
+//! to a word), or the §3.2 tensor path (`--engine tensor`), with per-β
+//! pooled observables, worker-scaling metrics, and checkpoint/restart
+//! for long runs (`--checkpoint-dir DIR --checkpoint-every N`, resume
+//! with `--resume`).
 
 use crate::cli::args::Args;
 use crate::coordinator::checkpoint::CheckpointSpec;
@@ -74,21 +76,6 @@ pub fn exec(args: &Args) -> Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let workers: usize = args.opt_parse("workers", cores.min(total.max(1)))?;
     let shards: usize = args.opt_parse("shards", 1usize)?;
-    // Validate at parse time: a zero here used to fail deep inside the
-    // farm with an opaque coordinator error.
-    if workers == 0 {
-        return Err(Error::Usage("--workers must be >= 1".into()));
-    }
-    if shards == 0 {
-        return Err(Error::Usage("--shards must be >= 1".into()));
-    }
-    if cfg.engine == FarmEngine::Tensor && (shards > 1 || args.flag("threaded-shards")) {
-        return Err(Error::Usage(
-            "--shards/--threaded-shards apply to the multispin engine; \
-             tensor replicas are single-block"
-                .into(),
-        ));
-    }
     cfg.workers = workers;
     cfg.shards = shards;
     cfg.burn_in = args.opt_parse("burn-in", cfg.burn_in)?;
@@ -97,6 +84,11 @@ pub fn exec(args: &Args) -> Result<()> {
     // Shard threads only when the farm itself is not already using the
     // cores for replica parallelism (or when explicitly requested).
     cfg.threaded_shards = args.flag("threaded-shards") || (shards > 1 && workers == 1);
+    // The shared semantic rules (same function the job API and the farm
+    // call): zero workers/shards, engine/geometry mismatches and
+    // sharding of single-block engines all fail here at parse time, not
+    // deep inside the farm.
+    cfg.validate()?;
 
     // Checkpoint wiring.
     let ckpt_dir = args.opt("checkpoint-dir");

@@ -25,7 +25,7 @@ COMMANDS:
             --size N --temperature T|--beta B --engine E --sweeps N
             --seed S --workers W --artifacts DIR --config FILE
   sweep     parallel replica farm over a seed x beta grid
-            --size N --engine multispin|tensor --replicas R
+            --size N --engine multispin|batch|tensor --replicas R
             --betas B1,B2,... | --beta-points K
             --seed S --workers W --shards D --burn-in N --samples N --thin N
             checkpoint/restart: --checkpoint-dir DIR [--checkpoint-every N]

@@ -14,6 +14,10 @@ pub enum EngineKind {
     NativeScalar,
     /// Native word-parallel multi-spin (paper §3.3 analogue).
     NativeMultispin,
+    /// Replica-batched bit-sliced engine: 64 independent replicas per
+    /// u64 word (Block et al., arXiv:1007.3726). Farm-only — it has no
+    /// single-replica form.
+    NativeBatch,
     /// Native heat-bath.
     NativeHeatbath,
     /// Native Wolff cluster.
@@ -68,6 +72,16 @@ pub const ENGINES: &[EngineSpec] = &[
         paper: "§3.3 multi-spin",
         layout: "packed nibbles",
         rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+    },
+    EngineSpec {
+        kind: EngineKind::NativeBatch,
+        name: "batch",
+        aliases: &["multispin-batch", "batch64"],
+        paper: "1007.3726 replica MSC",
+        layout: "bit planes ×64 replicas",
+        rng: "Philox site-group, draw shared by lanes",
         snapshot: true,
         needs_pjrt: false,
     },
@@ -178,6 +192,7 @@ impl EngineKind {
                 EngineKind::Pjrt(_) => "pjrt",
                 EngineKind::NativeScalar
                 | EngineKind::NativeMultispin
+                | EngineKind::NativeBatch
                 | EngineKind::NativeHeatbath
                 | EngineKind::NativeWolff
                 | EngineKind::NativeTensor(_) => {
@@ -285,6 +300,14 @@ impl RunConfig {
                 "multispin needs size % 32 == 0, got {}",
                 self.size
             )));
+        }
+        if self.engine == EngineKind::NativeBatch {
+            return Err(Error::Config(
+                "engine 'batch' simulates 64 replicas per word and only runs \
+                 through the replica farm: use `ising sweep --engine batch` \
+                 (or the /v1/jobs API)"
+                    .into(),
+            ));
         }
         if self.temperature <= 0.0 {
             return Err(Error::Config("temperature must be positive".into()));
@@ -543,6 +566,18 @@ mod tests {
             let doc = Toml::parse(bad).unwrap();
             assert!(ServerConfig::from_toml(&doc).is_err(), "must reject: {bad}");
         }
+    }
+
+    #[test]
+    fn batch_engine_is_farm_only_in_run_configs() {
+        assert_eq!(EngineKind::parse("batch").unwrap(), EngineKind::NativeBatch);
+        assert_eq!(EngineKind::parse("batch64").unwrap(), EngineKind::NativeBatch);
+        assert_eq!(EngineKind::NativeBatch.name(), "batch");
+        // `ising run`/TOML single-run configs refuse it with a pointer to
+        // the farm entry points.
+        let doc = Toml::parse("[run]\nsize = 64\nengine = \"batch\"\n").unwrap();
+        let err = RunConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("sweep"), "must point at the farm: {err}");
     }
 
     #[test]

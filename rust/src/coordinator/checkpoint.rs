@@ -18,12 +18,13 @@
 //! the grid produces per-replica observable series **bit-identical** to
 //! an uninterrupted run — asserted by `tests/integration_coordinator.rs`.
 
-use super::farm::FarmConfig;
+use super::farm::{FarmConfig, FarmEngine};
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::util::json::{obj, Json};
 use crate::util::snapshot::{
-    read_file, write_file, ByteReader, ByteWriter, EngineSnapshot, KIND_REPLICA,
+    read_file, write_file, ByteReader, ByteWriter, EngineSnapshot, KIND_BATCH,
+    KIND_REPLICA,
 };
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
@@ -51,7 +52,9 @@ pub struct CheckpointSpec {
     pub resume: bool,
     /// Collect at most this many *new* samples across the whole farm in
     /// this invocation, then checkpoint and stop (time-boxed runs; also
-    /// how the tests interrupt a farm deterministically).
+    /// how the tests interrupt a farm deterministically). Batched units
+    /// claim one budget token per sample *round* — a round yields one
+    /// sample in each of the unit's (up to 64) lanes at once.
     pub sample_budget: Option<u64>,
     /// Cooperative stop flag shared with the caller (the serving
     /// scheduler's graceful-shutdown path). Once set, workers checkpoint
@@ -91,6 +94,11 @@ pub struct Manifest {
     pub samples: usize,
     /// Sweeps between samples.
     pub thin: u64,
+    /// Batch layout: replica lanes per batched work unit
+    /// (`algorithms::batch::LANES`) when the engine groups same-β
+    /// replicas into bit-plane batches; 0 for per-replica engines.
+    /// Recording it pins the grouping a resume must reproduce.
+    pub lanes: usize,
     /// Task indices of completed replicas (β-major grid order).
     pub done: BTreeSet<usize>,
 }
@@ -107,6 +115,11 @@ impl Manifest {
             burn_in: cfg.burn_in,
             samples: cfg.samples,
             thin: cfg.thin.max(1),
+            lanes: if cfg.engine == FarmEngine::Batch {
+                crate::algorithms::batch::LANES
+            } else {
+                0
+            },
             done: BTreeSet::new(),
         }
     }
@@ -125,6 +138,7 @@ impl Manifest {
             && self.burn_in == want.burn_in
             && self.samples == want.samples
             && self.thin == want.thin
+            && self.lanes == want.lanes
     }
 
     /// Content-addressed fingerprint of the physics this manifest pins:
@@ -158,6 +172,12 @@ impl Manifest {
         eat(&self.burn_in.to_le_bytes());
         eat(&(self.samples as u64).to_le_bytes());
         eat(&self.thin.to_le_bytes());
+        // Only batched manifests mix the lane width in, so every
+        // pre-batch fingerprint (and the cached results keyed by it)
+        // stays valid; the engine name already separates the families.
+        if self.lanes > 0 {
+            eat(&(self.lanes as u64).to_le_bytes());
+        }
         format!("{h:016x}")
     }
 
@@ -179,6 +199,7 @@ impl Manifest {
             ("burn_in", Json::Num(self.burn_in as f64)),
             ("samples", Json::Num(self.samples as f64)),
             ("thin", Json::Num(self.thin as f64)),
+            ("lanes", Json::Num(self.lanes as f64)),
             (
                 "done",
                 Json::Arr(self.done.iter().map(|&i| Json::Num(i as f64)).collect()),
@@ -216,6 +237,12 @@ impl Manifest {
             burn_in: doc.field("burn_in")?.as_usize()? as u64,
             samples: doc.field("samples")?.as_usize()?,
             thin: doc.field("thin")?.as_usize()? as u64,
+            // Manifests written before the batch engine landed carry no
+            // lanes field; they were all per-replica farms.
+            lanes: match doc.field("lanes") {
+                Ok(v) => v.as_usize()?,
+                Err(_) => 0,
+            },
             done: doc
                 .field("done")?
                 .as_arr()?
@@ -279,6 +306,75 @@ impl ReplicaProgress {
         metrics.elapsed = Duration::from_nanos(r.get_u64()?);
         r.finish()?;
         Ok(Self { engine, m_series, e_series, metrics })
+    }
+}
+
+/// One batched work unit's persisted progress: the 64-lane engine state
+/// plus every lane's in-flight sample series and the batch's cumulative
+/// metrics (`KIND_BATCH` payload, stored under the unit's *first* task
+/// index). All lanes advance in lockstep, so the series share one
+/// length and one file resumes the whole group — per-lane resume falls
+/// out of the deterministic grouping the manifest pins.
+#[derive(Clone, Debug)]
+pub struct BatchProgress {
+    /// Restorable 64-lane engine state (bit planes, β, stream seed,
+    /// step).
+    pub engine: EngineSnapshot,
+    /// Per-lane magnetization samples collected so far.
+    pub m_lanes: Vec<Vec<f64>>,
+    /// Per-lane energy samples collected so far.
+    pub e_lanes: Vec<Vec<f64>>,
+    /// Cumulative batch throughput accounting across restarts.
+    pub metrics: Metrics,
+}
+
+impl BatchProgress {
+    /// Encode as a `KIND_BATCH` payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let engine = self.engine.encode();
+        let mut wr = ByteWriter::new();
+        wr.put_u64(engine.len() as u64);
+        wr.put_bytes(&engine);
+        wr.put_u64(self.m_lanes.len() as u64);
+        wr.put_u64(self.m_lanes.first().map(|s| s.len()).unwrap_or(0) as u64);
+        for series in &self.m_lanes {
+            wr.put_f64_slice(series);
+        }
+        for series in &self.e_lanes {
+            wr.put_f64_slice(series);
+        }
+        wr.put_u64(self.metrics.flips);
+        wr.put_u64(self.metrics.sweeps);
+        wr.put_u64(self.metrics.elapsed.as_nanos() as u64);
+        wr.into_bytes()
+    }
+
+    /// Decode a `KIND_BATCH` payload.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let engine_len = r.get_u64()? as usize;
+        let engine = EngineSnapshot::decode(r.get_bytes(engine_len)?)?;
+        let lanes = r.get_u64()? as usize;
+        if lanes == 0 || lanes > crate::algorithms::batch::LANES {
+            return Err(Error::Snapshot(format!(
+                "batch progress claims {lanes} replica lanes"
+            )));
+        }
+        let n = r.get_u64()? as usize;
+        let mut m_lanes = Vec::with_capacity(lanes);
+        for _ in 0..lanes {
+            m_lanes.push(r.get_f64_vec(n)?);
+        }
+        let mut e_lanes = Vec::with_capacity(lanes);
+        for _ in 0..lanes {
+            e_lanes.push(r.get_f64_vec(n)?);
+        }
+        let mut metrics = Metrics::new();
+        metrics.flips = r.get_u64()?;
+        metrics.sweeps = r.get_u64()?;
+        metrics.elapsed = Duration::from_nanos(r.get_u64()?);
+        r.finish()?;
+        Ok(Self { engine, m_lanes, e_lanes, metrics })
     }
 }
 
@@ -479,10 +575,111 @@ impl Checkpointer {
         Ok(Some(progress))
     }
 
+    /// Persist one batched unit's progress (atomic write) under its
+    /// first task index.
+    pub fn save_batch(
+        &self,
+        first_idx: usize,
+        engine: EngineSnapshot,
+        metrics: &Metrics,
+        m_lanes: &[Vec<f64>],
+        e_lanes: &[Vec<f64>],
+    ) -> Result<()> {
+        let progress = BatchProgress {
+            engine,
+            m_lanes: m_lanes.to_vec(),
+            e_lanes: e_lanes.to_vec(),
+            metrics: metrics.clone(),
+        };
+        write_file(&self.replica_path(first_idx), KIND_BATCH, &progress.encode())
+    }
+
+    /// Load and validate one batched unit's progress; `None` if the
+    /// unit was never started. Validation cross-checks the snapshot
+    /// against the unit identity — geometry, β, the shared stream seed
+    /// (the unit's first lane seed), the lane count — and the
+    /// measurement protocol, so a misplaced or corrupted file fails
+    /// loudly instead of diverging.
+    pub fn load_batch(
+        &self,
+        first_idx: usize,
+        cfg: &FarmConfig,
+        beta: f32,
+        seeds: &[u32],
+    ) -> Result<Option<BatchProgress>> {
+        let path = self.replica_path(first_idx);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let progress = BatchProgress::decode(&read_file(&path, KIND_BATCH)?)?;
+        let snap = &progress.engine;
+        if snap.h != cfg.geom.h || snap.w != cfg.geom.w {
+            return Err(Error::Snapshot(format!(
+                "batch unit {first_idx}: snapshot is {}x{}, farm wants {}x{}",
+                snap.h, snap.w, cfg.geom.h, cfg.geom.w
+            )));
+        }
+        if snap.beta_bits != beta.to_bits() || snap.seed != seeds[0] {
+            return Err(Error::Snapshot(format!(
+                "batch unit {first_idx}: snapshot is (β bits {:08x}, stream seed {}), \
+                 unit wants (β bits {:08x}, stream seed {})",
+                snap.beta_bits,
+                snap.seed,
+                beta.to_bits(),
+                seeds[0]
+            )));
+        }
+        if progress.m_lanes.len() != seeds.len() || progress.e_lanes.len() != seeds.len() {
+            return Err(Error::Snapshot(format!(
+                "batch unit {first_idx}: progress has {} lanes, unit has {}",
+                progress.m_lanes.len(),
+                seeds.len()
+            )));
+        }
+        let n = progress.m_lanes[0].len();
+        if progress
+            .m_lanes
+            .iter()
+            .chain(&progress.e_lanes)
+            .any(|s| s.len() != n)
+            || n > cfg.samples
+        {
+            return Err(Error::Snapshot(format!(
+                "batch unit {first_idx}: inconsistent lane series ({n} samples, {} max)",
+                cfg.samples
+            )));
+        }
+        let thin = cfg.thin.max(1);
+        let consistent = if n == 0 {
+            snap.step <= cfg.burn_in
+        } else {
+            snap.step == cfg.burn_in + n as u64 * thin
+        };
+        if !consistent {
+            return Err(Error::Snapshot(format!(
+                "batch unit {first_idx}: sweep counter {} does not match {n} samples \
+                 under burn-in {} / thin {thin}",
+                snap.step, cfg.burn_in
+            )));
+        }
+        Ok(Some(progress))
+    }
+
     /// Record a replica as complete in the manifest.
     pub fn mark_done(&self, idx: usize) -> Result<()> {
+        self.mark_done_range(idx, 1)
+    }
+
+    /// Record `count` consecutive replicas (a batched unit's lanes) as
+    /// complete — one manifest lock + one atomic rewrite for the whole
+    /// group, not one per lane.
+    pub fn mark_done_range(&self, first_idx: usize, count: usize) -> Result<()> {
         let mut m = self.manifest.lock().expect("manifest lock poisoned");
-        if m.done.insert(idx) {
+        let mut changed = false;
+        for idx in first_idx..first_idx + count {
+            changed |= m.done.insert(idx);
+        }
+        if changed {
             m.store(&self.dir.join(MANIFEST_FILE))?;
         }
         Ok(())
@@ -588,6 +785,74 @@ mod tests {
         // Truncated payloads are rejected.
         let bytes = progress.encode();
         assert!(ReplicaProgress::decode(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    fn batch_cfg() -> FarmConfig {
+        FarmConfig { engine: FarmEngine::Batch, shards: 1, ..cfg() }
+    }
+
+    /// Batched manifests record the lane layout; resuming a batch farm
+    /// with a per-replica engine (or vice versa) is refused.
+    #[test]
+    fn manifest_records_batch_lanes() {
+        let m = Manifest::from_config(&batch_cfg());
+        assert_eq!(m.lanes, crate::algorithms::batch::LANES);
+        let back = Manifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, m);
+        assert!(back.matches(&batch_cfg()));
+        assert!(!back.matches(&cfg()));
+        // Per-replica manifests record no lanes, and the batch engine
+        // changes the fingerprint (per-replica fingerprints are
+        // untouched by the new field).
+        let plain = Manifest::from_config(&cfg());
+        assert_eq!(plain.lanes, 0);
+        assert_ne!(m.fingerprint(), plain.fingerprint());
+    }
+
+    #[test]
+    fn batch_progress_roundtrip_and_validation() {
+        use crate::algorithms::batch::BatchEngine;
+        let cfg = batch_cfg();
+        let seeds = [1u32, 2];
+        let mut engine = BatchEngine::hot(cfg.geom, 0.40, &seeds).unwrap();
+        engine.run(cfg.burn_in + 2 * cfg.thin);
+        let mut metrics = Metrics::new();
+        metrics.flips = 1234;
+        metrics.sweeps = cfg.burn_in + 2 * cfg.thin;
+        let m_lanes = vec![vec![0.1, 0.2], vec![-0.1, -0.2]];
+        let e_lanes = vec![vec![-1.0, -1.1], vec![-1.2, -1.3]];
+        let progress = BatchProgress {
+            engine: engine.snapshot(),
+            m_lanes: m_lanes.clone(),
+            e_lanes: e_lanes.clone(),
+            metrics: metrics.clone(),
+        };
+        let back = BatchProgress::decode(&progress.encode()).unwrap();
+        assert_eq!(back.engine, progress.engine);
+        assert_eq!(back.m_lanes, m_lanes);
+        assert_eq!(back.e_lanes, e_lanes);
+        assert_eq!(back.metrics.flips, 1234);
+        // Truncated payloads are rejected.
+        let bytes = progress.encode();
+        assert!(BatchProgress::decode(&bytes[..bytes.len() - 5]).is_err());
+
+        // save/load through the checkpointer validates unit identity.
+        let dir = temp_dir("batch-identity");
+        let c = Checkpointer::open(&CheckpointSpec::new(dir.clone(), 1), &cfg).unwrap();
+        assert!(c.load_batch(0, &cfg, 0.40, &seeds).unwrap().is_none());
+        c.save_batch(0, engine.snapshot(), &metrics, &m_lanes, &e_lanes).unwrap();
+        let p = c.load_batch(0, &cfg, 0.40, &seeds).unwrap().expect("saved progress");
+        assert_eq!(p.m_lanes, m_lanes);
+        // Wrong unit identity fails loudly: wrong β, wrong stream seed,
+        // wrong lane count.
+        assert!(c.load_batch(0, &cfg, 0.44, &seeds).is_err());
+        assert!(c.load_batch(0, &cfg, 0.40, &[7, 2]).is_err());
+        assert!(c.load_batch(0, &cfg, 0.40, &[1, 2, 3]).is_err());
+        // A per-replica file is not a batch file (kind mismatch).
+        c.save_replica(1, engine.snapshot(), &metrics, &[0.1], &[-1.0]).unwrap();
+        assert!(c.load_batch(1, &cfg, 0.40, &seeds).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

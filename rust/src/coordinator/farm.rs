@@ -13,6 +13,7 @@
 use super::checkpoint::{CheckpointSpec, Checkpointer};
 use super::driver::NativeCluster;
 use super::metrics::Metrics;
+use crate::algorithms::batch::{self, BatchEngine};
 use crate::error::{Error, Result};
 use crate::lattice::Geometry;
 use crate::observables::binder::BinderAccumulator;
@@ -43,18 +44,28 @@ pub fn default_beta_grid(n: usize) -> Vec<f32> {
 /// Which engine family drives each replica of the farm.
 ///
 /// The farm's parallelism unit is the replica, so any deterministic
-/// single-replica engine slots in; the two supported families are the
+/// single-replica engine slots in; the per-replica families are the
 /// optimized multi-spin cluster (the paper's §3.3 production path) and
 /// the tensor (stencil-as-GEMM) engine of §3.2. Both follow the shared
 /// Philox site-group convention, so for the same `(geometry, β, seed)`
 /// they produce **bit-identical observable series** — asserted by the
-/// farm integration tests.
+/// farm integration tests. The batch family instead advances up to 64
+/// same-β replicas per worker in lockstep with one shared draw per
+/// site — an order-of-magnitude throughput lever with its own
+/// (documented, tested) lane convention.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FarmEngine {
     /// Sharded [`NativeCluster`] over the packed multi-spin lattice.
     Multispin,
     /// [`TensorEngine`] (banded-GEMM neighbor sums, f32 mode).
     Tensor,
+    /// Replica-batched [`BatchEngine`]: the farm groups up to 64 same-β
+    /// replicas into one bit-plane engine and advances them in lockstep
+    /// (Block et al., arXiv:1007.3726). One shared Philox draw per site
+    /// drives every lane; lanes decorrelate by initial-condition seed,
+    /// so batched trajectories follow their own (documented) RNG
+    /// convention rather than matching per-replica runs.
+    Batch,
 }
 
 impl FarmEngine {
@@ -65,6 +76,7 @@ impl FarmEngine {
         match self {
             FarmEngine::Multispin => "multispin",
             FarmEngine::Tensor => "tensor",
+            FarmEngine::Batch => "batch",
         }
     }
 
@@ -75,6 +87,7 @@ impl FarmEngine {
         use crate::config::EngineKind;
         match EngineKind::parse(s)? {
             EngineKind::NativeMultispin => Ok(FarmEngine::Multispin),
+            EngineKind::NativeBatch => Ok(FarmEngine::Batch),
             EngineKind::NativeTensor(Precision::F32) => Ok(FarmEngine::Tensor),
             // Refuse rather than silently coerce: a tensor-fp16 sweep
             // would report f32-path rates under an fp16 label.
@@ -85,7 +98,8 @@ impl FarmEngine {
                     .into(),
             )),
             other => Err(Error::Usage(format!(
-                "the replica farm drives 'multispin' or 'tensor' replicas, not '{}'",
+                "the replica farm drives 'multispin', 'batch' or 'tensor' replicas, \
+                 not '{}'",
                 other.name()
             ))),
         }
@@ -141,6 +155,58 @@ impl FarmConfig {
     /// Total replica count (β × seed grid size).
     pub fn replica_count(&self) -> usize {
         self.betas.len() * self.seeds.len()
+    }
+
+    /// Shared semantic validation — the single source of the grid and
+    /// engine-compatibility rules, enforced identically by every entry
+    /// point: the `ising sweep` CLI, the `/v1/jobs` API, the persisted
+    /// job-spec restart scan, and the farm itself as a backstop. A new
+    /// engine's rules live here once and cannot drift between entry
+    /// points. Returns [`Error::Usage`] (it is always caller error).
+    pub fn validate(&self) -> Result<()> {
+        if self.betas.is_empty() || self.seeds.is_empty() {
+            return Err(Error::Usage(
+                "replica farm needs a non-empty β × seed grid".into(),
+            ));
+        }
+        for &b in &self.betas {
+            if !b.is_finite() || b <= 0.0 {
+                return Err(Error::Usage(format!(
+                    "β value {b} must be finite and > 0"
+                )));
+            }
+        }
+        if self.samples == 0 {
+            return Err(Error::Usage("samples must be ≥ 1".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Usage("workers must be ≥ 1".into()));
+        }
+        if self.shards == 0 {
+            return Err(Error::Usage("shards must be ≥ 1".into()));
+        }
+        match self.engine {
+            FarmEngine::Multispin => {
+                if self.geom.w % 32 != 0 {
+                    return Err(Error::Usage(format!(
+                        "engine 'multispin' needs lattice width % 32 == 0, got {}",
+                        self.geom.w
+                    )));
+                }
+            }
+            // Single-block replica engines: intra-replica sharding knobs
+            // would be silently ignored, so they are refused.
+            FarmEngine::Tensor | FarmEngine::Batch => {
+                if self.shards > 1 || self.threaded_shards {
+                    return Err(Error::Usage(format!(
+                        "'shards'/'threaded-shards' apply to the multispin engine; \
+                         '{}' replicas are single-block",
+                        self.engine.name()
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -289,10 +355,72 @@ pub enum FarmOutcome {
     },
 }
 
-/// Per-task result as seen by the farm loop.
+/// Per-replica result as seen by the per-replica task body.
 enum ReplicaStatus {
     Done(ReplicaResult),
     Paused,
+}
+
+/// One schedulable unit of farm work: a single replica for the
+/// per-replica engine families, or up to 64 same-β replicas sharing one
+/// batched bit-plane engine. `first` is the grid task index (β-major,
+/// then seed) of `seeds[0]`; a unit's replicas occupy the consecutive
+/// indices `first..first + seeds.len()`.
+struct WorkUnit {
+    beta: f32,
+    seeds: Vec<u32>,
+    first: usize,
+}
+
+/// Per-unit result as seen by the farm loop.
+enum UnitStatus {
+    Done(Vec<ReplicaResult>),
+    Paused,
+}
+
+/// Decompose the grid into work units. For the batch engine each β's
+/// seeds are chunked into groups of up to [`batch::LANES`] (the
+/// manifest records this layout); other engines get one unit per
+/// replica. Units are emitted in grid order, so flattening unit results
+/// in unit order reproduces the deterministic β-major output order.
+fn work_units(cfg: &FarmConfig) -> Vec<WorkUnit> {
+    let ns = cfg.seeds.len();
+    let mut units = Vec::new();
+    for (bi, &beta) in cfg.betas.iter().enumerate() {
+        match cfg.engine {
+            FarmEngine::Batch => {
+                let mut off = 0usize;
+                for chunk in cfg.seeds.chunks(batch::LANES) {
+                    units.push(WorkUnit {
+                        beta,
+                        seeds: chunk.to_vec(),
+                        first: bi * ns + off,
+                    });
+                    off += chunk.len();
+                }
+            }
+            FarmEngine::Multispin | FarmEngine::Tensor => {
+                for (si, &seed) in cfg.seeds.iter().enumerate() {
+                    units.push(WorkUnit { beta, seeds: vec![seed], first: bi * ns + si });
+                }
+            }
+        }
+    }
+    units
+}
+
+/// Split the batch's cumulative metrics into one lane's share: lanes
+/// advance in lockstep, so each owns an equal slice of the flips and of
+/// the sweep time — summing the lane metrics over a unit reproduces the
+/// batch totals (modulo integer division), and the farm aggregate's
+/// flips/ns stays the real hardware throughput.
+fn lane_metrics(total: &Metrics, lanes: usize) -> Metrics {
+    let lanes = lanes.max(1);
+    let mut m = Metrics::new();
+    m.flips = total.flips / lanes as u64;
+    m.sweeps = total.sweeps;
+    m.elapsed = Duration::from_nanos((total.elapsed.as_nanos() / lanes as u128) as u64);
+    m
 }
 
 /// One replica's simulator — the engine-family dispatch behind the farm
@@ -326,6 +454,11 @@ impl ReplicaSim {
                 engine: TensorEngine::with_precision(cfg.geom, beta, seed, Precision::F32),
                 metrics: Metrics::new(),
             }))),
+            // Batched units never reach the per-replica body
+            // (`run_unit` dispatches them to `run_batch_unit`).
+            FarmEngine::Batch => Err(Error::Coordinator(
+                "batch units are driven by run_batch_unit, not ReplicaSim".into(),
+            )),
         }
     }
 
@@ -343,6 +476,9 @@ impl ReplicaSim {
                 engine: TensorEngine::from_snapshot(snap, Precision::F32)?,
                 metrics,
             }))),
+            FarmEngine::Batch => Err(Error::Coordinator(
+                "batch units are driven by run_batch_unit, not ReplicaSim".into(),
+            )),
         }
     }
 
@@ -483,6 +619,118 @@ fn run_replica(
     }))
 }
 
+/// Run one batched unit: up to 64 same-β replicas advanced in lockstep
+/// by a single [`BatchEngine`]. Per-lane observables are extracted at
+/// every sample point (bit-transpose popcounts); the whole group
+/// checkpoints as one `KIND_BATCH` file under its first task index, and
+/// every lane resumes from it bit-identically. One sample-budget token
+/// is claimed per sample *round* — a round yields one new sample in
+/// each of the unit's lanes.
+fn run_batch_unit(
+    cfg: &FarmConfig,
+    unit: &WorkUnit,
+    ckpt: Option<&Checkpointer>,
+) -> Result<UnitStatus> {
+    let thin = cfg.thin.max(1);
+    let lanes = unit.seeds.len();
+    let restored = match ckpt {
+        Some(c) => c.load_batch(unit.first, cfg, unit.beta, &unit.seeds)?,
+        None => None,
+    };
+    let (mut engine, mut metrics, mut m_lanes, mut e_lanes) = match restored {
+        Some(p) => (
+            BatchEngine::from_snapshot(&p.engine)?,
+            p.metrics,
+            p.m_lanes,
+            p.e_lanes,
+        ),
+        None => (
+            BatchEngine::hot(cfg.geom, unit.beta, &unit.seeds)?,
+            Metrics::new(),
+            vec![Vec::with_capacity(cfg.samples); lanes],
+            vec![Vec::with_capacity(cfg.samples); lanes],
+        ),
+    };
+    let sites = cfg.geom.sites() as u64;
+    // Advance all lanes `n` sweeps, accounting every lane's flips.
+    let advance = |engine: &mut BatchEngine, metrics: &mut Metrics, n: u64| {
+        let timer = Timer::start();
+        engine.run(n);
+        metrics.flips += n * sites * lanes as u64;
+        metrics.sweeps += n;
+        metrics.elapsed += timer.elapsed();
+    };
+
+    // Burn-in — chunked so long equilibrations checkpoint too.
+    while engine.step < cfg.burn_in {
+        match ckpt {
+            Some(c) => {
+                if c.budget_exhausted() {
+                    c.save_batch(unit.first, engine.snapshot(), &metrics, &m_lanes, &e_lanes)?;
+                    return Ok(UnitStatus::Paused);
+                }
+                let chunk =
+                    (c.every() as u64 * thin).max(1).min(cfg.burn_in - engine.step);
+                advance(&mut engine, &mut metrics, chunk);
+                c.save_batch(unit.first, engine.snapshot(), &metrics, &m_lanes, &e_lanes)?;
+            }
+            None => advance(&mut engine, &mut metrics, cfg.burn_in - engine.step),
+        }
+    }
+
+    // Sampling (resumes mid-series exactly like the per-replica path).
+    while m_lanes[0].len() < cfg.samples {
+        if let Some(c) = ckpt {
+            if !c.take_sample() {
+                c.save_batch(unit.first, engine.snapshot(), &metrics, &m_lanes, &e_lanes)?;
+                return Ok(UnitStatus::Paused);
+            }
+        }
+        advance(&mut engine, &mut metrics, thin);
+        let ms = engine.lane_magnetizations();
+        let es = engine.lane_energies();
+        for l in 0..lanes {
+            m_lanes[l].push(ms[l]);
+            e_lanes[l].push(es[l]);
+        }
+        if let Some(c) = ckpt {
+            let done = m_lanes[0].len();
+            if c.due(done) || done == cfg.samples {
+                c.save_batch(unit.first, engine.snapshot(), &metrics, &m_lanes, &e_lanes)?;
+            }
+        }
+    }
+    if let Some(c) = ckpt {
+        c.mark_done_range(unit.first, lanes)?;
+    }
+    let results = unit
+        .seeds
+        .iter()
+        .enumerate()
+        .map(|(l, &seed)| ReplicaResult {
+            beta: unit.beta,
+            seed,
+            m_series: std::mem::take(&mut m_lanes[l]),
+            e_series: std::mem::take(&mut e_lanes[l]),
+            metrics: lane_metrics(&metrics, lanes),
+        })
+        .collect();
+    Ok(UnitStatus::Done(results))
+}
+
+/// Engine-family dispatch for one work unit.
+fn run_unit(cfg: &FarmConfig, unit: &WorkUnit, ckpt: Option<&Checkpointer>) -> Result<UnitStatus> {
+    match cfg.engine {
+        FarmEngine::Batch => run_batch_unit(cfg, unit, ckpt),
+        FarmEngine::Multispin | FarmEngine::Tensor => {
+            match run_replica(cfg, unit.beta, unit.seeds[0], unit.first, ckpt)? {
+                ReplicaStatus::Done(r) => Ok(UnitStatus::Done(vec![r])),
+                ReplicaStatus::Paused => Ok(UnitStatus::Paused),
+            }
+        }
+    }
+}
+
 /// Execute the full β × seed grid across `cfg.workers` scoped threads,
 /// optionally checkpointing into (and resuming from) a directory.
 ///
@@ -497,62 +745,50 @@ pub fn run_farm_checkpointed(
     cfg: &FarmConfig,
     spec: Option<&CheckpointSpec>,
 ) -> Result<FarmOutcome> {
-    let tasks: Vec<(f32, u32)> = cfg
-        .betas
-        .iter()
-        .flat_map(|&b| cfg.seeds.iter().map(move |&s| (b, s)))
-        .collect();
-    if tasks.is_empty() {
-        return Err(Error::Coordinator(
-            "replica farm needs a non-empty β × seed grid".into(),
-        ));
-    }
-    // Enforced here, not just in the CLI, so library callers cannot
-    // configure intra-replica sharding the tensor engine would ignore.
-    if cfg.engine == FarmEngine::Tensor && (cfg.shards > 1 || cfg.threaded_shards) {
-        return Err(Error::Coordinator(
-            "tensor replicas are single-block: shards must be ≤ 1 and \
-             threaded_shards false"
-                .into(),
-        ));
-    }
+    // Shared semantic validation (CLI and job API call it too; this is
+    // the backstop for library callers).
+    cfg.validate()?;
+    let total = cfg.replica_count();
+    // Units: one replica each, or ≤ 64 same-β replicas per batch group.
+    let units = work_units(cfg);
     let ckpt = match spec {
         Some(s) => Some(Checkpointer::open(s, cfg)?),
         None => None,
     };
     let ckpt = ckpt.as_ref();
-    let workers = cfg.workers.max(1).min(tasks.len());
+    let workers = cfg.workers.max(1).min(units.len());
     let timer = Timer::start();
 
     let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<ReplicaStatus>>>> =
-        (0..tasks.len()).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<Result<UnitStatus>>>> =
+        (0..units.len()).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                // Once the budget is gone, stop claiming fresh tasks —
+                // Once the budget is gone, stop claiming fresh units —
                 // unclaimed replicas simply stay pending for the resume.
                 if ckpt.map(|c| c.budget_exhausted()).unwrap_or(false) {
                     break;
                 }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks.len() {
+                if i >= units.len() {
                     break;
                 }
-                let (beta, seed) = tasks[i];
-                let result = run_replica(cfg, beta, seed, i, ckpt);
+                let result = run_unit(cfg, &units[i], ckpt);
                 *slots[i].lock().expect("farm slot poisoned") = Some(result);
             });
         }
     });
 
     let wall = timer.elapsed();
-    let mut replicas = Vec::with_capacity(tasks.len());
+    let mut replicas = Vec::with_capacity(total);
     let mut pending = 0usize;
     for slot in slots {
         match slot.into_inner().expect("farm slot poisoned") {
-            Some(Ok(ReplicaStatus::Done(r))) => replicas.push(r),
-            Some(Ok(ReplicaStatus::Paused)) | None => pending += 1,
+            // Units are in grid order and their replicas are consecutive,
+            // so flattening preserves the deterministic β-major order.
+            Some(Ok(UnitStatus::Done(rs))) => replicas.extend(rs),
+            Some(Ok(UnitStatus::Paused)) | None => pending += 1,
             Some(Err(e)) => return Err(e),
         }
     }
@@ -562,7 +798,7 @@ pub fn run_farm_checkpointed(
         // counting this invocation's slots would undercount.
         return Ok(FarmOutcome::Interrupted {
             completed: ckpt.map(|c| c.done_count()).unwrap_or(replicas.len()),
-            total: tasks.len(),
+            total,
         });
     }
     let mut aggregate = Metrics::new();
@@ -734,6 +970,9 @@ mod tests {
     fn farm_engine_parse_maps_registry_names() {
         assert_eq!(FarmEngine::parse("multispin").unwrap(), FarmEngine::Multispin);
         assert_eq!(FarmEngine::parse("optimized").unwrap(), FarmEngine::Multispin);
+        assert_eq!(FarmEngine::parse("batch").unwrap(), FarmEngine::Batch);
+        assert_eq!(FarmEngine::parse("batch64").unwrap(), FarmEngine::Batch);
+        assert_eq!(FarmEngine::parse("multispin-batch").unwrap(), FarmEngine::Batch);
         assert_eq!(FarmEngine::parse("tensor").unwrap(), FarmEngine::Tensor);
         assert_eq!(FarmEngine::parse("tensor-fp32").unwrap(), FarmEngine::Tensor);
         // fp16 is refused (would mislabel f32-path rates), as are
@@ -741,6 +980,144 @@ mod tests {
         assert!(FarmEngine::parse("tensor-fp16").is_err());
         assert!(FarmEngine::parse("wolff").is_err());
         assert!(FarmEngine::parse("no-such-engine").is_err());
+    }
+
+    fn batch_cfg() -> FarmConfig {
+        FarmConfig {
+            geom: Geometry::new(6, 10).unwrap(),
+            betas: vec![0.40, BETA_C],
+            seeds: vec![1, 2, 3],
+            shards: 1,
+            workers: 2,
+            burn_in: 3,
+            samples: 4,
+            thin: 1,
+            threaded_shards: false,
+            engine: FarmEngine::Batch,
+        }
+    }
+
+    /// The batch farm produces one result per grid replica, in the same
+    /// deterministic β-major order as the per-replica engines, and each
+    /// lane's series equals its scalar reference (lane init seed +
+    /// shared stream seed) — the Block et al. convention end to end.
+    #[test]
+    fn batch_farm_matches_per_lane_scalar_references() {
+        use crate::algorithms::{metropolis, AcceptanceTable};
+        use crate::lattice::init;
+        let cfg = batch_cfg();
+        let res = run_farm(&cfg).unwrap();
+        assert_eq!(res.replicas.len(), 6);
+        let order: Vec<(u32, u32)> =
+            res.replicas.iter().map(|r| (r.beta.to_bits(), r.seed)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0.40f32.to_bits(), 1),
+                (0.40f32.to_bits(), 2),
+                (0.40f32.to_bits(), 3),
+                (BETA_C.to_bits(), 1),
+                (BETA_C.to_bits(), 2),
+                (BETA_C.to_bits(), 3),
+            ]
+        );
+        // Scalar reference per lane: init from the lane seed, stream
+        // from the group's first seed.
+        for r in &res.replicas {
+            let table = AcceptanceTable::new(r.beta);
+            let stream = cfg.seeds[0];
+            let mut lat = init::hot(cfg.geom, r.seed);
+            let mut step = 0u64;
+            // burn_in sweeps, then thin sweeps per sample.
+            step = metropolis::run(&mut lat, &table, stream, step, cfg.burn_in);
+            for (s, (&m, &e)) in r.m_series.iter().zip(&r.e_series).enumerate() {
+                step = metropolis::run(&mut lat, &table, stream, step, cfg.thin);
+                assert_eq!(m.to_bits(), lat.magnetization().to_bits(), "sample {s}");
+                assert_eq!(e.to_bits(), lat.energy_per_site().to_bits(), "sample {s}");
+            }
+            assert_eq!(r.m_series.len(), cfg.samples);
+            assert_eq!(r.metrics.sweeps, cfg.burn_in + cfg.samples as u64 * cfg.thin);
+        }
+        // Per-lane flips sum back to the true batch totals.
+        assert_eq!(
+            res.aggregate.flips,
+            6 * 7 * cfg.geom.sites() as u64,
+            "6 replicas × 7 sweeps × sites"
+        );
+    }
+
+    /// More seeds than lanes: the farm splits each β into multiple
+    /// batch groups (65 seeds → a 64-lane group + a 1-lane group), and
+    /// each group's stream seed is its own first lane.
+    #[test]
+    fn batch_farm_splits_oversized_seed_grids() {
+        use crate::algorithms::batch::LANES;
+        let mut cfg = batch_cfg();
+        cfg.geom = Geometry::new(4, 6).unwrap();
+        cfg.betas = vec![BETA_C];
+        cfg.seeds = (0..(LANES as u32 + 1)).map(|r| 10 + r).collect();
+        cfg.burn_in = 1;
+        cfg.samples = 2;
+        let res = run_farm(&cfg).unwrap();
+        assert_eq!(res.replicas.len(), LANES + 1);
+        for (i, r) in res.replicas.iter().enumerate() {
+            assert_eq!(r.seed, 10 + i as u32);
+            assert_eq!(r.m_series.len(), 2);
+        }
+        // The trailing single-lane group is keyed by its own seed: it
+        // must equal an ordinary scalar run of that seed.
+        use crate::algorithms::{metropolis, AcceptanceTable};
+        use crate::lattice::init;
+        let last = res.replicas.last().unwrap();
+        let table = AcceptanceTable::new(last.beta);
+        let mut lat = init::hot(cfg.geom, last.seed);
+        let mut step = metropolis::run(&mut lat, &table, last.seed, 0, cfg.burn_in);
+        for &m in &last.m_series {
+            step = metropolis::run(&mut lat, &table, last.seed, step, cfg.thin);
+            assert_eq!(m.to_bits(), lat.magnetization().to_bits());
+        }
+    }
+
+    /// Sharding knobs the batch engine would silently ignore are
+    /// rejected by the shared validation, exactly like the tensor farm.
+    #[test]
+    fn batch_farm_rejects_sharding() {
+        let mut cfg = batch_cfg();
+        cfg.shards = 2;
+        assert!(run_farm(&cfg).is_err());
+        let mut cfg = batch_cfg();
+        cfg.threaded_shards = true;
+        assert!(run_farm(&cfg).is_err());
+    }
+
+    /// The shared validation rejects what every entry point must reject.
+    #[test]
+    fn farm_config_validate_is_the_shared_rulebook() {
+        assert!(small_cfg().validate().is_ok());
+        assert!(batch_cfg().validate().is_ok());
+        let mut c = small_cfg();
+        c.betas.clear();
+        assert!(c.validate().is_err());
+        let mut c = small_cfg();
+        c.betas[0] = f32::NAN;
+        assert!(c.validate().is_err());
+        let mut c = small_cfg();
+        c.samples = 0;
+        assert!(c.validate().is_err());
+        let mut c = small_cfg();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = small_cfg();
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        // Multispin width alignment lives here too.
+        let mut c = small_cfg();
+        c.geom = Geometry::new(8, 48).unwrap();
+        assert!(c.validate().is_err());
+        // The batch farm has no %32 width constraint (10×10 runs).
+        let mut c = batch_cfg();
+        c.geom = Geometry::new(10, 10).unwrap();
+        assert!(c.validate().is_ok());
     }
 
     #[test]

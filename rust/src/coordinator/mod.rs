@@ -13,7 +13,7 @@ pub mod partition;
 pub mod perfmodel;
 pub mod topology;
 
-pub use checkpoint::{CheckpointSpec, Checkpointer, Manifest, ReplicaProgress};
+pub use checkpoint::{BatchProgress, CheckpointSpec, Checkpointer, Manifest, ReplicaProgress};
 pub use driver::NativeCluster;
 #[cfg(feature = "pjrt")]
 pub use driver::SlabCluster;

@@ -1,0 +1,478 @@
+//! Replica-batched bit-plane lattice — the layout of Block, Virnau &
+//! Preis's *multi-spin coded* replica scheme (arXiv:1007.3726), transposed
+//! to the batch axis: instead of packing 16 neighboring spins of one
+//! system into a word (`packed.rs`), each 64-bit word holds **the same
+//! site of 64 independent replicas**, one bit per replica lane.
+//!
+//! With this layout a single bit-sliced instruction operates on all 64
+//! replicas at once: neighbor sums become carry-save full adders over
+//! whole words ([`csa4`]), acceptance becomes boolean mask algebra
+//! (`algorithms::batch`), and per-lane observables fall out of a 64×64
+//! bit-matrix transpose ([`transpose64`]) followed by popcounts
+//! ([`LaneCounter`]).
+//!
+//! Lane convention (documented in README "Batched replicas"): lane `r`
+//! holds the replica initialized from `lane_seeds[r]` via the shared
+//! [`init::init_bit`](super::init::init_bit) rule, so lane `r`'s starting
+//! configuration is **exactly** `init::hot(geom, lane_seeds[r])`. Lanes
+//! beyond the active count are filled cyclically from the active seeds
+//! (they ride along for free and are ignored by observables).
+
+use super::checkerboard::Checkerboard;
+use super::geometry::{Color, Geometry};
+use super::init::init_bit;
+use crate::error::{Error, Result};
+
+/// Replica lanes per 64-bit word (the batch width).
+pub const LANES: usize = 64;
+
+/// Bit-sliced carry-save addition of four one-bit-per-lane words.
+///
+/// Returns `(s0, s1, s2)` — the binary digits of the per-lane sum
+/// `s = s0 + 2·s1 + 4·s2 ∈ {0..4}` (the number of set inputs in each
+/// lane). This is the batch analogue of the packed layout's "three
+/// 64-bit additions": every lane's four-neighbor sum in ~10 bitops.
+#[inline(always)]
+pub fn csa4(a: u64, b: u64, c: u64, d: u64) -> (u64, u64, u64) {
+    let (t0, c0) = (a ^ b, a & b);
+    let (t1, c1) = (c ^ d, c & d);
+    let s0 = t0 ^ t1;
+    let c2 = t0 & t1;
+    let s1 = c0 ^ c1 ^ c2;
+    // Majority of the three carries: only all-four-set reaches s = 4.
+    let s2 = (c0 & c1) | (c2 & (c0 ^ c1));
+    (s0, s1, s2)
+}
+
+/// In-place 64×64 bit-matrix transpose (recursive block swap): afterwards
+/// bit `i` of `a[j]` equals bit `j` of the original `a[i]`.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m = 0x0000_0000_FFFF_FFFFu64;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Streaming per-lane popcount: push site words (bit `r` = lane `r`),
+/// get per-lane set-bit counts out. Words are buffered 64 at a time,
+/// bit-transposed, and popcounted — ~1.5 bitops per site per 64 lanes
+/// instead of 64 masked scans.
+pub struct LaneCounter {
+    buf: [u64; 64],
+    fill: usize,
+    counts: [u64; LANES],
+}
+
+impl Default for LaneCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LaneCounter {
+    /// Empty counter.
+    pub fn new() -> Self {
+        Self { buf: [0; 64], fill: 0, counts: [0; LANES] }
+    }
+
+    #[inline]
+    fn flush(&mut self) {
+        let mut t = self.buf;
+        transpose64(&mut t);
+        for (r, w) in t.iter().enumerate() {
+            self.counts[r] += w.count_ones() as u64;
+        }
+        self.buf = [0; 64];
+        self.fill = 0;
+    }
+
+    /// Account one site word.
+    #[inline]
+    pub fn push(&mut self, w: u64) {
+        self.buf[self.fill] = w;
+        self.fill += 1;
+        if self.fill == 64 {
+            self.flush();
+        }
+    }
+
+    /// Per-lane totals (zero-padding the final partial chunk).
+    pub fn finish(mut self) -> [u64; LANES] {
+        if self.fill > 0 {
+            self.flush();
+        }
+        self.counts
+    }
+}
+
+/// The 64-replica bit-plane checkerboard lattice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitplaneLattice {
+    geom: Geometry,
+    /// Active replica lanes (1..=64); higher lanes are padding copies.
+    lanes: usize,
+    /// `planes[c]` row-major `h × w2` words, one word per plane site,
+    /// bit `r` = lane `r`'s 0/1 spin.
+    planes: [Vec<u64>; 2],
+}
+
+impl BitplaneLattice {
+    fn check_lanes(lanes: usize) -> Result<()> {
+        if lanes == 0 || lanes > LANES {
+            return Err(Error::Geometry(format!(
+                "batch lattice needs 1..={LANES} replica lanes, got {lanes}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// All spins up ("cold start") in every lane.
+    pub fn cold(geom: Geometry, lanes: usize) -> Result<Self> {
+        Self::check_lanes(lanes)?;
+        let n = geom.h * geom.w2();
+        Ok(Self { geom, lanes, planes: [vec![u64::MAX; n], vec![u64::MAX; n]] })
+    }
+
+    /// Hot start: lane `r` is initialized from `lane_seeds[r % len]` via
+    /// the shared `init_bit` rule, so each active lane's configuration is
+    /// bit-identical to `init::hot(geom, lane_seeds[r])`.
+    pub fn hot(geom: Geometry, lane_seeds: &[u32]) -> Result<Self> {
+        Self::check_lanes(lane_seeds.len())?;
+        let w2 = geom.w2();
+        let mut planes = [vec![0u64; geom.h * w2], vec![0u64; geom.h * w2]];
+        for i in 0..geom.h {
+            for j in 0..geom.w {
+                let (c, _, k) = geom.to_plane(i, j);
+                let mut word = 0u64;
+                for r in 0..LANES {
+                    let seed = lane_seeds[r % lane_seeds.len()];
+                    word |= (init_bit(seed, i, j) as u64) << r;
+                }
+                planes[c.index()][i * w2 + k] = word;
+            }
+        }
+        Ok(Self { geom, lanes: lane_seeds.len(), planes })
+    }
+
+    /// Rebuild from raw plane words (snapshot restore); rejects wrong
+    /// plane lengths and lane counts.
+    pub fn from_plane_words(
+        geom: Geometry,
+        lanes: usize,
+        black: &[u64],
+        white: &[u64],
+    ) -> Result<Self> {
+        Self::check_lanes(lanes)?;
+        let n = geom.h * geom.w2();
+        for (name, plane) in [("black", black), ("white", white)] {
+            if plane.len() != n {
+                return Err(Error::Geometry(format!(
+                    "{name} bit-plane has {} words, geometry needs {n}",
+                    plane.len()
+                )));
+            }
+        }
+        Ok(Self { geom, lanes, planes: [black.to_vec(), white.to_vec()] })
+    }
+
+    /// Geometry accessor.
+    #[inline]
+    pub fn geometry(&self) -> Geometry {
+        self.geom
+    }
+
+    /// Active replica lanes.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Immutable plane words.
+    #[inline]
+    pub fn plane(&self, c: Color) -> &[u64] {
+        &self.planes[c.index()]
+    }
+
+    /// Split into (target plane mutable, source plane shared).
+    #[inline]
+    pub fn split_planes(&mut self, target: Color) -> (&mut [u64], &[u64]) {
+        let [ref mut b, ref mut w] = self.planes;
+        match target {
+            Color::Black => (&mut b[..], &w[..]),
+            Color::White => (&mut w[..], &b[..]),
+        }
+    }
+
+    /// 0/1 spin of `lane` at plane coordinates `(c, i, k)`.
+    #[inline]
+    pub fn get01(&self, c: Color, i: usize, k: usize, lane: usize) -> u8 {
+        ((self.planes[c.index()][i * self.geom.w2() + k] >> lane) & 1) as u8
+    }
+
+    /// Set the 0/1 spin of `lane` at plane coordinates.
+    #[inline]
+    pub fn set01(&mut self, c: Color, i: usize, k: usize, lane: usize, v: u8) {
+        debug_assert!(v <= 1);
+        let w = &mut self.planes[c.index()][i * self.geom.w2() + k];
+        *w = (*w & !(1u64 << lane)) | ((v as u64) << lane);
+    }
+
+    /// Extract one lane as a byte-per-spin lattice (tests, diagnostics).
+    pub fn extract_lane(&self, lane: usize) -> Checkerboard {
+        let g = self.geom;
+        let mut out = Checkerboard::cold(g);
+        for c in Color::BOTH {
+            for i in 0..g.h {
+                for k in 0..g.w2() {
+                    out.set_plane(c, i, k, (self.get01(c, i, k, lane) as i8) * 2 - 1);
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-lane up-spin counts (transpose + popcount over both planes).
+    pub fn lane_up_counts(&self) -> [u64; LANES] {
+        let mut counter = LaneCounter::new();
+        for plane in &self.planes {
+            for &w in plane {
+                counter.push(w);
+            }
+        }
+        counter.finish()
+    }
+
+    /// Per-lane magnetization sums `2·ups − N`.
+    pub fn lane_magnetization_sums(&self) -> Vec<i64> {
+        let sites = self.geom.sites() as i64;
+        self.lane_up_counts()[..self.lanes]
+            .iter()
+            .map(|&u| 2 * u as i64 - sites)
+            .collect()
+    }
+
+    /// Per-lane magnetization per site — bit-identical (same integers,
+    /// same f64 division) to `Checkerboard::magnetization` of the lane.
+    pub fn lane_magnetizations(&self) -> Vec<f64> {
+        let sites = self.geom.sites() as f64;
+        self.lane_magnetization_sums()
+            .into_iter()
+            .map(|m| m as f64 / sites)
+            .collect()
+    }
+
+    /// Per-lane total bond energies.
+    ///
+    /// Sums `-(2σ−1)(2s−4)` over the black plane (every bond joins
+    /// opposite colors, so one color counts each bond once), with the
+    /// per-lane sums extracted as popcounts of seven bit-plane products:
+    /// `E = −4·Σσs + 8·Σσ + 2·Σs − 4·N_black`, where
+    /// `Σσs = P(σ∧s0) + 2P(σ∧s1) + 4P(σ∧s2)` and
+    /// `Σs = P(s0) + 2P(s1) + 4P(s2)`.
+    pub fn lane_energy_sums(&self) -> Vec<i64> {
+        let g = self.geom;
+        let w2 = g.w2();
+        let black = &self.planes[Color::Black.index()];
+        let white = &self.planes[Color::White.index()];
+        // Seven per-lane popcount accumulators.
+        let mut p_sigma = LaneCounter::new();
+        let mut p_s = [LaneCounter::new(), LaneCounter::new(), LaneCounter::new()];
+        let mut p_ss = [LaneCounter::new(), LaneCounter::new(), LaneCounter::new()];
+        for i in 0..g.h {
+            let up = g.up(i) * w2;
+            let down = g.down(i) * w2;
+            let row = i * w2;
+            for k in 0..w2 {
+                let sigma = black[row + k];
+                let side = g.side(Color::Black, i, k);
+                let (s0, s1, s2) =
+                    csa4(white[up + k], white[down + k], white[row + k], white[row + side]);
+                p_sigma.push(sigma);
+                p_s[0].push(s0);
+                p_s[1].push(s1);
+                p_s[2].push(s2);
+                p_ss[0].push(sigma & s0);
+                p_ss[1].push(sigma & s1);
+                p_ss[2].push(sigma & s2);
+            }
+        }
+        let sigma = p_sigma.finish();
+        let [s0, s1, s2] = p_s.map(|c| c.finish());
+        let [ss0, ss1, ss2] = p_ss.map(|c| c.finish());
+        let n_black = (g.sites_per_color()) as i64;
+        (0..self.lanes)
+            .map(|r| {
+                let sum_ss = ss0[r] as i64 + 2 * ss1[r] as i64 + 4 * ss2[r] as i64;
+                let sum_s = s0[r] as i64 + 2 * s1[r] as i64 + 4 * s2[r] as i64;
+                -4 * sum_ss + 8 * sigma[r] as i64 + 2 * sum_s - 4 * n_black
+            })
+            .collect()
+    }
+
+    /// Per-lane energy per site — bit-identical to
+    /// `Checkerboard::energy_per_site` of the lane.
+    pub fn lane_energies(&self) -> Vec<f64> {
+        let sites = self.geom.sites() as f64;
+        self.lane_energy_sums().into_iter().map(|e| e as f64 / sites).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::init;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn transpose64_is_the_exact_bit_transpose() {
+        let mut rng = Xoshiro256::new(42);
+        let mut a = [0u64; 64];
+        for w in a.iter_mut() {
+            *w = rng.next_u64();
+        }
+        let orig = a;
+        transpose64(&mut a);
+        for i in 0..64 {
+            for j in 0..64 {
+                assert_eq!(
+                    (a[j] >> i) & 1,
+                    (orig[i] >> j) & 1,
+                    "transpose bit ({i},{j})"
+                );
+            }
+        }
+        // Involution.
+        transpose64(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn csa4_counts_all_input_combinations() {
+        for bits in 0..16u64 {
+            let inputs: Vec<u64> =
+                (0..4).map(|b| if bits >> b & 1 == 1 { u64::MAX } else { 0 }).collect();
+            let (s0, s1, s2) = csa4(inputs[0], inputs[1], inputs[2], inputs[3]);
+            let want = bits.count_ones() as u64;
+            let got = (s0 & 1) + 2 * (s1 & 1) + 4 * (s2 & 1);
+            assert_eq!(got, want, "inputs {bits:04b}");
+            // Every lane agrees (the words are all-ones or all-zeros).
+            for w in [s0, s1, s2] {
+                assert!(w == 0 || w == u64::MAX);
+            }
+        }
+    }
+
+    #[test]
+    fn lane_counter_matches_naive_counts() {
+        let mut rng = Xoshiro256::new(7);
+        // A non-multiple of 64 exercises the partial-chunk flush.
+        let words: Vec<u64> = (0..150).map(|_| rng.next_u64()).collect();
+        let mut counter = LaneCounter::new();
+        for &w in &words {
+            counter.push(w);
+        }
+        let counts = counter.finish();
+        for r in 0..64 {
+            let naive = words.iter().filter(|&&w| w >> r & 1 == 1).count() as u64;
+            assert_eq!(counts[r], naive, "lane {r}");
+        }
+    }
+
+    #[test]
+    fn hot_lanes_match_scalar_hot_starts() {
+        let g = Geometry::new(6, 10).unwrap();
+        let seeds = [11u32, 12, 13];
+        let lat = BitplaneLattice::hot(g, &seeds).unwrap();
+        assert_eq!(lat.lanes(), 3);
+        for (r, &s) in seeds.iter().enumerate() {
+            assert_eq!(lat.extract_lane(r), init::hot(g, s), "lane {r}");
+        }
+        // Padding lanes are cyclic copies of the active seeds.
+        assert_eq!(lat.extract_lane(3), init::hot(g, 11));
+        assert_eq!(lat.extract_lane(4), init::hot(g, 12));
+    }
+
+    #[test]
+    fn lane_observables_match_checkerboard() {
+        let g = Geometry::new(8, 12).unwrap();
+        let seeds: Vec<u32> = (0..5).map(|r| 100 + r).collect();
+        let lat = BitplaneLattice::hot(g, &seeds).unwrap();
+        let ms = lat.lane_magnetizations();
+        let es = lat.lane_energies();
+        let m_sums = lat.lane_magnetization_sums();
+        let e_sums = lat.lane_energy_sums();
+        assert_eq!(ms.len(), 5);
+        for r in 0..seeds.len() {
+            let board = lat.extract_lane(r);
+            assert_eq!(m_sums[r], board.magnetization_sum(), "lane {r} m sum");
+            assert_eq!(e_sums[r], board.energy_sum(), "lane {r} e sum");
+            assert_eq!(ms[r].to_bits(), board.magnetization().to_bits());
+            assert_eq!(es[r].to_bits(), board.energy_per_site().to_bits());
+        }
+    }
+
+    #[test]
+    fn cold_state_observables() {
+        let g = Geometry::new(4, 6).unwrap();
+        let lat = BitplaneLattice::cold(g, 2).unwrap();
+        assert_eq!(lat.lane_magnetizations(), vec![1.0, 1.0]);
+        assert_eq!(lat.lane_energies(), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn lane_count_bounds_enforced() {
+        let g = Geometry::new(4, 6).unwrap();
+        assert!(BitplaneLattice::cold(g, 0).is_err());
+        assert!(BitplaneLattice::cold(g, 65).is_err());
+        assert!(BitplaneLattice::hot(g, &[]).is_err());
+        assert!(BitplaneLattice::hot(g, &vec![1u32; 65]).is_err());
+        assert!(BitplaneLattice::cold(g, 64).is_ok());
+    }
+
+    #[test]
+    fn from_plane_words_validates_lengths() {
+        let g = Geometry::new(4, 6).unwrap();
+        let lat = BitplaneLattice::hot(g, &[1, 2]).unwrap();
+        let rebuilt = BitplaneLattice::from_plane_words(
+            g,
+            2,
+            lat.plane(Color::Black),
+            lat.plane(Color::White),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, lat);
+        assert!(BitplaneLattice::from_plane_words(
+            g,
+            2,
+            &lat.plane(Color::Black)[1..],
+            lat.plane(Color::White)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let g = Geometry::new(4, 6).unwrap();
+        let mut lat = BitplaneLattice::cold(g, 64).unwrap();
+        for c in Color::BOTH {
+            for i in 0..g.h {
+                for k in 0..g.w2() {
+                    for lane in [0usize, 1, 31, 63] {
+                        let v = ((i + k + lane) % 2) as u8;
+                        lat.set01(c, i, k, lane, v);
+                        assert_eq!(lat.get01(c, i, k, lane), v);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -3,13 +3,17 @@
 //! * [`geometry`] — torus dimensions + the checkerboard coordinate rules.
 //! * [`checkerboard`] — byte-per-spin two-plane layout (paper §3.1, Fig. 1).
 //! * [`packed`] — 4-bit multi-spin coding, 16 spins per u64 (paper §3.3, Fig. 3).
+//! * [`bitplane`] — 1-bit multi-spin coding over the *replica* axis, 64
+//!   independent replicas per u64 (Block et al., arXiv:1007.3726).
 //! * [`init`] — deterministic hot/cold/striped starts shared with JAX.
 
+pub mod bitplane;
 pub mod checkerboard;
 pub mod geometry;
 pub mod init;
 pub mod packed;
 
+pub use bitplane::BitplaneLattice;
 pub use checkerboard::Checkerboard;
 pub use geometry::{Color, Geometry};
 pub use packed::PackedLattice;

@@ -34,9 +34,11 @@ pub struct ApiCtx {
 }
 
 /// Parse a submitted job spec (the POST `/v1/jobs` body) into a farm
-/// configuration, enforcing the same validation as the `ising sweep`
-/// CLI: known keys only, finite positive β, engine/geometry
-/// compatibility, workers/shards ≥ 1.
+/// configuration. JSON shape (known keys, types, value ranges) is
+/// checked here; the semantic rules — finite positive β,
+/// engine/geometry compatibility, workers/shards ≥ 1 — are
+/// [`FarmConfig::validate`], the *same* function the `ising sweep` CLI
+/// and the farm itself call, so the entry points cannot drift.
 pub fn job_config_from_json(doc: &Json) -> Result<FarmConfig> {
     const KNOWN: &[&str] = &[
         "size", "engine", "betas", "beta_points", "replicas", "seed", "burn_in",
@@ -77,15 +79,7 @@ pub fn job_config_from_json(doc: &Json) -> Result<FarmConfig> {
                 let b = item.as_f64().map_err(|_| {
                     Error::Usage("job key 'betas' must be an array of numbers".into())
                 })? as f32;
-                if !b.is_finite() || b <= 0.0 {
-                    return Err(Error::Usage(format!(
-                        "β value {b} in 'betas' must be finite and > 0"
-                    )));
-                }
                 betas.push(b);
-            }
-            if betas.is_empty() {
-                return Err(Error::Usage("'betas' needs at least one value".into()));
             }
             betas
         }
@@ -121,31 +115,11 @@ pub fn job_config_from_json(doc: &Json) -> Result<FarmConfig> {
     cfg.workers = get_u64("workers", 1)? as usize;
     cfg.shards = get_u64("shards", 1)? as usize;
 
-    if cfg.workers == 0 {
-        return Err(Error::Usage("job key 'workers' must be ≥ 1".into()));
-    }
-    if cfg.shards == 0 {
-        return Err(Error::Usage("job key 'shards' must be ≥ 1".into()));
-    }
-    if cfg.samples == 0 {
-        return Err(Error::Usage("job key 'samples' must be ≥ 1".into()));
-    }
-    if cfg.engine == FarmEngine::Tensor && cfg.shards > 1 {
-        return Err(Error::Usage(
-            "'shards' applies to the multispin engine; tensor replicas are single-block"
-                .into(),
-        ));
-    }
-    // Preflight the geometry constraints the engines would reject deep
-    // inside the farm, so submitters get a 400 instead of a failed job.
-    if size < 2 || size % 2 != 0 {
-        return Err(Error::Usage(format!("'size' {size} must be even and ≥ 2")));
-    }
-    if cfg.engine == FarmEngine::Multispin && size % 32 != 0 {
-        return Err(Error::Usage(format!(
-            "engine 'multispin' needs size % 32 == 0, got {size}"
-        )));
-    }
+    // The shared semantic rules (FarmConfig::validate): finite positive
+    // β, samples/workers/shards ≥ 1, per-engine geometry and sharding
+    // constraints — identical to the `ising sweep` CLI, so submitters
+    // get a 400 preflight instead of a failed job.
+    cfg.validate()?;
     // Service resource caps: one request must not be able to OOM the
     // server (the scheduler re-checks these as a backstop).
     super::queue::enforce_job_limits(&cfg)?;
@@ -386,6 +360,27 @@ mod tests {
         // Tensor has no %32 constraint: 48 is fine there.
         let ok = Json::parse(r#"{"size": 48, "engine": "tensor"}"#).unwrap();
         assert_eq!(job_config_from_json(&ok).unwrap().geom.h, 48);
+    }
+
+    /// The batch engine submits like any farm engine, under the same
+    /// shared validation: sharding refused, no %32 width constraint,
+    /// aliases resolved by the canonical registry.
+    #[test]
+    fn job_spec_accepts_the_batch_engine() {
+        let doc = Json::parse(
+            r#"{"size": 48, "engine": "batch", "betas": [0.44], "replicas": 80,
+                "samples": 4}"#,
+        )
+        .unwrap();
+        let cfg = job_config_from_json(&doc).unwrap();
+        assert_eq!(cfg.engine, FarmEngine::Batch);
+        assert_eq!(cfg.geom.h, 48);
+        assert_eq!(cfg.seeds.len(), 80);
+        let alias = Json::parse(r#"{"size": 64, "engine": "batch64"}"#).unwrap();
+        assert_eq!(job_config_from_json(&alias).unwrap().engine, FarmEngine::Batch);
+        // Sharding knobs are refused by the shared FarmConfig::validate.
+        let bad = Json::parse(r#"{"size": 64, "engine": "batch", "shards": 2}"#).unwrap();
+        assert!(job_config_from_json(&bad).is_err());
     }
 
     /// One request must not be able to OOM the server: the service caps

@@ -490,8 +490,10 @@ pub fn decode_config(doc: &Json) -> Result<FarmConfig> {
         threaded_shards: false,
         engine,
     };
-    // A hand-edited or legacy over-cap spec must not re-queue into a
-    // crash loop on restart: the scan treats it like a corrupt spec.
+    // A hand-edited spec must not re-queue into a crash loop on
+    // restart: the shared semantic rules and the service caps treat a
+    // violating spec like a corrupt one.
+    cfg.validate()?;
     enforce_job_limits(&cfg)?;
     Ok(cfg)
 }

@@ -30,7 +30,7 @@
 //! their own payloads.
 
 use crate::error::{Error, Result};
-use crate::lattice::{Checkerboard, Color, Geometry, PackedLattice};
+use crate::lattice::{BitplaneLattice, Checkerboard, Color, Geometry, PackedLattice};
 use std::path::Path;
 
 /// File magic.
@@ -45,11 +45,19 @@ pub const KIND_ENGINE: u16 = 1;
 /// Payload kind: one farm replica's progress (`coordinator::checkpoint`).
 pub const KIND_REPLICA: u16 = 2;
 
+/// Payload kind: one batched replica group's progress (64-lane engine
+/// state plus per-lane sample series; `coordinator::checkpoint`).
+pub const KIND_BATCH: u16 = 3;
+
 /// Lattice payload tag: packed multi-spin nibble planes.
 const LATTICE_PACKED: u8 = 1;
 
 /// Lattice payload tag: byte-per-spin ±1 planes.
 const LATTICE_BYTES: u8 = 2;
+
+/// Lattice payload tag: 64-replica bit planes (one word per site, one
+/// replica lane per bit).
+const LATTICE_BITPLANE: u8 = 3;
 
 const HEADER_LEN: usize = 8 + 2 + 2 + 8;
 const TRAILER_LEN: usize = 4;
@@ -349,6 +357,16 @@ pub enum LatticeState {
         /// White plane spins.
         white: Vec<i8>,
     },
+    /// 64-replica bit planes (batch engine), black then white: one word
+    /// per plane site, bit `r` = replica lane `r`.
+    Bitplane {
+        /// Active replica lanes (1..=64).
+        lanes: u32,
+        /// Black plane words.
+        black: Vec<u64>,
+        /// White plane words.
+        white: Vec<u64>,
+    },
 }
 
 /// A complete, restorable engine state: spin planes plus the
@@ -403,6 +421,26 @@ impl EngineSnapshot {
         }
     }
 
+    /// Snapshot a 64-replica bit-plane lattice. `seed` is the batch's
+    /// shared Philox *stream* seed (lane initial conditions are not part
+    /// of the dynamics, so they are recorded by the farm manifest, not
+    /// here).
+    pub fn from_bitplane(lat: &BitplaneLattice, beta: f32, seed: u32, step: u64) -> Self {
+        let g = lat.geometry();
+        Self {
+            h: g.h,
+            w: g.w,
+            beta_bits: beta.to_bits(),
+            seed,
+            step,
+            lattice: LatticeState::Bitplane {
+                lanes: lat.lanes() as u32,
+                black: lat.plane(Color::Black).to_vec(),
+                white: lat.plane(Color::White).to_vec(),
+            },
+        }
+    }
+
     /// Inverse temperature.
     pub fn beta(&self) -> f32 {
         f32::from_bits(self.beta_bits)
@@ -420,13 +458,28 @@ impl EngineSnapshot {
             LatticeState::Packed { black, white } => {
                 PackedLattice::from_plane_words(geom, black, white)
             }
-            LatticeState::Bytes { .. } => Err(Error::Snapshot(
-                "snapshot holds byte spins, not a packed lattice".into(),
-            )),
+            LatticeState::Bytes { .. } | LatticeState::Bitplane { .. } => Err(
+                Error::Snapshot("snapshot does not hold a packed lattice".into()),
+            ),
         }
     }
 
-    /// Rebuild a byte-per-spin lattice (converts packed planes if needed).
+    /// Rebuild the 64-replica bit-plane lattice (snapshot must hold
+    /// bit planes).
+    pub fn to_bitplane(&self) -> Result<BitplaneLattice> {
+        let geom = self.geometry()?;
+        match &self.lattice {
+            LatticeState::Bitplane { lanes, black, white } => {
+                BitplaneLattice::from_plane_words(geom, *lanes as usize, black, white)
+            }
+            LatticeState::Packed { .. } | LatticeState::Bytes { .. } => Err(
+                Error::Snapshot("snapshot does not hold 64-replica bit planes".into()),
+            ),
+        }
+    }
+
+    /// Rebuild a byte-per-spin lattice (converts packed planes if needed;
+    /// a batch snapshot holds 64 lanes and does not convert).
     pub fn to_checkerboard(&self) -> Result<Checkerboard> {
         let geom = self.geometry()?;
         match &self.lattice {
@@ -434,6 +487,9 @@ impl EngineSnapshot {
                 Checkerboard::from_planes(geom, black, white)
             }
             LatticeState::Packed { .. } => Ok(self.to_packed()?.to_checkerboard()),
+            LatticeState::Bitplane { .. } => Err(Error::Snapshot(
+                "snapshot holds a 64-replica batch, not a single lattice".into(),
+            )),
         }
     }
 
@@ -458,6 +514,13 @@ impl EngineSnapshot {
                 wr.put_i8_slice(black);
                 wr.put_i8_slice(white);
             }
+            LatticeState::Bitplane { lanes, black, white } => {
+                wr.put_u8(LATTICE_BITPLANE);
+                wr.put_u32(*lanes);
+                wr.put_u64(black.len() as u64);
+                wr.put_u64_slice(black);
+                wr.put_u64_slice(white);
+            }
         }
         wr.into_bytes()
     }
@@ -472,9 +535,9 @@ impl EngineSnapshot {
         let step = r.get_u64()?;
         let geom = Geometry::new(h, w)?;
         let tag = r.get_u8()?;
-        let n = r.get_u64()? as usize;
         let lattice = match tag {
             LATTICE_PACKED => {
+                let n = r.get_u64()? as usize;
                 let wpr = PackedLattice::words_per_row(geom)?;
                 if n != geom.h * wpr {
                     return Err(Error::Snapshot(format!(
@@ -488,6 +551,7 @@ impl EngineSnapshot {
                 }
             }
             LATTICE_BYTES => {
+                let n = r.get_u64()? as usize;
                 if n != geom.sites_per_color() {
                     return Err(Error::Snapshot(format!(
                         "byte plane has {n} spins, {h}x{w} needs {}",
@@ -497,6 +561,26 @@ impl EngineSnapshot {
                 LatticeState::Bytes {
                     black: r.get_i8_vec(n)?,
                     white: r.get_i8_vec(n)?,
+                }
+            }
+            LATTICE_BITPLANE => {
+                let lanes = r.get_u32()?;
+                let n = r.get_u64()? as usize;
+                if lanes == 0 || lanes as usize > crate::lattice::bitplane::LANES {
+                    return Err(Error::Snapshot(format!(
+                        "bit-plane snapshot claims {lanes} replica lanes"
+                    )));
+                }
+                if n != geom.sites_per_color() {
+                    return Err(Error::Snapshot(format!(
+                        "bit plane has {n} words, {h}x{w} needs {}",
+                        geom.sites_per_color()
+                    )));
+                }
+                LatticeState::Bitplane {
+                    lanes,
+                    black: r.get_u64_vec(n)?,
+                    white: r.get_u64_vec(n)?,
                 }
             }
             t => return Err(Error::Snapshot(format!("unknown lattice tag {t}"))),
@@ -593,6 +677,23 @@ mod tests {
         assert_eq!(lat.geometry(), Geometry::new(4, 32).unwrap());
         // A packed snapshot still converts to a checkerboard view.
         assert_eq!(back.to_checkerboard().unwrap(), lat.to_checkerboard());
+    }
+
+    #[test]
+    fn engine_snapshot_bitplane_roundtrip() {
+        let geom = Geometry::new(6, 10).unwrap();
+        let lat = BitplaneLattice::hot(geom, &[5, 6, 7]).unwrap();
+        let snap = EngineSnapshot::from_bitplane(&lat, 0.44, 5, 17);
+        let back = EngineSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back, snap);
+        let restored = back.to_bitplane().unwrap();
+        assert_eq!(restored, lat);
+        assert_eq!(restored.lanes(), 3);
+        // A batch snapshot refuses single-lattice views.
+        assert!(back.to_packed().is_err());
+        assert!(back.to_checkerboard().is_err());
+        // And single-engine snapshots refuse the batch view.
+        assert!(sample_packed().to_bitplane().is_err());
     }
 
     #[test]

@@ -316,6 +316,64 @@ fn tensor_farm_interrupt_resume_bit_identical() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The bit-sliced 64-replica batch engine through the full checkpointed
+/// farm path: interrupt a `--engine batch` grid mid-run (mid-burn-in on
+/// the first budget), resume it to completion, and demand per-lane
+/// observable series bit-identical to the straight-through batch farm.
+/// Also pins the lane grouping invariants: grid order, per-lane sample
+/// counts, and the engine-mismatch resume refusal.
+#[test]
+fn batch_farm_interrupt_resume_bit_identical() {
+    let mut cfg = ckpt_cfg();
+    cfg.engine = FarmEngine::Batch;
+    cfg.shards = 1;
+    // 3 seeds per β: one batch unit of 3 lanes per β point.
+    cfg.seeds = vec![3, 4, 5];
+    let straight = run_farm(&cfg).unwrap();
+    assert_eq!(straight.replicas.len(), 6);
+    for r in &straight.replicas {
+        assert_eq!(r.m_series.len(), cfg.samples);
+        assert_eq!(r.metrics.sweeps, cfg.burn_in + cfg.samples as u64 * cfg.thin);
+    }
+
+    let dir = ckpt_temp_dir("batch-resume");
+    // Pass 1: a 3-round budget against the 2 × 8 = 16 sample rounds the
+    // grid needs (each round samples every lane of a unit at once).
+    let spec = CheckpointSpec {
+        sample_budget: Some(3),
+        ..CheckpointSpec::new(dir.clone(), 2)
+    };
+    match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Interrupted { total, .. } => assert_eq!(total, 6),
+        FarmOutcome::Complete(_) => panic!("3-round budget must interrupt a 16-round farm"),
+    }
+    // A multispin resume of a batch checkpoint dir must be refused
+    // (manifest engine + lane-layout mismatch).
+    let mut multispin_cfg = ckpt_cfg();
+    multispin_cfg.seeds = vec![3, 4, 5];
+    let resume_spec = CheckpointSpec { resume: true, sample_budget: None, ..spec };
+    assert!(
+        run_farm_checkpointed(&multispin_cfg, Some(&resume_spec)).is_err(),
+        "engine mismatch must refuse to resume"
+    );
+    // Pass 2: another bounded slice, then run to completion — the
+    // multi-restart path every lane must survive bit-exactly.
+    let slice_spec = CheckpointSpec { sample_budget: Some(5), ..resume_spec.clone() };
+    match run_farm_checkpointed(&cfg, Some(&slice_spec)).unwrap() {
+        FarmOutcome::Interrupted { .. } => {}
+        FarmOutcome::Complete(_) => panic!("8 total rounds cannot finish 16"),
+    }
+    let resumed = match run_farm_checkpointed(&cfg, Some(&resume_spec)).unwrap() {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { .. } => panic!("unbudgeted resume must finish the grid"),
+    };
+    assert_same_observables(&straight, &resumed);
+    // The batch report is stable bytes, so `ising sweep --engine batch
+    // --report` interrupt→resume→diff (the CI smoke) holds.
+    assert_eq!(straight.replica_report(), resumed.replica_report());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Resuming a *finished* checkpoint directory reloads every replica from
 /// its snapshot without re-simulating — and still reports the identical
 /// observables.

@@ -158,6 +158,81 @@ fn prop_engine_snapshot_roundtrip() {
     });
 }
 
+/// The batch acceptance criterion: every active lane of the 64-replica
+/// bit-sliced engine reproduces a matching independent scalar-engine
+/// trajectory's observables — magnetization and energy per sweep, as
+/// exact f64 bit patterns — over random geometries, β and seed sets.
+/// The matching scalar run follows the documented lane convention:
+/// initial condition from the lane's seed, acceptance stream from the
+/// batch's stream seed (`lane_seeds[0]`).
+#[test]
+fn prop_batch_lanes_match_scalar_trajectories() {
+    use ising_dgx::algorithms::batch::BatchEngine;
+    check("batch lanes == scalar references", 12, |g| {
+        // Any even geometry (no %32 constraint on the batch path).
+        let h = g.even_in(2, 10);
+        let w = g.even_in(4, 14);
+        let geom = Geometry::new(h, w).unwrap();
+        let beta = g.f32_in(0.0, 1.5);
+        let lanes = g.int_in(1, 7) as usize;
+        let lane_seeds: Vec<u32> = (0..lanes).map(|_| g.u32()).collect();
+        let sweeps = g.int_in(1, 5) as u64;
+
+        let mut batch = BatchEngine::hot(geom, beta, &lane_seeds).unwrap();
+        let table = AcceptanceTable::new(beta);
+        let stream = lane_seeds[0];
+        let mut refs: Vec<Checkerboard> =
+            lane_seeds.iter().map(|&s| init::hot(geom, s)).collect();
+        for t in 0..sweeps {
+            batch.run(1);
+            let ms = batch.lane_magnetizations();
+            let es = batch.lane_energies();
+            for (l, lat) in refs.iter_mut().enumerate() {
+                metropolis::sweep(lat, &table, stream, t);
+                assert_eq!(
+                    ms[l].to_bits(),
+                    lat.magnetization().to_bits(),
+                    "lane {l} magnetization diverged at sweep {t} ({h}x{w}, β={beta})"
+                );
+                assert_eq!(
+                    es[l].to_bits(),
+                    lat.energy_per_site().to_bits(),
+                    "lane {l} energy diverged at sweep {t} ({h}x{w}, β={beta})"
+                );
+            }
+        }
+        // Full-state equality as the final word (not just observables).
+        for (l, lat) in refs.iter().enumerate() {
+            assert_eq!(batch.lattice.extract_lane(l), *lat, "lane {l} state");
+        }
+    });
+}
+
+/// Batch snapshots roundtrip exactly and restored batches continue
+/// bit-identically, for random lane counts and random interrupt points.
+#[test]
+fn prop_batch_snapshot_roundtrip() {
+    use ising_dgx::algorithms::batch::BatchEngine;
+    check("batch snapshot roundtrip + continuation", 10, |g| {
+        let geom = Geometry::new(g.even_in(2, 8), g.even_in(4, 12)).unwrap();
+        let beta = g.f32_in(0.05, 1.2);
+        let lanes = g.int_in(1, 64) as usize;
+        let lane_seeds: Vec<u32> = (0..lanes).map(|_| g.u32()).collect();
+        let sweeps = g.int_in(0, 4) as u64;
+        let mut a = BatchEngine::hot(geom, beta, &lane_seeds).unwrap();
+        a.run(sweeps);
+        let snap = a.snapshot();
+        let back = EngineSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back, snap);
+        let mut b = BatchEngine::from_snapshot(&back).unwrap();
+        assert_eq!(b.lattice, a.lattice);
+        assert_eq!(b.step, sweeps);
+        a.run(3);
+        b.run(3);
+        assert_eq!(a.lattice, b.lattice, "batch continuation diverged");
+    });
+}
+
 #[test]
 fn prop_snapshot_container_detects_any_bit_flip() {
     use ising_dgx::util::snapshot::{decode_container, encode_container, KIND_ENGINE};
