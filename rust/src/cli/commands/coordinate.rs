@@ -1,0 +1,162 @@
+//! `ising coordinate` — run the distributed-farm coordinator: shard the
+//! β×seed grid into work units and lease them over HTTP to a fleet of
+//! `ising serve --coordinator ...` workers, re-queueing units of dead or
+//! stuck workers from their last uploaded checkpoint. The merged
+//! `--report` is byte-identical to a single-node `ising sweep --report`
+//! of the same job, regardless of fleet size or failures.
+//!
+//! The job itself is the shared /v2 `JobSpec` vocabulary (`[job]` TOML
+//! section + the same flags `ising sweep` takes); fleet wiring comes
+//! from the `[fleet]` section / `--addr`-family flags.
+
+use crate::cli::args::Args;
+use crate::config::{FleetConfig, Toml};
+use crate::coordinator::farm::{work_units, FarmConfig};
+use crate::error::Result;
+use crate::server::fleet::{Coordinator, FleetState};
+use crate::server::wire::JobSpec;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const KNOWN: &[&str] = &[
+    // The job: same vocabulary as `ising sweep` / POST /v2/jobs.
+    "size", "engine", "betas", "beta-points", "replicas", "seed",
+    "burn-in", "samples", "thin", "shards",
+    // Fleet wiring.
+    "addr", "heartbeat-ms", "dead-after-ms", "lease-ms", "poll-ms",
+    "checkpoint-dir", "resume", "report", "config",
+];
+
+/// Resolve flags + optional config file into the job and fleet configs.
+fn resolve(args: &Args) -> Result<(FarmConfig, FleetConfig)> {
+    let (mut spec, mut fleet) = match args.opt("config") {
+        Some(path) => {
+            let doc = Toml::load(Path::new(path))?;
+            (JobSpec::from_toml(&doc)?, FleetConfig::from_toml(&doc)?)
+        }
+        None => (JobSpec::default(), FleetConfig::default()),
+    };
+    spec.apply_args(args)?;
+    if let Some(addr) = args.opt("addr") {
+        fleet.addr = addr.to_string();
+    }
+    fleet.heartbeat_ms = args.opt_parse("heartbeat-ms", fleet.heartbeat_ms)?;
+    fleet.dead_after_ms = args.opt_parse("dead-after-ms", fleet.dead_after_ms)?;
+    fleet.lease_ms = args.opt_parse("lease-ms", fleet.lease_ms)?;
+    fleet.poll_ms = args.opt_parse("poll-ms", fleet.poll_ms)?;
+    if let Some(dir) = args.opt("checkpoint-dir") {
+        fleet.checkpoint_dir = PathBuf::from(dir);
+    }
+    fleet.validate()?;
+    Ok((spec.resolve()?, fleet))
+}
+
+/// Execute the subcommand (blocks until the grid is done or failed).
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    let (cfg, fleet) = resolve(args)?;
+    let units = work_units(&cfg).len();
+    let state = Arc::new(FleetState::open(cfg, fleet.clone(), args.flag("resume"))?);
+    let coordinator = Coordinator::bind(&fleet.addr, Arc::clone(&state))?;
+    let cfg = state.config();
+    println!(
+        "ising coordinate: listening on http://{}",
+        coordinator.local_addr()?
+    );
+    println!(
+        "  job: {}² lattice, engine {}, {} β × {} seed(s) = {} replicas in {units} unit(s)",
+        cfg.geom.w,
+        cfg.engine.name(),
+        cfg.betas.len(),
+        cfg.seeds.len(),
+        cfg.replica_count(),
+    );
+    println!(
+        "  fleet: heartbeat {}ms, dead after {}ms, lease {}ms, state in {}",
+        fleet.heartbeat_ms,
+        fleet.dead_after_ms,
+        fleet.lease_ms,
+        fleet.checkpoint_dir.display(),
+    );
+    println!(
+        "  workers join with: ising serve --coordinator http://{}",
+        coordinator.local_addr()?
+    );
+
+    let report = coordinator.run()?;
+    println!(
+        "ising coordinate: grid complete ({units} unit(s), {} re-queue(s), \
+         {} checkpoint resume(s))",
+        state.requeue_count(),
+        state.resumed_count(),
+    );
+    if let Some(path) = args.opt("report") {
+        std::fs::write(path, &report)?;
+        println!("  report: bit-exact replica series written to {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_override_defaults() {
+        let args = parse(
+            "coordinate --addr 0.0.0.0:9100 --heartbeat-ms 250 --dead-after-ms 900 \
+             --lease-ms 5000 --poll-ms 50 --checkpoint-dir farm-state \
+             --size 64 --betas 0.42 --replicas 2 --seed 5",
+        );
+        let (cfg, fleet) = resolve(&args).unwrap();
+        assert_eq!(fleet.addr, "0.0.0.0:9100");
+        assert_eq!(fleet.heartbeat_ms, 250);
+        assert_eq!(fleet.dead_after_ms, 900);
+        assert_eq!(fleet.lease_ms, 5000);
+        assert_eq!(fleet.poll_ms, 50);
+        assert_eq!(fleet.checkpoint_dir, PathBuf::from("farm-state"));
+        assert_eq!(cfg.geom.w, 64);
+        assert_eq!(cfg.betas, vec![0.42f32]);
+        assert_eq!(cfg.seeds, vec![5, 6]);
+        let (_, fleet) = resolve(&parse("coordinate")).unwrap();
+        assert_eq!(fleet, FleetConfig::default());
+    }
+
+    #[test]
+    fn invalid_values_are_rejected() {
+        for bad in [
+            "coordinate --addr noport",
+            "coordinate --heartbeat-ms 0",
+            "coordinate --poll-ms 0",
+            "coordinate --heartbeat-ms 2000 --dead-after-ms 1000",
+            "coordinate --betas nan",
+            "coordinate --engine warp",
+        ] {
+            assert!(resolve(&parse(bad)).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn config_file_is_loaded_and_overridden() {
+        let dir = std::env::temp_dir()
+            .join(format!("ising-coordinate-cli-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("fleet.toml");
+        std::fs::write(
+            &path,
+            "[fleet]\npoll_ms = 50\nlease_ms = 9000\n[job]\nsize = 64\nreplicas = 3\n",
+        )
+        .unwrap();
+        let args = parse(&format!("coordinate --config {} --poll-ms 75", path.display()));
+        let (cfg, fleet) = resolve(&args).unwrap();
+        assert_eq!(fleet.poll_ms, 75, "flag beats file");
+        assert_eq!(fleet.lease_ms, 9000, "file beats default");
+        assert_eq!(cfg.geom.w, 64);
+        assert_eq!(cfg.seeds.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 
 const KNOWN: &[&str] = &[
     "addr", "workers", "queue-depth", "checkpoint-dir", "checkpoint-every",
-    "slice-samples", "config",
+    "slice-samples", "config", "coordinator", "worker-name",
 ];
 
 /// Resolve flags + optional config file into a validated `ServerConfig`.
@@ -39,10 +39,23 @@ fn resolve(args: &Args) -> Result<ServerConfig> {
     Ok(cfg)
 }
 
-/// Execute the subcommand (blocks until `POST /v1/shutdown`).
+/// Execute the subcommand (blocks until `POST /v2/shutdown`). With
+/// `--coordinator http://HOST:PORT` the server additionally joins that
+/// coordinator's fleet as a worker (`--worker-name` to pick the fleet
+/// name; default `worker-<pid>`).
 pub fn exec(args: &Args) -> Result<()> {
     args.ensure_known(KNOWN)?;
-    crate::server::serve(resolve(args)?)
+    let fleet = args.opt("coordinator").map(|url| crate::server::WorkerOpts {
+        coordinator: url.to_string(),
+        name: match args.opt("worker-name") {
+            Some(name) => name.to_string(),
+            None => format!("worker-{}", std::process::id()),
+        },
+    });
+    if fleet.is_none() && args.opt("worker-name").is_some() {
+        return Err(Error::Usage("--worker-name needs --coordinator".into()));
+    }
+    crate::server::serve(resolve(args)?, fleet)
 }
 
 #[cfg(test)]

@@ -9,11 +9,9 @@
 
 use crate::cli::args::Args;
 use crate::coordinator::checkpoint::CheckpointSpec;
-use crate::coordinator::farm::{
-    default_beta_grid, run_farm_checkpointed, FarmConfig, FarmEngine, FarmOutcome,
-    FarmResult,
-};
+use crate::coordinator::farm::{run_farm_checkpointed, FarmOutcome, FarmResult};
 use crate::error::{Error, Result};
+use crate::server::wire::JobSpec;
 use crate::util::{units, Table};
 use std::path::PathBuf;
 
@@ -22,27 +20,6 @@ const KNOWN: &[&str] = &[
     "burn-in", "samples", "thin", "threaded-shards", "quiet",
     "checkpoint-dir", "checkpoint-every", "resume", "max-samples", "report",
 ];
-
-/// Parse `--betas 0.40,0.44,0.48` into an f32 grid, rejecting values that
-/// would silently poison the acceptance tables (`nan`/`inf` parse as
-/// valid f32 literals!) or that are unphysical for this model (β ≤ 0 —
-/// the grid scans the critical window, not the antiferromagnet).
-fn parse_betas(list: &str) -> Result<Vec<f32>> {
-    list.split(',')
-        .map(|s| {
-            let s = s.trim();
-            let b: f32 = s
-                .parse()
-                .map_err(|_| Error::Usage(format!("cannot parse β value '{s}' in --betas")))?;
-            if !b.is_finite() || b <= 0.0 {
-                return Err(Error::Usage(format!(
-                    "β value '{s}' in --betas must be finite and > 0"
-                )));
-            }
-            Ok(b)
-        })
-        .collect()
-}
 
 /// Write the bit-exact per-replica report ([`FarmResult::replica_report`],
 /// the same bytes the `ising serve` result endpoint returns). This is
@@ -56,34 +33,20 @@ fn write_report(result: &FarmResult, path: &str) -> Result<()> {
 /// Execute the subcommand.
 pub fn exec(args: &Args) -> Result<()> {
     args.ensure_known(KNOWN)?;
-    let size: usize = args.opt_parse("size", 256usize)?;
-
-    let betas: Vec<f32> = match args.opt("betas") {
-        Some(list) => parse_betas(list)?,
-        None => default_beta_grid(args.opt_parse("beta-points", 4usize)?),
-    };
-    if betas.is_empty() {
-        return Err(Error::Usage("--betas needs at least one value".into()));
+    // Flags parse through the shared /v2 JobSpec vocabulary — the exact
+    // parser behind `POST /v2/jobs` bodies and `[job]` TOML sections —
+    // so CLI, file, and HTTP job specs cannot drift apart.
+    let spec = JobSpec::from_args(args)?;
+    let mut cfg = spec.resolve()?;
+    if spec.workers.is_none() {
+        // No explicit --workers: default to one core per replica.
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        cfg.workers = cores.min(cfg.replica_count().max(1));
     }
-    let replicas_per_beta: usize = args.opt_parse("replicas", 1usize)?;
-    let seed0: u32 = args.opt_parse("seed", 1u32)?;
-
-    let mut cfg = FarmConfig::grid(size, betas, replicas_per_beta, seed0)?;
-    if let Some(name) = args.opt("engine") {
-        cfg.engine = FarmEngine::parse(name)?;
-    }
-    let total = cfg.replica_count();
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let workers: usize = args.opt_parse("workers", cores.min(total.max(1)))?;
-    let shards: usize = args.opt_parse("shards", 1usize)?;
-    cfg.workers = workers;
-    cfg.shards = shards;
-    cfg.burn_in = args.opt_parse("burn-in", cfg.burn_in)?;
-    cfg.samples = args.opt_parse("samples", cfg.samples)?;
-    cfg.thin = args.opt_parse("thin", cfg.thin)?;
     // Shard threads only when the farm itself is not already using the
     // cores for replica parallelism (or when explicitly requested).
-    cfg.threaded_shards = args.flag("threaded-shards") || (shards > 1 && workers == 1);
+    cfg.threaded_shards =
+        args.flag("threaded-shards") || (cfg.shards > 1 && cfg.workers == 1);
     // The shared semantic rules (same function the job API and the farm
     // call): zero workers/shards, engine/geometry mismatches and
     // sharding of single-block engines all fail here at parse time, not
@@ -117,8 +80,9 @@ pub fn exec(args: &Args) -> Result<()> {
     });
 
     println!(
-        "ising sweep: {size}² lattice, engine {}, {} β × {} seed(s) = {} replicas, \
+        "ising sweep: {}² lattice, engine {}, {} β × {} seed(s) = {} replicas, \
          {} worker(s), {} shard(s)/replica",
+        cfg.geom.w,
         cfg.engine.name(),
         cfg.betas.len(),
         cfg.seeds.len(),
@@ -211,12 +175,31 @@ pub fn exec(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::farm::FarmEngine;
 
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    /// The sweep flags flow through the shared JobSpec parser, so the CLI
+    /// grid matches what the same spec submitted over HTTP would run.
     #[test]
-    fn betas_parse_and_reject_unphysical_values() {
-        assert_eq!(parse_betas("0.40, 0.44").unwrap(), vec![0.40f32, 0.44]);
+    fn flags_resolve_through_the_shared_job_spec() {
+        let args = parse(
+            "sweep --size 64 --engine batch --betas 0.40,0.44 --replicas 3 \
+             --seed 7 --burn-in 10 --samples 5 --thin 1 --workers 2",
+        );
+        let cfg = JobSpec::from_args(&args).unwrap().resolve().unwrap();
+        assert_eq!(cfg.geom.w, 64);
+        assert_eq!(cfg.engine, FarmEngine::Batch);
+        assert_eq!(cfg.betas, vec![0.40f32, 0.44]);
+        assert_eq!(cfg.seeds, vec![7, 8, 9]);
+        assert_eq!((cfg.burn_in, cfg.samples, cfg.thin), (10, 5, 1));
+        assert_eq!(cfg.workers, 2);
+        // Bad β lists fail at parse time, same as the HTTP job API.
         for bad in ["nan", "inf", "-0.4", "0", "abc", "0.4,,0.5"] {
-            assert!(parse_betas(bad).is_err(), "must reject '{bad}'");
+            let args = parse(&format!("sweep --betas {bad}"));
+            assert!(JobSpec::from_args(&args).is_err(), "must reject '{bad}'");
         }
     }
 }

@@ -1,10 +1,13 @@
 //! The `ising` command-line interface.
 //!
 //! Subcommands:
-//! * `run`      — simulate and report observables + flips/ns.
-//! * `sweep`    — parallel replica farm over a seed × β grid (Fig. 5/6).
-//! * `serve`    — HTTP job service over the farm (queue + result cache).
-//! * `validate` — temperature sweep vs the Onsager solution (paper §5.3).
+//! * `run`        — simulate and report observables + flips/ns.
+//! * `sweep`      — parallel replica farm over a seed × β grid (Fig. 5/6).
+//! * `serve`      — HTTP job service over the farm (queue + result cache);
+//!   `--coordinator` additionally joins a fleet as a worker.
+//! * `coordinate` — distributed-farm coordinator: shard the grid across a
+//!   worker fleet over the /v2 protocol.
+//! * `validate`   — temperature sweep vs the Onsager solution (paper §5.3).
 //! * `scaling`  — multi-device weak/strong scaling (real slabs + DGX model).
 //! * `info`     — platform, artifact inventory, analytic constants.
 
@@ -34,6 +37,11 @@ COMMANDS:
             --addr HOST:PORT --workers W --queue-depth N
             --checkpoint-dir DIR [--checkpoint-every N] [--slice-samples N]
             [--config FILE]   (see README \"Serving\" for the API)
+            fleet worker: [--coordinator http://HOST:PORT] [--worker-name NAME]
+  coordinate distributed farm coordinator: shard the grid over a worker fleet
+            job flags as `sweep` plus --addr HOST:PORT --checkpoint-dir DIR
+            [--heartbeat-ms N] [--dead-after-ms N] [--lease-ms N] [--poll-ms N]
+            [--resume] [--report FILE] [--config FILE]
   validate  magnetization & Binder vs Onsager across temperatures
             --size N --engine E --samples N --quick
   scaling   weak/strong scaling study (native cluster + DGX-2 model)
@@ -66,7 +74,7 @@ pub fn usage() -> String {
 /// The subcommand registry: every routable name, including the help
 /// aliases — the source for unknown-command suggestions.
 pub const COMMANDS: &[&str] =
-    &["run", "sweep", "serve", "validate", "scaling", "info", "help"];
+    &["run", "sweep", "serve", "coordinate", "validate", "scaling", "info", "help"];
 
 /// Levenshtein edit distance (std-only; the strings are subcommand-sized,
 /// so the O(len²) two-row DP is plenty).
@@ -103,6 +111,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "run" => commands::run::exec(&args),
         "sweep" => commands::sweep::exec(&args),
         "serve" => commands::serve::exec(&args),
+        "coordinate" => commands::coordinate::exec(&args),
         "validate" => commands::validate::exec(&args),
         "scaling" => commands::scaling::exec(&args),
         "info" => commands::info::exec(&args),

@@ -5,6 +5,6 @@ pub mod types;
 
 pub use toml::{Toml, Value};
 pub use types::{
-    default_temperature_grid, engine_names_hint, EngineKind, EngineSpec, RunConfig,
-    ServerConfig, SweepConfig, ENGINES,
+    default_temperature_grid, engine_names_hint, EngineKind, EngineSpec, FleetConfig,
+    RunConfig, ServerConfig, SweepConfig, ENGINES,
 };

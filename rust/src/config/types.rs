@@ -429,6 +429,118 @@ impl ServerConfig {
     }
 }
 
+/// `ising coordinate` configuration: the `[fleet]` TOML section / CLI
+/// flags behind the distributed-farm coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Coordinator listen address (`host:port`; port 0 = ephemeral).
+    pub addr: String,
+    /// Heartbeat cadence pushed to workers at registration.
+    pub heartbeat_ms: u64,
+    /// Silence threshold after which a worker counts as dead and its
+    /// leased units are re-queued from their last uploaded checkpoint.
+    pub dead_after_ms: u64,
+    /// Lease duration; a unit with no progress upload inside it is
+    /// eligible for re-queue even while its worker still heartbeats.
+    pub lease_ms: u64,
+    /// Idle-poll cadence pushed to workers (how often they re-ask for a
+    /// lease when none is available).
+    pub poll_ms: u64,
+    /// Coordinator state directory: the pinned job spec, per-unit
+    /// checkpoint payloads, and validated per-unit report lines.
+    pub checkpoint_dir: PathBuf,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7627".into(),
+            heartbeat_ms: 1000,
+            dead_after_ms: 5000,
+            lease_ms: 60_000,
+            poll_ms: 200,
+            checkpoint_dir: PathBuf::from("coordinator-state"),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Load from the `[fleet]` section of a TOML file, rejecting unknown
+    /// keys like the other config sections.
+    pub fn from_toml(doc: &Toml) -> Result<Self> {
+        const KNOWN: &[&str] = &[
+            "addr", "heartbeat_ms", "dead_after_ms", "lease_ms", "poll_ms",
+            "checkpoint_dir",
+        ];
+        for key in doc.section_keys("fleet") {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!(
+                    "unknown [fleet] key '{key}' (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("fleet", "addr") {
+            cfg.addr = v.as_str()?.to_string();
+        }
+        for (key, slot) in [
+            ("heartbeat_ms", &mut cfg.heartbeat_ms as &mut u64),
+            ("dead_after_ms", &mut cfg.dead_after_ms),
+            ("lease_ms", &mut cfg.lease_ms),
+            ("poll_ms", &mut cfg.poll_ms),
+        ] {
+            if let Some(v) = doc.get("fleet", key) {
+                let n = v.as_int()?;
+                *slot = u64::try_from(n)
+                    .map_err(|_| Error::Config(format!("fleet {key} {n} must be ≥ 0")))?;
+            }
+        }
+        if let Some(v) = doc.get("fleet", "checkpoint_dir") {
+            cfg.checkpoint_dir = PathBuf::from(v.as_str()?);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks with actionable messages (shared by the TOML and
+    /// CLI paths — `ising coordinate` validates before binding).
+    pub fn validate(&self) -> Result<()> {
+        if !self.addr.contains(':') {
+            return Err(Error::Config(format!(
+                "fleet addr '{}' must be host:port",
+                self.addr
+            )));
+        }
+        // One day is the cap the wire-level RegisterAck enforces; keeping
+        // the config inside it means registration acks always validate.
+        const MAX_MS: u64 = 86_400_000;
+        for (name, ms) in [
+            ("heartbeat_ms", self.heartbeat_ms),
+            ("dead_after_ms", self.dead_after_ms),
+            ("lease_ms", self.lease_ms),
+            ("poll_ms", self.poll_ms),
+        ] {
+            if ms == 0 || ms > MAX_MS {
+                return Err(Error::Config(format!(
+                    "fleet {name} must be in 1..={MAX_MS}, got {ms}"
+                )));
+            }
+        }
+        if self.heartbeat_ms >= self.dead_after_ms {
+            return Err(Error::Config(format!(
+                "fleet heartbeat_ms {} must be shorter than dead_after_ms {} \
+                 (a worker must get several heartbeats per liveness window)",
+                self.heartbeat_ms, self.dead_after_ms
+            )));
+        }
+        if self.checkpoint_dir.as_os_str().is_empty() {
+            return Err(Error::Config("fleet checkpoint_dir must be non-empty".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Temperature-sweep configuration (validation / fig5 / fig6 drivers).
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -569,6 +681,39 @@ mod tests {
     }
 
     #[test]
+    fn fleet_config_from_toml_and_validation() {
+        let doc = Toml::parse(
+            "[fleet]\naddr = \"0.0.0.0:7627\"\nheartbeat_ms = 500\ndead_after_ms = 2000\n\
+             lease_ms = 30000\npoll_ms = 100\ncheckpoint_dir = \"farm-state\"\n",
+        )
+        .unwrap();
+        let cfg = FleetConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:7627");
+        assert_eq!(cfg.heartbeat_ms, 500);
+        assert_eq!(cfg.dead_after_ms, 2000);
+        assert_eq!(cfg.lease_ms, 30_000);
+        assert_eq!(cfg.poll_ms, 100);
+        assert_eq!(cfg.checkpoint_dir, PathBuf::from("farm-state"));
+        // No [fleet] section at all: defaults.
+        let cfg = FleetConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(cfg, FleetConfig::default());
+        cfg.validate().unwrap();
+        // Bad values and unknown keys are rejected.
+        for bad in [
+            "[fleet]\naddr = \"noport\"\n",
+            "[fleet]\nheartbeat_ms = 0\n",
+            "[fleet]\npoll_ms = 0\n",
+            "[fleet]\nlease_ms = 99999999999\n",
+            "[fleet]\nheartbeat_ms = 5000\ndead_after_ms = 5000\n",
+            "[fleet]\ncheckpoint_dir = \"\"\n",
+            "[fleet]\nhartbeat_ms = 100\n",
+        ] {
+            let doc = Toml::parse(bad).unwrap();
+            assert!(FleetConfig::from_toml(&doc).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
     fn batch_engine_is_farm_only_in_run_configs() {
         assert_eq!(EngineKind::parse("batch").unwrap(), EngineKind::NativeBatch);
         assert_eq!(EngineKind::parse("batch64").unwrap(), EngineKind::NativeBatch);
@@ -612,6 +757,21 @@ mod config_file_tests {
             cfg.run.validate().unwrap();
             assert!(!cfg.temperatures.is_empty());
         }
+    }
+
+    /// The shipped fleet config example must stay loadable and valid,
+    /// including its `[job]` section (the /v2 JobSpec vocabulary).
+    #[test]
+    fn fleet_config_example_parses() {
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/fleet.toml");
+        let doc = Toml::load(&path).expect("configs/fleet.toml must parse");
+        let cfg = FleetConfig::from_toml(&doc).expect("configs/fleet.toml must validate");
+        cfg.validate().unwrap();
+        assert!(cfg.addr.contains(':'));
+        let spec = crate::server::wire::JobSpec::from_toml(&doc)
+            .expect("configs/fleet.toml [job] must parse");
+        spec.resolve().expect("configs/fleet.toml [job] must resolve");
     }
 
     /// The shipped server config example must stay loadable and valid.

@@ -295,9 +295,7 @@ impl FarmResult {
     pub fn replica_report(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
-        out.push_str(
-            "# ising sweep replica report v1 (f32/f64 values as hex bit patterns)\n",
-        );
+        out.push_str(REPORT_HEADER);
         for r in &self.replicas {
             let _ = write!(out, "beta_bits={:08x} seed={} m=", r.beta.to_bits(), r.seed);
             for (i, v) in r.m_series.iter().enumerate() {
@@ -336,6 +334,12 @@ impl FarmResult {
     }
 }
 
+/// First line of every replica report ([`FarmResult::replica_report`]).
+/// The fleet coordinator validates uploaded per-unit reports against
+/// this exact header before splicing their lines into the merged file.
+pub const REPORT_HEADER: &str =
+    "# ising sweep replica report v1 (f32/f64 values as hex bit patterns)\n";
+
 /// Outcome of a (possibly checkpointed) farm invocation.
 #[derive(Debug)]
 pub enum FarmOutcome {
@@ -365,11 +369,16 @@ enum ReplicaStatus {
 /// per-replica engine families, or up to 64 same-β replicas sharing one
 /// batched bit-plane engine. `first` is the grid task index (β-major,
 /// then seed) of `seeds[0]`; a unit's replicas occupy the consecutive
-/// indices `first..first + seeds.len()`.
-struct WorkUnit {
-    beta: f32,
-    seeds: Vec<u32>,
-    first: usize,
+/// indices `first..first + seeds.len()`. This is also the unit of
+/// *distribution*: the fleet coordinator leases whole WorkUnits to
+/// remote workers and splices their reports back in unit order.
+pub struct WorkUnit {
+    /// Coupling shared by every lane of this unit.
+    pub beta: f32,
+    /// Per-lane RNG seeds, in grid order.
+    pub seeds: Vec<u32>,
+    /// Grid task index of `seeds[0]` (β-major, then seed).
+    pub first: usize,
 }
 
 /// Per-unit result as seen by the farm loop.
@@ -382,8 +391,10 @@ enum UnitStatus {
 /// seeds are chunked into groups of up to [`batch::LANES`] (the
 /// manifest records this layout); other engines get one unit per
 /// replica. Units are emitted in grid order, so flattening unit results
-/// in unit order reproduces the deterministic β-major output order.
-fn work_units(cfg: &FarmConfig) -> Vec<WorkUnit> {
+/// in unit order reproduces the deterministic β-major output order —
+/// locally in the farm loop and remotely in the fleet coordinator's
+/// merged report alike.
+pub fn work_units(cfg: &FarmConfig) -> Vec<WorkUnit> {
     let ns = cfg.seeds.len();
     let mut units = Vec::new();
     for (bi, &beta) in cfg.betas.iter().enumerate() {

@@ -18,8 +18,8 @@ pub use driver::NativeCluster;
 #[cfg(feature = "pjrt")]
 pub use driver::SlabCluster;
 pub use farm::{
-    default_beta_grid, run_farm, run_farm_checkpointed, FarmConfig, FarmEngine,
-    FarmOutcome, FarmResult, ReplicaResult,
+    default_beta_grid, run_farm, run_farm_checkpointed, work_units, FarmConfig, FarmEngine,
+    FarmOutcome, FarmResult, ReplicaResult, WorkUnit,
 };
 pub use metrics::Metrics;
 pub use partition::{partition, Slab};

@@ -1,25 +1,39 @@
-//! The `/v1` JSON job API: request routing + the submit-spec ↔
-//! `FarmConfig` mapping.
+//! The JSON job API: request routing + the submit-spec ↔ `FarmConfig`
+//! mapping, in two versions.
+//!
+//! `/v2` is the current API (typed [`JobSpec`] submissions, the uniform
+//! [`ErrorEnvelope`] error body, and the fine-grained job state machine):
 //!
 //! | Method | Path                  | Meaning                               |
 //! |--------|-----------------------|---------------------------------------|
-//! | POST   | `/v1/jobs`            | submit a sweep job (JSON body)        |
-//! | GET    | `/v1/jobs/{id}`       | job status                            |
-//! | GET    | `/v1/jobs/{id}/result`| bit-exact replica report (text/plain) |
-//! | GET    | `/v1/healthz`         | liveness + queue/registry counts      |
-//! | GET    | `/v1/info`            | engine matrix + analytic constants    |
-//! | POST   | `/v1/shutdown`        | graceful stop (checkpoints in-flight) |
+//! | POST   | `/v2/jobs`            | submit a sweep job (JobSpec JSON body)|
+//! | GET    | `/v2/jobs/{id}`       | job status + state machine position   |
+//! | GET    | `/v2/jobs/{id}/result`| bit-exact replica report (text/plain) |
+//! | GET    | `/v2/healthz`         | liveness + queue/registry counts      |
+//! | GET    | `/v2/info`            | engine matrix + analytic constants    |
+//! | POST   | `/v2/shutdown`        | graceful stop (checkpoints in-flight) |
+//!
+//! (The fleet endpoints under `/v2/fleet/*` are served by the
+//! coordinator process — see [`super::fleet`].)
+//!
+//! `/v1` is kept as a thin compatibility shim over the same handlers:
+//! identical routes, request bodies, response bodies, and status codes
+//! as before the redesign, plus advisory `Deprecation: true` and
+//! `Link: </v2>; rel="successor-version"` headers on every response.
 //!
 //! The submit body carries the same TOML-equivalent sweep configuration
 //! the `ising sweep` CLI takes (`size`, `engine`, `betas`/`beta_points`,
 //! `replicas`, `seed`, `burn_in`, `samples`, `thin`, `workers`,
-//! `shards`), validated with the same rules. The result body is the
-//! exact byte string `ising sweep --report` writes for the same config.
+//! `shards`), validated by the shared [`JobSpec`] — the *single* parse +
+//! validation path for CLI flags, TOML sections, and HTTP JSON. The
+//! result body is the exact byte string `ising sweep --report` writes
+//! for the same config.
 
 use super::http::{Request, Response};
 use super::queue::{Scheduler, Submit};
+use super::wire::{ErrorEnvelope, JobSpec};
 use crate::config::ServerConfig;
-use crate::coordinator::farm::{default_beta_grid, FarmConfig, FarmEngine};
+use crate::coordinator::farm::{FarmConfig, FarmEngine};
 use crate::error::{Error, Result};
 use crate::util::json::{obj, Json};
 use std::sync::Arc;
@@ -33,113 +47,32 @@ pub struct ApiCtx {
     pub server: ServerConfig,
 }
 
-/// Parse a submitted job spec (the POST `/v1/jobs` body) into a farm
-/// configuration. JSON shape (known keys, types, value ranges) is
-/// checked here; the semantic rules — finite positive β,
-/// engine/geometry compatibility, workers/shards ≥ 1 — are
-/// [`FarmConfig::validate`], the *same* function the `ising sweep` CLI
-/// and the farm itself call, so the entry points cannot drift.
+/// Parse a submitted job spec (the POST `/v{1,2}/jobs` body) into a
+/// farm configuration: the shared [`JobSpec`] decode + resolve (the
+/// same path CLI flags and TOML sections take, so the entry points
+/// cannot drift), then the service resource caps — one request must
+/// not be able to OOM the server (the scheduler re-checks these as a
+/// backstop).
 pub fn job_config_from_json(doc: &Json) -> Result<FarmConfig> {
-    const KNOWN: &[&str] = &[
-        "size", "engine", "betas", "beta_points", "replicas", "seed", "burn_in",
-        "samples", "thin", "workers", "shards",
-    ];
-    let fields = doc.as_obj().map_err(|_| Error::Usage("job spec must be a JSON object".into()))?;
-    for key in fields.keys() {
-        if !KNOWN.contains(&key.as_str()) {
-            return Err(Error::Usage(format!(
-                "unknown job key '{key}' (known: {})",
-                KNOWN.join(", ")
-            )));
-        }
-    }
-    let get_u64 = |key: &str, default: u64| -> Result<u64> {
-        match doc.get(key) {
-            None => Ok(default),
-            Some(v) => v
-                .as_u64()
-                .map_err(|_| Error::Usage(format!("job key '{key}' must be a non-negative integer"))),
-        }
-    };
-
-    let size = get_u64("size", 256)? as usize;
-    let engine = match doc.get("engine") {
-        None => FarmEngine::Multispin,
-        Some(v) => FarmEngine::parse(
-            v.as_str().map_err(|_| Error::Usage("job key 'engine' must be a string".into()))?,
-        )?,
-    };
-    let betas: Vec<f32> = match doc.get("betas") {
-        Some(v) => {
-            let arr = v
-                .as_arr()
-                .map_err(|_| Error::Usage("job key 'betas' must be an array of numbers".into()))?;
-            let mut betas = Vec::with_capacity(arr.len());
-            for item in arr {
-                let b = item.as_f64().map_err(|_| {
-                    Error::Usage("job key 'betas' must be an array of numbers".into())
-                })? as f32;
-                betas.push(b);
-            }
-            betas
-        }
-        None => {
-            // Cap before generating: a huge beta_points must fail with a
-            // 400, not an allocation.
-            let n = get_u64("beta_points", 4)?.max(1) as usize;
-            if n > super::queue::limits::MAX_BETAS {
-                return Err(Error::Usage(format!(
-                    "{n} beta_points exceed the service cap of {}",
-                    super::queue::limits::MAX_BETAS
-                )));
-            }
-            default_beta_grid(n)
-        }
-    };
-    // Same pre-allocation cap for the seed grid `FarmConfig::grid` builds.
-    let replicas = get_u64("replicas", 1)?.max(1) as usize;
-    if replicas > super::queue::limits::MAX_REPLICAS {
-        return Err(Error::Usage(format!(
-            "{replicas} replicas exceed the service cap of {}",
-            super::queue::limits::MAX_REPLICAS
-        )));
-    }
-    let seed = u32::try_from(get_u64("seed", 1)?)
-        .map_err(|_| Error::Usage("job key 'seed' must fit in u32".into()))?;
-
-    let mut cfg = FarmConfig::grid(size, betas, replicas, seed)?;
-    cfg.engine = engine;
-    cfg.burn_in = get_u64("burn_in", cfg.burn_in)?;
-    cfg.samples = get_u64("samples", cfg.samples as u64)? as usize;
-    cfg.thin = get_u64("thin", cfg.thin)?;
-    cfg.workers = get_u64("workers", 1)? as usize;
-    cfg.shards = get_u64("shards", 1)? as usize;
-
-    // The shared semantic rules (FarmConfig::validate): finite positive
-    // β, samples/workers/shards ≥ 1, per-engine geometry and sharding
-    // constraints — identical to the `ising sweep` CLI, so submitters
-    // get a 400 preflight instead of a failed job.
-    cfg.validate()?;
-    // Service resource caps: one request must not be able to OOM the
-    // server (the scheduler re-checks these as a backstop).
+    let cfg = JobSpec::from_json(doc)?.resolve()?;
     super::queue::enforce_job_limits(&cfg)?;
     Ok(cfg)
 }
 
 /// Route one request. Infallible by construction: every failure becomes
-/// a status-coded JSON body.
+/// a status-coded JSON body — the legacy `{"error": ...}` shape on
+/// `/v1`, the [`ErrorEnvelope`] on `/v2`. Every `/v1` response (success
+/// or failure) additionally carries the deprecation advisory headers.
 pub fn handle(req: &Request, ctx: &ApiCtx) -> Response {
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
-    match (req.method.as_str(), segs.as_slice()) {
+    let resp = match (req.method.as_str(), segs.as_slice()) {
+        // ----- /v1: compatibility shim (bodies + codes unchanged) -----
         ("POST", ["v1", "jobs"]) => submit(req, ctx),
         ("GET", ["v1", "jobs", id]) => job_status(id, ctx),
         ("GET", ["v1", "jobs", id, "result"]) => job_result(id, ctx),
         ("GET", ["v1", "healthz"]) => healthz(ctx),
         ("GET", ["v1", "info"]) => info(ctx),
-        ("POST", ["v1", "shutdown"]) => {
-            ctx.scheduler.request_stop();
-            Response::json(200, &obj(vec![("status", Json::Str("stopping".into()))]))
-        }
+        ("POST", ["v1", "shutdown"]) => shutdown(ctx),
         // Known paths with the wrong verb get 405, everything else 404.
         (_, ["v1", "jobs"]) | (_, ["v1", "shutdown"]) => error_response(
             405,
@@ -149,12 +82,43 @@ pub fn handle(req: &Request, ctx: &ApiCtx) -> Response {
         | (_, ["v1", "healthz"]) | (_, ["v1", "info"]) => {
             error_response(405, "use GET for this endpoint")
         }
+        // ----- /v2: current API (ErrorEnvelope + job state machine) -----
+        ("POST", ["v2", "jobs"]) => submit_v2(req, ctx),
+        ("GET", ["v2", "jobs", id]) => job_status_v2(id, ctx),
+        ("GET", ["v2", "jobs", id, "result"]) => job_result_v2(id, ctx),
+        ("GET", ["v2", "healthz"]) => healthz(ctx),
+        ("GET", ["v2", "info"]) => info(ctx),
+        ("POST", ["v2", "shutdown"]) => shutdown(ctx),
+        (_, ["v2", "jobs"]) | (_, ["v2", "shutdown"]) => {
+            ErrorEnvelope::new(405, "usage", "use POST for this endpoint").to_response()
+        }
+        (_, ["v2", "jobs", _]) | (_, ["v2", "jobs", _, "result"])
+        | (_, ["v2", "healthz"]) | (_, ["v2", "info"]) => {
+            ErrorEnvelope::new(405, "usage", "use GET for this endpoint").to_response()
+        }
+        (_, ["v2", ..]) => ErrorEnvelope::new(
+            404,
+            "not_found",
+            format!("no route for '{}'", req.path),
+        )
+        .to_response(),
         _ => error_response(404, &format!("no route for '{}'", req.path)),
+    };
+    if segs.first() == Some(&"v1") {
+        resp.with_header("Deprecation", "true")
+            .with_header("Link", "</v2>; rel=\"successor-version\"")
+    } else {
+        resp
     }
 }
 
 fn error_response(status: u16, msg: &str) -> Response {
     Response::json(status, &obj(vec![("error", Json::Str(msg.to_string()))]))
+}
+
+fn shutdown(ctx: &ApiCtx) -> Response {
+    ctx.scheduler.request_stop();
+    Response::json(200, &obj(vec![("status", Json::Str("stopping".into()))]))
 }
 
 fn submit(req: &Request, ctx: &ApiCtx) -> Response {
@@ -242,6 +206,106 @@ fn job_result(id: &str, ctx: &ApiCtx) -> Response {
     }
 }
 
+// ---------------------------------------------------------------------
+// /v2 handlers: same scheduler, ErrorEnvelope failures, explicit state.
+
+/// The job's fine-grained state name (`/v2` responses). Falls back to
+/// "queued" in the unreachable window where a just-accepted job has no
+/// registry entry.
+fn state_name(id: &str, ctx: &ApiCtx) -> String {
+    ctx.scheduler
+        .job_state(id)
+        .map(|s| s.name().to_string())
+        .unwrap_or_else(|| "queued".into())
+}
+
+fn submit_v2(req: &Request, ctx: &ApiCtx) -> Response {
+    let body = match req.body_str() {
+        Ok(s) => s,
+        Err(e) => return ErrorEnvelope::new(e.status, "usage", e.msg).to_response(),
+    };
+    let doc = match Json::parse(body) {
+        Ok(d) => d,
+        Err(e) => return ErrorEnvelope::from_error(&e).to_response(),
+    };
+    let cfg = match job_config_from_json(&doc) {
+        Ok(c) => c,
+        Err(e) => return ErrorEnvelope::from_error(&e).to_response(),
+    };
+    match ctx.scheduler.submit(cfg) {
+        Ok(Submit::Accepted { id }) => {
+            let state = state_name(&id, ctx);
+            Response::json(
+                202,
+                &obj(vec![("id", Json::Str(id)), ("state", Json::Str(state))]),
+            )
+        }
+        Ok(Submit::Existing { id, .. }) => {
+            let state = state_name(&id, ctx);
+            Response::json(
+                200,
+                &obj(vec![("id", Json::Str(id)), ("state", Json::Str(state))]),
+            )
+        }
+        Ok(Submit::Busy) => ErrorEnvelope::new(
+            429,
+            "busy",
+            format!(
+                "job queue full (depth {}) or shutting down; retry later",
+                ctx.server.queue_depth
+            ),
+        )
+        .to_response(),
+        Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+    }
+}
+
+fn job_status_v2(id: &str, ctx: &ApiCtx) -> Response {
+    if !super::cache::is_valid_id(id) {
+        return ErrorEnvelope::new(400, "usage", "job id must be 16 lowercase hex characters")
+            .to_response();
+    }
+    match ctx.scheduler.job_summary(id) {
+        None => ErrorEnvelope::new(404, "not_found", format!("unknown job '{id}'")).to_response(),
+        Some((status, engine, replicas, samples)) => {
+            let mut fields = vec![
+                ("id", Json::Str(id.to_string())),
+                ("state", Json::Str(state_name(id, ctx))),
+                ("status", Json::Str(status.name().into())),
+                ("engine", Json::Str(engine)),
+                ("replicas", Json::Num(replicas as f64)),
+                ("samples_per_replica", Json::Num(samples as f64)),
+            ];
+            if let super::queue::JobStatus::Failed(msg) = &status {
+                fields.push(("error", Json::Str(msg.clone())));
+            }
+            Response::json(200, &obj(fields))
+        }
+    }
+}
+
+fn job_result_v2(id: &str, ctx: &ApiCtx) -> Response {
+    if !super::cache::is_valid_id(id) {
+        return ErrorEnvelope::new(400, "usage", "job id must be 16 lowercase hex characters")
+            .to_response();
+    }
+    match ctx.scheduler.status(id) {
+        None => ErrorEnvelope::new(404, "not_found", format!("unknown job '{id}'")).to_response(),
+        Some(status) => match ctx.scheduler.result(id) {
+            // Byte-identical to `ising sweep --report` for this config.
+            Some(report) => Response::text(200, report),
+            // Not done yet: a retryable conflict — the canonical client
+            // poll loop retries exactly the envelopes marked retryable.
+            None => ErrorEnvelope::new(
+                409,
+                "conflict",
+                format!("job has no result yet (status: {})", status.name()),
+            )
+            .to_response(),
+        },
+    }
+}
+
 fn healthz(ctx: &ApiCtx) -> Response {
     let counts = ctx.scheduler.counts();
     Response::json(
@@ -302,7 +366,76 @@ fn info(ctx: &ApiCtx) -> Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::farm::default_beta_grid;
+    use crate::server::http::read_request;
     use crate::server::queue::fingerprint;
+
+    fn req(raw: &str) -> Request {
+        read_request(&mut raw.as_bytes()).unwrap().unwrap()
+    }
+
+    /// `/v2` routes answer with the envelope + state machine; `/v1`
+    /// keeps its legacy bodies but gains the deprecation headers.
+    #[test]
+    fn v2_routing_envelopes_and_v1_deprecation_shim() {
+        let dir = std::env::temp_dir().join(format!("ising-api-v2-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = ServerConfig { checkpoint_dir: dir.clone(), ..ServerConfig::default() };
+        let scheduler = Arc::new(Scheduler::open(&server).unwrap());
+        let ctx = ApiCtx { scheduler, server };
+
+        // v2 submit: 202 with the fine-grained state, no shim headers.
+        let r = handle(&req("POST /v2/jobs HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}"), &ctx);
+        assert_eq!(r.status, 202);
+        assert!(r.headers.is_empty(), "v2 must not carry deprecation headers");
+        let body = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(body.field("state").unwrap().as_str().unwrap(), "queued");
+        let id = body.field("id").unwrap().as_str().unwrap().to_string();
+
+        // v2 status: state machine position surfaced alongside status.
+        let r = handle(&req(&format!("GET /v2/jobs/{id} HTTP/1.1\r\n\r\n")), &ctx);
+        assert_eq!(r.status, 200);
+        let body = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(body.field("state").unwrap().as_str().unwrap(), "queued");
+        assert_eq!(body.field("status").unwrap().as_str().unwrap(), "queued");
+
+        // v2 result before completion: retryable conflict envelope.
+        let r = handle(&req(&format!("GET /v2/jobs/{id}/result HTTP/1.1\r\n\r\n")), &ctx);
+        assert_eq!(r.status, 409);
+        let env = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(env.field("code").unwrap().as_u64().unwrap(), 409);
+        assert_eq!(env.field("kind").unwrap().as_str().unwrap(), "conflict");
+        assert!(env.field("retryable").unwrap().as_bool().unwrap());
+
+        // v2 invalid spec: non-retryable usage envelope.
+        let bad = "POST /v2/jobs HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"sizes\": 64}";
+        let r = handle(&req(bad), &ctx);
+        assert_eq!(r.status, 400);
+        let env = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(env.field("kind").unwrap().as_str().unwrap(), "usage");
+        assert!(!env.field("retryable").unwrap().as_bool().unwrap());
+
+        // v2 unknown route: not_found envelope.
+        let r = handle(&req("GET /v2/nope HTTP/1.1\r\n\r\n"), &ctx);
+        assert_eq!(r.status, 404);
+        let env = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(env.field("kind").unwrap().as_str().unwrap(), "not_found");
+
+        // v1: legacy body shape + advisory headers on every response.
+        let r = handle(&req("GET /v1/healthz HTTP/1.1\r\n\r\n"), &ctx);
+        assert_eq!(r.status, 200);
+        assert!(r.headers.contains(&("Deprecation", "true".to_string())));
+        assert!(r
+            .headers
+            .contains(&("Link", "</v2>; rel=\"successor-version\"".to_string())));
+        let r = handle(&req("GET /v1/nope HTTP/1.1\r\n\r\n"), &ctx);
+        assert_eq!(r.status, 404);
+        assert!(r.headers.contains(&("Deprecation", "true".to_string())));
+        let body = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert!(body.field("error").is_ok(), "v1 keeps the legacy error shape");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn job_spec_defaults_mirror_the_sweep_cli() {

@@ -1,0 +1,935 @@
+//! The fleet coordinator behind `ising coordinate`: shard one β×seed
+//! grid across registered remote workers and merge a bit-exact report.
+//!
+//! The grid is decomposed with the *same* [`work_units`] function the
+//! in-process farm loop uses, so the unit of distribution equals the
+//! unit of scheduling: one replica for the per-replica engines, one
+//! ≤64-lane batch for the batch engine. Each unit is leased to a worker
+//! as a self-contained single-β sub-configuration; the worker runs it
+//! through the ordinary checkpointed farm path and uploads the unit's
+//! replica-report lines. Because a replica trajectory is a pure
+//! function of (geometry, β, seed, protocol), splicing validated unit
+//! reports back in unit order reproduces, byte for byte, the report a
+//! single-node `ising sweep` writes for the whole grid — regardless of
+//! fleet size, lease order, worker deaths, or mid-unit resumes.
+//!
+//! Fault tolerance is pull-based: workers dial in (`register`), ping
+//! (`heartbeat`), ask for work (`lease`), and push mid-unit checkpoints
+//! (`progress`). The coordinator never dials a worker; a worker that
+//! misses heartbeats past `dead_after_ms` (or holds a lease past
+//! `lease_ms` without progress) simply has its units re-queued — with
+//! the last uploaded checkpoint attached, so the next holder resumes
+//! instead of restarting. A unit that keeps failing aborts the run
+//! after [`MAX_ATTEMPTS`] leases rather than looping forever.
+//!
+//! HTTP surface (all bodies JSON, failures as [`ErrorEnvelope`]):
+//!
+//! | Method | Path                 | Body / reply                       |
+//! |--------|----------------------|------------------------------------|
+//! | POST   | `/v2/fleet/register` | [`Register`] → [`RegisterAck`]     |
+//! | POST   | `/v2/fleet/heartbeat`| [`Heartbeat`] → `{"status":"ok"}`  |
+//! | POST   | `/v2/fleet/lease`    | [`LeaseRequest`] → [`LeaseReply`]  |
+//! | POST   | `/v2/fleet/progress` | [`ProgressUpload`] → `{"status"}`  |
+//! | POST   | `/v2/fleet/result`   | [`ResultUpload`] → `{"status"}`    |
+//! | POST   | `/v2/fleet/fail`     | [`UnitFail`] → `{"status":"ok"}`   |
+//! | GET    | `/v2/fleet/status`   | progress counters                  |
+//! | GET    | `/v2/healthz`        | liveness                           |
+
+use super::http::{read_request, Request, Response};
+use super::queue::{enforce_job_limits, fingerprint, requeue_interrupted};
+use super::wire::{
+    ErrorEnvelope, Heartbeat, LeaseReply, LeaseRequest, ProgressUpload, Register, RegisterAck,
+    ResultUpload, UnitFail, UnitLease, MAX_PROGRESS_PAYLOAD, MAX_REPORT,
+};
+use crate::config::FleetConfig;
+use crate::coordinator::farm::{work_units, FarmConfig, REPORT_HEADER};
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+use crate::util::snapshot::atomic_write;
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Leases per unit before the whole run is declared failed (a unit that
+/// kills every worker that touches it must not retry forever).
+pub const MAX_ATTEMPTS: u32 = 5;
+
+/// How long a finished coordinator keeps answering (`Done`/`Failed`
+/// lease replies) so live workers learn the run is over.
+const LINGER: Duration = Duration::from_millis(1500);
+
+/// Accept-loop poll cadence while the listener has no pending client.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Per-connection socket timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Where one unit currently is.
+#[derive(Clone, Debug)]
+enum UnitState {
+    /// Waiting for a worker.
+    Pending,
+    /// Held under a lease.
+    Leased {
+        worker: String,
+        deadline: Instant,
+    },
+    /// Validated report lines stored.
+    Done,
+}
+
+/// One distributable work unit plus its scheduling state.
+struct Unit {
+    beta: f32,
+    seeds: Vec<u32>,
+    /// Single-β sub-configuration sent to workers.
+    spec: FarmConfig,
+    state: UnitState,
+    /// Leases granted so far.
+    attempts: u32,
+    /// Last uploaded mid-unit checkpoint (raw snapshot-file bytes).
+    progress: Option<Vec<u8>>,
+    /// Validated report lines (no header), newline-terminated.
+    lines: Option<String>,
+    /// Last reported execution error (for the abort message).
+    last_error: Option<String>,
+}
+
+#[derive(Default)]
+struct Inner {
+    units: Vec<Unit>,
+    /// Worker name → last time it was heard from.
+    workers: BTreeMap<String, Instant>,
+    /// Units re-queued after lease expiry / dead worker / explicit fail.
+    requeues: u64,
+    /// Leases that carried a resume checkpoint.
+    resumed: u64,
+    /// Set once a unit exhausts its attempts: aborts the run.
+    failure: Option<String>,
+}
+
+/// Overall run phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Units outstanding.
+    Running,
+    /// Every unit's report lines are in.
+    Done,
+    /// Aborted (a unit exhausted its attempts).
+    Failed(String),
+}
+
+/// Shared coordinator state: the unit table, worker liveness, and the
+/// on-disk mirror (spec + per-unit lines/progress) that makes a
+/// coordinator restart resumable.
+pub struct FleetState {
+    cfg: FarmConfig,
+    fleet: FleetConfig,
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl FleetState {
+    /// Open coordinator state for `cfg` in `fleet.checkpoint_dir`.
+    ///
+    /// Mirrors the [`Checkpointer`](crate::coordinator::Checkpointer)
+    /// discipline: a fresh open refuses a directory that already holds a
+    /// job spec (pass `resume` to continue it), a resume requires one and
+    /// validates it through the same [`requeue_interrupted`] helper the
+    /// scheduler's restart scan uses — then re-adopts every stored unit
+    /// report and mid-unit checkpoint.
+    pub fn open(cfg: FarmConfig, fleet: FleetConfig, resume: bool) -> Result<Self> {
+        cfg.validate()?;
+        enforce_job_limits(&cfg)?;
+        fleet.validate()?;
+        let dir = fleet.checkpoint_dir.clone();
+        std::fs::create_dir_all(&dir)?;
+        let spec_path = dir.join(super::cache::SPEC_FILE);
+        let spec_json = super::queue::encode_config(&cfg).to_string_pretty();
+        if spec_path.exists() {
+            if !resume {
+                return Err(Error::Usage(format!(
+                    "coordinator dir '{}' already holds a fleet job spec; \
+                     pass --resume to continue it or choose a fresh dir",
+                    dir.display()
+                )));
+            }
+            let stored = std::fs::read_to_string(&spec_path)?;
+            // Same validation path as the scheduler's restart scan.
+            requeue_interrupted(&fingerprint(&cfg), &stored)?;
+        } else {
+            if resume {
+                return Err(Error::Usage(format!(
+                    "--resume: no '{}' in coordinator dir '{}'",
+                    super::cache::SPEC_FILE,
+                    dir.display()
+                )));
+            }
+            atomic_write(&spec_path, spec_json.as_bytes())?;
+        }
+
+        let mut units: Vec<Unit> = work_units(&cfg)
+            .into_iter()
+            .map(|u| {
+                let mut spec = cfg.clone();
+                spec.betas = vec![u.beta];
+                spec.seeds = u.seeds.clone();
+                spec.workers = 1;
+                spec.threaded_shards = false;
+                Unit {
+                    beta: u.beta,
+                    seeds: u.seeds,
+                    spec,
+                    state: UnitState::Pending,
+                    attempts: 0,
+                    progress: None,
+                    lines: None,
+                    last_error: None,
+                }
+            })
+            .collect();
+
+        // A full unit report must fit one upload: header + per-lane
+        // lines of ~34 bytes per sample. Refuse at open time, not after
+        // hours of computation.
+        let lanes_max = units.iter().map(|u| u.seeds.len()).max().unwrap_or(1);
+        let per_unit = REPORT_HEADER.len() as u64
+            + lanes_max as u64 * (64 + 34 * cfg.samples as u64);
+        if per_unit > MAX_REPORT as u64 {
+            return Err(Error::Usage(format!(
+                "a {lanes_max}-lane unit report of {} samples (~{per_unit} bytes) exceeds \
+                 the {MAX_REPORT}-byte upload cap; lower --samples",
+                cfg.samples
+            )));
+        }
+
+        let state = Self { cfg, fleet, dir, inner: Mutex::new(Inner::default()) };
+        if resume {
+            for (i, unit) in units.iter_mut().enumerate() {
+                if let Ok(lines) = std::fs::read_to_string(state.lines_path(i)) {
+                    // Stored lines were validated at upload; re-validate
+                    // anyway so hand-edited state fails loudly.
+                    let report = format!("{REPORT_HEADER}{lines}");
+                    validate_unit_report(unit, state.cfg.samples, &report)?;
+                    unit.lines = Some(lines);
+                    unit.state = UnitState::Done;
+                } else if let Ok(bytes) = std::fs::read(state.progress_path(i)) {
+                    if bytes.len() <= MAX_PROGRESS_PAYLOAD {
+                        unit.progress = Some(bytes);
+                    }
+                }
+            }
+        }
+        state.inner.lock().expect("fleet state poisoned").units = units;
+        Ok(state)
+    }
+
+    /// The full-grid configuration this fleet is computing.
+    pub fn config(&self) -> &FarmConfig {
+        &self.cfg
+    }
+
+    fn lines_path(&self, unit: usize) -> PathBuf {
+        self.dir.join(format!("unit-{unit:05}.lines"))
+    }
+
+    fn progress_path(&self, unit: usize) -> PathBuf {
+        self.dir.join(format!("unit-{unit:05}.progress"))
+    }
+
+    /// Register (or re-register) a worker; idempotent per name.
+    pub fn register(&self, name: &str) -> RegisterAck {
+        let mut inner = self.inner.lock().expect("fleet state poisoned");
+        inner.workers.insert(name.to_string(), Instant::now());
+        RegisterAck {
+            worker: name.to_string(),
+            heartbeat_ms: self.fleet.heartbeat_ms,
+            lease_ms: self.fleet.lease_ms,
+            poll_ms: self.fleet.poll_ms,
+        }
+    }
+
+    /// Record a liveness ping.
+    pub fn heartbeat(&self, name: &str) {
+        let mut inner = self.inner.lock().expect("fleet state poisoned");
+        inner.workers.insert(name.to_string(), Instant::now());
+    }
+
+    /// Re-queue every unit whose holder is dead (missed heartbeats past
+    /// `dead_after_ms`) or whose lease expired without progress. The
+    /// stored checkpoint is kept, so the next holder resumes.
+    fn supervise(inner: &mut Inner, dead_after: Duration, now: Instant) {
+        for unit in &mut inner.units {
+            let UnitState::Leased { worker, deadline } = &unit.state else { continue };
+            let worker_dead = inner
+                .workers
+                .get(worker)
+                .map(|seen| now.duration_since(*seen) > dead_after)
+                .unwrap_or(true);
+            if worker_dead || now >= *deadline {
+                unit.state = UnitState::Pending;
+                inner.requeues += 1;
+            }
+        }
+    }
+
+    /// Answer one lease request: supervise, then hand out the first
+    /// pending unit (earliest grid order — deterministic and fair), or
+    /// `Idle`/`Done`/`Failed` when there is nothing to lease.
+    pub fn lease(&self, worker: &str) -> LeaseReply {
+        let now = Instant::now();
+        let mut guard = self.inner.lock().expect("fleet state poisoned");
+        // Plain reborrow so the unit scan below can split field borrows.
+        let inner = &mut *guard;
+        inner.workers.insert(worker.to_string(), now);
+        Self::supervise(inner, Duration::from_millis(self.fleet.dead_after_ms), now);
+        if let Some(msg) = &inner.failure {
+            return LeaseReply::Failed(msg.clone());
+        }
+        if inner.units.iter().all(|u| matches!(u.state, UnitState::Done)) {
+            return LeaseReply::Done;
+        }
+        let lease_for = Duration::from_millis(self.fleet.lease_ms);
+        let mut grant: Option<usize> = None;
+        for (i, unit) in inner.units.iter_mut().enumerate() {
+            if !matches!(unit.state, UnitState::Pending) {
+                continue;
+            }
+            if unit.attempts >= MAX_ATTEMPTS {
+                let detail = unit
+                    .last_error
+                    .clone()
+                    .unwrap_or_else(|| "lease expired or worker died".into());
+                inner.failure = Some(format!(
+                    "unit {i} failed after {MAX_ATTEMPTS} attempts: {detail}"
+                ));
+                return LeaseReply::Failed(inner.failure.clone().expect("just set"));
+            }
+            unit.attempts += 1;
+            unit.state = UnitState::Leased {
+                worker: worker.to_string(),
+                deadline: now + lease_for,
+            };
+            if unit.progress.is_some() {
+                inner.resumed += 1;
+            }
+            grant = Some(i);
+            break;
+        }
+        match grant {
+            Some(i) => {
+                let unit = &inner.units[i];
+                LeaseReply::Unit(Box::new(UnitLease {
+                    unit: i,
+                    spec: unit.spec.clone(),
+                    checkpoint: unit.progress.clone(),
+                }))
+            }
+            None => LeaseReply::Idle,
+        }
+    }
+
+    /// Store a mid-unit checkpoint from the unit's current holder.
+    /// Progress counts as liveness: the lease deadline is pushed out.
+    pub fn progress(&self, worker: &str, unit: usize, payload: Vec<u8>) -> Result<()> {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().expect("fleet state poisoned");
+        inner.workers.insert(worker.to_string(), now);
+        let n = inner.units.len();
+        let u = inner
+            .units
+            .get_mut(unit)
+            .ok_or_else(|| Error::Usage(format!("unit {unit} out of range (grid has {n})")))?;
+        match &u.state {
+            UnitState::Leased { worker: holder, .. } if holder == worker => {
+                u.state = UnitState::Leased {
+                    worker: worker.to_string(),
+                    deadline: now + Duration::from_millis(self.fleet.lease_ms),
+                };
+                atomic_write(&self.progress_path(unit), &payload)?;
+                u.progress = Some(payload);
+                Ok(())
+            }
+            UnitState::Done => Err(Error::Coordinator(format!(
+                "unit {unit} is already complete"
+            ))),
+            _ => Err(Error::Coordinator(format!(
+                "unit {unit} is not leased to worker '{worker}'"
+            ))),
+        }
+    }
+
+    /// Accept a completed unit's report. The report is validated bit-level
+    /// (header, lane count, β bits, seed order, sample counts) before its
+    /// lines are spliced into the merge; uploads for already-complete
+    /// units are idempotent no-ops (a re-queued unit may finish twice —
+    /// trajectories are deterministic, so both uploads carry the same
+    /// bytes).
+    pub fn result(&self, worker: &str, unit: usize, report: &str) -> Result<()> {
+        let mut inner = self.inner.lock().expect("fleet state poisoned");
+        inner.workers.insert(worker.to_string(), Instant::now());
+        let n = inner.units.len();
+        let u = inner
+            .units
+            .get_mut(unit)
+            .ok_or_else(|| Error::Usage(format!("unit {unit} out of range (grid has {n})")))?;
+        if matches!(u.state, UnitState::Done) {
+            return Ok(());
+        }
+        validate_unit_report(u, self.cfg.samples, report)?;
+        let lines = &report[REPORT_HEADER.len()..];
+        atomic_write(&self.lines_path(unit), lines.as_bytes())?;
+        u.lines = Some(lines.to_string());
+        u.state = UnitState::Done;
+        u.progress = None;
+        let _ = std::fs::remove_file(self.progress_path(unit));
+        Ok(())
+    }
+
+    /// A worker reports that executing a unit errored: re-queue it
+    /// without the (suspect) checkpoint and remember the message for the
+    /// abort report.
+    pub fn fail(&self, worker: &str, unit: usize, error: &str) -> Result<()> {
+        let mut inner = self.inner.lock().expect("fleet state poisoned");
+        inner.workers.insert(worker.to_string(), Instant::now());
+        let n = inner.units.len();
+        let u = inner
+            .units
+            .get_mut(unit)
+            .ok_or_else(|| Error::Usage(format!("unit {unit} out of range (grid has {n})")))?;
+        if matches!(u.state, UnitState::Done) {
+            return Ok(());
+        }
+        u.state = UnitState::Pending;
+        u.progress = None;
+        u.last_error = Some(error.to_string());
+        inner.requeues += 1;
+        let _ = std::fs::remove_file(self.progress_path(unit));
+        Ok(())
+    }
+
+    /// Current phase (after a supervision sweep, so a fleet whose last
+    /// holder died still converges once its units are re-leased).
+    pub fn phase(&self) -> RunPhase {
+        let inner = self.inner.lock().expect("fleet state poisoned");
+        if let Some(msg) = &inner.failure {
+            return RunPhase::Failed(msg.clone());
+        }
+        if !inner.units.is_empty()
+            && inner.units.iter().all(|u| matches!(u.state, UnitState::Done))
+        {
+            return RunPhase::Done;
+        }
+        RunPhase::Running
+    }
+
+    /// The merged full-grid report — header plus every unit's validated
+    /// lines in unit (= grid) order. `None` until every unit is done.
+    pub fn merged_report(&self) -> Option<String> {
+        let inner = self.inner.lock().expect("fleet state poisoned");
+        let mut out = String::from(REPORT_HEADER);
+        for unit in &inner.units {
+            out.push_str(unit.lines.as_deref()?);
+        }
+        Some(out)
+    }
+
+    /// Units re-queued so far (lease expiry, dead workers, failures).
+    pub fn requeue_count(&self) -> u64 {
+        self.inner.lock().expect("fleet state poisoned").requeues
+    }
+
+    /// Leases that carried a resume checkpoint.
+    pub fn resumed_count(&self) -> u64 {
+        self.inner.lock().expect("fleet state poisoned").resumed
+    }
+
+    /// Status document for `GET /v2/fleet/status`.
+    pub fn status_json(&self) -> Json {
+        let phase = self.phase();
+        let inner = self.inner.lock().expect("fleet state poisoned");
+        let mut done = 0usize;
+        let mut leased = 0usize;
+        for u in &inner.units {
+            match u.state {
+                UnitState::Done => done += 1,
+                UnitState::Leased { .. } => leased += 1,
+                UnitState::Pending => {}
+            }
+        }
+        obj(vec![
+            (
+                "state",
+                Json::Str(
+                    match phase {
+                        RunPhase::Running => "running",
+                        RunPhase::Done => "done",
+                        RunPhase::Failed(_) => "failed",
+                    }
+                    .into(),
+                ),
+            ),
+            ("units", Json::Num(inner.units.len() as f64)),
+            ("done", Json::Num(done as f64)),
+            ("leased", Json::Num(leased as f64)),
+            ("workers", Json::Num(inner.workers.len() as f64)),
+            ("requeues", Json::Num(inner.requeues as f64)),
+            ("resumed", Json::Num(inner.resumed as f64)),
+        ])
+    }
+}
+
+/// Validate one uploaded unit report bit-level: the canonical header,
+/// exactly one line per lane in the unit's seed order, each line's β
+/// bits and seed matching the unit, and full-length m/e sample series of
+/// 16-hex-digit words. A report that passes can be spliced into the
+/// merged file verbatim.
+fn validate_unit_report(unit: &Unit, samples: usize, report: &str) -> Result<()> {
+    let err = |msg: String| Err(Error::Coordinator(format!("unit report rejected: {msg}")));
+    let Some(body) = report.strip_prefix(REPORT_HEADER) else {
+        return err("missing the canonical report header".into());
+    };
+    if !body.ends_with('\n') {
+        return err("report must end with a newline".into());
+    }
+    let lines: Vec<&str> = body.split_terminator('\n').collect();
+    if lines.len() != unit.seeds.len() {
+        return err(format!(
+            "{} lines for a {}-lane unit",
+            lines.len(),
+            unit.seeds.len()
+        ));
+    }
+    for (line, &seed) in lines.iter().zip(&unit.seeds) {
+        let prefix = format!("beta_bits={:08x} seed={seed} m=", unit.beta.to_bits());
+        let Some(rest) = line.strip_prefix(prefix.as_str()) else {
+            return err(format!("line does not open with '{prefix}'"));
+        };
+        let Some((m, e)) = rest.split_once(" e=") else {
+            return err("line is missing the e-series".into());
+        };
+        for series in [m, e] {
+            let words: Vec<&str> = series.split(',').collect();
+            if words.len() != samples {
+                return err(format!("{} samples in a series, expected {samples}", words.len()));
+            }
+            let canonical = words.iter().all(|w| {
+                w.len() == 16 && w.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+            });
+            if !canonical {
+                return err("sample words must be 16 lowercase hex digits".into());
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// HTTP front end.
+
+/// Route one fleet request. Infallible by construction: every failure
+/// becomes an [`ErrorEnvelope`] response.
+pub fn handle_fleet_request(req: &Request, state: &FleetState) -> Response {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v2", "fleet", "register"]) => with_body(req, |doc| {
+            let reg = Register::from_json(doc)?;
+            Ok(Response::json(200, &state.register(&reg.name).to_json()))
+        }),
+        ("POST", ["v2", "fleet", "heartbeat"]) => with_body(req, |doc| {
+            let hb = Heartbeat::from_json(doc)?;
+            state.heartbeat(&hb.worker);
+            Ok(ok_body())
+        }),
+        ("POST", ["v2", "fleet", "lease"]) => with_body(req, |doc| {
+            let lr = LeaseRequest::from_json(doc)?;
+            Ok(Response::json(200, &state.lease(&lr.worker).to_json()))
+        }),
+        ("POST", ["v2", "fleet", "progress"]) => with_body(req, |doc| {
+            let up = ProgressUpload::from_json(doc)?;
+            state.progress(&up.worker, up.unit, up.payload)?;
+            Ok(ok_body())
+        }),
+        ("POST", ["v2", "fleet", "result"]) => with_body(req, |doc| {
+            let up = ResultUpload::from_json(doc)?;
+            state.result(&up.worker, up.unit, &up.report)?;
+            Ok(ok_body())
+        }),
+        ("POST", ["v2", "fleet", "fail"]) => with_body(req, |doc| {
+            let up = UnitFail::from_json(doc)?;
+            state.fail(&up.worker, up.unit, &up.error)?;
+            Ok(ok_body())
+        }),
+        ("GET", ["v2", "fleet", "status"]) => Response::json(200, &state.status_json()),
+        ("GET", ["v2", "healthz"]) => ok_body(),
+        (_, ["v2", "fleet", _]) => {
+            ErrorEnvelope::new(405, "usage", "wrong verb for this fleet endpoint").to_response()
+        }
+        _ => ErrorEnvelope::new(404, "not_found", format!("no route for '{}'", req.path))
+            .to_response(),
+    }
+}
+
+fn ok_body() -> Response {
+    Response::json(200, &obj(vec![("status", Json::Str("ok".into()))]))
+}
+
+/// Parse the request body as JSON and run `f`; map parse failures to
+/// 400 envelopes and [`Error::Coordinator`] refusals to 409 conflicts.
+fn with_body(req: &Request, f: impl FnOnce(&Json) -> Result<Response>) -> Response {
+    let body = match req.body_str() {
+        Ok(s) => s,
+        Err(e) => return ErrorEnvelope::new(e.status, "usage", e.msg).to_response(),
+    };
+    let doc = match Json::parse(body) {
+        Ok(d) => d,
+        Err(e) => return ErrorEnvelope::from_error(&e).to_response(),
+    };
+    match f(&doc) {
+        Ok(resp) => resp,
+        Err(Error::Coordinator(msg)) => {
+            ErrorEnvelope::new(409, "conflict", msg).to_response()
+        }
+        Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+    }
+}
+
+/// The coordinator process: a one-request-per-connection HTTP listener
+/// over a [`FleetState`].
+pub struct Coordinator {
+    listener: TcpListener,
+    state: std::sync::Arc<FleetState>,
+}
+
+impl Coordinator {
+    /// Bind the fleet endpoint (non-blocking accept loop).
+    pub fn bind(addr: &str, state: std::sync::Arc<FleetState>) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Coordinator(format!("cannot bind '{addr}': {e}")))?;
+        listener.set_nonblocking(true)?;
+        Ok(Self { listener, state })
+    }
+
+    /// The bound address (for `--addr 127.0.0.1:0` test listeners).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Shared fleet state.
+    pub fn state(&self) -> std::sync::Arc<FleetState> {
+        std::sync::Arc::clone(&self.state)
+    }
+
+    /// Serve until the grid completes (or aborts), linger briefly so
+    /// polling workers observe the terminal lease reply, then return the
+    /// merged report — byte-identical to single-node `ising sweep` for
+    /// the same configuration.
+    pub fn run(&self) -> Result<String> {
+        let mut finished_at: Option<Instant> = None;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => handle_conn(stream, &self.state),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+            match self.state.phase() {
+                RunPhase::Running => {
+                    finished_at = None;
+                }
+                RunPhase::Done | RunPhase::Failed(_) => {
+                    let now = Instant::now();
+                    let t0 = *finished_at.get_or_insert(now);
+                    if now.duration_since(t0) >= LINGER {
+                        break;
+                    }
+                }
+            }
+        }
+        match self.state.phase() {
+            RunPhase::Failed(msg) => Err(Error::Coordinator(msg)),
+            _ => self
+                .state
+                .merged_report()
+                .ok_or_else(|| Error::Coordinator("fleet finished without a full report".into())),
+        }
+    }
+}
+
+/// Serve one request on one connection (the fleet protocol is strictly
+/// request/response; workers reconnect per call).
+fn handle_conn(stream: TcpStream, state: &FleetState) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    match read_request(&mut reader) {
+        Ok(None) => {}
+        Ok(Some(req)) => {
+            let resp = handle_fleet_request(&req, state);
+            let _ = resp.write_to(&mut writer);
+        }
+        Err(e) => {
+            let _ = e.into_response().write_to(&mut writer);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::farm::{run_farm, FarmEngine};
+    use crate::lattice::Geometry;
+    use std::sync::Arc;
+
+    fn grid_cfg() -> FarmConfig {
+        FarmConfig {
+            geom: Geometry::new(8, 32).unwrap(),
+            betas: vec![0.42, 0.44],
+            seeds: vec![1, 2],
+            shards: 1,
+            workers: 1,
+            burn_in: 2,
+            samples: 3,
+            thin: 1,
+            threaded_shards: false,
+            engine: FarmEngine::Multispin,
+        }
+    }
+
+    fn fleet_cfg(tag: &str) -> FleetConfig {
+        FleetConfig {
+            checkpoint_dir: std::env::temp_dir()
+                .join(format!("ising-fleet-{tag}-{}", std::process::id())),
+            ..FleetConfig::default()
+        }
+    }
+
+    fn cleanup(f: &FleetConfig) {
+        let _ = std::fs::remove_dir_all(&f.checkpoint_dir);
+    }
+
+    /// Drive the whole fleet protocol in-process: lease every unit,
+    /// answer with reports computed by the ordinary farm, and check the
+    /// merged report is byte-identical to a single-node run.
+    #[test]
+    fn merged_report_is_bit_identical_to_single_node() {
+        let cfg = grid_cfg();
+        let expected = run_farm(&cfg).unwrap().replica_report();
+        let fleet = fleet_cfg("merge");
+        cleanup(&fleet);
+        let state = FleetState::open(cfg, fleet.clone(), false).unwrap();
+        state.register("w0");
+        loop {
+            match state.lease("w0") {
+                LeaseReply::Unit(lease) => {
+                    let report = run_farm(&lease.spec).unwrap().replica_report();
+                    state.result("w0", lease.unit, &report).unwrap();
+                    // Idempotent: a duplicate upload is a no-op.
+                    state.result("w0", lease.unit, &report).unwrap();
+                }
+                LeaseReply::Done => break,
+                other => panic!("unexpected lease reply: {other:?}"),
+            }
+        }
+        assert_eq!(state.phase(), RunPhase::Done);
+        assert_eq!(state.merged_report().unwrap(), expected);
+        assert_eq!(state.requeue_count(), 0);
+        cleanup(&fleet);
+    }
+
+    /// An expired lease re-queues its unit (checkpoint retained) and the
+    /// next worker gets it; a resumed coordinator re-adopts stored lines.
+    #[test]
+    fn expired_leases_requeue_and_resume_restores_state() {
+        let cfg = grid_cfg();
+        let mut fleet = fleet_cfg("requeue");
+        cleanup(&fleet);
+        fleet.lease_ms = 1; // expire essentially immediately
+        let state = FleetState::open(cfg.clone(), fleet.clone(), false).unwrap();
+        let LeaseReply::Unit(first) = state.lease("a") else { panic!("expected a unit") };
+        assert_eq!(first.unit, 0);
+        state.progress("a", 0, vec![1, 2, 3]).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // Worker b steals the expired unit, with a's checkpoint attached.
+        let LeaseReply::Unit(stolen) = state.lease("b") else { panic!("expected a unit") };
+        assert_eq!(stolen.unit, 0);
+        assert_eq!(stolen.checkpoint.as_deref(), Some(&[1u8, 2, 3][..]));
+        assert!(state.requeue_count() >= 1);
+        assert_eq!(state.resumed_count(), 1);
+        // Progress from the dispossessed holder is refused.
+        assert!(state.progress("a", 0, vec![9]).is_err());
+        // Complete unit 0 for real, then resume a fresh coordinator over
+        // the same dir: the stored lines must be re-adopted.
+        let report = run_farm(&stolen.spec).unwrap().replica_report();
+        state.result("b", 0, &report).unwrap();
+        drop(state);
+        let resumed = FleetState::open(cfg.clone(), fleet.clone(), true).unwrap();
+        let resumed_status = resumed.status_json();
+        assert_eq!(resumed_status.field("done").unwrap().as_u64().unwrap(), 1);
+        // Fresh open over a used dir is refused without --resume.
+        let err = FleetState::open(cfg, fleet.clone(), false).unwrap_err();
+        assert!(err.to_string().contains("--resume"), "{err}");
+        cleanup(&fleet);
+    }
+
+    /// Corrupt or mismatched unit reports are rejected bit-level.
+    #[test]
+    fn unit_report_validation_is_strict() {
+        let cfg = grid_cfg();
+        let fleet = fleet_cfg("validate");
+        cleanup(&fleet);
+        let state = FleetState::open(cfg, fleet.clone(), false).unwrap();
+        let LeaseReply::Unit(lease) = state.lease("w") else { panic!("expected a unit") };
+        let good = run_farm(&lease.spec).unwrap().replica_report();
+        for bad in [
+            String::from("no header\n"),
+            good.replace("seed=1", "seed=2"),            // wrong lane seed
+            good.trim_end().to_string(),                 // missing newline
+            good.replace(REPORT_HEADER, &format!("{REPORT_HEADER}extra line\n")),
+            {
+                // Truncated sample series.
+                let mut s = good.clone();
+                let cut = s.rfind(',').unwrap();
+                s.replace_range(cut..s.len() - 1, "");
+                s
+            },
+        ] {
+            assert!(state.result("w", lease.unit, &bad).is_err(), "must reject: {bad:?}");
+        }
+        state.result("w", lease.unit, &good).unwrap();
+        cleanup(&fleet);
+    }
+
+    /// A unit that keeps failing aborts the run instead of spinning.
+    #[test]
+    fn exhausted_attempts_abort_the_run() {
+        let cfg = grid_cfg();
+        let fleet = fleet_cfg("abort");
+        cleanup(&fleet);
+        let state = FleetState::open(cfg, fleet.clone(), false).unwrap();
+        for attempt in 0.. {
+            match state.lease("w") {
+                LeaseReply::Unit(lease) => {
+                    state.fail("w", lease.unit, "engine exploded").unwrap();
+                }
+                LeaseReply::Failed(msg) => {
+                    assert!(msg.contains("engine exploded"), "{msg}");
+                    break;
+                }
+                other => panic!("unexpected reply: {other:?}"),
+            }
+            assert!(attempt < 64, "abort never triggered");
+        }
+        assert!(matches!(state.phase(), RunPhase::Failed(_)));
+        cleanup(&fleet);
+    }
+
+    /// The HTTP router speaks the wire messages end to end (no sockets).
+    #[test]
+    fn fleet_router_round_trips_the_wire_messages() {
+        let cfg = grid_cfg();
+        let fleet = fleet_cfg("router");
+        cleanup(&fleet);
+        let state = FleetState::open(cfg, fleet.clone(), false).unwrap();
+        let post = |path: &str, body: &str| -> Request {
+            let raw = format!(
+                "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            read_request(&mut raw.as_bytes()).unwrap().unwrap()
+        };
+        let body = Register { name: "w0".into() }.to_json().to_string_compact();
+        let resp = handle_fleet_request(&post("/v2/fleet/register", &body), &state);
+        assert_eq!(resp.status, 200);
+        let ack =
+            RegisterAck::from_json(&Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap())
+                .unwrap();
+        assert_eq!(ack.worker, "w0");
+        let body = LeaseRequest { worker: "w0".into() }.to_json().to_string_compact();
+        let resp = handle_fleet_request(&post("/v2/fleet/lease", &body), &state);
+        let reply =
+            LeaseReply::from_json(&Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap())
+                .unwrap();
+        let LeaseReply::Unit(lease) = reply else { panic!("expected a unit lease") };
+        assert_eq!(lease.unit, 0);
+        // Malformed bodies answer with the envelope, never a panic.
+        let resp = handle_fleet_request(&post("/v2/fleet/lease", "{\"nope\": 1}"), &state);
+        assert_eq!(resp.status, 400);
+        let env = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(env.field("kind").unwrap().as_str().unwrap(), "usage");
+        // Unknown route: envelope 404.
+        let raw = "GET /v2/fleet/nope HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut raw.as_bytes()).unwrap().unwrap();
+        assert_eq!(handle_fleet_request(&req, &state).status, 404);
+        cleanup(&fleet);
+    }
+
+    /// Coordinator bind/run smoke over a real socket: a worker thread
+    /// drives the protocol with plain TcpStreams.
+    #[test]
+    fn coordinator_serves_a_socket_worker() {
+        let cfg = grid_cfg();
+        let expected = run_farm(&cfg).unwrap().replica_report();
+        let fleet = fleet_cfg("socket");
+        cleanup(&fleet);
+        let state = Arc::new(FleetState::open(cfg, fleet.clone(), false).unwrap());
+        let coordinator = match Coordinator::bind("127.0.0.1:0", Arc::clone(&state)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("skipping socket test (bind failed: {e})");
+                return;
+            }
+        };
+        let addr = coordinator.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let send = |path: &str, body: String| -> Json {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                use std::io::{Read, Write};
+                write!(
+                    stream,
+                    "POST {path} HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                )
+                .unwrap();
+                let mut raw = String::new();
+                stream.read_to_string(&mut raw).unwrap();
+                let body_at = raw.find("\r\n\r\n").unwrap() + 4;
+                Json::parse(&raw[body_at..]).unwrap()
+            };
+            send(
+                "/v2/fleet/register",
+                Register { name: "w0".into() }.to_json().to_string_compact(),
+            );
+            loop {
+                let doc = send(
+                    "/v2/fleet/lease",
+                    LeaseRequest { worker: "w0".into() }.to_json().to_string_compact(),
+                );
+                match LeaseReply::from_json(&doc).unwrap() {
+                    LeaseReply::Unit(lease) => {
+                        let report = run_farm(&lease.spec).unwrap().replica_report();
+                        send(
+                            "/v2/fleet/result",
+                            ResultUpload { worker: "w0".into(), unit: lease.unit, report }
+                                .to_json()
+                                .to_string_compact(),
+                        );
+                    }
+                    LeaseReply::Done => break,
+                    LeaseReply::Idle => std::thread::sleep(Duration::from_millis(5)),
+                    LeaseReply::Failed(msg) => panic!("fleet failed: {msg}"),
+                }
+            }
+        });
+        let report = coordinator.run().unwrap();
+        worker.join().unwrap();
+        assert_eq!(report, expected);
+        cleanup(&fleet);
+    }
+}

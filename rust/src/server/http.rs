@@ -251,6 +251,9 @@ pub struct Response {
     pub status: u16,
     /// `Content-Type` header value.
     pub content_type: &'static str,
+    /// Extra headers (name, value), written after `Content-Length` —
+    /// the `/v1` deprecation shim attaches its advisory headers here.
+    pub headers: Vec<(&'static str, String)>,
     /// Body bytes.
     pub body: Vec<u8>,
 }
@@ -260,26 +263,41 @@ impl Response {
     pub fn json(status: u16, doc: &Json) -> Self {
         let mut body = doc.to_string_compact().into_bytes();
         body.push(b'\n');
-        Self { status, content_type: "application/json", body }
+        Self { status, content_type: "application/json", headers: Vec::new(), body }
     }
 
     /// Plain-text response; the body bytes are written verbatim (this is
     /// what keeps the result endpoint byte-identical to the offline
     /// report file).
     pub fn text(status: u16, body: impl Into<Vec<u8>>) -> Self {
-        Self { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
+            body: body.into(),
+        }
+    }
+
+    /// Attach an extra header (builder style).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.headers.push((name, value.into()));
+        self
     }
 
     /// Serialize onto the wire.
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
             self.status,
             reason(self.status),
             self.content_type,
             self.body.len()
         )?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        write!(w, "\r\n")?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -395,5 +413,18 @@ mod tests {
         let resp = HttpError::new(413, "too big").into_response();
         assert_eq!(resp.status, 413);
         assert!(String::from_utf8(resp.body).unwrap().contains("too big"));
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_before_the_body() {
+        let resp = Response::text(200, "body\n")
+            .with_header("Deprecation", "true")
+            .with_header("Link", "</v2>; rel=\"successor-version\"");
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("\r\nDeprecation: true\r\n"));
+        assert!(s.contains("\r\nLink: </v2>; rel=\"successor-version\"\r\n"));
+        assert!(s.ends_with("\r\n\r\nbody\n"));
     }
 }

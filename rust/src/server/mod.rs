@@ -7,9 +7,16 @@
 //! Layering (each module is independently testable):
 //!
 //! * [`http`] — wire protocol: bounded request parser + response writer.
-//! * [`api`] — the `/v1` routes and the job-spec ↔ `FarmConfig` mapping.
+//! * [`wire`] — the `/v2` message types: `JobSpec`, the error envelope,
+//!   and the fleet protocol (register/heartbeat/lease/result).
+//! * [`api`] — the `/v2` routes (plus the `/v1` compatibility shim) and
+//!   the job-spec ↔ `FarmConfig` mapping.
 //! * [`queue`] — scheduler: registry, bounded FIFO, worker pool, stop flag.
 //! * [`cache`] — content-addressed on-disk job store (fingerprint keys).
+//! * [`fleet`] — the `ising coordinate` side: unit board, leases,
+//!   dead-worker re-queue, report merge.
+//! * [`worker`] — the fleet client embedded in `ising serve
+//!   --coordinator`: lease → run → upload.
 //!
 //! The server owns no physics: jobs run through the exact same
 //! `coordinator::run_farm_checkpointed` path as the `ising sweep` CLI,
@@ -18,8 +25,11 @@
 
 pub mod api;
 pub mod cache;
+pub mod fleet;
 pub mod http;
 pub mod queue;
+pub mod wire;
+pub mod worker;
 
 use crate::config::ServerConfig;
 use crate::error::Result;
@@ -153,14 +163,48 @@ fn handle_connection(stream: TcpStream, ctx: &ApiCtx) {
     }
 }
 
-/// CLI entry point: bind, announce, serve, summarize.
-pub fn serve(cfg: ServerConfig) -> Result<()> {
+/// Fleet-worker attachment for [`serve`]: when present, the server also
+/// dials a coordinator and contributes to its distributed farm.
+pub struct WorkerOpts {
+    /// Coordinator base URL (`http://host:port`).
+    pub coordinator: String,
+    /// Fleet-unique worker name.
+    pub name: String,
+}
+
+/// CLI entry point: bind, announce, serve, summarize. With `fleet`
+/// attached, a background worker thread leases grid units from the
+/// coordinator for as long as the server runs (`POST /v1|/v2/shutdown`
+/// stops it through the shared scheduler stop flag).
+pub fn serve(cfg: ServerConfig, fleet: Option<WorkerOpts>) -> Result<()> {
     let workers = cfg.workers;
     let depth = cfg.queue_depth;
     let dir = cfg.checkpoint_dir.display().to_string();
     let slice = cfg.slice_samples;
+    let unit_dir = cfg.checkpoint_dir.join("fleet-units");
     let server = Server::bind(cfg)?;
     let scheduler = server.scheduler();
+    let fleet_thread = fleet.map(|opts| {
+        println!(
+            "  fleet: worker '{}' dialing coordinator {}",
+            opts.name, opts.coordinator
+        );
+        let wcfg = worker::WorkerConfig {
+            coordinator: opts.coordinator,
+            name: opts.name,
+            work_dir: unit_dir,
+            slice_samples: slice,
+            stop: scheduler.stop_handle(),
+            max_passes: None,
+        };
+        std::thread::spawn(move || {
+            let tag = wcfg.name.clone();
+            match worker::run_worker(wcfg) {
+                Ok(()) => println!("  fleet: worker '{tag}' finished"),
+                Err(e) => eprintln!("  fleet: worker '{tag}' stopped: {e}"),
+            }
+        })
+    });
     let pending = scheduler.counts();
     println!("ising serve: listening on http://{}", server.local_addr()?);
     println!(
@@ -176,8 +220,13 @@ pub fn serve(cfg: ServerConfig) -> Result<()> {
             pending.queued
         );
     }
-    println!("  API: POST /v1/jobs · GET /v1/jobs/{{id}}[/result] · GET /v1/healthz · GET /v1/info · POST /v1/shutdown");
+    println!("  API: POST /v2/jobs · GET /v2/jobs/{{id}}[/result] · GET /v2/healthz · GET /v2/info · POST /v2/shutdown (/v1 kept as a deprecated alias)");
     server.run()?;
+    if let Some(handle) = fleet_thread {
+        // The shutdown above raised the shared stop flag; the worker
+        // checkpoints its unit, uploads progress, and exits.
+        let _ = handle.join();
+    }
     let counts = scheduler.counts();
     println!(
         "ising serve: shutdown complete ({} done, {} failed, {} checkpointed for restart)",

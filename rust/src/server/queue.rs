@@ -115,6 +115,44 @@ impl JobStatus {
     }
 }
 
+/// Fine-grained job state machine surfaced by the `/v2` status endpoint.
+///
+/// [`JobStatus`] is the coarse `/v1` lifecycle (kept stable for the
+/// compatibility shim); this enum distinguishes *why* a job is waiting:
+/// `Checkpointed` means progress is on disk (shutdown or restart scan
+/// found a manifest), `Requeued` means a fairness slice or a failure
+/// retry put it back in line. Transitions:
+/// `queued → running → checkpointed/requeued → running → done | failed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Fresh in the queue, never run.
+    Queued,
+    /// A worker is running its farm right now.
+    Running,
+    /// Interrupted with progress checkpointed on disk.
+    Checkpointed,
+    /// Put back in the queue after a fairness slice or a failure retry.
+    Requeued,
+    /// Finished; result in the cache.
+    Done,
+    /// The farm errored.
+    Failed,
+}
+
+impl JobState {
+    /// Wire name (`/v2` status endpoint).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Checkpointed => "checkpointed",
+            JobState::Requeued => "requeued",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
 /// Outcome of a submission.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Submit {
@@ -152,6 +190,7 @@ pub struct Counts {
 struct Job {
     cfg: FarmConfig,
     status: JobStatus,
+    state: JobState,
 }
 
 #[derive(Default)]
@@ -193,22 +232,25 @@ impl Scheduler {
         let mut state = State::default();
         for id in cache.job_ids() {
             let Some(spec) = cache.load_spec(&id) else { continue };
-            let job_cfg = match Json::parse(&spec).and_then(|doc| decode_config(&doc)) {
+            let job_cfg = match requeue_interrupted(&id, &spec) {
                 Ok(c) => c,
-                // A corrupt spec must not take the server down; the job
-                // simply isn't resumable and stays on disk for forensics.
+                // A corrupt or mismatched spec must not take the server
+                // down; the job simply isn't resumable and stays on disk
+                // for forensics.
                 Err(_) => continue,
             };
-            if fingerprint(&job_cfg) != id {
-                continue; // spec does not match its directory: ignore
-            }
-            let status = if cache.lookup(&id).is_some() {
-                JobStatus::Done
+            let (status, job_state) = if cache.lookup(&id).is_some() {
+                (JobStatus::Done, JobState::Done)
             } else {
                 state.queue.push_back(id.clone());
-                JobStatus::Queued
+                let st = if cache.checkpoint_dir(&id).join(MANIFEST_FILE).is_file() {
+                    JobState::Checkpointed
+                } else {
+                    JobState::Queued
+                };
+                (JobStatus::Queued, st)
             };
-            state.jobs.insert(id, Job { cfg: job_cfg, status });
+            state.jobs.insert(id, Job { cfg: job_cfg, status, state: job_state });
         }
         Ok(Self {
             inner: Arc::new(Inner {
@@ -252,6 +294,7 @@ impl Scheduler {
             {
                 if let Some(job) = st.jobs.get_mut(&id) {
                     job.status = JobStatus::Queued;
+                    job.state = JobState::Requeued;
                 }
                 st.queue.push_back(id.clone());
                 self.inner.cv.notify_one();
@@ -262,7 +305,8 @@ impl Scheduler {
         // Result on disk from a previous server life whose spec file was
         // lost: still a hit (the report is the durable artifact).
         if self.inner.cache.lookup(&id).is_some() {
-            st.jobs.insert(id.clone(), Job { cfg, status: JobStatus::Done });
+            st.jobs
+                .insert(id.clone(), Job { cfg, status: JobStatus::Done, state: JobState::Done });
             return Ok(Submit::Existing { id, status: JobStatus::Done });
         }
         if self.stopping() || st.queue.len() >= self.inner.depth {
@@ -271,7 +315,8 @@ impl Scheduler {
         self.inner
             .cache
             .store_spec(&id, &encode_config(&cfg).to_string_pretty())?;
-        st.jobs.insert(id.clone(), Job { cfg, status: JobStatus::Queued });
+        st.jobs
+            .insert(id.clone(), Job { cfg, status: JobStatus::Queued, state: JobState::Queued });
         st.queue.push_back(id.clone());
         self.inner.cv.notify_one();
         Ok(Submit::Accepted { id })
@@ -281,6 +326,20 @@ impl Scheduler {
     pub fn status(&self, id: &str) -> Option<JobStatus> {
         let st = self.inner.state.lock().expect("scheduler state poisoned");
         st.jobs.get(id).map(|j| j.status.clone())
+    }
+
+    /// Fine-grained `/v2` state of a job, if known.
+    pub fn job_state(&self, id: &str) -> Option<JobState> {
+        let st = self.inner.state.lock().expect("scheduler state poisoned");
+        st.jobs.get(id).map(|j| j.state)
+    }
+
+    /// The cooperative stop flag shared with every in-flight farm. An
+    /// embedded fleet worker clones it so that `POST /shutdown` (or
+    /// SIGTERM handling) interrupts remote unit execution the same way
+    /// it interrupts local jobs.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.inner.stop)
     }
 
     /// Replica-grid size of a job, if known (status endpoint detail).
@@ -390,6 +449,7 @@ fn run_pass(inner: &Inner, id: &str) {
         let mut st = inner.state.lock().expect("scheduler state poisoned");
         let Some(job) = st.jobs.get_mut(id) else { return };
         job.status = JobStatus::Running;
+        job.state = JobState::Running;
         job.cfg.clone()
     };
     let ckdir = inner.cache.checkpoint_dir(id);
@@ -421,20 +481,50 @@ fn run_pass(inner: &Inner, id: &str) {
     match outcome {
         Ok(FarmOutcome::Complete(result)) => {
             match inner.cache.store(id, &result.replica_report()) {
-                Ok(()) => job.status = JobStatus::Done,
-                Err(e) => job.status = JobStatus::Failed(format!("result store: {e}")),
+                Ok(()) => {
+                    job.status = JobStatus::Done;
+                    job.state = JobState::Done;
+                }
+                Err(e) => {
+                    job.status = JobStatus::Failed(format!("result store: {e}"));
+                    job.state = JobState::Failed;
+                }
             }
         }
         Ok(FarmOutcome::Interrupted { .. }) => {
             // Slice exhausted or shutting down: progress is checkpointed.
             job.status = JobStatus::Queued;
-            if !inner.stop.load(Ordering::Relaxed) {
+            if inner.stop.load(Ordering::Relaxed) {
+                // Shutting down: the checkpoint carries it across restart.
+                job.state = JobState::Checkpointed;
+            } else {
+                job.state = JobState::Requeued;
                 st.queue.push_back(id.to_string());
                 inner.cv.notify_one();
             }
         }
-        Err(e) => job.status = JobStatus::Failed(e.to_string()),
+        Err(e) => {
+            job.status = JobStatus::Failed(e.to_string());
+            job.state = JobState::Failed;
+        }
     }
+}
+
+/// Validate a persisted job spec for re-queueing after an interruption:
+/// parse, decode (semantic rules + service caps), and check that the
+/// fingerprint still matches the id it was stored under. Both recovery
+/// paths — the scheduler's restart scan and the fleet coordinator's
+/// dead-worker re-queue — go through this one helper, so lease expiry
+/// and crash restart cannot drift in validation behavior.
+pub fn requeue_interrupted(id: &str, spec_json: &str) -> Result<FarmConfig> {
+    let cfg = Json::parse(spec_json).and_then(|doc| decode_config(&doc))?;
+    let actual = fingerprint(&cfg);
+    if actual != id {
+        return Err(Error::Config(format!(
+            "persisted spec fingerprint {actual} does not match job id {id}"
+        )));
+    }
+    Ok(cfg)
 }
 
 /// Canonical persisted job spec. β values are stored as exact f32 bit
@@ -560,6 +650,41 @@ mod tests {
             let doc = Json::parse(bad).unwrap();
             assert!(decode_config(&doc).is_err(), "must reject: {bad}");
         }
+    }
+
+    #[test]
+    fn requeue_interrupted_validates_spec_and_fingerprint() {
+        let cfg = small_cfg();
+        let id = fingerprint(&cfg);
+        let spec = encode_config(&cfg).to_string_pretty();
+        let back = requeue_interrupted(&id, &spec).unwrap();
+        assert_eq!(fingerprint(&back), id);
+        // Wrong id: refused (spec does not belong to that directory).
+        let err = requeue_interrupted("0000000000000000", &spec).unwrap_err();
+        assert!(err.to_string().contains("does not match job id"), "{err}");
+        // Corrupt JSON and violating specs: refused like the restart scan.
+        assert!(requeue_interrupted(&id, "{not json").is_err());
+        let mut huge = small_cfg();
+        huge.samples = limits::MAX_SAMPLES + 1;
+        let huge_spec = encode_config(&huge).to_string_pretty();
+        assert!(requeue_interrupted(&fingerprint(&huge), &huge_spec).is_err());
+    }
+
+    #[test]
+    fn job_state_names_cover_the_v2_machine() {
+        let all = [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Checkpointed,
+            JobState::Requeued,
+            JobState::Done,
+            JobState::Failed,
+        ];
+        let names: Vec<_> = all.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["queued", "running", "checkpointed", "requeued", "done", "failed"]
+        );
     }
 
     #[test]

@@ -1,0 +1,958 @@
+//! `/v2` wire protocol: the typed [`JobSpec`] shared by the CLI, TOML
+//! files and HTTP JSON; the uniform [`ErrorEnvelope`]; and the typed
+//! coordinator ↔ worker fleet messages.
+//!
+//! Design rules:
+//!
+//! * **One validation path.** Every entry point (CLI flags, a `[job]`
+//!   TOML section, a `/v1` or `/v2` HTTP body) parses into the same
+//!   [`JobSpec`], and [`JobSpec::resolve`] funnels into the shared
+//!   [`FarmConfig::validate`] — the three front doors cannot drift.
+//! * **Errors are data.** `/v2` failures are a single JSON shape,
+//!   `{code, kind, message, retryable}`, so clients branch on fields
+//!   instead of scraping ad-hoc message strings.
+//! * **Decoders are bounded.** Every `from_json` rejects unknown keys,
+//!   wrong types, oversized names and oversized hex payloads *before*
+//!   allocating, so a hostile body can neither panic the coordinator nor
+//!   balloon its memory (fuzzed by `tests/fuzz_parsers.rs`).
+//!
+//! Checkpoint payloads travel as lowercase hex of the snapshot *file*
+//! bytes (`util::snapshot` container, CRC included): the worker writes
+//! them to disk verbatim and the existing checkpoint loader re-validates
+//! magic, CRC and replica identity before resuming, so a corrupted or
+//! mismatched payload fails loudly instead of poisoning a trajectory.
+
+use crate::cli::args::Args;
+use crate::config::Toml;
+use crate::coordinator::farm::{default_beta_grid, FarmConfig, FarmEngine};
+use crate::error::{Error, Result};
+use crate::server::http::Response;
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+
+/// Longest accepted worker name (registration / heartbeat / lease).
+pub const MAX_WORKER_NAME: usize = 64;
+
+/// Largest raw checkpoint payload carried by a lease or progress upload
+/// (hex doubles it on the wire; the HTTP body cap is 1 MiB). Units whose
+/// snapshots exceed this simply re-run from scratch after a failure —
+/// still bit-identical, just slower.
+pub const MAX_PROGRESS_PAYLOAD: usize = 480 * 1024;
+
+/// Largest accepted per-unit report upload (the HTTP body cap).
+pub const MAX_REPORT: usize = super::http::MAX_BODY;
+
+/// Largest accepted error-message string inside a fleet message.
+pub const MAX_ERROR_MESSAGE: usize = 8192;
+
+/// Largest unit index any fleet message may carry (β cap × replica cap —
+/// nothing the coordinator can produce is bigger).
+pub const MAX_UNIT_INDEX: usize =
+    super::queue::limits::MAX_BETAS * super::queue::limits::MAX_REPLICAS;
+
+// ---------------------------------------------------------------------
+// JobSpec — the single typed job description.
+
+/// A fully typed job description: engine, geometry, β grid, seed grid,
+/// measurement protocol, and execution-layout hints. This is the one
+/// place submit-time knobs and their defaults are defined; the CLI
+/// (`from_args`), TOML files (`from_toml`) and the HTTP API
+/// (`from_json`) are thin parsers into it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Lattice side length (square geometry).
+    pub size: usize,
+    /// Replica engine family.
+    pub engine: FarmEngine,
+    /// Resolved β grid (explicit list, or `default_beta_grid(n)`).
+    pub betas: Vec<f32>,
+    /// Seeds per β point (seed grid is `seed..seed + replicas`).
+    pub replicas: usize,
+    /// First seed of the replica grid.
+    pub seed: u32,
+    /// Equilibration sweeps per replica.
+    pub burn_in: u64,
+    /// Measurement samples per replica.
+    pub samples: usize,
+    /// Sweeps between samples.
+    pub thin: u64,
+    /// Worker threads (`None` = the entry point's own default).
+    pub workers: Option<usize>,
+    /// Slabs inside each replica (multispin only).
+    pub shards: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        // Inherit the protocol defaults from FarmConfig::grid instead of
+        // duplicating the constants here.
+        let cfg = FarmConfig::grid(256, default_beta_grid(4), 1, 1)
+            .expect("default job geometry is valid");
+        Self {
+            size: 256,
+            engine: cfg.engine,
+            betas: cfg.betas,
+            replicas: 1,
+            seed: 1,
+            burn_in: cfg.burn_in,
+            samples: cfg.samples,
+            thin: cfg.thin,
+            workers: None,
+            shards: 1,
+        }
+    }
+}
+
+/// The submit-body / `[job]`-section key set (one list, three parsers).
+pub const JOB_KEYS: &[&str] = &[
+    "size", "engine", "betas", "beta_points", "replicas", "seed", "burn_in",
+    "samples", "thin", "workers", "shards",
+];
+
+impl JobSpec {
+    /// Resolve into a validated [`FarmConfig`] — the single semantic
+    /// gate ([`FarmConfig::validate`]) for every entry point. Service
+    /// front ends additionally apply [`super::queue::enforce_job_limits`].
+    pub fn resolve(&self) -> Result<FarmConfig> {
+        let mut cfg =
+            FarmConfig::grid(self.size, self.betas.clone(), self.replicas, self.seed)?;
+        cfg.engine = self.engine;
+        cfg.burn_in = self.burn_in;
+        cfg.samples = self.samples;
+        cfg.thin = self.thin;
+        cfg.workers = self.workers.unwrap_or(1);
+        cfg.shards = self.shards;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse an HTTP submit body (`POST /v1/jobs` and `/v2/jobs` share
+    /// this shape). Allocation-scale fields (`beta_points`, `replicas`)
+    /// are capped *before* any grid is generated, so an oversized value
+    /// is a 400, not an allocation.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let fields = doc
+            .as_obj()
+            .map_err(|_| Error::Usage("job spec must be a JSON object".into()))?;
+        for key in fields.keys() {
+            if !JOB_KEYS.contains(&key.as_str()) {
+                return Err(Error::Usage(format!(
+                    "unknown job key '{key}' (known: {})",
+                    JOB_KEYS.join(", ")
+                )));
+            }
+        }
+        let get_u64 = |key: &str, default: u64| -> Result<u64> {
+            match doc.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_u64().map_err(|_| {
+                    Error::Usage(format!("job key '{key}' must be a non-negative integer"))
+                }),
+            }
+        };
+
+        let mut spec = JobSpec::default();
+        spec.size = get_u64("size", spec.size as u64)? as usize;
+        if let Some(v) = doc.get("engine") {
+            spec.engine = FarmEngine::parse(
+                v.as_str()
+                    .map_err(|_| Error::Usage("job key 'engine' must be a string".into()))?,
+            )?;
+        }
+        spec.betas = match doc.get("betas") {
+            Some(v) => {
+                let arr = v.as_arr().map_err(|_| {
+                    Error::Usage("job key 'betas' must be an array of numbers".into())
+                })?;
+                let mut betas = Vec::with_capacity(arr.len());
+                for item in arr {
+                    let b = item.as_f64().map_err(|_| {
+                        Error::Usage("job key 'betas' must be an array of numbers".into())
+                    })? as f32;
+                    betas.push(b);
+                }
+                betas
+            }
+            None => {
+                // Cap before generating: a huge beta_points must fail
+                // with a 400, not an allocation.
+                let n = get_u64("beta_points", 4)?.max(1) as usize;
+                if n > super::queue::limits::MAX_BETAS {
+                    return Err(Error::Usage(format!(
+                        "{n} beta_points exceed the service cap of {}",
+                        super::queue::limits::MAX_BETAS
+                    )));
+                }
+                default_beta_grid(n)
+            }
+        };
+        // Same pre-allocation cap for the seed grid `resolve` builds.
+        spec.replicas = get_u64("replicas", 1)?.max(1) as usize;
+        if spec.replicas > super::queue::limits::MAX_REPLICAS {
+            return Err(Error::Usage(format!(
+                "{} replicas exceed the service cap of {}",
+                spec.replicas,
+                super::queue::limits::MAX_REPLICAS
+            )));
+        }
+        spec.seed = u32::try_from(get_u64("seed", 1)?)
+            .map_err(|_| Error::Usage("job key 'seed' must fit in u32".into()))?;
+        spec.burn_in = get_u64("burn_in", spec.burn_in)?;
+        spec.samples = get_u64("samples", spec.samples as u64)? as usize;
+        spec.thin = get_u64("thin", spec.thin)?;
+        spec.workers = Some(get_u64("workers", 1)? as usize);
+        spec.shards = get_u64("shards", 1)? as usize;
+        Ok(spec)
+    }
+
+    /// Parse CLI flags (shared by `ising sweep` and `ising coordinate`).
+    /// Only flags that are present override the defaults, so command
+    /// layers can pre-seed a spec from a TOML file and let flags win.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.size = args.opt_parse("size", self.size)?;
+        if let Some(name) = args.opt("engine") {
+            self.engine = FarmEngine::parse(name)?;
+        }
+        if let Some(list) = args.opt("betas") {
+            self.betas = parse_betas(list)?;
+        } else if args.opt("beta-points").is_some() {
+            self.betas = default_beta_grid(args.opt_parse("beta-points", 4usize)?);
+        }
+        self.replicas = args.opt_parse("replicas", self.replicas)?;
+        self.seed = args.opt_parse("seed", self.seed)?;
+        self.burn_in = args.opt_parse("burn-in", self.burn_in)?;
+        self.samples = args.opt_parse("samples", self.samples)?;
+        self.thin = args.opt_parse("thin", self.thin)?;
+        if args.opt("workers").is_some() {
+            self.workers = Some(args.opt_parse("workers", 1usize)?);
+        }
+        self.shards = args.opt_parse("shards", self.shards)?;
+        Ok(())
+    }
+
+    /// Parse CLI flags onto the defaults.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut spec = Self::default();
+        spec.apply_args(args)?;
+        Ok(spec)
+    }
+
+    /// Parse a `[job]` TOML section (same keys as the JSON body).
+    pub fn from_toml(t: &Toml) -> Result<Self> {
+        for key in t.section_keys("job") {
+            if !JOB_KEYS.contains(&key) {
+                return Err(Error::Config(format!(
+                    "unknown [job] key '{key}' (known: {})",
+                    JOB_KEYS.join(", ")
+                )));
+            }
+        }
+        let get_u64 = |key: &str, default: u64| -> Result<u64> {
+            match t.get("job", key) {
+                None => Ok(default),
+                Some(v) => u64::try_from(v.as_int()?).map_err(|_| {
+                    Error::Config(format!("[job] {key} must be a non-negative integer"))
+                }),
+            }
+        };
+        let mut spec = JobSpec::default();
+        spec.size = get_u64("size", spec.size as u64)? as usize;
+        if let Some(v) = t.get("job", "engine") {
+            spec.engine = FarmEngine::parse(v.as_str()?)?;
+        }
+        spec.betas = match t.get("job", "betas") {
+            Some(v) => {
+                let arr = v.as_arr()?;
+                let mut betas = Vec::with_capacity(arr.len());
+                for item in arr {
+                    betas.push(item.as_float()? as f32);
+                }
+                betas
+            }
+            None => default_beta_grid(get_u64("beta_points", 4)?.max(1) as usize),
+        };
+        spec.replicas = get_u64("replicas", spec.replicas as u64)?.max(1) as usize;
+        spec.seed = u32::try_from(get_u64("seed", spec.seed as u64)?)
+            .map_err(|_| Error::Config("[job] seed must fit in u32".into()))?;
+        spec.burn_in = get_u64("burn_in", spec.burn_in)?;
+        spec.samples = get_u64("samples", spec.samples as u64)? as usize;
+        spec.thin = get_u64("thin", spec.thin)?;
+        if let Some(v) = t.get("job", "workers") {
+            spec.workers = Some(v.as_usize()?);
+        }
+        spec.shards = get_u64("shards", spec.shards as u64)? as usize;
+        Ok(spec)
+    }
+}
+
+/// Parse a comma-separated β list (`"0.40,0.4406868,0.48"`). Values must
+/// be finite and positive — `nan` is a *valid* f32 literal and used to
+/// silently poison the acceptance tables. Empty segments are typos, not
+/// values, and are rejected rather than skipped.
+pub fn parse_betas(list: &str) -> Result<Vec<f32>> {
+    let mut betas = Vec::new();
+    for part in list.split(',') {
+        let part = part.trim();
+        let b: f32 = part
+            .parse()
+            .map_err(|_| Error::Usage(format!("bad β value '{part}'")))?;
+        if !b.is_finite() || b <= 0.0 {
+            return Err(Error::Usage(format!("β value {b} must be finite and > 0")));
+        }
+        betas.push(b);
+    }
+    Ok(betas)
+}
+
+// ---------------------------------------------------------------------
+// ErrorEnvelope — the uniform /v2 error shape.
+
+/// The `/v2` error body: `{code, kind, message, retryable}`. `code`
+/// mirrors the HTTP status, `kind` is a stable machine-readable family
+/// (derived from the crate error variant), and `retryable` tells the
+/// client whether the same request may succeed later (backpressure,
+/// transient server faults, not-yet-ready results).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorEnvelope {
+    /// HTTP status code (duplicated in the body so logged bodies are
+    /// self-describing).
+    pub code: u16,
+    /// Stable error family: `usage`, `config`, `json`, `snapshot`, ...
+    pub kind: &'static str,
+    /// Human-readable detail.
+    pub message: String,
+    /// Whether retrying the identical request may succeed.
+    pub retryable: bool,
+}
+
+impl ErrorEnvelope {
+    /// An envelope with the default retryability for `code` (429/503
+    /// backpressure and 5xx transients retry; 4xx caller errors do not).
+    pub fn new(code: u16, kind: &'static str, message: impl Into<String>) -> Self {
+        Self {
+            code,
+            kind,
+            message: message.into(),
+            retryable: matches!(code, 409 | 429 | 500 | 503),
+        }
+    }
+
+    /// Map a crate error onto its envelope: caller-side variants become
+    /// 400s, server-side variants 500s.
+    pub fn from_error(e: &Error) -> Self {
+        let (code, kind) = match e {
+            Error::Usage(_) => (400, "usage"),
+            Error::Config(_) => (400, "config"),
+            Error::Json { .. } => (400, "json"),
+            Error::Toml { .. } => (400, "toml"),
+            Error::Geometry(_) => (400, "geometry"),
+            Error::Snapshot(_) => (500, "snapshot"),
+            Error::Coordinator(_) => (500, "coordinator"),
+            Error::Runtime(_) => (500, "runtime"),
+            Error::Artifact(_) => (500, "artifact"),
+            Error::Io(_) => (500, "io"),
+        };
+        Self::new(code, kind, e.to_string())
+    }
+
+    /// Override the default retryability.
+    pub fn retryable(mut self, retryable: bool) -> Self {
+        self.retryable = retryable;
+        self
+    }
+
+    /// The JSON body.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("code", Json::Num(self.code as f64)),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("message", Json::Str(self.message.clone())),
+            ("retryable", Json::Bool(self.retryable)),
+        ])
+    }
+
+    /// The complete HTTP response.
+    pub fn to_response(&self) -> Response {
+        Response::json(self.code, &self.to_json())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hex payload helpers.
+
+/// Lowercase hex of `bytes`.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+/// Decode canonical (lowercase, even-length) hex, refusing inputs past
+/// `max_bytes` *before* allocating the output.
+pub fn hex_decode(s: &str, max_bytes: usize) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(Error::Usage("hex payload must have even length".into()));
+    }
+    if s.len() / 2 > max_bytes {
+        return Err(Error::Usage(format!(
+            "payload of {} bytes exceeds the {max_bytes}-byte cap",
+            s.len() / 2
+        )));
+    }
+    fn nibble(c: u8) -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            _ => Err(Error::Usage(format!(
+                "invalid hex byte 0x{c:02x} (lowercase hex only)"
+            ))),
+        }
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Fleet messages (coordinator ↔ worker).
+
+/// Accept `doc` as an object with only `known` keys.
+fn strict_obj<'a>(doc: &'a Json, known: &[&str]) -> Result<&'a BTreeMap<String, Json>> {
+    let fields = doc
+        .as_obj()
+        .map_err(|_| Error::Usage("fleet message must be a JSON object".into()))?;
+    for key in fields.keys() {
+        if !known.contains(&key.as_str()) {
+            return Err(Error::Usage(format!("unknown fleet message key '{key}'")));
+        }
+    }
+    Ok(fields)
+}
+
+/// A validated worker name (1..=64 chars of `[A-Za-z0-9._-]`).
+fn worker_name(doc: &Json, key: &str) -> Result<String> {
+    let name = doc.field(key)?.as_str().map_err(|_| {
+        Error::Usage(format!("fleet message key '{key}' must be a string"))
+    })?;
+    let ok = !name.is_empty()
+        && name.len() <= MAX_WORKER_NAME
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'));
+    if !ok {
+        return Err(Error::Usage(format!(
+            "worker name must be 1..={MAX_WORKER_NAME} chars of [A-Za-z0-9._-]"
+        )));
+    }
+    Ok(name.to_string())
+}
+
+/// A bounded unit index.
+fn unit_index(doc: &Json) -> Result<usize> {
+    let unit = doc
+        .field("unit")?
+        .as_usize()
+        .map_err(|_| Error::Usage("fleet message key 'unit' must be an index".into()))?;
+    if unit > MAX_UNIT_INDEX {
+        return Err(Error::Usage(format!("unit index {unit} out of range")));
+    }
+    Ok(unit)
+}
+
+/// `POST /v2/fleet/register` body: a worker joins (or re-joins) the
+/// fleet. Registration is idempotent per name — a restarted worker
+/// re-registers under the same name and simply refreshes its liveness.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Register {
+    /// The worker's fleet-unique name.
+    pub name: String,
+}
+
+impl Register {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![("name", Json::Str(self.name.clone()))])
+    }
+
+    /// Decode + validate.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["name"])?;
+        Ok(Self { name: worker_name(doc, "name")? })
+    }
+}
+
+/// Registration reply: the coordinator's timing contract. The worker
+/// heartbeats every `heartbeat_ms`, re-polls an idle fleet every
+/// `poll_ms`, and knows a held lease expires after `lease_ms` without
+/// progress.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegisterAck {
+    /// Echo of the registered worker name.
+    pub worker: String,
+    /// Heartbeat cadence the worker must keep.
+    pub heartbeat_ms: u64,
+    /// Lease lifetime without progress before units are re-queued.
+    pub lease_ms: u64,
+    /// Idle lease-poll cadence.
+    pub poll_ms: u64,
+}
+
+impl RegisterAck {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("worker", Json::Str(self.worker.clone())),
+            ("heartbeat_ms", Json::Num(self.heartbeat_ms as f64)),
+            ("lease_ms", Json::Num(self.lease_ms as f64)),
+            ("poll_ms", Json::Num(self.poll_ms as f64)),
+        ])
+    }
+
+    /// Decode + validate (cadences bounded to one day).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["worker", "heartbeat_ms", "lease_ms", "poll_ms"])?;
+        let ms = |key: &str| -> Result<u64> {
+            let v = doc.field(key)?.as_u64().map_err(|_| {
+                Error::Usage(format!("fleet message key '{key}' must be milliseconds"))
+            })?;
+            if v == 0 || v > 86_400_000 {
+                return Err(Error::Usage(format!("'{key}' of {v}ms out of range")));
+            }
+            Ok(v)
+        };
+        Ok(Self {
+            worker: worker_name(doc, "worker")?,
+            heartbeat_ms: ms("heartbeat_ms")?,
+            lease_ms: ms("lease_ms")?,
+            poll_ms: ms("poll_ms")?,
+        })
+    }
+}
+
+/// `POST /v2/fleet/heartbeat` body: liveness ping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Heartbeat {
+    /// The registered worker name.
+    pub worker: String,
+}
+
+impl Heartbeat {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![("worker", Json::Str(self.worker.clone()))])
+    }
+
+    /// Decode + validate.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["worker"])?;
+        Ok(Self { worker: worker_name(doc, "worker")? })
+    }
+}
+
+/// `POST /v2/fleet/lease` body: ask for a unit of work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseRequest {
+    /// The registered worker name.
+    pub worker: String,
+}
+
+impl LeaseRequest {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![("worker", Json::Str(self.worker.clone()))])
+    }
+
+    /// Decode + validate.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["worker"])?;
+        Ok(Self { worker: worker_name(doc, "worker")? })
+    }
+}
+
+/// One leased work unit: its index in grid order, the single-unit
+/// sub-configuration (one β, that unit's seeds, `workers = 1`) encoded
+/// with the same canonical spec codec the job store uses, and — when a
+/// previous holder uploaded progress — the checkpoint snapshot to resume
+/// from.
+#[derive(Clone, Debug)]
+pub struct UnitLease {
+    /// Unit index (grid order; also the result-merge position).
+    pub unit: usize,
+    /// The unit's own farm configuration.
+    pub spec: FarmConfig,
+    /// Raw snapshot-file bytes from the previous holder, if any.
+    pub checkpoint: Option<Vec<u8>>,
+}
+
+/// `POST /v2/fleet/lease` reply.
+#[derive(Clone, Debug)]
+pub enum LeaseReply {
+    /// A unit to run.
+    Unit(Box<UnitLease>),
+    /// Nothing leasable right now (units leased elsewhere); poll again.
+    Idle,
+    /// The grid is complete; the worker may leave the fleet.
+    Done,
+    /// The run was aborted (a unit exhausted its attempts); stop.
+    Failed(String),
+}
+
+impl LeaseReply {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        match self {
+            LeaseReply::Unit(lease) => {
+                let mut fields = vec![
+                    ("lease", Json::Str("unit".into())),
+                    ("unit", Json::Num(lease.unit as f64)),
+                    ("spec", super::queue::encode_config(&lease.spec)),
+                ];
+                if let Some(p) = &lease.checkpoint {
+                    fields.push(("checkpoint", Json::Str(hex_encode(p))));
+                }
+                obj(fields)
+            }
+            LeaseReply::Idle => obj(vec![("lease", Json::Str("idle".into()))]),
+            LeaseReply::Done => obj(vec![("lease", Json::Str("done".into()))]),
+            LeaseReply::Failed(msg) => obj(vec![
+                ("lease", Json::Str("failed".into())),
+                ("error", Json::Str(msg.clone())),
+            ]),
+        }
+    }
+
+    /// Decode + validate. The embedded spec goes through the same
+    /// decoder (and resource caps) as persisted job specs.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["lease", "unit", "spec", "checkpoint", "error"])?;
+        let tag = doc
+            .field("lease")?
+            .as_str()
+            .map_err(|_| Error::Usage("fleet message key 'lease' must be a string".into()))?;
+        match tag {
+            "idle" => Ok(LeaseReply::Idle),
+            "done" => Ok(LeaseReply::Done),
+            "failed" => {
+                let msg = doc.field("error")?.as_str().map_err(|_| {
+                    Error::Usage("fleet message key 'error' must be a string".into())
+                })?;
+                if msg.len() > MAX_ERROR_MESSAGE {
+                    return Err(Error::Usage("error message too long".into()));
+                }
+                Ok(LeaseReply::Failed(msg.to_string()))
+            }
+            "unit" => {
+                let unit = unit_index(doc)?;
+                let spec = super::queue::decode_config(doc.field("spec")?)?;
+                let checkpoint = match doc.get("checkpoint") {
+                    Some(v) => Some(hex_decode(
+                        v.as_str().map_err(|_| {
+                            Error::Usage(
+                                "fleet message key 'checkpoint' must be a hex string".into(),
+                            )
+                        })?,
+                        MAX_PROGRESS_PAYLOAD,
+                    )?),
+                    None => None,
+                };
+                Ok(LeaseReply::Unit(Box::new(UnitLease { unit, spec, checkpoint })))
+            }
+            other => Err(Error::Usage(format!("unknown lease tag '{other}'"))),
+        }
+    }
+}
+
+/// `POST /v2/fleet/progress` body: a mid-unit checkpoint upload, so a
+/// later holder resumes this unit instead of restarting it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgressUpload {
+    /// The uploading worker.
+    pub worker: String,
+    /// The unit the worker holds.
+    pub unit: usize,
+    /// Raw snapshot-file bytes (CRC-framed container).
+    pub payload: Vec<u8>,
+}
+
+impl ProgressUpload {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("worker", Json::Str(self.worker.clone())),
+            ("unit", Json::Num(self.unit as f64)),
+            ("payload", Json::Str(hex_encode(&self.payload))),
+        ])
+    }
+
+    /// Decode + validate (payload capped before allocation).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["worker", "unit", "payload"])?;
+        let payload = hex_decode(
+            doc.field("payload")?.as_str().map_err(|_| {
+                Error::Usage("fleet message key 'payload' must be a hex string".into())
+            })?,
+            MAX_PROGRESS_PAYLOAD,
+        )?;
+        Ok(Self {
+            worker: worker_name(doc, "worker")?,
+            unit: unit_index(doc)?,
+            payload,
+        })
+    }
+}
+
+/// `POST /v2/fleet/result` body: a completed unit's report lines (the
+/// exact `replica_report` body for the unit's sub-grid, header
+/// included — the coordinator validates and strips the header).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultUpload {
+    /// The uploading worker.
+    pub worker: String,
+    /// The completed unit.
+    pub unit: usize,
+    /// The unit's full replica report.
+    pub report: String,
+}
+
+impl ResultUpload {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("worker", Json::Str(self.worker.clone())),
+            ("unit", Json::Num(self.unit as f64)),
+            ("report", Json::Str(self.report.clone())),
+        ])
+    }
+
+    /// Decode + validate (report size capped).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["worker", "unit", "report"])?;
+        let report = doc.field("report")?.as_str().map_err(|_| {
+            Error::Usage("fleet message key 'report' must be a string".into())
+        })?;
+        if report.len() > MAX_REPORT {
+            return Err(Error::Usage(format!(
+                "report of {} bytes exceeds the {MAX_REPORT}-byte cap",
+                report.len()
+            )));
+        }
+        Ok(Self {
+            worker: worker_name(doc, "worker")?,
+            unit: unit_index(doc)?,
+            report: report.to_string(),
+        })
+    }
+}
+
+/// `POST /v2/fleet/fail` body: the worker could not run its unit (engine
+/// error, corrupt resume payload, ...). The coordinator re-queues the
+/// unit — dropping the stored progress payload, which `fail` implicates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitFail {
+    /// The reporting worker.
+    pub worker: String,
+    /// The failed unit.
+    pub unit: usize,
+    /// What went wrong.
+    pub error: String,
+}
+
+impl UnitFail {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("worker", Json::Str(self.worker.clone())),
+            ("unit", Json::Num(self.unit as f64)),
+            ("error", Json::Str(self.error.clone())),
+        ])
+    }
+
+    /// Decode + validate.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["worker", "unit", "error"])?;
+        let error = doc.field("error")?.as_str().map_err(|_| {
+            Error::Usage("fleet message key 'error' must be a string".into())
+        })?;
+        if error.len() > MAX_ERROR_MESSAGE {
+            return Err(Error::Usage("error message too long".into()));
+        }
+        Ok(Self {
+            worker: worker_name(doc, "worker")?,
+            unit: unit_index(doc)?,
+            error: error.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::queue::fingerprint;
+
+    fn args(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn three_entry_points_resolve_identically() {
+        let from_cli = JobSpec::from_args(&args(&[
+            "sweep", "--size", "64", "--engine", "tensor", "--betas", "0.42,0.46",
+            "--replicas", "3", "--seed", "7", "--burn-in", "11", "--samples", "13",
+            "--thin", "2",
+        ]))
+        .unwrap();
+        let from_http = JobSpec::from_json(
+            &Json::parse(
+                r#"{"size": 64, "engine": "tensor", "betas": [0.42, 0.46],
+                    "replicas": 3, "seed": 7, "burn_in": 11, "samples": 13, "thin": 2}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let from_file = JobSpec::from_toml(
+            &Toml::parse(
+                "[job]\nsize = 64\nengine = \"tensor\"\nbetas = [0.42, 0.46]\n\
+                 replicas = 3\nseed = 7\nburn_in = 11\nsamples = 13\nthin = 2\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let a = from_cli.resolve().unwrap();
+        let b = from_http.resolve().unwrap();
+        let c = from_file.resolve().unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&b), fingerprint(&c));
+        assert_eq!(a.betas, b.betas);
+        assert_eq!(a.seeds, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_everywhere() {
+        assert!(JobSpec::from_json(&Json::parse(r#"{"sizes": 64}"#).unwrap()).is_err());
+        assert!(JobSpec::from_toml(&Toml::parse("[job]\nsizes = 64\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn beta_parsing_rejects_unphysical_values() {
+        assert!(parse_betas("0.40,0.44").is_ok());
+        for bad in ["nan", "inf", "0", "-0.4", "x", "", "0.4,,0.5"] {
+            assert!(parse_betas(bad).is_err(), "must reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn error_envelope_shape_and_retryability() {
+        let env = ErrorEnvelope::from_error(&Error::Usage("bad".into()));
+        assert_eq!((env.code, env.kind, env.retryable), (400, "usage", false));
+        let doc = env.to_json();
+        assert_eq!(doc.field("code").unwrap().as_u64().unwrap(), 400);
+        assert_eq!(doc.field("kind").unwrap().as_str().unwrap(), "usage");
+        assert!(!doc.field("retryable").unwrap().as_bool().unwrap());
+        assert!(doc.field("message").unwrap().as_str().unwrap().contains("bad"));
+        let busy = ErrorEnvelope::new(429, "busy", "queue full");
+        assert!(busy.retryable);
+        assert!(!busy.retryable(false).retryable);
+        assert_eq!(ErrorEnvelope::from_error(&Error::Snapshot("x".into())).code, 500);
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejections() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        let hex = hex_encode(&bytes);
+        assert_eq!(hex_decode(&hex, 256).unwrap(), bytes);
+        assert!(hex_decode("abc", 16).is_err(), "odd length");
+        assert!(hex_decode("AB", 16).is_err(), "uppercase");
+        assert!(hex_decode("zz", 16).is_err(), "non-hex");
+        assert!(hex_decode("aabb", 1).is_err(), "over cap");
+        assert_eq!(hex_decode("", 16).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn registration_messages_roundtrip() {
+        let reg = Register { name: "worker-1".into() };
+        assert_eq!(Register::from_json(&reg.to_json()).unwrap(), reg);
+        let ack = RegisterAck {
+            worker: "worker-1".into(),
+            heartbeat_ms: 1000,
+            lease_ms: 60_000,
+            poll_ms: 200,
+        };
+        assert_eq!(RegisterAck::from_json(&ack.to_json()).unwrap(), ack);
+        let hb = Heartbeat { worker: "worker-1".into() };
+        assert_eq!(Heartbeat::from_json(&hb.to_json()).unwrap(), hb);
+        // Bad names are rejected wherever a name appears.
+        for bad in ["", "has space", "a/b", &"x".repeat(MAX_WORKER_NAME + 1)] {
+            let doc = obj(vec![("name", Json::Str(bad.to_string()))]);
+            assert!(Register::from_json(&doc).is_err(), "must reject '{bad}'");
+        }
+        // Unknown keys are rejected.
+        let doc = Json::parse(r#"{"name": "w", "admin": true}"#).unwrap();
+        assert!(Register::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn lease_reply_roundtrips() {
+        for (reply, tag) in [
+            (LeaseReply::Idle, "idle"),
+            (LeaseReply::Done, "done"),
+            (LeaseReply::Failed("boom".into()), "failed"),
+        ] {
+            let doc = reply.to_json();
+            assert_eq!(doc.field("lease").unwrap().as_str().unwrap(), tag);
+            assert!(LeaseReply::from_json(&doc).is_ok());
+        }
+        let spec = JobSpec {
+            size: 64,
+            betas: vec![0.44],
+            samples: 3,
+            ..JobSpec::default()
+        }
+        .resolve()
+        .unwrap();
+        let lease = LeaseReply::Unit(Box::new(UnitLease {
+            unit: 2,
+            spec: spec.clone(),
+            checkpoint: Some(vec![1, 2, 3, 255]),
+        }));
+        match LeaseReply::from_json(&lease.to_json()).unwrap() {
+            LeaseReply::Unit(back) => {
+                assert_eq!(back.unit, 2);
+                assert_eq!(fingerprint(&back.spec), fingerprint(&spec));
+                assert_eq!(back.checkpoint.as_deref(), Some(&[1u8, 2, 3, 255][..]));
+            }
+            other => panic!("wrong reply {other:?}"),
+        }
+        assert!(LeaseReply::from_json(&Json::parse(r#"{"lease": "huh"}"#).unwrap()).is_err());
+        assert!(LeaseReply::from_json(&Json::parse(r#"{"lease": "unit"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn upload_messages_roundtrip_and_cap() {
+        let up = ProgressUpload { worker: "w".into(), unit: 1, payload: vec![0xde, 0xad] };
+        assert_eq!(ProgressUpload::from_json(&up.to_json()).unwrap(), up);
+        let res = ResultUpload { worker: "w".into(), unit: 1, report: "# header\nline\n".into() };
+        assert_eq!(ResultUpload::from_json(&res.to_json()).unwrap(), res);
+        let fail = UnitFail { worker: "w".into(), unit: 1, error: "engine exploded".into() };
+        assert_eq!(UnitFail::from_json(&fail.to_json()).unwrap(), fail);
+        // Oversized payloads are refused before allocation.
+        let huge = obj(vec![
+            ("worker", Json::Str("w".into())),
+            ("unit", Json::Num(0.0)),
+            ("payload", Json::Str("ab".repeat(MAX_PROGRESS_PAYLOAD + 1))),
+        ]);
+        assert!(ProgressUpload::from_json(&huge).is_err());
+        // Unit indices beyond any possible grid are refused.
+        let far = obj(vec![
+            ("worker", Json::Str("w".into())),
+            ("unit", Json::Num((MAX_UNIT_INDEX + 1) as f64)),
+            ("error", Json::Str("x".into())),
+        ]);
+        assert!(UnitFail::from_json(&far).is_err());
+    }
+}

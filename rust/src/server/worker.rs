@@ -1,0 +1,356 @@
+//! The fleet worker: dial a coordinator, lease work units, run them
+//! through the ordinary checkpointed farm path, and upload results.
+//!
+//! A worker is deliberately dumb: all scheduling intelligence lives in
+//! the coordinator ([`super::fleet`]). The worker registers under a
+//! name, heartbeats on the cadence the coordinator dictates, and loops
+//! lease → execute → upload. Unit execution reuses the single-node
+//! machinery end to end — [`run_farm_checkpointed`] over a per-unit
+//! checkpoint directory — so a remote unit's trajectory is the *same
+//! pure function* of (geometry, β, seed, protocol) as a local one, and
+//! the coordinator's merged report stays bit-identical to single-node
+//! output.
+//!
+//! Mid-unit resume works by shipping raw snapshot bytes: a leased unit
+//! may carry the previous holder's checkpoint, which the worker writes
+//! into the fresh unit directory *before* opening it. The farm loads
+//! replica snapshots unconditionally whenever a checkpointer is present
+//! and validates them against the unit identity and protocol, so a
+//! resumed trajectory continues bit-exactly — and a corrupt payload
+//! fails loudly into a `fail` upload instead of diverging silently.
+//!
+//! The HTTP client is std-only: one `TcpStream` per request,
+//! `Connection: close`, bounded response reads.
+
+use super::wire::{
+    Heartbeat, LeaseReply, LeaseRequest, ProgressUpload, Register, RegisterAck, ResultUpload,
+    UnitFail, UnitLease, MAX_PROGRESS_PAYLOAD,
+};
+use crate::coordinator::checkpoint::{CheckpointSpec, MANIFEST_FILE};
+use crate::coordinator::farm::{run_farm_checkpointed, FarmOutcome};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::snapshot::atomic_write;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Consecutive transport failures before the worker gives up on the
+/// coordinator (it may have completed and exited — that is the normal
+/// end of life for a fleet).
+const MAX_CLIENT_FAILURES: u32 = 30;
+
+/// Retry cadence before registration succeeds (afterwards the
+/// coordinator's `poll_ms` drives pacing).
+const RETRY: Duration = Duration::from_millis(200);
+
+/// Connect / read / write timeout per request.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Response size cap (a coordinator reply is a JSON document, never a
+/// report download).
+const MAX_RESPONSE: usize = 2 * 1024 * 1024;
+
+/// Snapshot cadence (samples) for per-unit checkpoint directories.
+const UNIT_CHECKPOINT_EVERY: u32 = 8;
+
+/// One worker's wiring.
+pub struct WorkerConfig {
+    /// Coordinator base URL (`http://host:port`).
+    pub coordinator: String,
+    /// Fleet-unique worker name.
+    pub name: String,
+    /// Parent directory for per-unit checkpoint directories.
+    pub work_dir: PathBuf,
+    /// Optional per-pass sample budget: between budgeted passes the
+    /// worker uploads its checkpoint, so the coordinator always holds a
+    /// recent resume point for this unit.
+    pub slice_samples: Option<u64>,
+    /// Cooperative stop flag (shared with the embedding server, so
+    /// `POST /shutdown` also stops fleet work).
+    pub stop: Arc<AtomicBool>,
+    /// Test hook: exit the worker after this many checkpointed farm
+    /// passes ended in interruption (`None` in production). Lets tests
+    /// simulate a worker that dies mid-unit with progress uploaded.
+    pub max_passes: Option<u64>,
+}
+
+/// Extract `host:port` from an `http://` base URL.
+fn parse_authority(url: &str) -> Result<String> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| Error::Usage(format!("coordinator URL '{url}' must be http://host:port")))?;
+    let authority = rest.trim_end_matches('/');
+    if authority.is_empty() || authority.contains('/') {
+        return Err(Error::Usage(format!(
+            "coordinator URL '{url}' must be http://host:port with no path"
+        )));
+    }
+    Ok(authority.to_string())
+}
+
+/// Split a raw HTTP/1.1 response into (status, body).
+fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
+    let text = std::str::from_utf8(raw)
+        .map_err(|_| Error::Coordinator("coordinator response is not UTF-8".into()))?;
+    let head_end = text
+        .find("\r\n\r\n")
+        .ok_or_else(|| Error::Coordinator("truncated coordinator response".into()))?;
+    let status_line = text.lines().next().unwrap_or_default();
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            Error::Coordinator(format!("malformed status line '{status_line}'"))
+        })?;
+    Ok((status, text[head_end + 4..].to_string()))
+}
+
+/// POST one JSON document; returns (status, parsed body). Transport
+/// failures (refused, timeout, oversized reply) are `Err`; HTTP-level
+/// failures come back as their status plus the envelope body.
+fn post(authority: &str, path: &str, body: &Json) -> Result<(u16, Json)> {
+    let addr = authority
+        .to_socket_addrs()
+        .map_err(|e| Error::Coordinator(format!("cannot resolve '{authority}': {e}")))?
+        .next()
+        .ok_or_else(|| Error::Coordinator(format!("'{authority}' resolves to no address")))?;
+    let mut stream = TcpStream::connect_timeout(&addr, IO_TIMEOUT)
+        .map_err(|e| Error::Coordinator(format!("cannot connect to '{authority}': {e}")))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let payload = body.to_string_compact();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        payload.len()
+    )?;
+    let mut raw = Vec::new();
+    stream
+        .take(MAX_RESPONSE as u64 + 1)
+        .read_to_end(&mut raw)
+        .map_err(|e| Error::Coordinator(format!("read from '{authority}': {e}")))?;
+    if raw.len() > MAX_RESPONSE {
+        return Err(Error::Coordinator("oversized coordinator response".into()));
+    }
+    let (status, text) = parse_response(&raw)?;
+    let doc = Json::parse(&text).unwrap_or(Json::Null);
+    Ok((status, doc))
+}
+
+/// What happened to one leased unit.
+enum UnitOutcome {
+    /// Result uploaded (or the coordinator already had one).
+    Finished,
+    /// Abandoned mid-unit (stop flag or the max-passes test hook); the
+    /// last checkpoint was uploaded, so another holder resumes.
+    Abandoned,
+}
+
+/// Execute one leased unit to completion (or abandonment), uploading
+/// progress after every interrupted pass.
+fn run_unit(
+    cfg: &WorkerConfig,
+    authority: &str,
+    lease: &UnitLease,
+    passes: &mut u64,
+) -> Result<UnitOutcome> {
+    let dir = cfg.work_dir.join(format!("unit-{:05}", lease.unit));
+    // A fresh lease owns a fresh directory: stale local state from an
+    // earlier lease of the same unit must not leak in.
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    // Sub-unit grids start at task index 0, so the single snapshot file
+    // is always replica-00000.snap. Seed it with the previous holder's
+    // uploaded bytes *before* opening the checkpointer: the farm loads
+    // and validates it unconditionally, resuming the trajectory
+    // bit-exactly (a corrupt payload errors loudly instead).
+    let snap = dir.join("replica-00000.snap");
+    if let Some(bytes) = &lease.checkpoint {
+        atomic_write(&snap, bytes)?;
+    }
+    loop {
+        let spec = CheckpointSpec {
+            resume: dir.join(MANIFEST_FILE).is_file(),
+            sample_budget: cfg.slice_samples,
+            stop: Some(Arc::clone(&cfg.stop)),
+            ..CheckpointSpec::new(dir.clone(), UNIT_CHECKPOINT_EVERY)
+        };
+        match run_farm_checkpointed(&lease.spec, Some(&spec)) {
+            Ok(FarmOutcome::Complete(result)) => {
+                let upload = ResultUpload {
+                    worker: cfg.name.clone(),
+                    unit: lease.unit,
+                    report: result.replica_report(),
+                };
+                let (status, body) = post(authority, "/v2/fleet/result", &upload.to_json())?;
+                // 409 means the unit is in a state that cannot take this
+                // result — after a re-queue race both holders finish, and
+                // the deterministic duplicate is already accepted
+                // idempotently, so a conflict here is fatal only for
+                // this unit attempt, not the worker.
+                if status != 200 && status != 409 {
+                    return Err(Error::Coordinator(format!(
+                        "result upload refused ({status}): {}",
+                        body.to_string_compact()
+                    )));
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+                return Ok(UnitOutcome::Finished);
+            }
+            Ok(FarmOutcome::Interrupted { .. }) => {
+                *passes += 1;
+                // Ship the checkpoint so a successor can resume; a
+                // failed or oversized upload only costs resume depth.
+                if let Ok(bytes) = std::fs::read(&snap) {
+                    if bytes.len() <= MAX_PROGRESS_PAYLOAD {
+                        let upload = ProgressUpload {
+                            worker: cfg.name.clone(),
+                            unit: lease.unit,
+                            payload: bytes,
+                        };
+                        let _ = post(authority, "/v2/fleet/progress", &upload.to_json());
+                    }
+                }
+                let hook_exit = cfg.max_passes.is_some_and(|n| *passes >= n);
+                if hook_exit || cfg.stop.load(Ordering::Relaxed) {
+                    return Ok(UnitOutcome::Abandoned);
+                }
+            }
+            Err(e) => {
+                let upload = UnitFail {
+                    worker: cfg.name.clone(),
+                    unit: lease.unit,
+                    error: e.to_string(),
+                };
+                let _ = post(authority, "/v2/fleet/fail", &upload.to_json());
+                let _ = std::fs::remove_dir_all(&dir);
+                return Ok(UnitOutcome::Finished);
+            }
+        }
+    }
+}
+
+/// Run one fleet worker until the coordinator reports the grid done (or
+/// failed), the stop flag rises, or the coordinator disappears for
+/// [`MAX_CLIENT_FAILURES`] consecutive requests.
+pub fn run_worker(cfg: WorkerConfig) -> Result<()> {
+    let authority = parse_authority(&cfg.coordinator)?;
+    // Register, retrying while the coordinator is still coming up.
+    let ack: RegisterAck = loop {
+        if cfg.stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let reg = Register { name: cfg.name.clone() };
+        match post(&authority, "/v2/fleet/register", &reg.to_json()) {
+            Ok((200, doc)) => break RegisterAck::from_json(&doc)?,
+            Ok((status, body)) => {
+                return Err(Error::Coordinator(format!(
+                    "registration refused ({status}): {}",
+                    body.to_string_compact()
+                )));
+            }
+            Err(_) => std::thread::sleep(RETRY),
+        }
+    };
+
+    // Heartbeat on the coordinator's cadence until the worker winds
+    // down. `done` is worker-local on purpose: it must not stop the
+    // embedding server's farms the way the shared `stop` flag would.
+    let done = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let done = Arc::clone(&done);
+        let stop = Arc::clone(&cfg.stop);
+        let authority = authority.clone();
+        let name = cfg.name.clone();
+        let cadence = Duration::from_millis(ack.heartbeat_ms);
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Relaxed) && !stop.load(Ordering::Relaxed) {
+                let ping = Heartbeat { worker: name.clone() };
+                let _ = post(&authority, "/v2/fleet/heartbeat", &ping.to_json());
+                std::thread::sleep(cadence);
+            }
+        })
+    };
+
+    let poll = Duration::from_millis(ack.poll_ms);
+    let mut failures = 0u32;
+    let mut passes = 0u64;
+    let outcome = loop {
+        if cfg.stop.load(Ordering::Relaxed) {
+            break Ok(());
+        }
+        if cfg.max_passes.is_some_and(|n| passes >= n) {
+            break Ok(());
+        }
+        let req = LeaseRequest { worker: cfg.name.clone() };
+        let reply = match post(&authority, "/v2/fleet/lease", &req.to_json()) {
+            Ok((200, doc)) => match LeaseReply::from_json(&doc) {
+                Ok(r) => r,
+                Err(e) => break Err(e),
+            },
+            Ok((status, body)) => {
+                break Err(Error::Coordinator(format!(
+                    "lease refused ({status}): {}",
+                    body.to_string_compact()
+                )));
+            }
+            Err(e) => {
+                failures += 1;
+                if failures >= MAX_CLIENT_FAILURES {
+                    break Err(e);
+                }
+                std::thread::sleep(poll);
+                continue;
+            }
+        };
+        failures = 0;
+        match reply {
+            LeaseReply::Unit(lease) => match run_unit(&cfg, &authority, &lease, &mut passes) {
+                Ok(UnitOutcome::Finished) => {}
+                Ok(UnitOutcome::Abandoned) => break Ok(()),
+                Err(e) => break Err(e),
+            },
+            LeaseReply::Idle => std::thread::sleep(poll),
+            LeaseReply::Done => break Ok(()),
+            LeaseReply::Failed(msg) => {
+                break Err(Error::Coordinator(format!("fleet run failed: {msg}")))
+            }
+        }
+    };
+    done.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn authority_parsing_is_strict() {
+        assert_eq!(parse_authority("http://127.0.0.1:7627").unwrap(), "127.0.0.1:7627");
+        assert_eq!(parse_authority("http://host:1/").unwrap(), "host:1");
+        for bad in ["https://x:1", "127.0.0.1:7627", "http://", "http://x:1/v2"] {
+            assert!(parse_authority(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn response_parsing_extracts_status_and_body() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\n{}";
+        let (status, body) = parse_response(raw).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{}");
+        let raw = b"HTTP/1.1 409 Conflict\r\n\r\n";
+        assert_eq!(parse_response(raw).unwrap().0, 409);
+        for bad in &[&b"HTTP/1.1 200 OK\r\n"[..], &b"garbage"[..], &b"HTTP/1.1 xx\r\n\r\n"[..]] {
+            assert!(parse_response(bad).is_err());
+        }
+    }
+}

@@ -3,6 +3,7 @@
 
 use ising_dgx::config::Toml;
 use ising_dgx::server::http::{read_request, MAX_BODY, MAX_HEADERS, MAX_REQUEST_LINE};
+use ising_dgx::server::wire;
 use ising_dgx::util::json::{obj, Json};
 use ising_dgx::util::proptest::{check, Gen};
 
@@ -190,4 +191,124 @@ fn http_parser_never_overreads_content_length() {
         assert_eq!(req.body.len(), body_len);
         assert_eq!(cursor, tail.as_bytes(), "bytes after the body must stay unread");
     });
+}
+
+// ---------------------------------------------------------------------
+// The /v2 wire messages (server::wire) — the fleet protocol decoders
+// must treat every body as hostile: truncated, mutated, or oversized
+// input produces Ok/Err, never a panic or an unbounded allocation.
+
+/// Decode every fleet message type against one document; none may panic.
+fn decode_all_fleet_messages(doc: &Json) {
+    let _ = wire::JobSpec::from_json(doc);
+    let _ = wire::Register::from_json(doc);
+    let _ = wire::RegisterAck::from_json(doc);
+    let _ = wire::Heartbeat::from_json(doc);
+    let _ = wire::LeaseRequest::from_json(doc);
+    let _ = wire::LeaseReply::from_json(doc);
+    let _ = wire::ProgressUpload::from_json(doc);
+    let _ = wire::ResultUpload::from_json(doc);
+    let _ = wire::UnitFail::from_json(doc);
+}
+
+#[test]
+fn wire_decoders_never_panic_on_random_documents() {
+    check("wire fuzz", 400, |g| {
+        let s = random_bytes(g, 300);
+        if let Ok(doc) = Json::parse(&s) {
+            decode_all_fleet_messages(&doc);
+        }
+    });
+}
+
+#[test]
+fn wire_decoders_never_panic_on_mutated_valid_messages() {
+    // Start from each real message's encoding, then corrupt it: flip
+    // bytes, truncate, and re-parse. Whatever still parses as JSON must
+    // decode to Ok/Err without panicking.
+    let seeds: Vec<String> = vec![
+        wire::Register { name: "w1".into() }.to_json().to_string_compact(),
+        wire::RegisterAck {
+            worker: "w1".into(),
+            heartbeat_ms: 1000,
+            lease_ms: 60_000,
+            poll_ms: 200,
+        }
+        .to_json()
+        .to_string_compact(),
+        wire::Heartbeat { worker: "w1".into() }.to_json().to_string_compact(),
+        wire::LeaseRequest { worker: "w1".into() }.to_json().to_string_compact(),
+        wire::LeaseReply::Idle.to_json().to_string_compact(),
+        wire::LeaseReply::Failed("boom".into()).to_json().to_string_compact(),
+        wire::ProgressUpload { worker: "w1".into(), unit: 3, payload: vec![1, 2, 3] }
+            .to_json()
+            .to_string_compact(),
+        wire::ResultUpload { worker: "w1".into(), unit: 3, report: "r\n".into() }
+            .to_json()
+            .to_string_compact(),
+        wire::UnitFail { worker: "w1".into(), unit: 3, error: "e".into() }
+            .to_json()
+            .to_string_compact(),
+    ];
+    check("wire mutate", 300, |g| {
+        let seed = &seeds[g.int_in(0, seeds.len() as i64 - 1) as usize];
+        let mut bytes = seed.clone().into_bytes();
+        for _ in 0..g.int_in(0, 5) {
+            let i = g.int_in(0, bytes.len() as i64 - 1) as usize;
+            bytes[i] = g.int_in(32, 126) as u8;
+        }
+        bytes.truncate(g.int_in(0, bytes.len() as i64) as usize);
+        if let Ok(s) = String::from_utf8(bytes) {
+            if let Ok(doc) = Json::parse(&s) {
+                decode_all_fleet_messages(&doc);
+            }
+        }
+    });
+}
+
+#[test]
+fn wire_messages_roundtrip() {
+    check("wire roundtrip", 100, |g| {
+        let name: String = (0..g.int_in(1, 16)).map(|_| 'w').collect();
+        let unit = g.int_in(0, 4096) as usize;
+        let reg = wire::Register { name: name.clone() };
+        assert_eq!(
+            wire::Register::from_json(&Json::parse(&reg.to_json().to_string_compact()).unwrap())
+                .unwrap(),
+            reg
+        );
+        let payload: Vec<u8> = (0..g.int_in(0, 64)).map(|_| g.int_in(0, 255) as u8).collect();
+        let up = wire::ProgressUpload { worker: name.clone(), unit, payload };
+        assert_eq!(
+            wire::ProgressUpload::from_json(
+                &Json::parse(&up.to_json().to_string_compact()).unwrap()
+            )
+            .unwrap(),
+            up
+        );
+        let fail = wire::UnitFail { worker: name, unit, error: "x".into() };
+        assert_eq!(
+            wire::UnitFail::from_json(&Json::parse(&fail.to_json().to_string_compact()).unwrap())
+                .unwrap(),
+            fail
+        );
+    });
+}
+
+#[test]
+fn wire_hex_decoding_never_panics_and_respects_the_cap() {
+    check("hex fuzz", 300, |g| {
+        let s = random_bytes(g, 120);
+        match wire::hex_decode(&s, 32) {
+            Ok(bytes) => {
+                assert!(bytes.len() <= 32, "cap must hold");
+                assert_eq!(wire::hex_encode(&bytes), s, "decoded hex must re-encode");
+            }
+            Err(_) => {}
+        }
+    });
+    // Oversized payloads are rejected by length *before* decoding.
+    let big = "ab".repeat(33);
+    assert!(wire::hex_decode(&big, 32).is_err());
+    assert_eq!(wire::hex_decode(&"ab".repeat(32), 32).unwrap().len(), 32);
 }

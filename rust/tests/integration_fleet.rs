@@ -1,0 +1,108 @@
+//! Integration test for the distributed farm: one coordinator plus two
+//! in-process workers over real TCP sockets, with one worker abandoning
+//! its unit mid-run after uploading a checkpoint. The acceptance
+//! invariant is the tentpole guarantee: the coordinator's merged report
+//! is **byte-identical** to a single-node `run_farm` of the same job,
+//! fleet failures included — because a re-queued unit resumes from the
+//! dead worker's uploaded snapshot, not from scratch.
+
+use ising_dgx::config::FleetConfig;
+use ising_dgx::coordinator::farm::{run_farm, FarmConfig};
+use ising_dgx::server::fleet::{Coordinator, FleetState, RunPhase};
+use ising_dgx::server::worker::{run_worker, WorkerConfig};
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn temp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ising-fleet-it-{tag}-{}", std::process::id()))
+}
+
+/// The test grid: small enough to finish in seconds, large enough for
+/// 2 β × 2 seeds = 4 units so both workers get real work.
+fn grid_cfg() -> FarmConfig {
+    let mut cfg = FarmConfig::grid(32, vec![0.42, 0.44], 2, 1).unwrap();
+    cfg.burn_in = 20;
+    cfg.samples = 6;
+    cfg.thin = 1;
+    cfg.workers = 1;
+    cfg
+}
+
+#[test]
+fn fleet_report_is_bit_identical_to_single_node_despite_a_dying_worker() {
+    let root = temp_root("e2e");
+    let _ = std::fs::remove_dir_all(&root);
+    let cfg = grid_cfg();
+    let expected = run_farm(&cfg).unwrap().replica_report();
+
+    let fleet = FleetConfig {
+        addr: "127.0.0.1:0".into(),
+        heartbeat_ms: 50,
+        // Dead-worker detection is what re-queues the abandoned unit
+        // (the lease itself stays long so the test exercises liveness,
+        // not lease expiry).
+        dead_after_ms: 400,
+        lease_ms: 60_000,
+        poll_ms: 25,
+        checkpoint_dir: root.join("coordinator"),
+    };
+    let state = Arc::new(FleetState::open(cfg, fleet, false).unwrap());
+    let coordinator = match Coordinator::bind("127.0.0.1:0", Arc::clone(&state)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping fleet e2e test (cannot bind a TCP socket): {e}");
+            return;
+        }
+    };
+    let addr = coordinator.local_addr().unwrap();
+    let url = format!("http://{addr}");
+    let coord_thread = std::thread::spawn(move || coordinator.run());
+
+    // Worker "a" leases the first unit, runs one 2-sample slice, uploads
+    // its checkpoint, and exits without finishing — simulating a worker
+    // that dies mid-unit (its heartbeats stop with it).
+    let a = WorkerConfig {
+        coordinator: url.clone(),
+        name: "a".into(),
+        work_dir: root.join("worker-a"),
+        slice_samples: Some(2),
+        stop: Arc::new(AtomicBool::new(false)),
+        max_passes: Some(1),
+    };
+    run_worker(a).unwrap();
+
+    // Worker "b" joins afterwards and carries the whole grid: the three
+    // untouched units, then — once the coordinator declares "a" dead —
+    // the abandoned unit, resumed from the uploaded checkpoint.
+    let b = WorkerConfig {
+        coordinator: url,
+        name: "b".into(),
+        work_dir: root.join("worker-b"),
+        slice_samples: None,
+        stop: Arc::new(AtomicBool::new(false)),
+        max_passes: None,
+    };
+    run_worker(b).unwrap();
+
+    let report = coord_thread.join().unwrap().unwrap();
+    assert_eq!(state.phase(), RunPhase::Done);
+    assert_eq!(
+        report, expected,
+        "fleet report must be byte-identical to single-node output"
+    );
+    assert!(
+        state.requeue_count() >= 1,
+        "the abandoned unit must have been re-queued"
+    );
+    assert!(
+        state.resumed_count() >= 1,
+        "the re-queued unit must have resumed from the uploaded checkpoint"
+    );
+    // Finished workers leave no unit directories behind.
+    let leftovers = std::fs::read_dir(root.join("worker-b"))
+        .map(|d| d.count())
+        .unwrap_or(0);
+    assert_eq!(leftovers, 0, "completed units must clean their work dirs");
+    let _ = std::fs::remove_dir_all(&root);
+}
