@@ -1,0 +1,44 @@
+//! `ising-lint` — the project's determinism & concurrency static-analysis
+//! gate. Walks `rust/src/`, applies the zone/panic/index/lock rules plus
+//! the repo-level wire-drift and std-only dependency checks, and exits
+//! non-zero on any finding. See `rust/src/lint/mod.rs` and the README
+//! "Static analysis" section for the rule catalogue and the
+//! `// lint: allow(...)` annotation grammar.
+//!
+//! Usage: `cargo run --bin ising-lint [REPO_ROOT]` (default: `.`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let root = match (args.next(), args.next()) {
+        (None, _) => PathBuf::from("."),
+        (Some(p), None) if !p.starts_with('-') => PathBuf::from(p),
+        _ => {
+            eprintln!("usage: ising-lint [REPO_ROOT]");
+            return ExitCode::from(2);
+        }
+    };
+    if !root.join("rust").join("src").is_dir() {
+        eprintln!("ising-lint: {} does not look like the repo root (no rust/src)", root.display());
+        return ExitCode::from(2);
+    }
+    match ising_dgx::lint::lint_repo(&root) {
+        Ok(diags) if diags.is_empty() => {
+            println!("ising-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!("ising-lint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("ising-lint: i/o error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

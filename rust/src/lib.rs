@@ -43,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod lattice;
+pub mod lint;
 pub mod observables;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,411 @@
+//! A lightweight Rust tokenizer for `ising-lint` (offline image: no
+//! `syn`/`proc-macro2`), in the same hand-rolled-parser idiom as
+//! `util::json` and `config::toml`.
+//!
+//! The lexer understands exactly as much Rust as the lint rules need:
+//! comments (line, nested block), string/char/byte/raw-string literals,
+//! lifetimes, numbers (including `1.0e-3` and `0x..` forms), identifiers
+//! and single-character punctuation. Everything inside comments and
+//! string literals is invisible to the rules — a `HashMap` mentioned in
+//! a doc comment is not a violation — while line comments are kept in a
+//! side channel so the `// lint: allow(...)` annotations stay parsable.
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `fn`, `mod`, ...).
+    Ident,
+    /// Numeric literal (`0.44`, `0xff`, `1e-3`).
+    Num,
+    /// String literal of any flavor (`"..."`, `r#"..."#`, `b"..."`).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Any single punctuation character (`.`, `(`, `{`, `!`, ...).
+    Punct,
+}
+
+/// One token with its source position (1-based line and column).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Token class.
+    pub kind: TokKind,
+    /// Source text (empty for string literals — their content is
+    /// irrelevant to every rule and often large).
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based source column.
+    pub col: u32,
+}
+
+impl Tok {
+    /// Is this the identifier `name`?
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    /// Is this the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+/// Lexer output: the token stream plus every `//` line comment (with its
+/// line number) for annotation parsing.
+pub struct Lexed {
+    /// Tokens in source order.
+    pub toks: Vec<Tok>,
+    /// `(line, full comment text including the leading //)`.
+    pub comments: Vec<(u32, String)>,
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Lexer {
+    fn peek(&self, k: usize) -> Option<char> {
+        self.chars.get(self.i + k).copied()
+    }
+
+    fn bump(&mut self) -> char {
+        let c = self.chars[self.i];
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        c
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. The lexer never fails: malformed input (an unclosed
+/// string, a stray byte) degrades to best-effort tokens, which is the
+/// right behavior for a linter — the compiler, not the lint, owns
+/// syntax errors.
+pub fn lex(src: &str) -> Lexed {
+    let mut lx = Lexer { chars: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    while let Some(c) = lx.peek(0) {
+        let (line, col) = (lx.line, lx.col);
+        if c.is_whitespace() {
+            lx.bump();
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(n) = lx.peek(0) {
+                if n == '\n' {
+                    break;
+                }
+                text.push(lx.bump());
+            }
+            comments.push((line, text));
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('*') {
+            lx.bump();
+            lx.bump();
+            let mut depth = 1usize;
+            while depth > 0 && lx.peek(0).is_some() {
+                if lx.peek(0) == Some('/') && lx.peek(1) == Some('*') {
+                    lx.bump();
+                    lx.bump();
+                    depth += 1;
+                } else if lx.peek(0) == Some('*') && lx.peek(1) == Some('/') {
+                    lx.bump();
+                    lx.bump();
+                    depth -= 1;
+                } else {
+                    lx.bump();
+                }
+            }
+            continue;
+        }
+        if (c == 'r' || c == 'b') && lex_string_prefix(&mut lx, &mut toks, line, col) {
+            continue;
+        }
+        if c == '"' {
+            lex_plain_string(&mut lx);
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            continue;
+        }
+        if c == '\'' {
+            lex_quote(&mut lx, &mut toks, line, col);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(n) = lx.peek(0) {
+                if !is_ident_continue(n) {
+                    break;
+                }
+                text.push(lx.bump());
+            }
+            toks.push(Tok { kind: TokKind::Ident, text, line, col });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            lex_number(&mut lx);
+            toks.push(Tok { kind: TokKind::Num, text: String::new(), line, col });
+            continue;
+        }
+        let p = lx.bump();
+        toks.push(Tok { kind: TokKind::Punct, text: p.to_string(), line, col });
+    }
+    Lexed { toks, comments }
+}
+
+/// Handle the `r"..."`, `r#"..."#`, `r#ident`, `b"..."`, `br"..."` and
+/// `b'x'` prefixed forms. Returns `false` when the `r`/`b` is just the
+/// start of an ordinary identifier (the caller lexes it).
+fn lex_string_prefix(lx: &mut Lexer, toks: &mut Vec<Tok>, line: u32, col: u32) -> bool {
+    let c = lx.peek(0).unwrap_or(' ');
+    if c == 'b' {
+        match lx.peek(1) {
+            Some('\'') => {
+                lx.bump(); // b
+                lex_quote(lx, toks, line, col);
+                return true;
+            }
+            Some('"') => {
+                lx.bump(); // b
+                lex_plain_string(lx);
+                toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                return true;
+            }
+            Some('r') => {
+                // br"..." / br#"..."#
+                let mut hashes = 0usize;
+                while lx.peek(2 + hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if lx.peek(2 + hashes) == Some('"') {
+                    lx.bump(); // b
+                    lex_raw_string(lx);
+                    toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                    return true;
+                }
+                return false;
+            }
+            _ => return false,
+        }
+    }
+    // c == 'r': raw string r"..." / r#"..."#, or a raw identifier r#name.
+    let mut hashes = 0usize;
+    while lx.peek(1 + hashes) == Some('#') {
+        hashes += 1;
+    }
+    if lx.peek(1 + hashes) == Some('"') {
+        lex_raw_string(lx);
+        toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+        return true;
+    }
+    if hashes == 1 && lx.peek(2).map(is_ident_start).unwrap_or(false) {
+        // Raw identifier: r#type → Ident("type").
+        lx.bump(); // r
+        lx.bump(); // #
+        let mut text = String::new();
+        while let Some(n) = lx.peek(0) {
+            if !is_ident_continue(n) {
+                break;
+            }
+            text.push(lx.bump());
+        }
+        toks.push(Tok { kind: TokKind::Ident, text, line, col });
+        return true;
+    }
+    false
+}
+
+/// Consume a `"..."` literal (opening quote still pending).
+fn lex_plain_string(lx: &mut Lexer) {
+    lx.bump(); // opening quote
+    while let Some(c) = lx.peek(0) {
+        if c == '\\' {
+            lx.bump();
+            if lx.peek(0).is_some() {
+                lx.bump();
+            }
+        } else if c == '"' {
+            lx.bump();
+            break;
+        } else {
+            lx.bump();
+        }
+    }
+}
+
+/// Consume a raw string starting at `r` (cursor on the `r`).
+fn lex_raw_string(lx: &mut Lexer) {
+    lx.bump(); // r
+    let mut hashes = 0usize;
+    while lx.peek(0) == Some('#') {
+        lx.bump();
+        hashes += 1;
+    }
+    if lx.peek(0) == Some('"') {
+        lx.bump();
+    }
+    'scan: while lx.peek(0).is_some() {
+        if lx.bump() == '"' {
+            for k in 0..hashes {
+                if lx.peek(k) != Some('#') {
+                    continue 'scan;
+                }
+            }
+            for _ in 0..hashes {
+                lx.bump();
+            }
+            break;
+        }
+    }
+}
+
+/// Disambiguate `'a'` (char) from `'a` (lifetime) and consume either.
+fn lex_quote(lx: &mut Lexer, toks: &mut Vec<Tok>, line: u32, col: u32) {
+    if lx.peek(1) == Some('\\') {
+        // Escaped char literal: '\n', '\'', '\u{1F600}', '\x41'.
+        lx.bump(); // '
+        lx.bump(); // backslash
+        if lx.peek(0).is_some() {
+            lx.bump(); // the escaped character (or escape class letter)
+        }
+        while let Some(c) = lx.peek(0) {
+            lx.bump();
+            if c == '\'' {
+                break;
+            }
+        }
+        toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+        return;
+    }
+    let next_is_ident = lx.peek(1).map(is_ident_start).unwrap_or(false);
+    if next_is_ident && lx.peek(2) != Some('\'') {
+        // Lifetime: 'a, 'static, '_ as a label or bound.
+        lx.bump(); // '
+        let mut text = String::new();
+        while let Some(n) = lx.peek(0) {
+            if !is_ident_continue(n) {
+                break;
+            }
+            text.push(lx.bump());
+        }
+        toks.push(Tok { kind: TokKind::Lifetime, text, line, col });
+        return;
+    }
+    // Plain char literal 'x' (any single char, ident-start or not).
+    lx.bump(); // '
+    if lx.peek(0).is_some() {
+        lx.bump(); // the char
+    }
+    if lx.peek(0) == Some('\'') {
+        lx.bump(); // closing quote
+    }
+    toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+}
+
+/// Consume a numeric literal: `42`, `0xff_u32`, `0.44`, `1.0e-3`.
+fn lex_number(lx: &mut Lexer) {
+    let mut last = ' ';
+    while let Some(c) = lx.peek(0) {
+        if is_ident_continue(c) {
+            last = lx.bump();
+        } else if c == '.' && lx.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false) {
+            last = lx.bump();
+        } else if (c == '+' || c == '-')
+            && (last == 'e' || last == 'E')
+            && lx.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+        {
+            last = lx.bump();
+        } else {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_identifiers() {
+        let src = r##"
+            // HashMap in a comment
+            /* HashMap /* nested */ still comment */
+            let s = "HashMap in a string";
+            let r = r#"HashMap raw "quoted" body"#;
+            let b = b"HashMap bytes";
+            let real = BTreeMap::new();
+        "##;
+        let names = idents(src);
+        assert!(!names.iter().any(|n| n == "HashMap"), "{names:?}");
+        assert!(names.iter().any(|n| n == "BTreeMap"));
+    }
+
+    #[test]
+    fn line_comments_are_captured_with_line_numbers() {
+        let src = "let a = 1;\n// lint: allow(panic, \"x\")\nlet b = 2;\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].0, 2);
+        assert!(lexed.comments[0].1.starts_with("// lint:"));
+    }
+
+    #[test]
+    fn chars_lifetimes_and_ranges_disambiguate() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let q = '\\''; for i in 0..n {} }";
+        let lexed = lex(src);
+        let lifetimes: Vec<_> =
+            lexed.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars = lexed.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 2);
+        // `0..n` must lex as number, dot, dot, ident — not swallow the range.
+        let dots = lexed.toks.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(dots, 2);
+    }
+
+    #[test]
+    fn byte_chars_and_numbers() {
+        let src = "match b { b'0'..=b'9' => 1.0e-3, _ => 0xff_u32 as f64 }";
+        let lexed = lex(src);
+        assert_eq!(lexed.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+        assert_eq!(lexed.toks.iter().filter(|t| t.kind == TokKind::Num).count(), 2);
+        // 1.0e-3 lexes as one number: no stray '-' punct between it and ','.
+        assert!(!lexed.toks.iter().any(|t| t.is_punct('-')));
+    }
+
+    #[test]
+    fn positions_are_one_based_and_accurate() {
+        let lexed = lex("ab\n  cd");
+        assert_eq!((lexed.toks[0].line, lexed.toks[0].col), (1, 1));
+        assert_eq!((lexed.toks[1].line, lexed.toks[1].col), (2, 3));
+    }
+}

@@ -1,0 +1,363 @@
+//! `ising-lint`: a std-only static-analysis pass over `rust/src/`.
+//!
+//! Every headline claim in this repo — farm merges, fleet splices, HTTP
+//! results byte-identical to a single-node `ising sweep` — rests on
+//! determinism invariants that integration tests only check after the
+//! fact. This module checks them statically, on every file, with typed
+//! `file:line:col` diagnostics:
+//!
+//! - **zone-api / float-sum** — deterministic zones (`algorithms/`,
+//!   `lattice/`, `tensor/`, `rng/`, `runtime/`, `coordinator/farm.rs`,
+//!   `coordinator/checkpoint.rs`) may not use hash-ordered collections,
+//!   wall clocks, or float reductions over unordered iterators.
+//! - **panic** — server request paths and worker pools (`server/`,
+//!   `coordinator/`) may not panic on bad input: `unwrap`/`expect`/
+//!   `panic!` must become [`crate::server::wire::ErrorEnvelope`] flows
+//!   or carry a `// lint: allow(panic, "<reason>")` annotation. The one
+//!   approved idiom is `.expect("...")` directly on a poisoning
+//!   `Result` (`.lock()`, `.wait(..)`, `.into_inner()`).
+//! - **index** — unchecked slice indexing in `server/` request paths
+//!   needs `get()`/`strip_prefix` or an `allow(index, "...")`.
+//! - **lock** — the four `Mutex`/`Condvar` modules acquire locks in
+//!   [`LOCK_ORDER`]; nested acquisitions against table order, re-locks,
+//!   bare `.lock().unwrap()`, and locks in undeclared modules are all
+//!   flagged.
+//! - **wire-drift** — every `server/wire.rs` message type with a
+//!   `from_json` decoder must have a roundtrip case in
+//!   `rust/tests/fuzz_parsers.rs` (the `config::ENGINES` anti-drift
+//!   pattern applied to the wire format).
+//! - **deps** — `[dependencies]` may not grow beyond the in-tree `xla`
+//!   stub: the std-only policy is machine-enforced.
+//!
+//! Run locally with `cargo run --bin ising-lint`; CI runs it as a
+//! blocking job next to fmt/clippy. Code under `#[cfg(test)]` is exempt
+//! from all rules.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{
+    check_file, RULE_ALLOW, RULE_DEPS, RULE_FLOAT_SUM, RULE_INDEX, RULE_LOCK, RULE_PANIC,
+    RULE_WIRE, RULE_ZONE,
+};
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, pointing at an exact source location.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Path relative to `rust/src/` (or a repo-relative path for the
+    /// repo-level rules).
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based column.
+    pub col: u32,
+    /// Rule identifier (`zone-api`, `panic`, ...).
+    pub rule: &'static str,
+    /// Human-readable explanation with the suggested fix.
+    pub msg: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic.
+    pub fn new(file: &str, line: u32, col: u32, rule: &'static str, msg: String) -> Self {
+        Diagnostic { file: file.to_string(), line, col, rule, msg }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}: [{}] {}", self.file, self.line, self.col, self.rule, self.msg)
+    }
+}
+
+/// Which rule families apply to a file.
+#[derive(Clone, Copy, Debug)]
+pub struct FileClass {
+    /// Deterministic zone: forbidden-API + float-sum rules.
+    pub det_zone: bool,
+    /// Request path / worker pool: panic audit.
+    pub panic_audit: bool,
+    /// Request path: unchecked-indexing audit.
+    pub index_audit: bool,
+    /// Declared lock module: full lock-discipline analysis.
+    pub lock_audit: bool,
+}
+
+impl FileClass {
+    /// No rules (the baseline every file starts from).
+    pub const NONE: FileClass =
+        FileClass { det_zone: false, panic_audit: false, index_audit: false, lock_audit: false };
+}
+
+/// One row of the declared lock-order table.
+#[derive(Clone, Copy, Debug)]
+pub struct LockSpec {
+    /// File the lock lives in, relative to `rust/src/`.
+    pub file: &'static str,
+    /// Receiver name the lock is acquired through (`self.<receiver>`).
+    pub receiver: &'static str,
+}
+
+/// Deterministic zones: module prefixes whose code feeds reproducible
+/// trajectory state.
+pub const DET_ZONES: &[&str] = &[
+    "algorithms/",
+    "lattice/",
+    "tensor/",
+    "rng/",
+    "runtime/",
+    "coordinator/farm.rs",
+    "coordinator/checkpoint.rs",
+];
+
+/// The declared lock order. Within a file, locks must be acquired in
+/// table order; a lock in any file not listed here is itself a finding.
+/// Today no path holds two locks at once — the table encodes the only
+/// legal nesting if one ever appears.
+pub const LOCK_ORDER: &[LockSpec] = &[
+    LockSpec { file: "server/fleet.rs", receiver: "inner" },
+    LockSpec { file: "server/queue.rs", receiver: "handles" },
+    LockSpec { file: "server/queue.rs", receiver: "state" },
+    LockSpec { file: "coordinator/checkpoint.rs", receiver: "manifest" },
+    LockSpec { file: "coordinator/farm.rs", receiver: "slots" },
+];
+
+/// Crates the root `[dependencies]` table may contain (the in-tree
+/// PJRT/XLA API stub) — everything else violates the std-only policy.
+pub const ALLOWED_DEPS: &[&str] = &["xla"];
+
+/// Classify a file (path relative to `rust/src/`) into rule families.
+pub fn classify(rel: &str) -> FileClass {
+    FileClass {
+        det_zone: DET_ZONES.iter().any(|z| rel.starts_with(z)),
+        panic_audit: rel.starts_with("server/") || rel.starts_with("coordinator/"),
+        index_audit: rel.starts_with("server/"),
+        lock_audit: LOCK_ORDER.iter().any(|s| s.file == rel),
+    }
+}
+
+/// Wire/registry anti-drift: every type in `wire_src` that defines a
+/// `from_json` decoder must be exercised by name in `fuzz_src`
+/// (`<Type>::from_json`), so new wire messages cannot land without a
+/// fuzz/roundtrip case.
+pub fn check_wire_drift(wire_rel: &str, wire_src: &str, fuzz_src: &str) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (name, line) in wire_decoder_types(wire_src) {
+        let probe = format!("{name}::from_json");
+        if !fuzz_src.contains(&probe) {
+            diags.push(Diagnostic::new(
+                wire_rel,
+                line,
+                1,
+                RULE_WIRE,
+                format!(
+                    "wire message '{name}' has no roundtrip case in fuzz_parsers.rs; call \
+                     {probe} there"
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+/// All `impl <Type>` blocks in `src` that contain `fn from_json`,
+/// with the line of the `impl`.
+fn wire_decoder_types(src: &str) -> Vec<(String, u32)> {
+    let lexed = lexer::lex(src);
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth = depth.saturating_sub(1);
+        } else if depth == 0
+            && t.is_ident("impl")
+            && i + 2 < toks.len()
+            && toks[i + 1].kind == lexer::TokKind::Ident
+            && toks[i + 2].is_punct('{')
+        {
+            let name = toks[i + 1].text.clone();
+            let line = t.line;
+            let mut d = 0usize;
+            let mut j = i + 2;
+            let mut has_decoder = false;
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    d += 1;
+                } else if toks[j].is_punct('}') {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if toks[j].is_ident("from_json") && toks[j - 1].is_ident("fn") {
+                    has_decoder = true;
+                }
+                j += 1;
+            }
+            if has_decoder {
+                out.push((name, line));
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Std-only dependency policy over a Cargo manifest: `[dependencies]`
+/// may only contain `allowed` crates, and `[dev-dependencies]`,
+/// `[build-dependencies]`, and `[workspace.dependencies]` must be
+/// empty. Line-oriented on purpose — a Cargo.toml the hand parser
+/// cannot read should fail loudly, not pass silently.
+pub fn check_deps_policy(rel: &str, manifest: &str, allowed: &[&str]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut section = String::new();
+    for (idx, raw) in manifest.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = (idx + 1) as u32;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line.starts_with('[') {
+            section = line.trim_matches(|c| c == '[' || c == ']').to_string();
+            // Dotted form: `[dependencies.serde]` declares a dep too.
+            for banned in ["dependencies.", "dev-dependencies.", "build-dependencies."] {
+                if let Some(name) = section.strip_prefix(banned) {
+                    if banned != "dependencies." || !allowed.contains(&name) {
+                        diags.push(dep_diag(rel, lineno, name));
+                    }
+                }
+            }
+            if let Some(name) = section.strip_prefix("workspace.dependencies.") {
+                diags.push(dep_diag(rel, lineno, name));
+            }
+            continue;
+        }
+        let dep_section = matches!(
+            section.as_str(),
+            "dependencies" | "dev-dependencies" | "build-dependencies" | "workspace.dependencies"
+        );
+        if !dep_section {
+            continue;
+        }
+        let Some((key, _)) = line.split_once('=') else { continue };
+        let name = key.trim();
+        if section == "dependencies" && allowed.contains(&name) {
+            continue;
+        }
+        diags.push(dep_diag(rel, lineno, name));
+    }
+    diags
+}
+
+fn dep_diag(rel: &str, line: u32, name: &str) -> Diagnostic {
+    Diagnostic::new(
+        rel,
+        line,
+        1,
+        RULE_DEPS,
+        format!("dependency '{name}' violates the std-only policy (allowed: in-tree xla stub)"),
+    )
+}
+
+/// Lint the whole repository rooted at `root`: every `.rs` file under
+/// `rust/src/` plus the repo-level wire-drift and dependency checks.
+pub fn lint_repo(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+    let mut diags = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = std::fs::read_to_string(path)?;
+        diags.extend(check_file(&rel, &src, &classify(&rel), LOCK_ORDER));
+    }
+    let wire_path = src_root.join("server").join("wire.rs");
+    let fuzz_path = root.join("rust").join("tests").join("fuzz_parsers.rs");
+    let wire_src = std::fs::read_to_string(&wire_path)?;
+    let fuzz_src = std::fs::read_to_string(&fuzz_path)?;
+    diags.extend(check_wire_drift("server/wire.rs", &wire_src, &fuzz_src));
+    for manifest in ["Cargo.toml", "rust/xla_stub/Cargo.toml"] {
+        let text = std::fs::read_to_string(root.join(manifest))?;
+        let allowed = if manifest == "Cargo.toml" { ALLOWED_DEPS } else { &[] };
+        diags.extend(check_deps_policy(manifest, &text, allowed));
+    }
+    Ok(diags)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_zone_and_audit_lists() {
+        let z = classify("lattice/bitplane.rs");
+        assert!(z.det_zone && !z.panic_audit);
+        let s = classify("server/api.rs");
+        assert!(s.panic_audit && s.index_audit && !s.det_zone && !s.lock_audit);
+        let q = classify("server/queue.rs");
+        assert!(q.lock_audit);
+        let c = classify("coordinator/driver.rs");
+        assert!(c.panic_audit && !c.index_audit && !c.det_zone);
+        let f = classify("coordinator/farm.rs");
+        assert!(f.det_zone && f.lock_audit);
+    }
+
+    #[test]
+    fn wire_drift_detects_missing_roundtrip() {
+        let wire = "pub struct A;\nimpl A {\n    pub fn from_json(_: &str) {}\n}\n\
+                    pub struct B;\nimpl B {\n    pub fn from_json(_: &str) {}\n}\n\
+                    impl Default for A {\n    fn default() -> A {\n        A\n    }\n}\n";
+        let fuzz = "let _ = A::from_json(s);";
+        let diags = check_wire_drift("server/wire.rs", wire, fuzz);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("'B'"), "{}", diags[0].msg);
+        assert_eq!(diags[0].line, 6);
+    }
+
+    #[test]
+    fn deps_policy_allows_only_the_stub() {
+        let ok = "[package]\nname = \"x\"\n\n[dependencies]\nxla = { path = \"s\", optional = \
+                  true }\n";
+        assert!(check_deps_policy("Cargo.toml", ok, &["xla"]).is_empty());
+        let bad = "[dependencies]\nxla = { path = \"s\" }\nserde = \"1\"\n\n[dev-dependencies]\n\
+                   rand = \"0.8\"\n";
+        let diags = check_deps_policy("Cargo.toml", bad, &["xla"]);
+        assert_eq!(diags.len(), 2);
+        assert!(diags[0].msg.contains("'serde'"));
+        assert!(diags[1].msg.contains("'rand'"));
+    }
+
+    #[test]
+    fn dotted_dependency_sections_are_caught() {
+        let bad = "[dependencies.serde]\nversion = \"1\"\n";
+        let diags = check_deps_policy("Cargo.toml", bad, &["xla"]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 1);
+    }
+}

@@ -1,0 +1,716 @@
+//! The lint rules: token-stream passes over one source file.
+//!
+//! Every rule reports [`Diagnostic`]s with exact `file:line:col` spans.
+//! Code under `#[cfg(test)]` modules and `#[test]` functions is exempt
+//! from all rules — tests may unwrap, index, and hash freely.
+
+use super::{Diagnostic, FileClass, LockSpec};
+use crate::lint::lexer::{lex, Tok, TokKind};
+
+/// Rule: forbidden API in a deterministic zone.
+pub const RULE_ZONE: &str = "zone-api";
+/// Rule: float reduction over an unordered collection in a det zone.
+pub const RULE_FLOAT_SUM: &str = "float-sum";
+/// Rule: unguarded panic path in server/coordinator code.
+pub const RULE_PANIC: &str = "panic";
+/// Rule: unguarded slice/array indexing in server request paths.
+pub const RULE_INDEX: &str = "index";
+/// Rule: lock-order / poisoning-discipline violation.
+pub const RULE_LOCK: &str = "lock";
+/// Rule: wire message type without a fuzz roundtrip case.
+pub const RULE_WIRE: &str = "wire-drift";
+/// Rule: dependency outside the std-only policy.
+pub const RULE_DEPS: &str = "deps";
+/// Rule: malformed, unknown, or unused `// lint: allow(...)`.
+pub const RULE_ALLOW: &str = "allow";
+
+/// Rules that may be silenced by a `// lint: allow(<rule>, "...")`
+/// annotation. Determinism (`zone-api`, `float-sum`), lock discipline,
+/// and repo-level rules are not allowable: those violations must be
+/// fixed, not waived.
+const ALLOWABLE: &[&str] = &[RULE_PANIC, RULE_INDEX];
+
+/// Methods whose `Result` is the mutex-poisoning case; an immediate
+/// `.expect("...")` on them is the approved idiom (crash loudly on a
+/// poisoned lock rather than limp on), so the panic audit exempts it.
+const POISON_FNS: &[&str] = &["lock", "wait", "wait_timeout", "wait_while", "into_inner"];
+
+struct Allow {
+    line: u32,
+    rule: String,
+    used: bool,
+}
+
+/// Lint one file. `rel` is the path relative to `rust/src/` (used in
+/// diagnostics and lock-table lookups), `class` selects which rules
+/// apply, and `locks` is the declared lock-order table.
+pub fn check_file(rel: &str, src: &str, class: &FileClass, locks: &[LockSpec]) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let exempt = test_exempt_mask(toks);
+    let exempt_lines = exempt_line_ranges(toks, &exempt);
+    let in_tests = |line: u32| exempt_lines.iter().any(|&(a, b)| line >= a && line <= b);
+
+    let mut diags = Vec::new();
+    let mut allows = parse_allows(rel, &lexed.comments, &mut diags, &in_tests);
+
+    let mut raw = Vec::new();
+    if class.det_zone {
+        zone_rule(rel, toks, &exempt, &mut raw);
+        float_sum_rule(rel, toks, &exempt, &mut raw);
+    }
+    if class.panic_audit {
+        panic_rule(rel, toks, &exempt, &mut raw);
+    }
+    if class.index_audit {
+        index_rule(rel, toks, &exempt, &mut raw);
+    }
+    if class.lock_audit {
+        lock_rule(rel, toks, &exempt, locks, &mut raw);
+    } else {
+        undeclared_lock_module_rule(rel, toks, &exempt, &mut raw);
+    }
+
+    // Apply allow-annotations: an allowable diagnostic is suppressed by
+    // a matching annotation on its own line or the line directly above.
+    for d in raw {
+        let mut suppressed = false;
+        if ALLOWABLE.contains(&d.rule) {
+            for a in allows.iter_mut() {
+                if a.rule == d.rule && (a.line == d.line || a.line + 1 == d.line) {
+                    a.used = true;
+                    suppressed = true;
+                }
+            }
+        }
+        if !suppressed {
+            diags.push(d);
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            diags.push(Diagnostic::new(
+                rel,
+                a.line,
+                1,
+                RULE_ALLOW,
+                format!("unused lint annotation: no '{}' finding on this or the next line", a.rule),
+            ));
+        }
+    }
+    diags.sort_by(|x, y| (x.line, x.col, x.rule).cmp(&(y.line, y.col, y.rule)));
+    diags
+}
+
+/// Parse `// lint: allow(<rule>, "<reason>")` comments. Malformed or
+/// unknown-rule annotations are reported immediately; well-formed ones
+/// are returned for matching against findings.
+fn parse_allows(
+    rel: &str,
+    comments: &[(u32, String)],
+    diags: &mut Vec<Diagnostic>,
+    in_tests: &dyn Fn(u32) -> bool,
+) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for &(line, ref text) in comments {
+        let body = text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("lint:") else { continue };
+        if in_tests(line) {
+            continue;
+        }
+        let rest = rest.trim();
+        let parsed = rest
+            .strip_prefix("allow(")
+            .and_then(|r| r.strip_suffix(')'))
+            .and_then(|inner| inner.split_once(','))
+            .map(|(rule, reason)| (rule.trim().to_string(), reason.trim().to_string()));
+        let Some((rule, reason)) = parsed else {
+            diags.push(Diagnostic::new(
+                rel,
+                line,
+                1,
+                RULE_ALLOW,
+                "malformed annotation; expected // lint: allow(<rule>, \"<reason>\")".to_string(),
+            ));
+            continue;
+        };
+        if !ALLOWABLE.contains(&rule.as_str()) {
+            diags.push(Diagnostic::new(
+                rel,
+                line,
+                1,
+                RULE_ALLOW,
+                format!("rule '{rule}' cannot be allowed; fix the violation instead"),
+            ));
+            continue;
+        }
+        if reason.len() < 4 || !reason.starts_with('"') || !reason.ends_with('"') {
+            diags.push(Diagnostic::new(
+                rel,
+                line,
+                1,
+                RULE_ALLOW,
+                "annotation needs a non-empty quoted reason".to_string(),
+            ));
+            continue;
+        }
+        allows.push(Allow { line, rule, used: false });
+    }
+    allows
+}
+
+/// Mark every token inside `#[cfg(test)]` items and `#[test]` functions.
+fn test_exempt_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut exempt = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        let test_attr = is_cfg_test_attr(toks, i).or_else(|| is_test_attr(toks, i));
+        let Some(attr_end) = test_attr else {
+            i += 1;
+            continue;
+        };
+        // Skip any further attributes between the marker and the item.
+        let mut j = attr_end;
+        while j < toks.len() && toks[j].is_punct('#') {
+            j = skip_attr(toks, j);
+        }
+        // Find the item body: the first `{` before any `;`.
+        let mut body = None;
+        while j < toks.len() {
+            if toks[j].is_punct(';') {
+                break;
+            }
+            if toks[j].is_punct('{') {
+                body = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        let Some(open) = body else {
+            i = j + 1;
+            continue;
+        };
+        let close = match_brace(toks, open);
+        for slot in exempt.iter_mut().take(close + 1).skip(i) {
+            *slot = true;
+        }
+        i = close + 1;
+    }
+    exempt
+}
+
+/// `#[cfg(test)]` starting at `i`? Returns the index past the attr.
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> Option<usize> {
+    if i + 6 < toks.len()
+        && toks[i].is_punct('#')
+        && toks[i + 1].is_punct('[')
+        && toks[i + 2].is_ident("cfg")
+        && toks[i + 3].is_punct('(')
+        && toks[i + 4].is_ident("test")
+        && toks[i + 5].is_punct(')')
+        && toks[i + 6].is_punct(']')
+    {
+        Some(i + 7)
+    } else {
+        None
+    }
+}
+
+/// `#[test]` starting at `i`? Returns the index past the attr.
+fn is_test_attr(toks: &[Tok], i: usize) -> Option<usize> {
+    if i + 3 < toks.len()
+        && toks[i].is_punct('#')
+        && toks[i + 1].is_punct('[')
+        && toks[i + 2].is_ident("test")
+        && toks[i + 3].is_punct(']')
+    {
+        Some(i + 4)
+    } else {
+        None
+    }
+}
+
+/// Skip a `#[...]` attribute starting at the `#`; returns index past `]`.
+fn skip_attr(toks: &[Tok], i: usize) -> usize {
+    let mut j = i + 1;
+    if j >= toks.len() || !toks[j].is_punct('[') {
+        return i + 1;
+    }
+    let mut depth = 0usize;
+    while j < toks.len() {
+        if toks[j].is_punct('[') {
+            depth += 1;
+        } else if toks[j].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct('{') {
+            depth += 1;
+        } else if toks[j].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len() - 1
+}
+
+/// Collapse the exempt token mask into inclusive line ranges.
+fn exempt_line_ranges(toks: &[Tok], exempt: &[bool]) -> Vec<(u32, u32)> {
+    let mut ranges: Vec<(u32, u32)> = Vec::new();
+    for (t, &e) in toks.iter().zip(exempt) {
+        if !e {
+            continue;
+        }
+        match ranges.last_mut() {
+            Some(r) if t.line <= r.1 + 1 => r.1 = t.line.max(r.1),
+            _ => ranges.push((t.line, t.line)),
+        }
+    }
+    ranges
+}
+
+fn zone_rule(rel: &str, toks: &[Tok], exempt: &[bool], out: &mut Vec<Diagnostic>) {
+    for (i, t) in toks.iter().enumerate() {
+        if exempt[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        let msg = match t.text.as_str() {
+            "HashMap" | "HashSet" => {
+                "hash-ordered collection in a deterministic zone; iteration order feeds \
+                 reproducible state — use BTreeMap/BTreeSet"
+            }
+            "SystemTime" | "Instant" => {
+                "wall-clock read in a deterministic zone; timing must stay out of trajectory \
+                 state — use util::Timer outside the zone"
+            }
+            _ => continue,
+        };
+        out.push(Diagnostic::new(rel, t.line, t.col, RULE_ZONE, format!("{}: {msg}", t.text)));
+    }
+}
+
+/// Flag `.sum()` / `.product()` in a method chain rooted at an
+/// unordered-iteration call (`.values()`, `.keys()`, ...): float
+/// addition is not associative, so the result depends on hash order.
+fn float_sum_rule(rel: &str, toks: &[Tok], exempt: &[bool], out: &mut Vec<Diagnostic>) {
+    const UNORDERED: &[&str] = &["values", "keys", "into_values", "into_keys"];
+    for i in 0..toks.len() {
+        if exempt[i]
+            || toks[i].kind != TokKind::Ident
+            || !UNORDERED.contains(&toks[i].text.as_str())
+            || i == 0
+            || !toks[i - 1].is_punct('.')
+        {
+            continue;
+        }
+        let mut j = i + 1;
+        while j < toks.len() && !toks[j].is_punct(';') && !toks[j].is_punct('{') {
+            let t = &toks[j];
+            if t.kind == TokKind::Ident
+                && (t.text == "sum" || t.text == "product")
+                && toks[j - 1].is_punct('.')
+            {
+                out.push(Diagnostic::new(
+                    rel,
+                    t.line,
+                    t.col,
+                    RULE_FLOAT_SUM,
+                    format!(".{}() over an unordered iterator; collect and sort first", t.text),
+                ));
+                break;
+            }
+            j += 1;
+        }
+    }
+}
+
+fn panic_rule(rel: &str, toks: &[Tok], exempt: &[bool], out: &mut Vec<Diagnostic>) {
+    const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+    for i in 0..toks.len() {
+        if exempt[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let name = toks[i].text.as_str();
+        if MACROS.contains(&name) && i + 1 < toks.len() && toks[i + 1].is_punct('!') {
+            out.push(Diagnostic::new(
+                rel,
+                toks[i].line,
+                toks[i].col,
+                RULE_PANIC,
+                format!("{name}! in a request-handling path; return an ErrorEnvelope instead"),
+            ));
+            continue;
+        }
+        if (name == "unwrap" || name == "expect")
+            && i >= 1
+            && toks[i - 1].is_punct('.')
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && !is_poison_guard(toks, i)
+        {
+            out.push(Diagnostic::new(
+                rel,
+                toks[i].line,
+                toks[i].col,
+                RULE_PANIC,
+                format!(
+                    ".{name}() in a request-handling path; convert to an ErrorEnvelope flow or \
+                     annotate with // lint: allow(panic, \"<reason>\")"
+                ),
+            ));
+        }
+    }
+}
+
+/// Is the `.unwrap`/`.expect` at `i` chained directly onto a poisoning
+/// `Result` (`.lock()`, `.wait(..)`, `.into_inner()`)? That idiom is
+/// the approved way to surface a poisoned mutex.
+fn is_poison_guard(toks: &[Tok], i: usize) -> bool {
+    if i < 2 || !toks[i - 2].is_punct(')') {
+        return false;
+    }
+    let mut depth = 0usize;
+    let mut j = i - 2;
+    loop {
+        if toks[j].is_punct(')') {
+            depth += 1;
+        } else if toks[j].is_punct('(') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    j >= 1 && toks[j - 1].kind == TokKind::Ident && POISON_FNS.contains(&toks[j - 1].text.as_str())
+}
+
+/// Flag `expr[...]` indexing unless the index is a literal or a full
+/// range. Out-of-range indexing panics the worker thread; request paths
+/// must bound-check (`get`/`strip_prefix`) or carry an annotation.
+fn index_rule(rel: &str, toks: &[Tok], exempt: &[bool], out: &mut Vec<Diagnostic>) {
+    for i in 1..toks.len() {
+        if exempt[i] || !toks[i].is_punct('[') {
+            continue;
+        }
+        let prev = &toks[i - 1];
+        let is_index = prev.kind == TokKind::Ident && !is_keyword(&prev.text)
+            || prev.is_punct(')')
+            || prev.is_punct(']');
+        if !is_index {
+            continue;
+        }
+        let close = match_bracket(toks, i);
+        let inner = &toks[i + 1..close];
+        let literal = inner.len() == 1 && inner[0].kind == TokKind::Num;
+        let full_range = inner.len() == 2 && inner[0].is_punct('.') && inner[1].is_punct('.');
+        if literal || full_range || inner.is_empty() {
+            continue;
+        }
+        out.push(Diagnostic::new(
+            rel,
+            toks[i].line,
+            toks[i].col,
+            RULE_INDEX,
+            "unchecked indexing in a request path; use get()/strip_prefix or annotate with \
+             // lint: allow(index, \"<why in bounds>\")"
+                .to_string(),
+        ));
+    }
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(s, "as" | "in" | "return" | "break" | "if" | "else" | "match" | "mut" | "ref")
+}
+
+/// Index of the `]` matching the `[` at `open` (or the last token).
+fn match_bracket(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct('[') {
+            depth += 1;
+        } else if toks[j].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len() - 1
+}
+
+struct HeldLock {
+    var: Option<String>,
+    rank: usize,
+    depth: u32,
+    temp: bool,
+}
+
+/// Lock discipline inside a declared `Mutex`/`Condvar` module:
+/// receivers must appear in the lock-order table, nested acquisitions
+/// must follow table order (and never re-acquire the same lock), and
+/// poisoning must be `.expect("...")`, never a bare `.unwrap()`.
+fn lock_rule(
+    rel: &str,
+    toks: &[Tok],
+    exempt: &[bool],
+    locks: &[LockSpec],
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut depth: u32 = 0;
+    let mut held: Vec<HeldLock> = Vec::new();
+    for i in 0..toks.len() {
+        if exempt[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+            held.retain(|h| !h.temp);
+            continue;
+        }
+        if t.is_punct('}') {
+            let closing = depth;
+            depth = depth.saturating_sub(1);
+            held.retain(|h| !h.temp && h.depth < closing);
+            continue;
+        }
+        if t.is_punct(';') {
+            held.retain(|h| !h.temp);
+            continue;
+        }
+        // drop(guard) releases a named guard early.
+        if t.is_ident("drop")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && toks[i + 2].kind == TokKind::Ident
+            && toks[i + 3].is_punct(')')
+        {
+            let name = &toks[i + 2].text;
+            held.retain(|h| h.var.as_deref() != Some(name.as_str()));
+            continue;
+        }
+        if !t.is_ident("lock") || i == 0 || !toks[i - 1].is_punct('.') {
+            continue;
+        }
+        if i + 1 >= toks.len() || !toks[i + 1].is_punct('(') {
+            continue;
+        }
+        let receiver = receiver_name(toks, i);
+        let rank = locks.iter().position(|s| rel.ends_with(s.file) && s.receiver == receiver);
+        let Some(rank) = rank else {
+            out.push(Diagnostic::new(
+                rel,
+                t.line,
+                t.col,
+                RULE_LOCK,
+                format!("lock receiver '{receiver}' is not in the declared lock-order table"),
+            ));
+            continue;
+        };
+        for h in &held {
+            let hname = &locks[h.rank].receiver;
+            if h.rank == rank {
+                out.push(Diagnostic::new(
+                    rel,
+                    t.line,
+                    t.col,
+                    RULE_LOCK,
+                    format!("lock '{receiver}' re-acquired while already held (self-deadlock)"),
+                ));
+            } else if h.rank > rank {
+                out.push(Diagnostic::new(
+                    rel,
+                    t.line,
+                    t.col,
+                    RULE_LOCK,
+                    format!(
+                        "lock '{receiver}' acquired while '{hname}' is held; the declared \
+                         order puts '{receiver}' first"
+                    ),
+                ));
+            }
+        }
+        // Bare `.lock().unwrap()` hides the poisoning assumption.
+        if i + 4 < toks.len()
+            && toks[i + 2].is_punct(')')
+            && toks[i + 3].is_punct('.')
+            && toks[i + 4].is_ident("unwrap")
+        {
+            out.push(Diagnostic::new(
+                rel,
+                t.line,
+                t.col,
+                RULE_LOCK,
+                "bare .lock().unwrap(); use .expect(\"<lock> poisoned\") to document the \
+                 poisoning assumption"
+                    .to_string(),
+            ));
+        }
+        let var = let_binding_name(toks, i);
+        held.push(HeldLock { temp: var.is_none(), var, rank, depth });
+    }
+}
+
+/// The identifier immediately before the `.` of `.lock()` — skipping a
+/// trailing `[...]` so `slots[i].lock()` resolves to `slots`.
+fn receiver_name(toks: &[Tok], lock_idx: usize) -> String {
+    let mut j = lock_idx.saturating_sub(2);
+    if toks[j].is_punct(']') {
+        let mut depth = 0usize;
+        loop {
+            if toks[j].is_punct(']') {
+                depth += 1;
+            } else if toks[j].is_punct('[') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            if j == 0 {
+                return "<expr>".to_string();
+            }
+            j -= 1;
+        }
+        j = j.saturating_sub(1);
+    }
+    if toks[j].kind == TokKind::Ident { toks[j].text.clone() } else { "<expr>".to_string() }
+}
+
+/// If the statement containing the `.lock()` at `lock_idx` is a `let`
+/// binding, return the bound variable name.
+fn let_binding_name(toks: &[Tok], lock_idx: usize) -> Option<String> {
+    let mut j = lock_idx;
+    for _ in 0..64 {
+        if j == 0 {
+            return None;
+        }
+        j -= 1;
+        let t = &toks[j];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            return None;
+        }
+        if t.is_ident("let") {
+            let mut k = j + 1;
+            if k < toks.len() && toks[k].is_ident("mut") {
+                k += 1;
+            }
+            if k < toks.len() && toks[k].kind == TokKind::Ident {
+                return Some(toks[k].text.clone());
+            }
+            return None;
+        }
+    }
+    None
+}
+
+/// Outside the declared lock modules, any `Mutex`/`Condvar`/`RwLock`
+/// usage means a new lock exists that the order table does not know
+/// about — it must be declared before it lands.
+fn undeclared_lock_module_rule(
+    rel: &str,
+    toks: &[Tok],
+    exempt: &[bool],
+    out: &mut Vec<Diagnostic>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        if exempt[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "Mutex" || t.text == "Condvar" || t.text == "RwLock" {
+            out.push(Diagnostic::new(
+                rel,
+                t.line,
+                t.col,
+                RULE_LOCK,
+                format!(
+                    "{} used outside the declared lock modules; add this file and its \
+                     receivers to lint::LOCK_ORDER",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class_all() -> FileClass {
+        FileClass { det_zone: true, panic_audit: true, index_audit: true, lock_audit: false }
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); m[k]; }\n}\n";
+        let diags = check_file("server/x.rs", src, &class_all(), &[]);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn poisoning_expect_is_exempt_bare_unwrap_is_not() {
+        let class = FileClass { lock_audit: true, panic_audit: true, ..FileClass::NONE };
+        let locks = [LockSpec { file: "server/q.rs", receiver: "state" }];
+        let ok = "fn f(&self) { let g = self.state.lock().expect(\"poisoned\"); g.n += 1; }";
+        assert!(check_file("server/q.rs", ok, &class, &locks).is_empty());
+        let bad = "fn f(&self) { let g = self.state.lock().unwrap(); g.n += 1; }";
+        let diags = check_file("server/q.rs", bad, &class, &locks);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RULE_LOCK);
+    }
+
+    #[test]
+    fn annotation_suppresses_and_unused_is_flagged() {
+        let src = "fn f(v: &[u8], n: usize) -> u8 {\n    // lint: allow(index, \"caller checks \
+                   len\")\n    v[n]\n}\n";
+        assert!(check_file("server/x.rs", src, &class_all(), &[]).is_empty());
+        let unused = "// lint: allow(panic, \"nothing here\")\nfn f() {}\n";
+        let diags = check_file("server/x.rs", unused, &class_all(), &[]);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RULE_ALLOW);
+    }
+
+    #[test]
+    fn nested_lock_order_is_checked() {
+        let locks = [
+            LockSpec { file: "server/q.rs", receiver: "a" },
+            LockSpec { file: "server/q.rs", receiver: "b" },
+        ];
+        let class = FileClass { lock_audit: true, ..FileClass::NONE };
+        let good = "fn f(&self) { let ga = self.a.lock().expect(\"x\"); \
+                    let gb = self.b.lock().expect(\"x\"); }";
+        assert!(check_file("server/q.rs", good, &class, &locks).is_empty());
+        let bad = "fn f(&self) { let gb = self.b.lock().expect(\"x\"); \
+                   let ga = self.a.lock().expect(\"x\"); }";
+        let diags = check_file("server/q.rs", bad, &class, &locks);
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].msg.contains("declared"), "{}", diags[0].msg);
+    }
+
+    #[test]
+    fn literal_index_and_full_range_are_fine() {
+        let src = "fn f(v: &[u8]) -> u8 { let w = &v[..]; w[0] }";
+        assert!(check_file("server/x.rs", src, &class_all(), &[]).is_empty());
+    }
+}

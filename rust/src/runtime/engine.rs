@@ -10,7 +10,7 @@ use super::artifact::{Manifest, ProgramKind, ProgramMeta, Variant};
 use crate::error::{Error, Result};
 use crate::lattice::Color;
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 
@@ -45,7 +45,9 @@ pub struct Engine {
     client: xla::PjRtClient,
     /// Parsed manifest.
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    // BTreeMap, not HashMap: runtime/ is a deterministic zone, so even
+    // bookkeeping keeps a stable iteration order (enforced by ising-lint).
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Engine {
@@ -53,7 +55,7 @@ impl Engine {
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { client, manifest, cache: RefCell::new(BTreeMap::new()) })
     }
 
     /// Platform string (for `ising info`).

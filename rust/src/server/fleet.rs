@@ -303,10 +303,9 @@ impl FleetState {
                     .last_error
                     .clone()
                     .unwrap_or_else(|| "lease expired or worker died".into());
-                inner.failure = Some(format!(
-                    "unit {i} failed after {MAX_ATTEMPTS} attempts: {detail}"
-                ));
-                return LeaseReply::Failed(inner.failure.clone().expect("just set"));
+                let msg = format!("unit {i} failed after {MAX_ATTEMPTS} attempts: {detail}");
+                inner.failure = Some(msg.clone());
+                return LeaseReply::Failed(msg);
             }
             unit.attempts += 1;
             unit.state = UnitState::Leased {
@@ -321,6 +320,7 @@ impl FleetState {
         }
         match grant {
             Some(i) => {
+                // lint: allow(index, "i was yielded by enumerate() over units above")
                 let unit = &inner.units[i];
                 LeaseReply::Unit(Box::new(UnitLease {
                     unit: i,
@@ -380,6 +380,7 @@ impl FleetState {
             return Ok(());
         }
         validate_unit_report(u, self.cfg.samples, report)?;
+        // lint: allow(index, "validate_unit_report verified the REPORT_HEADER prefix")
         let lines = &report[REPORT_HEADER.len()..];
         atomic_write(&self.lines_path(unit), lines.as_bytes())?;
         u.lines = Some(lines.to_string());

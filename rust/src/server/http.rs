@@ -111,6 +111,7 @@ fn read_line_bounded(
             }
             match buf.iter().position(|&b| b == b'\n') {
                 Some(p) => {
+                    // lint: allow(index, "p came from position() over this buf")
                     line.extend_from_slice(&buf[..p]);
                     (true, p + 1)
                 }

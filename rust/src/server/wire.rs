@@ -87,6 +87,7 @@ impl Default for JobSpec {
         // Inherit the protocol defaults from FarmConfig::grid instead of
         // duplicating the constants here.
         let cfg = FarmConfig::grid(256, default_beta_grid(4), 1, 1)
+            // lint: allow(panic, "static default geometry, validated by unit tests")
             .expect("default job geometry is valid");
         Self {
             size: 256,

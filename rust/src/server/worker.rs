@@ -107,6 +107,7 @@ fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
         .ok_or_else(|| {
             Error::Coordinator(format!("malformed status line '{status_line}'"))
         })?;
+    // lint: allow(index, "head_end + 4 is the end of the find() match above")
     Ok((status, text[head_end + 4..].to_string()))
 }
 

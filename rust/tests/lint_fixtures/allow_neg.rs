@@ -1,0 +1,5 @@
+//! Negative fixture: a well-formed, used allow annotation.
+pub fn pick(v: &[u8], n: usize) -> u8 {
+    // lint: allow(index, "caller guarantees n < v.len()")
+    v[n]
+}

@@ -1,0 +1,5 @@
+//! Positive fixture: malformed, non-allowable, and unused annotations.
+// lint: allow(panic "missing comma")
+// lint: allow(zone-api, "determinism cannot be waived")
+// lint: allow(panic, "nothing panics below")
+pub fn quiet() {}

@@ -1,0 +1,4 @@
+//! Negative fixture: slice iteration has a fixed order; summing is fine.
+pub fn total(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}

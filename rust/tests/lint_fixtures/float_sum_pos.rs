@@ -1,0 +1,6 @@
+//! Positive fixture: float reduction over a keyed-collection iterator.
+use std::collections::BTreeMap;
+
+pub fn total(m: &BTreeMap<u32, f64>) -> f64 {
+    m.values().sum()
+}

@@ -1,0 +1,9 @@
+//! Negative fixture: literal indices, full-range slices, and get().
+pub fn first(v: &[u8; 4]) -> u8 {
+    let w = &v[..];
+    w[0]
+}
+
+pub fn safe(v: &[u8], n: usize) -> Option<u8> {
+    v.get(n).copied()
+}

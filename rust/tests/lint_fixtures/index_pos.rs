@@ -1,0 +1,4 @@
+//! Positive fixture: unchecked non-literal indexing in a request path.
+pub fn pick(v: &[u8], n: usize) -> u8 {
+    v[n]
+}

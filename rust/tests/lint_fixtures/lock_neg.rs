@@ -1,0 +1,24 @@
+//! Negative fixture: declared order respected, guards released by scope
+//! before the next acquisition, poisoning surfaced via `.expect`.
+use std::sync::{Condvar, Mutex};
+
+pub struct S {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+    cv: Condvar,
+}
+
+impl S {
+    pub fn ordered(&self) -> u32 {
+        let ga = self.a.lock().expect("a poisoned");
+        let gb = self.b.lock().expect("b poisoned");
+        *ga + *gb
+    }
+
+    pub fn reversed_after_release(&self) -> u32 {
+        let b_val = { *self.b.lock().expect("b poisoned") };
+        let ga = self.a.lock().expect("a poisoned");
+        self.cv.notify_all();
+        b_val + *ga
+    }
+}

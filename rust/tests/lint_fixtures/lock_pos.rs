@@ -1,0 +1,31 @@
+//! Positive fixture: lock-order violation, re-lock, bare unwrap, and an
+//! undeclared receiver. Declared order for this file: `a`, then `b`.
+use std::sync::Mutex;
+
+pub struct S {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+    c: Mutex<u32>,
+}
+
+impl S {
+    pub fn swapped(&self) -> u32 {
+        let gb = self.b.lock().expect("b poisoned");
+        let ga = self.a.lock().expect("a poisoned");
+        *ga + *gb
+    }
+
+    pub fn twice(&self) -> u32 {
+        let g1 = self.a.lock().expect("a poisoned");
+        let g2 = self.a.lock().expect("a poisoned");
+        *g1 + *g2
+    }
+
+    pub fn bare(&self) -> u32 {
+        *self.a.lock().unwrap()
+    }
+
+    pub fn rogue(&self) -> u32 {
+        *self.c.lock().expect("c poisoned")
+    }
+}

@@ -1,0 +1,16 @@
+//! Negative fixture: poisoning `.expect` idiom and error-returning flows.
+use std::sync::Mutex;
+
+pub struct S {
+    state: Mutex<u32>,
+}
+
+impl S {
+    pub fn get(&self) -> u32 {
+        *self.state.lock().expect("state poisoned")
+    }
+
+    pub fn parse(s: &str) -> Result<u32, String> {
+        s.parse().map_err(|e| format!("bad number: {e}"))
+    }
+}

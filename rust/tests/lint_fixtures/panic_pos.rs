@@ -1,0 +1,7 @@
+//! Positive fixture: unguarded panics in a request-handling path.
+pub fn handle(input: Option<u32>) -> u32 {
+    if input.is_none() {
+        panic!("no input");
+    }
+    input.unwrap()
+}

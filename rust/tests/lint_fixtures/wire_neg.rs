@@ -1,0 +1,8 @@
+//! Negative fixture: the only decoder is covered by the fuzz suite.
+pub struct Alpha;
+
+impl Alpha {
+    pub fn from_json(_: &str) -> Alpha {
+        Alpha
+    }
+}

@@ -1,0 +1,16 @@
+//! Positive fixture: two decoders, fuzz coverage names only `Alpha`.
+pub struct Alpha;
+
+impl Alpha {
+    pub fn from_json(_: &str) -> Alpha {
+        Alpha
+    }
+}
+
+pub struct Beta;
+
+impl Beta {
+    pub fn from_json(_: &str) -> Beta {
+        Beta
+    }
+}

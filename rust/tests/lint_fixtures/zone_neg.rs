@@ -1,0 +1,10 @@
+//! Negative fixture: ordered collections are fine in a det zone.
+use std::collections::BTreeMap;
+
+pub fn histogram(xs: &[u32]) -> BTreeMap<u32, u64> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,8 @@
+//! Positive fixture: forbidden APIs inside a deterministic zone.
+use std::collections::HashMap;
+
+pub fn stamp() -> u64 {
+    let t = std::time::Instant::now();
+    let m: HashMap<u32, u64> = HashMap::new();
+    m.len() as u64 + t.elapsed().as_nanos() as u64
+}

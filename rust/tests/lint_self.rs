@@ -1,0 +1,189 @@
+//! Self-tests for `ising-lint`: one positive and one negative fixture
+//! per rule (under `lint_fixtures/`), with exact `line:col` spans
+//! asserted on every positive finding. If a rule is disabled or its
+//! span computation drifts, the corresponding test here fails.
+//!
+//! The final test runs the real linter over this repository and asserts
+//! zero findings — the same gate CI enforces with
+//! `cargo run --bin ising-lint`.
+
+use ising_dgx::lint::{
+    check_deps_policy, check_file, check_wire_drift, lint_repo, Diagnostic, FileClass, LockSpec,
+    RULE_ALLOW, RULE_DEPS, RULE_FLOAT_SUM, RULE_INDEX, RULE_LOCK, RULE_PANIC, RULE_WIRE, RULE_ZONE,
+};
+
+/// Lock-order table for the lock fixtures: `a` before `b` in each file,
+/// plus the poisoning-idiom receiver used by `panic_neg.rs`.
+const FIXTURE_LOCKS: &[LockSpec] = &[
+    LockSpec { file: "lock_pos.rs", receiver: "a" },
+    LockSpec { file: "lock_pos.rs", receiver: "b" },
+    LockSpec { file: "lock_neg.rs", receiver: "a" },
+    LockSpec { file: "lock_neg.rs", receiver: "b" },
+    LockSpec { file: "panic_neg.rs", receiver: "state" },
+];
+
+fn spans(diags: &[Diagnostic]) -> Vec<(u32, u32, &'static str)> {
+    diags.iter().map(|d| (d.line, d.col, d.rule)).collect()
+}
+
+fn det_zone() -> FileClass {
+    FileClass { det_zone: true, ..FileClass::NONE }
+}
+
+#[test]
+fn zone_rule_positive_spans() {
+    let src = include_str!("lint_fixtures/zone_pos.rs");
+    let diags = check_file("zone_pos.rs", src, &det_zone(), &[]);
+    assert_eq!(
+        spans(&diags),
+        vec![(2, 23, RULE_ZONE), (5, 24, RULE_ZONE), (6, 12, RULE_ZONE), (6, 32, RULE_ZONE)]
+    );
+    assert!(diags[0].msg.contains("HashMap"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("Instant"), "{}", diags[1].msg);
+}
+
+#[test]
+fn zone_rule_negative_is_clean() {
+    let src = include_str!("lint_fixtures/zone_neg.rs");
+    let diags = check_file("zone_neg.rs", src, &det_zone(), &[]);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn float_sum_rule_positive_span() {
+    let src = include_str!("lint_fixtures/float_sum_pos.rs");
+    let diags = check_file("float_sum_pos.rs", src, &det_zone(), &[]);
+    assert_eq!(spans(&diags), vec![(5, 16, RULE_FLOAT_SUM)]);
+}
+
+#[test]
+fn float_sum_rule_negative_is_clean() {
+    let src = include_str!("lint_fixtures/float_sum_neg.rs");
+    let diags = check_file("float_sum_neg.rs", src, &det_zone(), &[]);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn panic_rule_positive_spans() {
+    let src = include_str!("lint_fixtures/panic_pos.rs");
+    let class = FileClass { panic_audit: true, ..FileClass::NONE };
+    let diags = check_file("panic_pos.rs", src, &class, &[]);
+    assert_eq!(spans(&diags), vec![(4, 9, RULE_PANIC), (6, 11, RULE_PANIC)]);
+    assert!(diags[0].msg.contains("panic!"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains(".unwrap()"), "{}", diags[1].msg);
+}
+
+#[test]
+fn panic_rule_negative_poisoning_idiom_is_clean() {
+    let src = include_str!("lint_fixtures/panic_neg.rs");
+    let class = FileClass { panic_audit: true, lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("panic_neg.rs", src, &class, FIXTURE_LOCKS);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn index_rule_positive_span() {
+    let src = include_str!("lint_fixtures/index_pos.rs");
+    let class = FileClass { index_audit: true, ..FileClass::NONE };
+    let diags = check_file("index_pos.rs", src, &class, &[]);
+    assert_eq!(spans(&diags), vec![(3, 6, RULE_INDEX)]);
+}
+
+#[test]
+fn index_rule_negative_is_clean() {
+    let src = include_str!("lint_fixtures/index_neg.rs");
+    let class = FileClass { index_audit: true, ..FileClass::NONE };
+    let diags = check_file("index_neg.rs", src, &class, &[]);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn lock_rule_positive_spans() {
+    let src = include_str!("lint_fixtures/lock_pos.rs");
+    let class = FileClass { lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("lock_pos.rs", src, &class, FIXTURE_LOCKS);
+    assert_eq!(
+        spans(&diags),
+        vec![(14, 25, RULE_LOCK), (20, 25, RULE_LOCK), (25, 17, RULE_LOCK), (29, 17, RULE_LOCK)]
+    );
+    assert!(diags[0].msg.contains("declared order"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("re-acquired"), "{}", diags[1].msg);
+    assert!(diags[2].msg.contains("bare .lock().unwrap()"), "{}", diags[2].msg);
+    assert!(diags[3].msg.contains("not in the declared lock-order table"), "{}", diags[3].msg);
+}
+
+#[test]
+fn lock_rule_negative_scoped_guards_are_clean() {
+    let src = include_str!("lint_fixtures/lock_neg.rs");
+    let class = FileClass { lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("lock_neg.rs", src, &class, FIXTURE_LOCKS);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn allow_rule_positive_spans() {
+    let src = include_str!("lint_fixtures/allow_pos.rs");
+    let diags = check_file("allow_pos.rs", src, &FileClass::NONE, &[]);
+    assert_eq!(spans(&diags), vec![(2, 1, RULE_ALLOW), (3, 1, RULE_ALLOW), (4, 1, RULE_ALLOW)]);
+    assert!(diags[0].msg.contains("malformed"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("cannot be allowed"), "{}", diags[1].msg);
+    assert!(diags[2].msg.contains("unused"), "{}", diags[2].msg);
+}
+
+#[test]
+fn allow_rule_negative_used_annotation_is_clean() {
+    let src = include_str!("lint_fixtures/allow_neg.rs");
+    let class = FileClass { index_audit: true, ..FileClass::NONE };
+    let diags = check_file("allow_neg.rs", src, &class, &[]);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn wire_drift_positive_span() {
+    let wire = include_str!("lint_fixtures/wire_pos.rs");
+    let diags = check_wire_drift("wire_pos.rs", wire, "Alpha::from_json");
+    assert_eq!(spans(&diags), vec![(12, 1, RULE_WIRE)]);
+    assert!(diags[0].msg.contains("'Beta'"), "{}", diags[0].msg);
+}
+
+#[test]
+fn wire_drift_negative_is_clean() {
+    let wire = include_str!("lint_fixtures/wire_neg.rs");
+    let diags = check_wire_drift("wire_neg.rs", wire, "Alpha::from_json");
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn deps_policy_positive_spans() {
+    let manifest = include_str!("lint_fixtures/deps_pos.toml");
+    let diags = check_deps_policy("deps_pos.toml", manifest, &["xla"]);
+    assert_eq!(spans(&diags), vec![(7, 1, RULE_DEPS), (10, 1, RULE_DEPS)]);
+    assert!(diags[0].msg.contains("'serde'"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("'criterion'"), "{}", diags[1].msg);
+}
+
+#[test]
+fn deps_policy_negative_is_clean() {
+    let manifest = include_str!("lint_fixtures/deps_neg.toml");
+    let diags = check_deps_policy("deps_neg.toml", manifest, &["xla"]);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn declared_lock_order_covers_the_four_lock_modules() {
+    let files =
+        ["server/fleet.rs", "server/queue.rs", "coordinator/checkpoint.rs", "coordinator/farm.rs"];
+    for f in files {
+        assert!(
+            ising_dgx::lint::LOCK_ORDER.iter().any(|s| s.file == f),
+            "{f} missing from LOCK_ORDER"
+        );
+    }
+}
+
+#[test]
+fn repository_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let diags = lint_repo(root).expect("lint walk failed");
+    assert!(diags.is_empty(), "ising-lint findings:\n{diags:#?}");
+}
