@@ -13,6 +13,14 @@ gated, so adding a bench row never breaks CI retroactively; a baseline
 metric that vanished from the reports is itself a warning (a silently
 dropped measurement is how regressions hide).
 
+Reports may additionally embed an observability MetricsSnapshot under
+`metrics.samples` (Prometheus-exposition-shaped, the same schema
+`GET /v2/metrics` serves). Histogram series from it are forwarded
+verbatim into the merged `--out` artifact under `histograms` and
+summarised as bucket-derived tail quantiles — recorded for trend
+tracking, never gated (durations are lower-is-better, the floors above
+are higher-is-better).
+
 Usage:
   perf_gate.py BASELINE REPORT [REPORT...] [--out MERGED]
   perf_gate.py BASELINE REPORT [REPORT...] --update-baseline [--margin PCT]
@@ -48,6 +56,55 @@ def flatten(report):
     return metrics
 
 
+def histogram_samples(report):
+    """Histogram exposition samples from an embedded MetricsSnapshot."""
+    samples = report.get("metrics", {}).get("samples", [])
+    return [s for s in samples if s.get("kind") == "histogram"]
+
+
+def split_le(labels):
+    """Split a rendered label string into (other labels, le edge)."""
+    rest, le = [], None
+    for pair in filter(None, labels.split(",")):
+        if pair.startswith('le="'):
+            le = pair[4:-1]
+        else:
+            rest.append(pair)
+    return ",".join(rest), le
+
+
+def tail_lines(bench, samples, quantiles=(0.5, 0.9)):
+    """Bucket-derived upper-bound quantile lines per histogram series.
+
+    Cumulative buckets only bound a quantile from above (the true value
+    lies somewhere inside the bucket), so the lines read `p90 <= edge`.
+    """
+    series = {}
+    for s in samples:
+        if not s.get("name", "").endswith("_bucket"):
+            continue
+        family = s["name"][: -len("_bucket")]
+        rest, le = split_le(s.get("labels", ""))
+        if le is None:
+            continue
+        edge = float("inf") if le == "+Inf" else float(le)
+        series.setdefault((family, rest), []).append((edge, float(s["value"])))
+    lines = []
+    for (family, rest), buckets in sorted(series.items()):
+        buckets.sort()
+        total = buckets[-1][1]
+        if total <= 0:
+            continue
+        parts = []
+        for q in quantiles:
+            edge = next(e for e, c in buckets if c >= q * total)
+            bound = "+Inf" if edge == float("inf") else f"{edge}s"
+            parts.append(f"p{int(q * 100)} <= {bound}")
+        label = f"{{{rest}}}" if rest else ""
+        lines.append(f"tail {bench} {family}{label}: {', '.join(parts)} (n={int(total)})")
+    return lines
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
@@ -73,19 +130,32 @@ def main():
 
     current = {}
     loaded_reports = {}
+    histograms = {}
     for path in args.reports:
         with open(path) as fh:
             report = json.load(fh)
-        loaded_reports[report.get("bench", path)] = report
+        name = report.get("bench", path)
+        loaded_reports[name] = report
         current.update(flatten(report))
+        samples = histogram_samples(report)
+        if samples:
+            histograms[name] = samples
+            for line in tail_lines(name, samples):
+                print(line)
 
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(
-                {"metrics": current, "reports": loaded_reports}, fh, indent=2, sort_keys=True
+                {"metrics": current, "histograms": histograms, "reports": loaded_reports},
+                fh,
+                indent=2,
+                sort_keys=True,
             )
             fh.write("\n")
-        print(f"merged artifact -> {args.out} ({len(current)} metrics)")
+        print(
+            f"merged artifact -> {args.out} "
+            f"({len(current)} metrics, {len(histograms)} histogram set(s))"
+        )
 
     if args.update_baseline:
         floors = {

@@ -14,12 +14,23 @@
 
 use ising_dgx::coordinator::farm::{run_farm, FarmConfig, FarmEngine};
 use ising_dgx::lattice::Geometry;
+use ising_dgx::obs::Registry;
+use ising_dgx::server::wire::MetricsSnapshot;
 use ising_dgx::util::bench::{quick_mode, write_report};
 use ising_dgx::util::json::{obj, Json};
 use ising_dgx::util::{units, Table};
 
-/// One farm measurement: aggregate wall-clock flips/ns.
-fn farm_rate(engine: FarmEngine, size: usize, replicas: usize, samples: usize, thin: u64) -> f64 {
+/// One farm measurement: aggregate wall-clock flips/ns. Each run's wall
+/// duration also lands in the shared slice histogram so the perf gate
+/// can track tail latency, not just the headline rate.
+fn farm_rate(
+    metrics: &Registry,
+    engine: FarmEngine,
+    size: usize,
+    replicas: usize,
+    samples: usize,
+    thin: u64,
+) -> f64 {
     let cfg = FarmConfig {
         geom: Geometry::square(size).unwrap(),
         betas: vec![ising_dgx::coordinator::farm::BETA_C],
@@ -33,6 +44,12 @@ fn farm_rate(engine: FarmEngine, size: usize, replicas: usize, samples: usize, t
         engine,
     };
     let result = run_farm(&cfg).expect("bench farm must run");
+    metrics.observe(
+        "ising_slice_duration_seconds",
+        "Wall duration of farm passes (scheduler slices and full runs).",
+        &[("engine", engine.name())],
+        result.wall.as_secs_f64(),
+    );
     result.flips_per_ns_wall()
 }
 
@@ -49,10 +66,11 @@ fn main() {
         "batch_farm — single-β {size}² grids, 1 worker, flips/ns (wall)"
     )
     .as_str());
+    let metrics = Registry::new();
     let mut rows = Vec::new();
     for &replicas in replica_grids {
-        let multispin = farm_rate(FarmEngine::Multispin, size, replicas, samples, thin);
-        let batch = farm_rate(FarmEngine::Batch, size, replicas, samples, thin);
+        let multispin = farm_rate(&metrics, FarmEngine::Multispin, size, replicas, samples, thin);
+        let batch = farm_rate(&metrics, FarmEngine::Batch, size, replicas, samples, thin);
         let speedup = batch / multispin;
         table.row(&[
             replicas.to_string(),
@@ -83,6 +101,10 @@ fn main() {
             ("thin", Json::Num(thin as f64)),
             ("workers", Json::Num(1.0)),
             ("rows", Json::Arr(rows)),
+            // Exposition-shaped duration samples: perf_gate.py forwards
+            // the histogram series into the merged BENCH_ci.json so CI
+            // tracks slice tail latency alongside the rate floors.
+            ("metrics", MetricsSnapshot::from_registry(&metrics).to_json()),
         ]),
     );
 }

@@ -24,7 +24,7 @@ const KNOWN: &[&str] = &[
     "burn-in", "samples", "thin", "shards",
     // Fleet wiring.
     "addr", "heartbeat-ms", "dead-after-ms", "lease-ms", "poll-ms",
-    "checkpoint-dir", "resume", "report", "config",
+    "checkpoint-dir", "resume", "report", "config", "trace-out",
 ];
 
 /// Resolve flags + optional config file into the job and fleet configs.
@@ -46,6 +46,9 @@ fn resolve(args: &Args) -> Result<(FarmConfig, FleetConfig)> {
     fleet.poll_ms = args.opt_parse("poll-ms", fleet.poll_ms)?;
     if let Some(dir) = args.opt("checkpoint-dir") {
         fleet.checkpoint_dir = PathBuf::from(dir);
+    }
+    if let Some(path) = args.opt("trace-out") {
+        fleet.trace_out = Some(PathBuf::from(path));
     }
     fleet.validate()?;
     Ok((spec.resolve()?, fleet))
@@ -90,9 +93,18 @@ pub fn exec(args: &Args) -> Result<()> {
         state.requeue_count(),
         state.resumed_count(),
     );
+    let obs = state.obs();
+    println!("  metrics:");
+    for line in obs.metrics.summary_lines() {
+        println!("    {line}");
+    }
     if let Some(path) = args.opt("report") {
         std::fs::write(path, &report)?;
         println!("  report: bit-exact replica series written to {path}");
+    }
+    if let Some(path) = &fleet.trace_out {
+        let n = crate::obs::write_trace_jsonl(&obs, path)?;
+        println!("  trace: {n} event(s) written to {}", path.display());
     }
     Ok(())
 }

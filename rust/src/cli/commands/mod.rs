@@ -6,6 +6,7 @@ pub mod run;
 pub mod scaling;
 pub mod serve;
 pub mod sweep;
+pub mod trace;
 pub mod validate;
 
 use crate::algorithms::{

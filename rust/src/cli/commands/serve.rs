@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 
 const KNOWN: &[&str] = &[
     "addr", "workers", "queue-depth", "checkpoint-dir", "checkpoint-every",
-    "slice-samples", "config", "coordinator", "worker-name",
+    "slice-samples", "config", "coordinator", "worker-name", "trace-out",
 ];
 
 /// Resolve flags + optional config file into a validated `ServerConfig`.
@@ -34,6 +34,9 @@ fn resolve(args: &Args) -> Result<ServerConfig> {
             Error::Usage(format!("cannot parse --slice-samples value '{s}'"))
         })?;
         cfg.slice_samples = Some(n);
+    }
+    if let Some(path) = args.opt("trace-out") {
+        cfg.trace_out = Some(PathBuf::from(path));
     }
     cfg.validate()?;
     Ok(cfg)

@@ -11,6 +11,7 @@ use crate::cli::args::Args;
 use crate::coordinator::checkpoint::CheckpointSpec;
 use crate::coordinator::farm::{run_farm_checkpointed, FarmOutcome, FarmResult};
 use crate::error::{Error, Result};
+use crate::obs::{clock, Obs};
 use crate::server::wire::JobSpec;
 use crate::util::{units, Table};
 use std::path::PathBuf;
@@ -19,6 +20,7 @@ const KNOWN: &[&str] = &[
     "size", "engine", "betas", "beta-points", "replicas", "seed", "workers", "shards",
     "burn-in", "samples", "thin", "threaded-shards", "quiet",
     "checkpoint-dir", "checkpoint-every", "resume", "max-samples", "report",
+    "trace-out",
 ];
 
 /// Write the bit-exact per-replica report ([`FarmResult::replica_report`],
@@ -107,6 +109,12 @@ pub fn exec(args: &Args) -> Result<()> {
         );
     }
 
+    // Instrumentation lives entirely at this layer: the farm reports
+    // pure flip/accept counters and its own wall duration, so tracing
+    // cannot perturb the bit-exact replica report.
+    let obs = Obs::new("sweep");
+    let engine = cfg.engine.name();
+    let farm_start = clock::now();
     let result = match run_farm_checkpointed(&cfg, spec.as_ref())? {
         FarmOutcome::Complete(r) => r,
         FarmOutcome::Interrupted { completed, total } => {
@@ -119,6 +127,20 @@ pub fn exec(args: &Args) -> Result<()> {
             return Ok(());
         }
     };
+    obs.metrics.observe(
+        "ising_slice_duration_seconds",
+        "Wall duration of farm passes (scheduler slices and full runs).",
+        &[("engine", engine)],
+        result.wall.as_secs_f64(),
+    );
+    result.record_metrics(&obs.metrics, engine);
+    obs.trace.complete(
+        "farm",
+        "sweep",
+        "main",
+        farm_start,
+        &[("engine", engine)],
+    );
 
     if !args.flag("quiet") {
         let mut table = Table::new(&[
@@ -165,9 +187,19 @@ pub fn exec(args: &Args) -> Result<()> {
         result.parallel_efficiency() * 100.0,
         result.workers
     );
+    if !args.flag("quiet") {
+        println!("  metrics:");
+        for line in obs.metrics.summary_lines() {
+            println!("    {line}");
+        }
+    }
     if let Some(path) = args.opt("report") {
         write_report(&result, path)?;
         println!("  report: bit-exact replica series written to {path}");
+    }
+    if let Some(path) = args.opt("trace-out") {
+        let n = crate::obs::write_trace_jsonl(&obs, PathBuf::from(path).as_path())?;
+        println!("  trace: {n} event(s) written to {path}");
     }
     Ok(())
 }

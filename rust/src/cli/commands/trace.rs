@@ -1,0 +1,115 @@
+//! `ising trace` — merge per-process JSONL trace files (one from the
+//! coordinator, one per worker, written via `--trace-out`) into a single
+//! Chrome trace-event JSON document for chrome://tracing / Perfetto.
+//!
+//! Each input file carries its own process lane (the `pid` field every
+//! event was stamped with); the merge maps lanes to integers, emits the
+//! naming metadata, and re-bases timestamps to the earliest event, so
+//! the per-unit lease → run → checkpoint → upload → splice timeline
+//! lines up across processes on one shared clock axis.
+
+use crate::cli::args::Args;
+use crate::error::{Error, Result};
+use crate::obs::trace::{merge_chrome, parse_jsonl, TraceEvent};
+use std::path::Path;
+
+const KNOWN: &[&str] = &["out"];
+
+/// Merge already-parsed event batches into the Chrome document (the
+/// testable core of the subcommand). Events are ordered by wall
+/// timestamp first so process/thread lanes appear in chronological
+/// first-activity order regardless of the input file order.
+pub fn merge_events(mut events: Vec<TraceEvent>) -> crate::util::Json {
+    events.sort_by(|a, b| {
+        a.ts.cmp(&b.ts).then_with(|| a.pid.cmp(&b.pid)).then_with(|| a.tid.cmp(&b.tid))
+    });
+    merge_chrome(&events)
+}
+
+/// Execute the subcommand.
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    if args.positional.is_empty() {
+        return Err(Error::Usage(
+            "usage: ising trace FILE.jsonl [FILE.jsonl ...] [--out trace.json]".into(),
+        ));
+    }
+    let mut events: Vec<TraceEvent> = Vec::new();
+    for path in &args.positional {
+        let src = std::fs::read_to_string(Path::new(path))
+            .map_err(|e| Error::Usage(format!("cannot read trace file '{path}': {e}")))?;
+        let batch = parse_jsonl(&src)
+            .map_err(|e| Error::Usage(format!("trace file '{path}': {e}")))?;
+        println!("  {path}: {} event(s)", batch.len());
+        events.extend(batch);
+    }
+    let total = events.len();
+    let doc = merge_events(events);
+    let out = args.opt("out").unwrap_or("trace.json");
+    std::fs::write(out, doc.to_string_compact())?;
+    println!(
+        "ising trace: {total} event(s) from {} file(s) merged into {out} \
+         (open with chrome://tracing or https://ui.perfetto.dev)",
+        args.positional.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::to_jsonl;
+    use crate::obs::Obs;
+    use crate::util::Json;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    /// End-to-end: two processes' JSONL files merge into one loadable
+    /// Chrome document with distinct, named process lanes.
+    #[test]
+    fn merges_two_process_traces_into_chrome_json() {
+        let dir = std::env::temp_dir().join(format!("ising-trace-cli-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let coord = Obs::new("coordinator");
+        coord.trace.instant("lease", "fleet", "unit-00000", &[("worker", "w0")]);
+        let worker = Obs::new("w0");
+        worker.trace.instant("run", "worker", "unit-00000", &[]);
+        let a = dir.join("coordinator.jsonl");
+        let b = dir.join("w0.jsonl");
+        std::fs::write(&a, to_jsonl(&coord.trace.drain().0)).unwrap();
+        std::fs::write(&b, to_jsonl(&worker.trace.drain().0)).unwrap();
+        let out = dir.join("trace.json");
+        let args = parse(&[
+            "trace",
+            a.to_str().unwrap(),
+            b.to_str().unwrap(),
+            "--out",
+            out.to_str().unwrap(),
+        ]);
+        exec(&args).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+        // 2 real events + process_name and thread_name metadata per lane.
+        assert_eq!(events.len(), 6);
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| {
+                e.field("ph").and_then(|p| p.as_str().map(|s| s.to_string())).ok()
+                    == Some("M".to_string())
+            })
+            .filter_map(|e| e.path("args.name"))
+            .filter_map(|n| n.as_str().ok())
+            .collect();
+        assert!(names.contains(&"coordinator"));
+        assert!(names.contains(&"w0"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn requires_at_least_one_input_file() {
+        assert!(exec(&parse(&["trace"])).is_err());
+        assert!(exec(&parse(&["trace", "/nonexistent/x.jsonl"])).is_err());
+    }
+}

@@ -9,6 +9,7 @@
 //!   worker fleet over the /v2 protocol.
 //! * `validate`   — temperature sweep vs the Onsager solution (paper §5.3).
 //! * `scaling`  — multi-device weak/strong scaling (real slabs + DGX model).
+//! * `trace`    — merge `--trace-out` JSONL files into Chrome trace JSON.
 //! * `info`     — platform, artifact inventory, analytic constants.
 
 pub mod args;
@@ -32,20 +33,22 @@ COMMANDS:
             --betas B1,B2,... | --beta-points K
             --seed S --workers W --shards D --burn-in N --samples N --thin N
             checkpoint/restart: --checkpoint-dir DIR [--checkpoint-every N]
-            [--resume] [--max-samples N] [--report FILE]
+            [--resume] [--max-samples N] [--report FILE] [--trace-out FILE]
   serve     HTTP simulation service over the replica farm
             --addr HOST:PORT --workers W --queue-depth N
             --checkpoint-dir DIR [--checkpoint-every N] [--slice-samples N]
-            [--config FILE]   (see README \"Serving\" for the API)
+            [--config FILE] [--trace-out FILE]   (see README \"Serving\")
             fleet worker: [--coordinator http://HOST:PORT] [--worker-name NAME]
   coordinate distributed farm coordinator: shard the grid over a worker fleet
             job flags as `sweep` plus --addr HOST:PORT --checkpoint-dir DIR
             [--heartbeat-ms N] [--dead-after-ms N] [--lease-ms N] [--poll-ms N]
-            [--resume] [--report FILE] [--config FILE]
+            [--resume] [--report FILE] [--trace-out FILE] [--config FILE]
   validate  magnetization & Binder vs Onsager across temperatures
             --size N --engine E --samples N --quick
   scaling   weak/strong scaling study (native cluster + DGX-2 model)
             --mode weak|strong --size N --max-workers W
+  trace     merge --trace-out JSONL files into Chrome trace JSON
+            ising trace FILE.jsonl [FILE.jsonl ...] [--out trace.json]
   info      platform, artifacts, constants, engine matrix
             --artifacts DIR
 ";
@@ -74,7 +77,7 @@ pub fn usage() -> String {
 /// The subcommand registry: every routable name, including the help
 /// aliases — the source for unknown-command suggestions.
 pub const COMMANDS: &[&str] =
-    &["run", "sweep", "serve", "coordinate", "validate", "scaling", "info", "help"];
+    &["run", "sweep", "serve", "coordinate", "validate", "scaling", "trace", "info", "help"];
 
 /// Levenshtein edit distance (std-only; the strings are subcommand-sized,
 /// so the O(len²) two-row DP is plenty).
@@ -114,6 +117,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "coordinate" => commands::coordinate::exec(&args),
         "validate" => commands::validate::exec(&args),
         "scaling" => commands::scaling::exec(&args),
+        "trace" => commands::trace::exec(&args),
         "info" => commands::info::exec(&args),
         "" | "help" | "--help" => {
             print!("{}", usage());

@@ -340,6 +340,9 @@ pub struct ServerConfig {
     /// before a job is checkpointed and requeued at the back (`None` =
     /// run each job to completion once claimed).
     pub slice_samples: Option<u64>,
+    /// Drain the observability trace ring to this JSONL file at
+    /// shutdown (`None` = keep tracing in-memory only).
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -351,6 +354,7 @@ impl Default for ServerConfig {
             checkpoint_dir: PathBuf::from("server-jobs"),
             checkpoint_every: 8,
             slice_samples: None,
+            trace_out: None,
         }
     }
 }
@@ -361,7 +365,7 @@ impl ServerConfig {
     pub fn from_toml(doc: &Toml) -> Result<Self> {
         const KNOWN: &[&str] = &[
             "addr", "workers", "queue_depth", "checkpoint_dir", "checkpoint_every",
-            "slice_samples",
+            "slice_samples", "trace_out",
         ];
         for key in doc.section_keys("server") {
             if !KNOWN.contains(&key) {
@@ -393,6 +397,9 @@ impl ServerConfig {
             cfg.slice_samples = Some(u64::try_from(n).map_err(|_| {
                 Error::Config(format!("slice_samples {n} must be non-negative"))
             })?);
+        }
+        if let Some(v) = doc.get("server", "trace_out") {
+            cfg.trace_out = Some(PathBuf::from(v.as_str()?));
         }
         cfg.validate()?;
         Ok(cfg)
@@ -449,6 +456,9 @@ pub struct FleetConfig {
     /// Coordinator state directory: the pinned job spec, per-unit
     /// checkpoint payloads, and validated per-unit report lines.
     pub checkpoint_dir: PathBuf,
+    /// Drain the coordinator's observability trace ring to this JSONL
+    /// file after the run (`None` = keep tracing in-memory only).
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for FleetConfig {
@@ -460,6 +470,7 @@ impl Default for FleetConfig {
             lease_ms: 60_000,
             poll_ms: 200,
             checkpoint_dir: PathBuf::from("coordinator-state"),
+            trace_out: None,
         }
     }
 }
@@ -470,7 +481,7 @@ impl FleetConfig {
     pub fn from_toml(doc: &Toml) -> Result<Self> {
         const KNOWN: &[&str] = &[
             "addr", "heartbeat_ms", "dead_after_ms", "lease_ms", "poll_ms",
-            "checkpoint_dir",
+            "checkpoint_dir", "trace_out",
         ];
         for key in doc.section_keys("fleet") {
             if !KNOWN.contains(&key) {
@@ -498,6 +509,9 @@ impl FleetConfig {
         }
         if let Some(v) = doc.get("fleet", "checkpoint_dir") {
             cfg.checkpoint_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = doc.get("fleet", "trace_out") {
+            cfg.trace_out = Some(PathBuf::from(v.as_str()?));
         }
         cfg.validate()?;
         Ok(cfg)
@@ -652,7 +666,8 @@ mod tests {
     fn server_config_from_toml_and_validation() {
         let doc = Toml::parse(
             "[server]\naddr = \"0.0.0.0:8080\"\nworkers = 4\nqueue_depth = 8\n\
-             checkpoint_dir = \"jobs\"\ncheckpoint_every = 2\nslice_samples = 64\n",
+             checkpoint_dir = \"jobs\"\ncheckpoint_every = 2\nslice_samples = 64\n\
+             trace_out = \"serve.trace.jsonl\"\n",
         )
         .unwrap();
         let cfg = ServerConfig::from_toml(&doc).unwrap();
@@ -662,6 +677,7 @@ mod tests {
         assert_eq!(cfg.checkpoint_dir, PathBuf::from("jobs"));
         assert_eq!(cfg.checkpoint_every, 2);
         assert_eq!(cfg.slice_samples, Some(64));
+        assert_eq!(cfg.trace_out, Some(PathBuf::from("serve.trace.jsonl")));
         // No [server] section at all: defaults.
         let cfg = ServerConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(cfg, ServerConfig::default());
@@ -684,10 +700,12 @@ mod tests {
     fn fleet_config_from_toml_and_validation() {
         let doc = Toml::parse(
             "[fleet]\naddr = \"0.0.0.0:7627\"\nheartbeat_ms = 500\ndead_after_ms = 2000\n\
-             lease_ms = 30000\npoll_ms = 100\ncheckpoint_dir = \"farm-state\"\n",
+             lease_ms = 30000\npoll_ms = 100\ncheckpoint_dir = \"farm-state\"\n\
+             trace_out = \"coord.trace.jsonl\"\n",
         )
         .unwrap();
         let cfg = FleetConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.trace_out, Some(PathBuf::from("coord.trace.jsonl")));
         assert_eq!(cfg.addr, "0.0.0.0:7627");
         assert_eq!(cfg.heartbeat_ms, 500);
         assert_eq!(cfg.dead_after_ms, 2000);

@@ -316,6 +316,42 @@ impl FarmResult {
         out
     }
 
+    /// Record this result into a metrics registry under an `engine`
+    /// label. Everything recorded here is derived from already-measured
+    /// counters and the farm's own wall duration — no clock reads, so
+    /// the det-zone invariant (timing never feeds trajectory state)
+    /// holds by construction.
+    pub fn record_metrics(&self, reg: &crate::obs::Registry, engine: &str) {
+        let labels = [("engine", engine)];
+        reg.counter(
+            "ising_replicas_completed_total",
+            "Replicas finished across farm runs.",
+            &labels,
+            self.replicas.len() as f64,
+        );
+        reg.counter(
+            "ising_flips_total",
+            "Spin-flip attempts accumulated across farm runs.",
+            &labels,
+            self.aggregate.flips as f64,
+        );
+        reg.gauge(
+            "ising_engine_flips_per_ns",
+            "Wall-clock flips/ns of the most recent completed farm run.",
+            &labels,
+            self.flips_per_ns_wall(),
+        );
+        let eff = self.parallel_efficiency();
+        if eff.is_finite() {
+            reg.gauge(
+                "ising_parallel_efficiency",
+                "Summed replica sweep time / (workers x wall) of the last run.",
+                &labels,
+                eff,
+            );
+        }
+    }
+
     /// Group replicas by β (grid order), pooling every seed's samples into
     /// one [`BinderAccumulator`] per β — the Fig. 6 curve points.
     pub fn by_beta(&self) -> Vec<(f32, BinderAccumulator)> {

@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod error;
 pub mod lattice;
 pub mod lint;
+pub mod obs;
 pub mod observables;
 pub mod rng;
 pub mod runtime;

@@ -22,6 +22,11 @@
 //!   [`LOCK_ORDER`]; nested acquisitions against table order, re-locks,
 //!   bare `.lock().unwrap()`, and locks in undeclared modules are all
 //!   flagged.
+//! - **clock** — wall-clock access is confined to `obs/clock.rs`: the
+//!   identifiers `Instant`/`SystemTime` anywhere else are findings (det
+//!   zones already ban them via zone-api), so every timing read goes
+//!   through the opaque `obs::clock::Tick` handle and the determinism
+//!   story stays grep-able from one chokepoint.
 //! - **wire-drift** — every `server/wire.rs` message type with a
 //!   `from_json` decoder must have a roundtrip case in
 //!   `rust/tests/fuzz_parsers.rs` (the `config::ENGINES` anti-drift
@@ -37,8 +42,8 @@ pub mod lexer;
 pub mod rules;
 
 pub use rules::{
-    check_file, RULE_ALLOW, RULE_DEPS, RULE_FLOAT_SUM, RULE_INDEX, RULE_LOCK, RULE_PANIC,
-    RULE_WIRE, RULE_ZONE,
+    check_file, RULE_ALLOW, RULE_CLOCK, RULE_DEPS, RULE_FLOAT_SUM, RULE_INDEX, RULE_LOCK,
+    RULE_PANIC, RULE_WIRE, RULE_ZONE,
 };
 
 use std::fmt;
@@ -84,12 +89,21 @@ pub struct FileClass {
     pub index_audit: bool,
     /// Declared lock module: full lock-discipline analysis.
     pub lock_audit: bool,
+    /// Clock confinement: `Instant`/`SystemTime` are findings here
+    /// (every file except `obs/clock.rs`; det zones report via
+    /// zone-api instead to avoid double diagnostics).
+    pub clock_audit: bool,
 }
 
 impl FileClass {
     /// No rules (the baseline every file starts from).
-    pub const NONE: FileClass =
-        FileClass { det_zone: false, panic_audit: false, index_audit: false, lock_audit: false };
+    pub const NONE: FileClass = FileClass {
+        det_zone: false,
+        panic_audit: false,
+        index_audit: false,
+        lock_audit: false,
+        clock_audit: false,
+    };
 }
 
 /// One row of the declared lock-order table.
@@ -123,6 +137,10 @@ pub const LOCK_ORDER: &[LockSpec] = &[
     LockSpec { file: "server/queue.rs", receiver: "state" },
     LockSpec { file: "coordinator/checkpoint.rs", receiver: "manifest" },
     LockSpec { file: "coordinator/farm.rs", receiver: "slots" },
+    // Observability leaves: safe to take while holding any lock above,
+    // never the other way around.
+    LockSpec { file: "obs/metrics.rs", receiver: "families" },
+    LockSpec { file: "obs/trace.rs", receiver: "events" },
 ];
 
 /// Crates the root `[dependencies]` table may contain (the in-tree
@@ -136,6 +154,7 @@ pub fn classify(rel: &str) -> FileClass {
         panic_audit: rel.starts_with("server/") || rel.starts_with("coordinator/"),
         index_audit: rel.starts_with("server/"),
         lock_audit: LOCK_ORDER.iter().any(|s| s.file == rel),
+        clock_audit: !DET_ZONES.iter().any(|z| rel.starts_with(z)) && rel != "obs/clock.rs",
     }
 }
 
@@ -326,6 +345,14 @@ mod tests {
         assert!(c.panic_audit && !c.index_audit && !c.det_zone);
         let f = classify("coordinator/farm.rs");
         assert!(f.det_zone && f.lock_audit);
+        // Clock confinement: everywhere except det zones (zone-api
+        // already covers those) and the chokepoint itself.
+        assert!(s.clock_audit && c.clock_audit);
+        assert!(!z.clock_audit && !f.clock_audit);
+        assert!(!classify("obs/clock.rs").clock_audit);
+        let m = classify("obs/metrics.rs");
+        assert!(m.lock_audit && m.clock_audit && !m.det_zone && !m.panic_audit);
+        assert!(classify("obs/trace.rs").lock_audit);
     }
 
     #[test]

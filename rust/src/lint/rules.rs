@@ -17,6 +17,8 @@ pub const RULE_PANIC: &str = "panic";
 pub const RULE_INDEX: &str = "index";
 /// Rule: lock-order / poisoning-discipline violation.
 pub const RULE_LOCK: &str = "lock";
+/// Rule: wall-clock identifier outside `obs/clock.rs`.
+pub const RULE_CLOCK: &str = "clock";
 /// Rule: wire message type without a fuzz roundtrip case.
 pub const RULE_WIRE: &str = "wire-drift";
 /// Rule: dependency outside the std-only policy.
@@ -69,6 +71,9 @@ pub fn check_file(rel: &str, src: &str, class: &FileClass, locks: &[LockSpec]) -
         lock_rule(rel, toks, &exempt, locks, &mut raw);
     } else {
         undeclared_lock_module_rule(rel, toks, &exempt, &mut raw);
+    }
+    if class.clock_audit {
+        clock_rule(rel, toks, &exempt, &mut raw);
     }
 
     // Apply allow-annotations: an allowable diagnostic is suppressed by
@@ -624,6 +629,32 @@ fn let_binding_name(toks: &[Tok], lock_idx: usize) -> Option<String> {
     None
 }
 
+/// Clock confinement: outside `obs/clock.rs` (and deterministic zones,
+/// which zone-api already covers), the identifiers `Instant` and
+/// `SystemTime` are findings — all timing goes through the opaque
+/// `obs::clock::Tick` handle so wall-clock access stays grep-able from
+/// one chokepoint. Not allowable: route the read through `obs::clock`.
+fn clock_rule(rel: &str, toks: &[Tok], exempt: &[bool], out: &mut Vec<Diagnostic>) {
+    for (i, t) in toks.iter().enumerate() {
+        if exempt[i] || t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "Instant" || t.text == "SystemTime" {
+            out.push(Diagnostic::new(
+                rel,
+                t.line,
+                t.col,
+                RULE_CLOCK,
+                format!(
+                    "{} outside obs/clock.rs; use obs::clock::{{now, Tick, wall_micros}} so \
+                     wall-clock access stays confined to the chokepoint",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
 /// Outside the declared lock modules, any `Mutex`/`Condvar`/`RwLock`
 /// usage means a new lock exists that the order table does not know
 /// about — it must be declared before it lands.
@@ -658,7 +689,13 @@ mod tests {
     use super::*;
 
     fn class_all() -> FileClass {
-        FileClass { det_zone: true, panic_audit: true, index_audit: true, lock_audit: false }
+        FileClass {
+            det_zone: true,
+            panic_audit: true,
+            index_audit: true,
+            lock_audit: false,
+            clock_audit: false,
+        }
     }
 
     #[test]
@@ -712,5 +749,22 @@ mod tests {
     fn literal_index_and_full_range_are_fine() {
         let src = "fn f(v: &[u8]) -> u8 { let w = &v[..]; w[0] }";
         assert!(check_file("server/x.rs", src, &class_all(), &[]).is_empty());
+    }
+
+    #[test]
+    fn clock_rule_flags_wall_clock_idents_and_is_not_allowable() {
+        let class = FileClass { clock_audit: true, ..FileClass::NONE };
+        let ok = "fn f() { let t = crate::obs::clock::now(); t.elapsed(); }";
+        assert!(check_file("server/x.rs", ok, &class, &[]).is_empty());
+        let bad = "use std::time::Instant;\nfn f() { let _ = Instant::now(); }\n";
+        let diags = check_file("server/x.rs", bad, &class, &[]);
+        assert_eq!(diags.len(), 2);
+        assert!(diags.iter().all(|d| d.rule == RULE_CLOCK), "{diags:?}");
+        let annotated = "// lint: allow(clock, \"special\")\nfn f(t: std::time::SystemTime) {}\n";
+        let diags = check_file("server/x.rs", annotated, &class, &[]);
+        // The annotation itself is rejected and the finding stays.
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().any(|d| d.rule == RULE_ALLOW));
+        assert!(diags.iter().any(|d| d.rule == RULE_CLOCK));
     }
 }

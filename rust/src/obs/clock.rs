@@ -1,0 +1,83 @@
+//! The single wall-clock chokepoint of the crate.
+//!
+//! `ising-lint` forbids the identifiers `Instant` and `SystemTime`
+//! everywhere except this file (the `clock` rule; deterministic zones
+//! already ban them via `zone-api`), so every timing read in the server,
+//! coordinator, worker and CLI layers goes through the opaque [`Tick`]
+//! handle and [`wall_micros`]. That makes the determinism story
+//! machine-checkable: engines and the farm can *never* see a clock, and
+//! a grep for `obs::clock` finds every place time enters the system.
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// An opaque monotonic timestamp. Deliberately *not* convertible to a
+/// calendar time: a `Tick` can only be compared with other `Tick`s or
+/// advanced by a `Duration`, which is exactly what lease deadlines,
+/// liveness supervision and span timing need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Tick(Instant);
+
+impl Tick {
+    /// Time elapsed since this tick was taken.
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    /// Time between `earlier` and this tick (zero if `earlier` is
+    /// actually later — the saturating form, so supervision arithmetic
+    /// can never panic on reordered reads).
+    pub fn duration_since(&self, earlier: Tick) -> Duration {
+        self.0.saturating_duration_since(earlier.0)
+    }
+
+    /// This tick advanced by `d` (saturating at the far future — a
+    /// deadline that cannot be represented simply never expires).
+    pub fn plus(&self, d: Duration) -> Tick {
+        Tick(self.0.checked_add(d).unwrap_or(self.0))
+    }
+}
+
+/// The current monotonic instant.
+pub fn now() -> Tick {
+    Tick(Instant::now())
+}
+
+/// Microseconds since the Unix epoch (trace-event timestamps — Chrome's
+/// trace format counts in µs). Clamped to zero if the system clock sits
+/// before the epoch; trace merging only uses differences.
+pub fn wall_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_are_monotone_and_comparable() {
+        let a = now();
+        let b = now();
+        assert!(b >= a);
+        assert_eq!(a.duration_since(b), Duration::ZERO, "saturating, never panics");
+        assert!(b.duration_since(a) <= a.elapsed());
+    }
+
+    #[test]
+    fn plus_builds_future_deadlines() {
+        let a = now();
+        let d = a.plus(Duration::from_secs(5));
+        assert!(d > a);
+        assert!(d.duration_since(a) >= Duration::from_secs(5));
+    }
+
+    #[test]
+    fn wall_micros_is_epoch_scaled() {
+        let t = wall_micros();
+        // Past 2020-01-01 in µs, and not absurdly far in the future.
+        assert!(t > 1_577_836_800_000_000, "wall clock before 2020? {t}");
+        assert!(wall_micros() >= t);
+    }
+}

@@ -1,0 +1,385 @@
+//! A std-only metrics registry: counters, gauges and fixed-bucket
+//! histograms behind one leaf mutex, rendered as Prometheus
+//! text-exposition format (`GET /v2/metrics` on `ising serve` and
+//! `ising coordinate`) and flattened into [`Sample`] lists for the
+//! `MetricsSnapshot` wire type, bench reports and CLI summary blocks.
+//!
+//! The registry is *instance-based* — no global state. Each scheduler,
+//! fleet coordinator and CLI run owns its own [`Registry`] (shared via
+//! `Arc<Obs>`), so parallel in-process tests never observe each other.
+//! All update paths are per-request or per-slice, never per-flip, so a
+//! single mutex is far from any hot path.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// Default duration buckets (seconds): spans request handling at the
+/// low end through multi-minute farm slices at the high end.
+pub const DURATION_BUCKETS: &[f64] = &[0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0, 60.0];
+
+/// One flattened sample: exactly one exposition line. Histograms
+/// flatten into their `_bucket`/`_sum`/`_count` series.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// Metric name (with the `_bucket`/`_sum`/`_count` suffix for
+    /// histogram-derived series).
+    pub name: String,
+    /// Rendered label pairs without braces (`worker="a",le="0.5"`),
+    /// empty for unlabeled series.
+    pub labels: String,
+    /// Family kind: `counter`, `gauge` or `histogram`.
+    pub kind: String,
+    /// Sample value.
+    pub value: f64,
+}
+
+enum Value {
+    Counter(f64),
+    Gauge(f64),
+    Histogram { bounds: Vec<f64>, counts: Vec<u64>, sum: f64, count: u64 },
+}
+
+struct Family {
+    kind: &'static str,
+    help: String,
+    series: BTreeMap<String, Value>,
+}
+
+/// The registry: named families of labeled series.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+/// Render label pairs as `k="v",...` (no braces), escaping the three
+/// characters the exposition format reserves in label values.
+pub fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+        let _ = write!(out, "{k}=\"{escaped}\"");
+    }
+    out
+}
+
+fn series_name(name: &str, labels: &str) -> String {
+    if labels.is_empty() { name.to_string() } else { format!("{name}{{{labels}}}") }
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn update(
+        &self,
+        name: &str,
+        help: &str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        apply: impl FnOnce(&mut Value),
+        fresh: impl FnOnce() -> Value,
+    ) {
+        let key = render_labels(labels);
+        let mut families = self.families.lock().expect("metrics registry poisoned");
+        let family = families.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help: help.to_string(),
+            series: BTreeMap::new(),
+        });
+        if family.kind != kind {
+            // A name registered under a different kind: keep the first
+            // registration, drop the conflicting update (metrics must
+            // never panic the process they observe).
+            return;
+        }
+        apply(family.series.entry(key).or_insert_with(fresh));
+    }
+
+    /// Add `delta` to a counter (creating it at zero).
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)], delta: f64) {
+        self.update(
+            name,
+            help,
+            "counter",
+            labels,
+            |v| {
+                if let Value::Counter(c) = v {
+                    *c += delta;
+                }
+            },
+            || Value::Counter(0.0),
+        );
+    }
+
+    /// Set a gauge to `value`.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.update(
+            name,
+            help,
+            "gauge",
+            labels,
+            |v| {
+                if let Value::Gauge(g) = v {
+                    *g = value;
+                }
+            },
+            || Value::Gauge(value),
+        );
+    }
+
+    /// Observe `value` into a histogram with [`DURATION_BUCKETS`].
+    pub fn observe(&self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.observe_with(name, help, labels, DURATION_BUCKETS, value);
+    }
+
+    /// Observe `value` into a histogram with explicit bucket bounds
+    /// (ascending upper edges; `+Inf` is implicit).
+    pub fn observe_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+        value: f64,
+    ) {
+        self.update(
+            name,
+            help,
+            "histogram",
+            labels,
+            |v| {
+                if let Value::Histogram { bounds, counts, sum, count } = v {
+                    for (edge, c) in bounds.iter().zip(counts.iter_mut()) {
+                        if value <= *edge {
+                            *c += 1;
+                        }
+                    }
+                    *sum += value;
+                    *count += 1;
+                }
+            },
+            || Value::Histogram {
+                bounds: bounds.to_vec(),
+                counts: vec![0; bounds.len()],
+                sum: 0.0,
+                count: 0,
+            },
+        );
+    }
+
+    /// Flatten every series into exposition-line samples, family order
+    /// (BTreeMap: stable and sorted).
+    pub fn samples(&self) -> Vec<Sample> {
+        let families = self.families.lock().expect("metrics registry poisoned");
+        let mut out = Vec::new();
+        for (name, family) in families.iter() {
+            let kind = family.kind.to_string();
+            for (labels, value) in &family.series {
+                match value {
+                    Value::Counter(v) | Value::Gauge(v) => out.push(Sample {
+                        name: name.clone(),
+                        labels: labels.clone(),
+                        kind: kind.clone(),
+                        value: *v,
+                    }),
+                    Value::Histogram { bounds, counts, sum, count } => {
+                        // Bucket counts are cumulative on the wire.
+                        for (edge, c) in bounds.iter().zip(counts.iter()) {
+                            let le = format!("le=\"{edge}\"");
+                            let labels = if labels.is_empty() {
+                                le
+                            } else {
+                                format!("{labels},{le}")
+                            };
+                            out.push(Sample {
+                                name: format!("{name}_bucket"),
+                                labels,
+                                kind: kind.clone(),
+                                value: *c as f64,
+                            });
+                        }
+                        let inf = if labels.is_empty() {
+                            "le=\"+Inf\"".to_string()
+                        } else {
+                            format!("{labels},le=\"+Inf\"")
+                        };
+                        out.push(Sample {
+                            name: format!("{name}_bucket"),
+                            labels: inf,
+                            kind: kind.clone(),
+                            value: *count as f64,
+                        });
+                        out.push(Sample {
+                            name: format!("{name}_sum"),
+                            labels: labels.clone(),
+                            kind: kind.clone(),
+                            value: *sum,
+                        });
+                        out.push(Sample {
+                            name: format!("{name}_count"),
+                            labels: labels.clone(),
+                            kind: kind.clone(),
+                            value: *count as f64,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the Prometheus text-exposition body (`# HELP` / `# TYPE`
+    /// headers per family, one line per sample, trailing newline).
+    pub fn render(&self) -> String {
+        let families = self.families.lock().expect("metrics registry poisoned");
+        let mut out = String::new();
+        for (name, family) in families.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", family.help);
+            let _ = writeln!(out, "# TYPE {name} {}", family.kind);
+            for (labels, value) in &family.series {
+                match value {
+                    Value::Counter(v) | Value::Gauge(v) => {
+                        let _ = writeln!(out, "{} {v}", series_name(name, labels));
+                    }
+                    Value::Histogram { bounds, counts, sum, count } => {
+                        for (edge, c) in bounds.iter().zip(counts.iter()) {
+                            let le = format!("le=\"{edge}\"");
+                            let all = if labels.is_empty() {
+                                le
+                            } else {
+                                format!("{labels},{le}")
+                            };
+                            let _ = writeln!(out, "{name}_bucket{{{all}}} {c}");
+                        }
+                        let inf = if labels.is_empty() {
+                            "le=\"+Inf\"".to_string()
+                        } else {
+                            format!("{labels},le=\"+Inf\"")
+                        };
+                        let _ = writeln!(out, "{name}_bucket{{{inf}}} {count}");
+                        let _ = writeln!(out, "{name}_sum{} {sum}", braced(labels));
+                        let _ = writeln!(out, "{name}_count{} {count}", braced(labels));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Human-oriented summary lines (the `ising sweep` / `coordinate`
+    /// final metrics block): counters and gauges verbatim, histograms
+    /// as `count / sum`.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let families = self.families.lock().expect("metrics registry poisoned");
+        let mut out = Vec::new();
+        for (name, family) in families.iter() {
+            for (labels, value) in &family.series {
+                let series = series_name(name, labels);
+                match value {
+                    Value::Counter(v) | Value::Gauge(v) => out.push(format!("{series} = {v}")),
+                    Value::Histogram { sum, count, .. } => out.push(format!(
+                        "{series} = {count} observation(s), {sum:.6}s total"
+                    )),
+                }
+            }
+        }
+        out
+    }
+}
+
+fn braced(labels: &str) -> String {
+    if labels.is_empty() { String::new() } else { format!("{{{labels}}}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let reg = Registry::new();
+        reg.counter("req_total", "requests", &[("code", "200")], 1.0);
+        reg.counter("req_total", "requests", &[("code", "200")], 2.0);
+        reg.counter("req_total", "requests", &[("code", "429")], 1.0);
+        reg.gauge("depth", "queue depth", &[], 8.0);
+        reg.gauge("depth", "queue depth", &[], 3.0);
+        let text = reg.render();
+        assert!(text.contains("# HELP req_total requests\n"), "{text}");
+        assert!(text.contains("# TYPE req_total counter\n"), "{text}");
+        assert!(text.contains("req_total{code=\"200\"} 3\n"), "{text}");
+        assert!(text.contains("req_total{code=\"429\"} 1\n"), "{text}");
+        assert!(text.contains("# TYPE depth gauge\n"), "{text}");
+        assert!(text.contains("\ndepth 3\n"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let reg = Registry::new();
+        for v in [0.0004, 0.003, 0.003, 0.09, 7.0] {
+            reg.observe("dur_seconds", "durations", &[("op", "x")], v);
+        }
+        let text = reg.render();
+        assert!(text.contains("dur_seconds_bucket{op=\"x\",le=\"0.001\"} 1\n"), "{text}");
+        assert!(text.contains("dur_seconds_bucket{op=\"x\",le=\"0.005\"} 3\n"), "{text}");
+        assert!(text.contains("dur_seconds_bucket{op=\"x\",le=\"0.1\"} 4\n"), "{text}");
+        assert!(text.contains("dur_seconds_bucket{op=\"x\",le=\"10\"} 5\n"), "{text}");
+        assert!(text.contains("dur_seconds_bucket{op=\"x\",le=\"+Inf\"} 5\n"), "{text}");
+        assert!(text.contains("dur_seconds_count{op=\"x\"} 5\n"), "{text}");
+        let sum: f64 = 0.0004 + 0.003 + 0.003 + 0.09 + 7.0;
+        assert!(text.contains(&format!("dur_seconds_sum{{op=\"x\"}} {sum}\n")), "{text}");
+    }
+
+    #[test]
+    fn samples_flatten_every_exposition_line() {
+        let reg = Registry::new();
+        reg.counter("a_total", "a", &[], 2.0);
+        reg.observe_with("b_seconds", "b", &[], &[1.0], 0.5);
+        let samples = reg.samples();
+        let names: Vec<&str> = samples.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["a_total", "b_seconds_bucket", "b_seconds_bucket", "b_seconds_sum", "b_seconds_count"]
+        );
+        assert_eq!(samples[0].kind, "counter");
+        assert_eq!(samples[1].labels, "le=\"1\"");
+        assert_eq!(samples[2].labels, "le=\"+Inf\"");
+        assert_eq!(samples[3].value, 0.5);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter("esc_total", "esc", &[("k", "a\"b\\c\nd")], 1.0);
+        let text = reg.render();
+        assert!(text.contains("esc_total{k=\"a\\\"b\\\\c\\nd\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn kind_conflicts_are_dropped_not_panicked() {
+        let reg = Registry::new();
+        reg.counter("x", "first", &[], 1.0);
+        reg.gauge("x", "second", &[], 9.0);
+        let text = reg.render();
+        assert!(text.contains("# TYPE x counter"), "{text}");
+        assert!(text.contains("\nx 1\n"), "{text}");
+    }
+
+    #[test]
+    fn summary_lines_cover_all_kinds() {
+        let reg = Registry::new();
+        reg.counter("c_total", "c", &[("k", "v")], 4.0);
+        reg.observe("d_seconds", "d", &[], 0.25);
+        let lines = reg.summary_lines();
+        assert!(lines.iter().any(|l| l == "c_total{k=\"v\"} = 4"), "{lines:?}");
+        assert!(
+            lines.iter().any(|l| l.starts_with("d_seconds = 1 observation(s)")),
+            "{lines:?}"
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Observability: metrics, structured trace events, and the crate's
+//! single wall-clock chokepoint.
+//!
+//! Three invariants, all machine-checked by `ising-lint`:
+//!
+//! 1. **Clock confinement** — `Instant`/`SystemTime` appear only in
+//!    [`clock`]; everything else handles opaque [`clock::Tick`]s (the
+//!    `clock` lint rule). Deterministic zones (engines, farm, rng)
+//!    additionally ban even `Tick` use by never being handed an `Obs`:
+//!    they report pure flip/accept counters through `coordinator::Metrics`
+//!    and the timing happens at the server/coordinator/CLI layer.
+//! 2. **Declared locks** — the registry and trace-sink mutexes are leaf
+//!    entries in `lint::LOCK_ORDER` (`families`, `events`), so holding
+//!    them while taking any scheduler or fleet lock is a lint error.
+//! 3. **Wire anti-drift** — snapshots cross process boundaries via
+//!    `server::wire::MetricsSnapshot`, which is fuzz-roundtripped.
+//!
+//! Instrumentation is always-on and cheap (per-request / per-slice, one
+//! short mutex hold); `--trace-out` only controls whether the ring
+//! buffer is drained to disk at shutdown.
+
+pub mod clock;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Registry, Sample};
+pub use trace::{TraceEvent, TraceSink};
+
+/// One process's observability state: a metrics registry plus a trace
+/// sink, shared via `Arc<Obs>` between the scheduler, fleet state,
+/// HTTP handlers and CLI layers of that process.
+pub struct Obs {
+    /// Counter/gauge/histogram registry, rendered on `GET /v2/metrics`.
+    pub metrics: Registry,
+    /// Bounded trace-event ring, drained to `--trace-out` JSONL.
+    pub trace: TraceSink,
+}
+
+impl Obs {
+    /// Fresh state whose trace events carry `process` as their pid lane.
+    pub fn new(process: &str) -> Self {
+        Obs { metrics: Registry::new(), trace: TraceSink::new(process) }
+    }
+}
+
+/// Drain `obs`'s trace ring to `path` as JSONL (one event per line,
+/// ready for `ising trace`). Returns the number of events written; the
+/// ring's dropped-event count, if nonzero, is reported on stderr so a
+/// truncated trace is never silently mistaken for a complete one.
+pub fn write_trace_jsonl(obs: &Obs, path: &std::path::Path) -> crate::error::Result<usize> {
+    let (events, dropped) = obs.trace.drain();
+    std::fs::write(path, trace::to_jsonl(&events))?;
+    if dropped > 0 {
+        eprintln!(
+            "  trace: ring dropped {dropped} oldest event(s) before the drain to {}",
+            path.display()
+        );
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_bundles_registry_and_sink() {
+        let obs = Obs::new("test-proc");
+        obs.metrics.counter("x_total", "x", &[], 1.0);
+        obs.trace.instant("boot", "test", "main", &[]);
+        assert!(obs.metrics.render().contains("x_total 1"));
+        assert_eq!(obs.trace.process(), "test-proc");
+        assert_eq!(obs.trace.len(), 1);
+    }
+
+    #[test]
+    fn trace_ring_drains_to_jsonl_file() {
+        let obs = Obs::new("drain-test");
+        obs.trace.instant("a", "t", "main", &[]);
+        obs.trace.instant("b", "t", "main", &[("k", "v")]);
+        let path = std::env::temp_dir()
+            .join(format!("ising-obs-drain-{}.jsonl", std::process::id()));
+        let n = write_trace_jsonl(&obs, &path).unwrap();
+        assert_eq!(n, 2);
+        assert!(obs.trace.is_empty(), "drain empties the ring");
+        let back = trace::parse_jsonl(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].args, vec![("k".to_string(), "v".to_string())]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,443 @@
+//! Structured trace events: typed spans, instants and counter marks
+//! written to a bounded in-process ring buffer, drained to JSONL
+//! (`--trace-out`), and merged across processes into Chrome
+//! trace-event JSON by `ising trace`.
+//!
+//! Timestamps are absolute wall-clock microseconds (the unit
+//! chrome://tracing counts in), taken exclusively through
+//! [`crate::obs::clock`], so coordinator and worker traces recorded on
+//! the same host line up on one timeline. Span durations come from
+//! monotonic [`Tick`]s; the wall stamp is back-dated by the measured
+//! duration so `ts + dur` equals the emission instant.
+
+use crate::error::{Error, Result};
+use crate::obs::clock::{self, Tick};
+use crate::util::json::{obj, Json};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+/// Ring capacity: at ~200 bytes/event this bounds a sink at ~13 MiB,
+/// while a week-long farm run emits per-slice (not per-flip) events and
+/// stays far below it.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Caps for [`TraceEvent::from_json`] — hostile JSONL must not balloon.
+const MAX_NAME: usize = 256;
+const MAX_LANE: usize = 128;
+const MAX_ARGS: usize = 32;
+const MAX_ARG_LEN: usize = 1024;
+
+/// One trace record: a completed span (`ph == "X"`), an instant
+/// (`"i"`) or a counter sample (`"C"`), in Chrome trace-event terms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Event name (`"slice"`, `"lease"`, `"checkpoint"`, ...).
+    pub name: String,
+    /// Category tag (`"farm"`, `"fleet"`, `"http"`, ...).
+    pub cat: String,
+    /// Phase: `"X"` complete span, `"i"` instant, `"C"` counter.
+    pub ph: String,
+    /// Wall-clock microseconds since the Unix epoch at span start.
+    pub ts: u64,
+    /// Span duration in microseconds (zero for instants/counters).
+    pub dur: u64,
+    /// Process lane — a human name (`"coordinator"`, `"worker-a"`),
+    /// mapped to integer pids at merge time.
+    pub pid: String,
+    /// Thread/unit lane within the process (`"unit-3"`, `"scheduler"`).
+    pub tid: String,
+    /// Free-form key/value annotations.
+    pub args: Vec<(String, String)>,
+}
+
+impl TraceEvent {
+    /// Encode as a single JSON object (one JSONL line, sans newline).
+    pub fn to_json(&self) -> Json {
+        let args = Json::Obj(
+            self.args.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cat", Json::Str(self.cat.clone())),
+            ("ph", Json::Str(self.ph.clone())),
+            ("ts", Json::Num(self.ts as f64)),
+            ("dur", Json::Num(self.dur as f64)),
+            ("pid", Json::Str(self.pid.clone())),
+            ("tid", Json::Str(self.tid.clone())),
+            ("args", args),
+        ])
+    }
+
+    /// Strict decode: all eight fields required, no unknown keys, sizes
+    /// capped, phase restricted to the three emitted kinds.
+    pub fn from_json(doc: &Json) -> Result<TraceEvent> {
+        let m = doc.as_obj()?;
+        const KNOWN: &[&str] = &["name", "cat", "ph", "ts", "dur", "pid", "tid", "args"];
+        for key in m.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(Error::Json {
+                    offset: 0,
+                    msg: format!("trace event: unknown field '{key}'"),
+                });
+            }
+        }
+        let text = |key: &str, cap: usize| -> Result<String> {
+            let s = doc.field(key)?.as_str()?;
+            if s.is_empty() || s.len() > cap {
+                return Err(Error::Json {
+                    offset: 0,
+                    msg: format!("trace event: field '{key}' empty or over {cap} bytes"),
+                });
+            }
+            Ok(s.to_string())
+        };
+        let ph = text("ph", 1)?;
+        if !matches!(ph.as_str(), "X" | "i" | "C") {
+            return Err(Error::Json { offset: 0, msg: format!("trace event: bad phase '{ph}'") });
+        }
+        let args_doc = doc.field("args")?.as_obj()?;
+        if args_doc.len() > MAX_ARGS {
+            return Err(Error::Json { offset: 0, msg: "trace event: too many args".into() });
+        }
+        let mut args = Vec::with_capacity(args_doc.len());
+        for (k, v) in args_doc {
+            let v = v.as_str()?;
+            if k.len() > MAX_ARG_LEN || v.len() > MAX_ARG_LEN {
+                return Err(Error::Json { offset: 0, msg: "trace event: oversized arg".into() });
+            }
+            args.push((k.clone(), v.to_string()));
+        }
+        Ok(TraceEvent {
+            name: text("name", MAX_NAME)?,
+            cat: text("cat", MAX_NAME)?,
+            ph,
+            ts: doc.field("ts")?.as_u64()?,
+            dur: doc.field("dur")?.as_u64()?,
+            pid: text("pid", MAX_LANE)?,
+            tid: text("tid", MAX_LANE)?,
+            args,
+        })
+    }
+}
+
+struct Buf {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    capacity: usize,
+}
+
+/// A bounded per-process trace buffer. Emission is one short mutex
+/// hold (no I/O, no allocation beyond the event itself); when the ring
+/// is full the *oldest* events are dropped and counted, so a forgotten
+/// sink can never exhaust memory or stall the instrumented path.
+pub struct TraceSink {
+    process: String,
+    events: Mutex<Buf>,
+}
+
+impl TraceSink {
+    /// A sink whose events carry `process` as their pid lane.
+    pub fn new(process: &str) -> Self {
+        Self::with_capacity(process, DEFAULT_CAPACITY)
+    }
+
+    /// A sink with an explicit ring capacity (tests).
+    pub fn with_capacity(process: &str, capacity: usize) -> Self {
+        TraceSink {
+            process: process.to_string(),
+            events: Mutex::new(Buf {
+                events: VecDeque::new(),
+                dropped: 0,
+                capacity: capacity.max(1),
+            }),
+        }
+    }
+
+    /// The process lane name stamped on every event.
+    pub fn process(&self) -> &str {
+        &self.process
+    }
+
+    fn push(&self, event: TraceEvent) {
+        let mut events = self.events.lock().expect("trace sink poisoned");
+        if events.events.len() >= events.capacity {
+            events.events.pop_front();
+            events.dropped += 1;
+        }
+        events.events.push_back(event);
+    }
+
+    /// Record a completed span that started at `started`: duration is
+    /// monotonic, the wall stamp is back-dated so `ts + dur` is "now".
+    pub fn complete(&self, name: &str, cat: &str, tid: &str, started: Tick, args: &[(&str, &str)]) {
+        let dur = started.elapsed().as_micros() as u64;
+        let ts = clock::wall_micros().saturating_sub(dur);
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: "X".to_string(),
+            ts,
+            dur,
+            pid: self.process.clone(),
+            tid: tid.to_string(),
+            args: args.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        });
+    }
+
+    /// Record a point-in-time marker.
+    pub fn instant(&self, name: &str, cat: &str, tid: &str, args: &[(&str, &str)]) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: "i".to_string(),
+            ts: clock::wall_micros(),
+            dur: 0,
+            pid: self.process.clone(),
+            tid: tid.to_string(),
+            args: args.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        });
+    }
+
+    /// Record a counter sample (renders as a value track in Chrome).
+    pub fn counter(&self, name: &str, cat: &str, tid: &str, value: f64) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: "C".to_string(),
+            ts: clock::wall_micros(),
+            dur: 0,
+            pid: self.process.clone(),
+            tid: tid.to_string(),
+            args: vec![("value".to_string(), format!("{value}"))],
+        });
+    }
+
+    /// Take every buffered event (oldest first) and the count of events
+    /// the ring dropped, resetting both.
+    pub fn drain(&self) -> (Vec<TraceEvent>, u64) {
+        let mut events = self.events.lock().expect("trace sink poisoned");
+        let dropped = events.dropped;
+        events.dropped = 0;
+        (events.events.drain(..).collect(), dropped)
+    }
+
+    /// Number of currently buffered events.
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("trace sink poisoned").events.len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Encode events as JSONL: one compact JSON object per line.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for event in events {
+        out.push_str(&event.to_json().to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL trace file. Blank lines are skipped; any malformed
+/// line is an error naming its line number.
+pub fn parse_jsonl(src: &str) -> Result<Vec<TraceEvent>> {
+    let mut out = Vec::new();
+    for (idx, line) in src.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let doc = Json::parse(line).map_err(|e| Error::Json {
+            offset: 0,
+            msg: format!("trace line {}: {e}", idx + 1),
+        })?;
+        let event = TraceEvent::from_json(&doc).map_err(|e| Error::Json {
+            offset: 0,
+            msg: format!("trace line {}: {e}", idx + 1),
+        })?;
+        out.push(event);
+    }
+    Ok(out)
+}
+
+/// Merge events (typically from several processes' JSONL files) into a
+/// Chrome trace-event document for chrome://tracing / Perfetto.
+///
+/// String pid/tid lanes are mapped to integers in first-seen order and
+/// named via `process_name`/`thread_name` metadata events; timestamps
+/// are re-based to the earliest event so the viewer opens at t=0.
+pub fn merge_chrome(events: &[TraceEvent]) -> Json {
+    let t0 = events.iter().map(|e| e.ts).min().unwrap_or(0);
+    let mut pids: BTreeMap<String, u64> = BTreeMap::new();
+    let mut tids: BTreeMap<(u64, String), u64> = BTreeMap::new();
+    let mut out = Vec::new();
+    for event in events {
+        let next_pid = pids.len() as u64 + 1;
+        let pid = *pids.entry(event.pid.clone()).or_insert_with(|| {
+            out.push(metadata("process_name", next_pid, 0, &event.pid));
+            next_pid
+        });
+        let next_tid = tids.len() as u64 + 1;
+        let tid = *tids.entry((pid, event.tid.clone())).or_insert_with(|| {
+            out.push(metadata("thread_name", pid, next_tid, &event.tid));
+            next_tid
+        });
+        let mut fields = vec![
+            ("name", Json::Str(event.name.clone())),
+            ("cat", Json::Str(event.cat.clone())),
+            ("ph", Json::Str(event.ph.clone())),
+            ("ts", Json::Num(event.ts.saturating_sub(t0) as f64)),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+        ];
+        match event.ph.as_str() {
+            "X" => fields.push(("dur", Json::Num(event.dur as f64))),
+            // Thread-scoped instants; counters carry numeric args below.
+            "i" => fields.push(("s", Json::Str("t".to_string()))),
+            _ => {}
+        }
+        let args: BTreeMap<String, Json> = event
+            .args
+            .iter()
+            .map(|(k, v)| {
+                // Counter tracks need numeric args to plot.
+                let value = match v.parse::<f64>() {
+                    Ok(n) if event.ph == "C" => Json::Num(n),
+                    _ => Json::Str(v.clone()),
+                };
+                (k.clone(), value)
+            })
+            .collect();
+        fields.push(("args", Json::Obj(args)));
+        out.push(obj(fields));
+    }
+    obj(vec![("traceEvents", Json::Arr(out))])
+}
+
+fn metadata(kind: &str, pid: u64, tid: u64, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str(kind.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_roundtrip_through_jsonl() {
+        let sink = TraceSink::new("worker-a");
+        let started = clock::now();
+        sink.complete("slice", "farm", "unit-3", started, &[("engine", "batch")]);
+        sink.instant("lease", "fleet", "unit-3", &[]);
+        sink.counter("queue_depth", "server", "scheduler", 4.0);
+        let (events, dropped) = sink.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 3);
+        assert!(sink.is_empty());
+        let jsonl = to_jsonl(&events);
+        assert_eq!(jsonl.lines().count(), 3);
+        let back = parse_jsonl(&jsonl).expect("jsonl parses");
+        assert_eq!(back, events);
+        assert_eq!(back[0].ph, "X");
+        assert_eq!(back[0].pid, "worker-a");
+        assert_eq!(back[1].ph, "i");
+        assert_eq!(back[2].ph, "C");
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let sink = TraceSink::with_capacity("p", 2);
+        sink.instant("a", "t", "main", &[]);
+        sink.instant("b", "t", "main", &[]);
+        sink.instant("c", "t", "main", &[]);
+        let (events, dropped) = sink.drain();
+        assert_eq!(dropped, 1);
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, ["b", "c"]);
+    }
+
+    #[test]
+    fn strict_decode_rejects_malformed_events() {
+        let good =
+            r#"{"name":"x","cat":"c","ph":"X","ts":5,"dur":1,"pid":"p","tid":"t","args":{}}"#;
+        assert!(parse_jsonl(good).is_ok());
+        for bad in [
+            r#"{"name":"x","cat":"c","ph":"Q","ts":5,"dur":1,"pid":"p","tid":"t","args":{}}"#,
+            r#"{"name":"x","cat":"c","ph":"X","ts":-5,"dur":1,"pid":"p","tid":"t","args":{}}"#,
+            r#"{"name":"x","cat":"c","ph":"X","ts":5,"dur":1,"pid":"p","tid":"t","args":{},"z":1}"#,
+            r#"{"name":"","cat":"c","ph":"X","ts":5,"dur":1,"pid":"p","tid":"t","args":{}}"#,
+            r#"{"name":"x","cat":"c","ph":"X","ts":5,"dur":1,"pid":"p","tid":"t"}"#,
+            r#"{"name":"x","cat":"c","ph":"X","ts":5,"dur":1,"pid":"p","tid":"t","args":{"k":3}}"#,
+        ] {
+            assert!(parse_jsonl(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn merge_assigns_integer_lanes_and_rebases_time() {
+        let mk = |pid: &str, tid: &str, ts: u64| TraceEvent {
+            name: "span".into(),
+            cat: "farm".into(),
+            ph: "X".into(),
+            ts,
+            dur: 10,
+            pid: pid.into(),
+            tid: tid.into(),
+            args: vec![],
+        };
+        let merged = merge_chrome(&[
+            mk("coordinator", "main", 1_000),
+            mk("worker-a", "unit-0", 1_005),
+            mk("coordinator", "main", 1_050),
+        ]);
+        let events = merged.field("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name + 2 thread_name metadata + 3 spans.
+        assert_eq!(events.len(), 7);
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.field("ph").unwrap().as_str().unwrap() == "X")
+            .collect();
+        assert_eq!(spans[0].field("ts").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(spans[1].field("ts").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(spans[2].field("ts").unwrap().as_u64().unwrap(), 50);
+        assert_eq!(
+            spans[0].field("pid").unwrap().as_u64().unwrap(),
+            spans[2].field("pid").unwrap().as_u64().unwrap()
+        );
+        assert_ne!(
+            spans[0].field("pid").unwrap().as_u64().unwrap(),
+            spans[1].field("pid").unwrap().as_u64().unwrap()
+        );
+        let meta: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.field("ph").unwrap().as_str().unwrap() == "M")
+            .collect();
+        assert_eq!(meta.len(), 4);
+        assert_eq!(
+            meta[0].path("args.name").unwrap().as_str().unwrap(),
+            "coordinator"
+        );
+    }
+
+    #[test]
+    fn counter_args_become_numbers_in_chrome_output() {
+        let sink = TraceSink::new("server");
+        sink.counter("queue_depth", "server", "scheduler", 7.0);
+        let (events, _) = sink.drain();
+        let merged = merge_chrome(&events);
+        let all = merged.field("traceEvents").unwrap().as_arr().unwrap();
+        let counter = all
+            .iter()
+            .find(|e| e.field("ph").unwrap().as_str().unwrap() == "C")
+            .expect("counter present");
+        assert_eq!(counter.path("args.value").unwrap().as_f64().unwrap(), 7.0);
+    }
+}

@@ -88,12 +88,13 @@ pub fn handle(req: &Request, ctx: &ApiCtx) -> Response {
         ("GET", ["v2", "jobs", id, "result"]) => job_result_v2(id, ctx),
         ("GET", ["v2", "healthz"]) => healthz(ctx),
         ("GET", ["v2", "info"]) => info(ctx),
+        ("GET", ["v2", "metrics"]) => metrics(ctx),
         ("POST", ["v2", "shutdown"]) => shutdown(ctx),
         (_, ["v2", "jobs"]) | (_, ["v2", "shutdown"]) => {
             ErrorEnvelope::new(405, "usage", "use POST for this endpoint").to_response()
         }
         (_, ["v2", "jobs", _]) | (_, ["v2", "jobs", _, "result"])
-        | (_, ["v2", "healthz"]) | (_, ["v2", "info"]) => {
+        | (_, ["v2", "healthz"]) | (_, ["v2", "info"]) | (_, ["v2", "metrics"]) => {
             ErrorEnvelope::new(405, "usage", "use GET for this endpoint").to_response()
         }
         (_, ["v2", ..]) => ErrorEnvelope::new(
@@ -104,12 +105,53 @@ pub fn handle(req: &Request, ctx: &ApiCtx) -> Response {
         .to_response(),
         _ => error_response(404, &format!("no route for '{}'", req.path)),
     };
+    let code = resp.status.to_string();
+    ctx.scheduler.obs().metrics.counter(
+        "ising_http_requests_total",
+        "HTTP requests handled, by response status code.",
+        &[("code", code.as_str())],
+        1.0,
+    );
     if segs.first() == Some(&"v1") {
         resp.with_header("Deprecation", "true")
             .with_header("Link", "</v2>; rel=\"successor-version\"")
     } else {
         resp
     }
+}
+
+/// `GET /v2/metrics` — Prometheus text exposition. Queue and job-state
+/// gauges are computed at scrape time from the same registry snapshot
+/// `/v2/healthz` reports, so the two endpoints can never disagree.
+fn metrics(ctx: &ApiCtx) -> Response {
+    let obs = ctx.scheduler.obs();
+    let counts = ctx.scheduler.counts();
+    obs.metrics.gauge(
+        "ising_queue_depth",
+        "Jobs waiting in the bounded queue right now.",
+        &[],
+        counts.queued as f64,
+    );
+    obs.metrics.gauge(
+        "ising_queue_capacity",
+        "Configured queue depth cap (submissions past it answer 429).",
+        &[],
+        ctx.server.queue_depth as f64,
+    );
+    for (status, n) in [
+        ("queued", counts.queued),
+        ("running", counts.running),
+        ("done", counts.done),
+        ("failed", counts.failed),
+    ] {
+        obs.metrics.gauge(
+            "ising_jobs",
+            "Jobs in the registry by coarse status.",
+            &[("status", status)],
+            n as f64,
+        );
+    }
+    Response::prometheus(obs.metrics.render())
 }
 
 fn error_response(status: u16, msg: &str) -> Response {
@@ -434,6 +476,35 @@ mod tests {
         let body = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
         assert!(body.field("error").is_ok(), "v1 keeps the legacy error shape");
 
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `/v2/metrics` renders Prometheus text exposition with the
+    /// scrape-time queue/job gauges, counts requests by status code,
+    /// and refuses non-GET verbs.
+    #[test]
+    fn metrics_endpoint_serves_prometheus_exposition() {
+        let dir = std::env::temp_dir().join(format!("ising-api-metrics-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = ServerConfig { checkpoint_dir: dir.clone(), ..ServerConfig::default() };
+        let scheduler = Arc::new(Scheduler::open(&server).unwrap());
+        let ctx = ApiCtx { scheduler, server };
+
+        let r = handle(&req("GET /v2/metrics HTTP/1.1\r\n\r\n"), &ctx);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "text/plain; version=0.0.4");
+        let text = String::from_utf8(r.body).unwrap();
+        assert!(text.contains("# TYPE ising_queue_depth gauge\n"), "{text}");
+        assert!(text.contains("ising_queue_depth 0\n"), "{text}");
+        assert!(text.contains("ising_jobs{status=\"queued\"} 0\n"), "{text}");
+
+        // The first scrape was counted; the second one sees it.
+        let r = handle(&req("GET /v2/metrics HTTP/1.1\r\n\r\n"), &ctx);
+        let text = String::from_utf8(r.body).unwrap();
+        assert!(text.contains("ising_http_requests_total{code=\"200\"} 1\n"), "{text}");
+
+        let r = handle(&req("POST /v2/metrics HTTP/1.1\r\n\r\n"), &ctx);
+        assert_eq!(r.status, 405);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

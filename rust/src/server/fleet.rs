@@ -44,14 +44,16 @@ use super::wire::{
 use crate::config::FleetConfig;
 use crate::coordinator::farm::{work_units, FarmConfig, REPORT_HEADER};
 use crate::error::{Error, Result};
+use crate::obs::clock::{self, Tick};
+use crate::obs::Obs;
 use crate::util::json::{obj, Json};
 use crate::util::snapshot::atomic_write;
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Leases per unit before the whole run is declared failed (a unit that
 /// kills every worker that touches it must not retry forever).
@@ -75,7 +77,7 @@ enum UnitState {
     /// Held under a lease.
     Leased {
         worker: String,
-        deadline: Instant,
+        deadline: Tick,
     },
     /// Validated report lines stored.
     Done,
@@ -88,6 +90,9 @@ struct Unit {
     /// Single-β sub-configuration sent to workers.
     spec: FarmConfig,
     state: UnitState,
+    /// When this unit last became leasable (creation or re-queue) —
+    /// the lease-latency histogram measures from here.
+    pending_since: Tick,
     /// Leases granted so far.
     attempts: u32,
     /// Last uploaded mid-unit checkpoint (raw snapshot-file bytes).
@@ -102,7 +107,7 @@ struct Unit {
 struct Inner {
     units: Vec<Unit>,
     /// Worker name → last time it was heard from.
-    workers: BTreeMap<String, Instant>,
+    workers: BTreeMap<String, Tick>,
     /// Units re-queued after lease expiry / dead worker / explicit fail.
     requeues: u64,
     /// Leases that carried a resume checkpoint.
@@ -130,6 +135,9 @@ pub struct FleetState {
     fleet: FleetConfig,
     dir: PathBuf,
     inner: Mutex<Inner>,
+    /// Coordinator-process observability (metrics + trace), served at
+    /// `GET /v2/metrics` and drained to `--trace-out`.
+    obs: Arc<Obs>,
 }
 
 impl FleetState {
@@ -184,6 +192,7 @@ impl FleetState {
                     seeds: u.seeds,
                     spec,
                     state: UnitState::Pending,
+                    pending_since: clock::now(),
                     attempts: 0,
                     progress: None,
                     lines: None,
@@ -206,7 +215,13 @@ impl FleetState {
             )));
         }
 
-        let state = Self { cfg, fleet, dir, inner: Mutex::new(Inner::default()) };
+        let state = Self {
+            cfg,
+            fleet,
+            dir,
+            inner: Mutex::new(Inner::default()),
+            obs: Arc::new(Obs::new("coordinator")),
+        };
         if resume {
             for (i, unit) in units.iter_mut().enumerate() {
                 if let Ok(lines) = std::fs::read_to_string(state.lines_path(i)) {
@@ -240,10 +255,22 @@ impl FleetState {
         self.dir.join(format!("unit-{unit:05}.progress"))
     }
 
+    /// The coordinator's observability handle.
+    pub fn obs(&self) -> Arc<Obs> {
+        Arc::clone(&self.obs)
+    }
+
     /// Register (or re-register) a worker; idempotent per name.
     pub fn register(&self, name: &str) -> RegisterAck {
+        self.obs.metrics.counter(
+            "ising_fleet_registrations_total",
+            "Worker register calls by worker name.",
+            &[("worker", name)],
+            1.0,
+        );
+        self.obs.trace.instant("register", "fleet", name, &[]);
         let mut inner = self.inner.lock().expect("fleet state poisoned");
-        inner.workers.insert(name.to_string(), Instant::now());
+        inner.workers.insert(name.to_string(), clock::now());
         RegisterAck {
             worker: name.to_string(),
             heartbeat_ms: self.fleet.heartbeat_ms,
@@ -254,14 +281,20 @@ impl FleetState {
 
     /// Record a liveness ping.
     pub fn heartbeat(&self, name: &str) {
+        self.obs.metrics.counter(
+            "ising_heartbeats_total",
+            "Heartbeat pings received by worker name.",
+            &[("worker", name)],
+            1.0,
+        );
         let mut inner = self.inner.lock().expect("fleet state poisoned");
-        inner.workers.insert(name.to_string(), Instant::now());
+        inner.workers.insert(name.to_string(), clock::now());
     }
 
     /// Re-queue every unit whose holder is dead (missed heartbeats past
     /// `dead_after_ms`) or whose lease expired without progress. The
     /// stored checkpoint is kept, so the next holder resumes.
-    fn supervise(inner: &mut Inner, dead_after: Duration, now: Instant) {
+    fn supervise(inner: &mut Inner, dead_after: Duration, now: Tick) {
         for unit in &mut inner.units {
             let UnitState::Leased { worker, deadline } = &unit.state else { continue };
             let worker_dead = inner
@@ -271,6 +304,7 @@ impl FleetState {
                 .unwrap_or(true);
             if worker_dead || now >= *deadline {
                 unit.state = UnitState::Pending;
+                unit.pending_since = now;
                 inner.requeues += 1;
             }
         }
@@ -280,12 +314,21 @@ impl FleetState {
     /// pending unit (earliest grid order — deterministic and fair), or
     /// `Idle`/`Done`/`Failed` when there is nothing to lease.
     pub fn lease(&self, worker: &str) -> LeaseReply {
-        let now = Instant::now();
+        let now = clock::now();
         let mut guard = self.inner.lock().expect("fleet state poisoned");
         // Plain reborrow so the unit scan below can split field borrows.
         let inner = &mut *guard;
         inner.workers.insert(worker.to_string(), now);
+        let requeues_before = inner.requeues;
         Self::supervise(inner, Duration::from_millis(self.fleet.dead_after_ms), now);
+        if inner.requeues > requeues_before {
+            self.obs.metrics.counter(
+                "ising_unit_requeues_total",
+                "Units re-queued (lease expiry, dead worker, or explicit fail).",
+                &[],
+                (inner.requeues - requeues_before) as f64,
+            );
+        }
         if let Some(msg) = &inner.failure {
             return LeaseReply::Failed(msg.clone());
         }
@@ -310,11 +353,35 @@ impl FleetState {
             unit.attempts += 1;
             unit.state = UnitState::Leased {
                 worker: worker.to_string(),
-                deadline: now + lease_for,
+                deadline: now.plus(lease_for),
             };
             if unit.progress.is_some() {
                 inner.resumed += 1;
             }
+            self.obs.metrics.counter(
+                "ising_unit_leases_total",
+                "Unit leases granted by worker name.",
+                &[("worker", worker)],
+                1.0,
+            );
+            self.obs.metrics.counter(
+                "ising_unit_attempts_total",
+                "Total unit execution attempts across the grid.",
+                &[],
+                1.0,
+            );
+            self.obs.metrics.observe(
+                "ising_lease_latency_seconds",
+                "Time a unit waited leasable before a worker picked it up.",
+                &[("worker", worker)],
+                now.duration_since(unit.pending_since).as_secs_f64(),
+            );
+            self.obs.trace.instant(
+                "lease",
+                "fleet",
+                &format!("unit-{i}"),
+                &[("worker", worker), ("attempt", &unit.attempts.to_string())],
+            );
             grant = Some(i);
             break;
         }
@@ -335,7 +402,7 @@ impl FleetState {
     /// Store a mid-unit checkpoint from the unit's current holder.
     /// Progress counts as liveness: the lease deadline is pushed out.
     pub fn progress(&self, worker: &str, unit: usize, payload: Vec<u8>) -> Result<()> {
-        let now = Instant::now();
+        let now = clock::now();
         let mut inner = self.inner.lock().expect("fleet state poisoned");
         inner.workers.insert(worker.to_string(), now);
         let n = inner.units.len();
@@ -347,9 +414,22 @@ impl FleetState {
             UnitState::Leased { worker: holder, .. } if holder == worker => {
                 u.state = UnitState::Leased {
                     worker: worker.to_string(),
-                    deadline: now + Duration::from_millis(self.fleet.lease_ms),
+                    deadline: now.plus(Duration::from_millis(self.fleet.lease_ms)),
                 };
+                let store_start = clock::now();
                 atomic_write(&self.progress_path(unit), &payload)?;
+                self.obs.metrics.observe(
+                    "ising_checkpoint_duration_seconds",
+                    "Wall duration of checkpoint/result persistence by operation.",
+                    &[("op", "progress")],
+                    store_start.elapsed().as_secs_f64(),
+                );
+                self.obs.trace.instant(
+                    "checkpoint",
+                    "fleet",
+                    &format!("unit-{unit}"),
+                    &[("worker", worker)],
+                );
                 u.progress = Some(payload);
                 Ok(())
             }
@@ -369,8 +449,9 @@ impl FleetState {
     /// trajectories are deterministic, so both uploads carry the same
     /// bytes).
     pub fn result(&self, worker: &str, unit: usize, report: &str) -> Result<()> {
+        let splice_start = clock::now();
         let mut inner = self.inner.lock().expect("fleet state poisoned");
-        inner.workers.insert(worker.to_string(), Instant::now());
+        inner.workers.insert(worker.to_string(), splice_start);
         let n = inner.units.len();
         let u = inner
             .units
@@ -387,6 +468,19 @@ impl FleetState {
         u.state = UnitState::Done;
         u.progress = None;
         let _ = std::fs::remove_file(self.progress_path(unit));
+        self.obs.metrics.counter(
+            "ising_unit_results_total",
+            "Validated unit reports spliced into the merge, by worker name.",
+            &[("worker", worker)],
+            1.0,
+        );
+        self.obs.trace.complete(
+            "splice",
+            "fleet",
+            &format!("unit-{unit}"),
+            splice_start,
+            &[("worker", worker)],
+        );
         Ok(())
     }
 
@@ -394,8 +488,9 @@ impl FleetState {
     /// without the (suspect) checkpoint and remember the message for the
     /// abort report.
     pub fn fail(&self, worker: &str, unit: usize, error: &str) -> Result<()> {
+        let now = clock::now();
         let mut inner = self.inner.lock().expect("fleet state poisoned");
-        inner.workers.insert(worker.to_string(), Instant::now());
+        inner.workers.insert(worker.to_string(), now);
         let n = inner.units.len();
         let u = inner
             .units
@@ -405,10 +500,26 @@ impl FleetState {
             return Ok(());
         }
         u.state = UnitState::Pending;
+        u.pending_since = now;
         u.progress = None;
         u.last_error = Some(error.to_string());
         inner.requeues += 1;
         let _ = std::fs::remove_file(self.progress_path(unit));
+        self.obs.metrics.counter(
+            "ising_unit_requeues_total",
+            "Units re-queued (lease expiry, dead worker, or explicit fail).",
+            &[],
+            1.0,
+        );
+        // Cap the annotation: TraceEvent decoding rejects oversized args,
+        // and a multi-KB engine error belongs in the log, not the trace.
+        let short: String = error.chars().take(256).collect();
+        self.obs.trace.instant(
+            "unit_failed",
+            "fleet",
+            &format!("unit-{unit}"),
+            &[("worker", worker), ("error", short.as_str())],
+        );
         Ok(())
     }
 
@@ -480,6 +591,48 @@ impl FleetState {
             ("requeues", Json::Num(inner.requeues as f64)),
             ("resumed", Json::Num(inner.resumed as f64)),
         ])
+    }
+
+    /// Prometheus exposition body for `GET /v2/metrics`: the counters
+    /// and histograms recorded by the protocol handlers, plus
+    /// scrape-time gauges (unit states, worker count, heartbeat ages)
+    /// refreshed from the same state `status_json` reports.
+    pub fn metrics_text(&self) -> String {
+        {
+            let inner = self.inner.lock().expect("fleet state poisoned");
+            let now = clock::now();
+            let (mut pending, mut leased, mut done) = (0usize, 0usize, 0usize);
+            for u in &inner.units {
+                match u.state {
+                    UnitState::Pending => pending += 1,
+                    UnitState::Leased { .. } => leased += 1,
+                    UnitState::Done => done += 1,
+                }
+            }
+            for (state, n) in [("pending", pending), ("leased", leased), ("done", done)] {
+                self.obs.metrics.gauge(
+                    "ising_fleet_units",
+                    "Work units by scheduling state.",
+                    &[("state", state)],
+                    n as f64,
+                );
+            }
+            self.obs.metrics.gauge(
+                "ising_fleet_workers",
+                "Distinct workers heard from so far.",
+                &[],
+                inner.workers.len() as f64,
+            );
+            for (name, seen) in &inner.workers {
+                self.obs.metrics.gauge(
+                    "ising_fleet_heartbeat_age_seconds",
+                    "Seconds since each worker was last heard from.",
+                    &[("worker", name)],
+                    now.duration_since(*seen).as_secs_f64(),
+                );
+            }
+        }
+        self.obs.metrics.render()
     }
 }
 
@@ -565,7 +718,11 @@ pub fn handle_fleet_request(req: &Request, state: &FleetState) -> Response {
             Ok(ok_body())
         }),
         ("GET", ["v2", "fleet", "status"]) => Response::json(200, &state.status_json()),
+        ("GET", ["v2", "metrics"]) => Response::prometheus(state.metrics_text()),
         ("GET", ["v2", "healthz"]) => ok_body(),
+        (_, ["v2", "metrics"]) => {
+            ErrorEnvelope::new(405, "usage", "use GET for this endpoint").to_response()
+        }
         (_, ["v2", "fleet", _]) => {
             ErrorEnvelope::new(405, "usage", "wrong verb for this fleet endpoint").to_response()
         }
@@ -629,7 +786,7 @@ impl Coordinator {
     /// merged report — byte-identical to single-node `ising sweep` for
     /// the same configuration.
     pub fn run(&self) -> Result<String> {
-        let mut finished_at: Option<Instant> = None;
+        let mut finished_at: Option<Tick> = None;
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => handle_conn(stream, &self.state),
@@ -643,7 +800,7 @@ impl Coordinator {
                     finished_at = None;
                 }
                 RunPhase::Done | RunPhase::Failed(_) => {
-                    let now = Instant::now();
+                    let now = clock::now();
                     let t0 = *finished_at.get_or_insert(now);
                     if now.duration_since(t0) >= LINGER {
                         break;
@@ -776,6 +933,42 @@ mod tests {
         // Fresh open over a used dir is refused without --resume.
         let err = FleetState::open(cfg, fleet.clone(), false).unwrap_err();
         assert!(err.to_string().contains("--resume"), "{err}");
+        cleanup(&fleet);
+    }
+
+    /// The coordinator's `/v2/metrics` exposition carries the documented
+    /// fleet series, and the protocol handlers feed the trace ring.
+    #[test]
+    fn fleet_metrics_exposition_covers_the_catalogue() {
+        let cfg = grid_cfg();
+        let fleet = fleet_cfg("metrics");
+        cleanup(&fleet);
+        let state = FleetState::open(cfg, fleet.clone(), false).unwrap();
+        state.register("w0");
+        state.heartbeat("w0");
+        let LeaseReply::Unit(lease) = state.lease("w0") else { panic!("expected a unit") };
+        assert_eq!(lease.unit, 0);
+        let text = state.metrics_text();
+        assert!(text.contains("# TYPE ising_fleet_units gauge\n"), "{text}");
+        assert!(text.contains("ising_fleet_units{state=\"leased\"} 1\n"), "{text}");
+        assert!(text.contains("ising_fleet_units{state=\"pending\"} 3\n"), "{text}");
+        assert!(text.contains("ising_fleet_workers 1\n"), "{text}");
+        assert!(text.contains("ising_unit_leases_total{worker=\"w0\"} 1\n"), "{text}");
+        assert!(text.contains("ising_unit_attempts_total 1\n"), "{text}");
+        assert!(text.contains("ising_heartbeats_total{worker=\"w0\"} 1\n"), "{text}");
+        assert!(
+            text.contains("ising_lease_latency_seconds_count{worker=\"w0\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("ising_fleet_heartbeat_age_seconds{worker=\"w0\"}"), "{text}");
+        // register + lease instants landed in the trace ring.
+        assert!(state.obs().trace.len() >= 2, "trace ring has the protocol instants");
+        // The HTTP route serves the same body with the exposition type.
+        let raw = "GET /v2/metrics HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut raw.as_bytes()).unwrap().unwrap();
+        let resp = handle_fleet_request(&req, &state);
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.content_type, "text/plain; version=0.0.4");
         cleanup(&fleet);
     }
 

@@ -279,6 +279,17 @@ impl Response {
         }
     }
 
+    /// Prometheus text-exposition response (`GET /v2/metrics`). The
+    /// version parameter is part of the format contract scrapers sniff.
+    pub fn prometheus(body: impl Into<Vec<u8>>) -> Self {
+        Self {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            headers: Vec::new(),
+            body: body.into(),
+        }
+    }
+
     /// Attach an extra header (builder style).
     pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
         self.headers.push((name, value.into()));
@@ -414,6 +425,18 @@ mod tests {
         let resp = HttpError::new(413, "too big").into_response();
         assert_eq!(resp.status, 413);
         assert!(String::from_utf8(resp.body).unwrap().contains("too big"));
+    }
+
+    #[test]
+    fn prometheus_responses_carry_the_exposition_content_type() {
+        let resp = Response::prometheus("a_total 1\n");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.content_type, "text/plain; version=0.0.4");
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Content-Type: text/plain; version=0.0.4\r\n"), "{s}");
+        assert!(s.ends_with("a_total 1\n"), "{s}");
     }
 
     #[test]

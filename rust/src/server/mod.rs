@@ -33,6 +33,7 @@ pub mod worker;
 
 use crate::config::ServerConfig;
 use crate::error::Result;
+use crate::obs::{clock, Obs};
 use api::ApiCtx;
 use queue::Scheduler;
 use std::io::BufReader;
@@ -64,8 +65,16 @@ impl Server {
     /// previous shutdown are already back in the queue when this
     /// returns.
     pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let obs = Arc::new(Obs::new("serve"));
+        Self::bind_with_obs(cfg, obs)
+    }
+
+    /// [`Server::bind`] with a caller-supplied observability handle —
+    /// [`serve`] names the trace pid lane after the fleet worker when
+    /// one is attached, so multi-process Chrome merges stay readable.
+    pub fn bind_with_obs(cfg: ServerConfig, obs: Arc<Obs>) -> Result<Server> {
         cfg.validate()?;
-        let scheduler = Arc::new(Scheduler::open(&cfg)?);
+        let scheduler = Arc::new(Scheduler::open_with_obs(&cfg, obs)?);
         scheduler.spawn_workers(cfg.workers);
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
@@ -124,8 +133,8 @@ impl Server {
         // Drain in-flight connection handlers (bounded) before exiting,
         // so late responses — including the shutdown 200 itself — are
         // not cut off by process teardown.
-        let deadline = std::time::Instant::now() + Duration::from_secs(5);
-        while live.load(Ordering::Relaxed) > 0 && std::time::Instant::now() < deadline {
+        let deadline = clock::now().plus(Duration::from_secs(5));
+        while live.load(Ordering::Relaxed) > 0 && clock::now() < deadline {
             std::thread::sleep(Duration::from_millis(10));
         }
         self.ctx.scheduler.join();
@@ -182,7 +191,13 @@ pub fn serve(cfg: ServerConfig, fleet: Option<WorkerOpts>) -> Result<()> {
     let dir = cfg.checkpoint_dir.display().to_string();
     let slice = cfg.slice_samples;
     let unit_dir = cfg.checkpoint_dir.join("fleet-units");
-    let server = Server::bind(cfg)?;
+    let trace_out = cfg.trace_out.clone();
+    // The trace pid lane: the fleet worker's name when one is attached
+    // (several workers merged into one Chrome timeline must land in
+    // distinct lanes), the generic process name otherwise.
+    let process = fleet.as_ref().map_or_else(|| "serve".to_string(), |o| o.name.clone());
+    let obs = Arc::new(Obs::new(&process));
+    let server = Server::bind_with_obs(cfg, Arc::clone(&obs))?;
     let scheduler = server.scheduler();
     let fleet_thread = fleet.map(|opts| {
         println!(
@@ -196,6 +211,7 @@ pub fn serve(cfg: ServerConfig, fleet: Option<WorkerOpts>) -> Result<()> {
             slice_samples: slice,
             stop: scheduler.stop_handle(),
             max_passes: None,
+            obs: Arc::clone(&obs),
         };
         std::thread::spawn(move || {
             let tag = wcfg.name.clone();
@@ -234,5 +250,9 @@ pub fn serve(cfg: ServerConfig, fleet: Option<WorkerOpts>) -> Result<()> {
         counts.failed,
         counts.queued + counts.running
     );
+    if let Some(path) = trace_out {
+        let n = crate::obs::write_trace_jsonl(&obs, &path)?;
+        println!("  trace: {n} event(s) written to {}", path.display());
+    }
     Ok(())
 }

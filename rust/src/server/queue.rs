@@ -22,6 +22,7 @@ use crate::coordinator::checkpoint::{CheckpointSpec, Manifest, MANIFEST_FILE};
 use crate::coordinator::farm::{run_farm_checkpointed, FarmConfig, FarmEngine, FarmOutcome};
 use crate::error::{Error, Result};
 use crate::lattice::Geometry;
+use crate::obs::{clock, Obs};
 use crate::util::json::{obj, Json};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -211,6 +212,10 @@ struct Inner {
     /// Scheduling passes started (a slice-interrupted job counts once per
     /// pass) — the cache-hit tests pin this to prove no re-run happened.
     passes: AtomicU64,
+    /// Process-wide observability: metrics registry + trace ring. Leaf
+    /// locks (see `lint::LOCK_ORDER`), so recording while holding the
+    /// scheduler `state` lock is safe.
+    obs: Arc<Obs>,
 }
 
 /// The scheduler: registry + bounded queue + worker pool.
@@ -227,6 +232,13 @@ impl Scheduler {
     /// *not* started here — call [`Scheduler::spawn_workers`] (the
     /// server does; tests drive [`Scheduler::step`] deterministically).
     pub fn open(cfg: &ServerConfig) -> Result<Self> {
+        Self::open_with_obs(cfg, Arc::new(Obs::new("serve")))
+    }
+
+    /// [`Scheduler::open`] with a caller-supplied observability handle —
+    /// the server uses this to give an embedded fleet worker's trace
+    /// lane its worker name instead of the generic `serve`.
+    pub fn open_with_obs(cfg: &ServerConfig, obs: Arc<Obs>) -> Result<Self> {
         cfg.validate()?;
         let cache = ResultCache::open(cfg.checkpoint_dir.clone())?;
         let mut state = State::default();
@@ -262,6 +274,7 @@ impl Scheduler {
                 cv: Condvar::new(),
                 stop: Arc::new(AtomicBool::new(false)),
                 passes: AtomicU64::new(0),
+                obs,
             }),
             handles: Mutex::new(Vec::new()),
         })
@@ -281,6 +294,28 @@ impl Scheduler {
     /// no second farm run), and refuses when the queue is full or the
     /// scheduler is stopping.
     pub fn submit(&self, cfg: FarmConfig) -> Result<Submit> {
+        let sub = self.submit_inner(cfg)?;
+        let outcome = match &sub {
+            Submit::Accepted { .. } => "accepted",
+            Submit::Existing { .. } => "existing",
+            Submit::Busy => "busy",
+        };
+        self.inner.obs.metrics.counter(
+            "ising_jobs_submitted_total",
+            "Job submissions by outcome (busy = HTTP 429 backpressure).",
+            &[("outcome", outcome)],
+            1.0,
+        );
+        if let Submit::Accepted { id } = &sub {
+            self.inner
+                .obs
+                .trace
+                .instant("submit", "scheduler", "queue", &[("job", id.as_str())]);
+        }
+        Ok(sub)
+    }
+
+    fn submit_inner(&self, cfg: FarmConfig) -> Result<Submit> {
         enforce_job_limits(&cfg)?;
         let id = fingerprint(&cfg);
         let mut st = self.inner.state.lock().expect("scheduler state poisoned");
@@ -340,6 +375,13 @@ impl Scheduler {
     /// it interrupts local jobs.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.inner.stop)
+    }
+
+    /// The scheduler's observability handle (metrics + trace sink) —
+    /// the API layer renders it at `GET /v2/metrics`, the server drains
+    /// the trace ring to `--trace-out` at shutdown.
+    pub fn obs(&self) -> Arc<Obs> {
+        Arc::clone(&self.inner.obs)
     }
 
     /// Replica-grid size of a job, if known (status endpoint detail).
@@ -445,6 +487,10 @@ fn worker_loop(inner: &Arc<Inner>) {
 /// persisted spec + checkpoints carry them across the restart).
 fn run_pass(inner: &Inner, id: &str) {
     inner.passes.fetch_add(1, Ordering::Relaxed);
+    inner
+        .obs
+        .metrics
+        .counter("ising_scheduler_passes_total", "Scheduling passes started.", &[], 1.0);
     let cfg = {
         let mut st = inner.state.lock().expect("scheduler state poisoned");
         let Some(job) = st.jobs.get_mut(id) else { return };
@@ -452,6 +498,9 @@ fn run_pass(inner: &Inner, id: &str) {
         job.state = JobState::Running;
         job.cfg.clone()
     };
+    record_transition(inner, JobState::Running);
+    let engine = cfg.engine.name();
+    let slice_start = clock::now();
     let ckdir = inner.cache.checkpoint_dir(id);
     let spec = CheckpointSpec {
         resume: ckdir.join(MANIFEST_FILE).is_file(),
@@ -476,38 +525,77 @@ fn run_pass(inner: &Inner, id: &str) {
         };
         Err(Error::Coordinator(format!("job panicked: {msg}")))
     });
-    let mut st = inner.state.lock().expect("scheduler state poisoned");
-    let Some(job) = st.jobs.get_mut(id) else { return };
-    match outcome {
-        Ok(FarmOutcome::Complete(result)) => {
-            match inner.cache.store(id, &result.replica_report()) {
-                Ok(()) => {
-                    job.status = JobStatus::Done;
-                    job.state = JobState::Done;
-                }
-                Err(e) => {
-                    job.status = JobStatus::Failed(format!("result store: {e}"));
-                    job.state = JobState::Failed;
+    inner.obs.metrics.observe(
+        "ising_slice_duration_seconds",
+        "Wall duration of farm passes (scheduler slices and full runs).",
+        &[("engine", engine)],
+        slice_start.elapsed().as_secs_f64(),
+    );
+    let final_state = {
+        let mut st = inner.state.lock().expect("scheduler state poisoned");
+        let Some(job) = st.jobs.get_mut(id) else { return };
+        match outcome {
+            Ok(FarmOutcome::Complete(result)) => {
+                result.record_metrics(&inner.obs.metrics, engine);
+                let store_start = clock::now();
+                let stored = inner.cache.store(id, &result.replica_report());
+                inner.obs.metrics.observe(
+                    "ising_checkpoint_duration_seconds",
+                    "Wall duration of checkpoint/result persistence by operation.",
+                    &[("op", "store")],
+                    store_start.elapsed().as_secs_f64(),
+                );
+                match stored {
+                    Ok(()) => {
+                        job.status = JobStatus::Done;
+                        job.state = JobState::Done;
+                    }
+                    Err(e) => {
+                        job.status = JobStatus::Failed(format!("result store: {e}"));
+                        job.state = JobState::Failed;
+                    }
                 }
             }
-        }
-        Ok(FarmOutcome::Interrupted { .. }) => {
-            // Slice exhausted or shutting down: progress is checkpointed.
-            job.status = JobStatus::Queued;
-            if inner.stop.load(Ordering::Relaxed) {
-                // Shutting down: the checkpoint carries it across restart.
-                job.state = JobState::Checkpointed;
-            } else {
-                job.state = JobState::Requeued;
-                st.queue.push_back(id.to_string());
-                inner.cv.notify_one();
+            Ok(FarmOutcome::Interrupted { .. }) => {
+                // Slice exhausted or shutting down: progress is checkpointed.
+                job.status = JobStatus::Queued;
+                if inner.stop.load(Ordering::Relaxed) {
+                    // Shutting down: the checkpoint carries it across restart.
+                    job.state = JobState::Checkpointed;
+                } else {
+                    job.state = JobState::Requeued;
+                    st.queue.push_back(id.to_string());
+                    inner.cv.notify_one();
+                }
+            }
+            Err(e) => {
+                job.status = JobStatus::Failed(e.to_string());
+                job.state = JobState::Failed;
             }
         }
-        Err(e) => {
-            job.status = JobStatus::Failed(e.to_string());
-            job.state = JobState::Failed;
-        }
-    }
+        job.state
+    };
+    record_transition(inner, final_state);
+    // Job ids are 16-hex fingerprints; a short prefix keeps the Chrome
+    // lane labels readable while staying unique within one trace.
+    let lane = format!("job-{}", &id[..id.len().min(8)]);
+    inner.obs.trace.complete(
+        "pass",
+        "scheduler",
+        &lane,
+        slice_start,
+        &[("engine", engine), ("state", final_state.name()), ("job", id)],
+    );
+}
+
+/// Count a `/v2` job-state transition into the metrics registry.
+fn record_transition(inner: &Inner, state: JobState) {
+    inner.obs.metrics.counter(
+        "ising_job_transitions_total",
+        "Job state-machine transitions by target state.",
+        &[("state", state.name())],
+        1.0,
+    );
 }
 
 /// Validate a persisted job spec for re-queueing after an interruption:

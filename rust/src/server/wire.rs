@@ -791,6 +791,130 @@ impl UnitFail {
     }
 }
 
+// ---------------------------------------------------------------------
+// MetricsSnapshot — registry samples as wire data.
+
+/// Longest accepted metric-name, label-set or kind string in a snapshot.
+pub const MAX_METRIC_STRING: usize = 512;
+
+/// Most samples one snapshot may carry (far above what a real registry
+/// produces; a hostile document cannot balloon memory).
+pub const MAX_SNAPSHOT_SAMPLES: usize = 4096;
+
+/// One metric sample as wire data — the JSON twin of
+/// [`crate::obs::Sample`]. Bench reports embed snapshots so the perf
+/// gate can read slice-duration histograms, and tooling can diff
+/// scrapes without re-parsing exposition text.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricSample {
+    /// Exposition series name (`_bucket`/`_sum`/`_count` suffixes kept).
+    pub name: String,
+    /// Rendered label pairs without braces (empty when unlabeled).
+    pub labels: String,
+    /// Family kind: `counter`, `gauge` or `histogram`.
+    pub kind: String,
+    /// Sample value.
+    pub value: f64,
+}
+
+impl MetricSample {
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("labels", Json::Str(self.labels.clone())),
+            ("kind", Json::Str(self.kind.clone())),
+            ("value", Json::Num(self.value)),
+        ])
+    }
+
+    /// Decode + validate: strings bounded, kind a closed set, value
+    /// finite (bucket counts and sums always are).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["name", "labels", "kind", "value"])?;
+        let text = |key: &str| -> Result<String> {
+            let s = doc.field(key)?.as_str().map_err(|_| {
+                Error::Usage(format!("metric sample key '{key}' must be a string"))
+            })?;
+            if s.len() > MAX_METRIC_STRING {
+                return Err(Error::Usage(format!(
+                    "metric sample key '{key}' exceeds {MAX_METRIC_STRING} bytes"
+                )));
+            }
+            Ok(s.to_string())
+        };
+        let name = text("name")?;
+        if name.is_empty() {
+            return Err(Error::Usage("metric sample name must be non-empty".into()));
+        }
+        let labels = text("labels")?;
+        let kind = text("kind")?;
+        if !matches!(kind.as_str(), "counter" | "gauge" | "histogram") {
+            return Err(Error::Usage(format!("unknown metric kind '{kind}'")));
+        }
+        let value = doc
+            .field("value")?
+            .as_f64()
+            .map_err(|_| Error::Usage("metric sample key 'value' must be a number".into()))?;
+        if !value.is_finite() {
+            return Err(Error::Usage("metric sample value must be finite".into()));
+        }
+        Ok(Self { name, labels, kind, value })
+    }
+}
+
+/// A full registry scrape as data: `{"samples": [...]}` in family order.
+/// The structured twin of the `/v2/metrics` exposition text.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Flattened samples (one exposition line each).
+    pub samples: Vec<MetricSample>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot `registry`'s current samples.
+    pub fn from_registry(registry: &crate::obs::Registry) -> Self {
+        let samples = registry
+            .samples()
+            .into_iter()
+            .map(|s| MetricSample {
+                name: s.name,
+                labels: s.labels,
+                kind: s.kind,
+                value: s.value,
+            })
+            .collect();
+        Self { samples }
+    }
+
+    /// Encode.
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "samples",
+            Json::Arr(self.samples.iter().map(MetricSample::to_json).collect()),
+        )])
+    }
+
+    /// Decode + validate (sample count capped before decoding any).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_obj(doc, &["samples"])?;
+        let arr = doc.field("samples")?.as_arr().map_err(|_| {
+            Error::Usage("metrics snapshot key 'samples' must be an array".into())
+        })?;
+        if arr.len() > MAX_SNAPSHOT_SAMPLES {
+            return Err(Error::Usage(format!(
+                "{} samples exceed the {MAX_SNAPSHOT_SAMPLES}-sample cap",
+                arr.len()
+            )));
+        }
+        let mut samples = Vec::with_capacity(arr.len());
+        for item in arr {
+            samples.push(MetricSample::from_json(item)?);
+        }
+        Ok(Self { samples })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -931,6 +1055,37 @@ mod tests {
         }
         assert!(LeaseReply::from_json(&Json::parse(r#"{"lease": "huh"}"#).unwrap()).is_err());
         assert!(LeaseReply::from_json(&Json::parse(r#"{"lease": "unit"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn metrics_snapshot_roundtrips_and_caps() {
+        let reg = crate::obs::Registry::new();
+        reg.counter("jobs_total", "jobs", &[("outcome", "ok")], 3.0);
+        reg.gauge("depth", "queue depth", &[], 2.0);
+        let snap = MetricsSnapshot::from_registry(&reg);
+        assert_eq!(snap.samples.len(), 2);
+        let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.samples[0].kind, "gauge");
+        assert_eq!(back.samples[1].labels, "outcome=\"ok\"");
+        // Hostile documents are refused before allocation / acceptance.
+        assert!(MetricsSnapshot::from_json(&Json::parse(r#"{"extra": 1}"#).unwrap()).is_err());
+        assert!(MetricsSnapshot::from_json(&Json::parse(r#"{"samples": 1}"#).unwrap()).is_err());
+        let bad_kind = Json::parse(
+            r#"{"samples": [{"name": "x", "labels": "", "kind": "summary", "value": 1}]}"#,
+        )
+        .unwrap();
+        assert!(MetricsSnapshot::from_json(&bad_kind).is_err());
+        let empty_name = Json::parse(
+            r#"{"samples": [{"name": "", "labels": "", "kind": "gauge", "value": 1}]}"#,
+        )
+        .unwrap();
+        assert!(MetricsSnapshot::from_json(&empty_name).is_err());
+        let unknown_key = Json::parse(
+            r#"{"samples": [{"name": "x", "labels": "", "kind": "gauge", "value": 1, "z": 0}]}"#,
+        )
+        .unwrap();
+        assert!(MetricsSnapshot::from_json(&unknown_key).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ use super::wire::{
 use crate::coordinator::checkpoint::{CheckpointSpec, MANIFEST_FILE};
 use crate::coordinator::farm::{run_farm_checkpointed, FarmOutcome};
 use crate::error::{Error, Result};
+use crate::obs::{clock, Obs};
 use crate::util::json::Json;
 use crate::util::snapshot::atomic_write;
 use std::io::{Read, Write};
@@ -76,6 +77,9 @@ pub struct WorkerConfig {
     /// passes ended in interruption (`None` in production). Lets tests
     /// simulate a worker that dies mid-unit with progress uploaded.
     pub max_passes: Option<u64>,
+    /// This worker's observability handle (shared with the embedding
+    /// server so one process drains one trace file).
+    pub obs: Arc<Obs>,
 }
 
 /// Extract `host:port` from an `http://` base URL.
@@ -162,6 +166,8 @@ fn run_unit(
     passes: &mut u64,
 ) -> Result<UnitOutcome> {
     let dir = cfg.work_dir.join(format!("unit-{:05}", lease.unit));
+    let lane = format!("unit-{:05}", lease.unit);
+    let engine = lease.spec.engine.name();
     // A fresh lease owns a fresh directory: stale local state from an
     // earlier lease of the same unit must not leak in.
     let _ = std::fs::remove_dir_all(&dir);
@@ -182,14 +188,43 @@ fn run_unit(
             stop: Some(Arc::clone(&cfg.stop)),
             ..CheckpointSpec::new(dir.clone(), UNIT_CHECKPOINT_EVERY)
         };
+        let pass_start = clock::now();
         match run_farm_checkpointed(&lease.spec, Some(&spec)) {
             Ok(FarmOutcome::Complete(result)) => {
+                cfg.obs.metrics.observe(
+                    "ising_slice_duration_seconds",
+                    "Wall duration of farm passes (scheduler slices and full runs).",
+                    &[("engine", engine)],
+                    pass_start.elapsed().as_secs_f64(),
+                );
+                cfg.obs.trace.complete(
+                    "run",
+                    "worker",
+                    &lane,
+                    pass_start,
+                    &[("engine", engine), ("outcome", "complete")],
+                );
+                result.record_metrics(&cfg.obs.metrics, engine);
                 let upload = ResultUpload {
                     worker: cfg.name.clone(),
                     unit: lease.unit,
                     report: result.replica_report(),
                 };
+                let upload_start = clock::now();
                 let (status, body) = post(authority, "/v2/fleet/result", &upload.to_json())?;
+                cfg.obs.metrics.observe(
+                    "ising_upload_duration_seconds",
+                    "Wall duration of worker uploads to the coordinator by kind.",
+                    &[("kind", "result")],
+                    upload_start.elapsed().as_secs_f64(),
+                );
+                cfg.obs.trace.complete(
+                    "upload",
+                    "worker",
+                    &lane,
+                    upload_start,
+                    &[("kind", "result")],
+                );
                 // 409 means the unit is in a state that cannot take this
                 // result — after a re-queue race both holders finish, and
                 // the deterministic duplicate is already accepted
@@ -206,6 +241,13 @@ fn run_unit(
             }
             Ok(FarmOutcome::Interrupted { .. }) => {
                 *passes += 1;
+                cfg.obs.trace.complete(
+                    "run",
+                    "worker",
+                    &lane,
+                    pass_start,
+                    &[("engine", engine), ("outcome", "interrupted")],
+                );
                 // Ship the checkpoint so a successor can resume; a
                 // failed or oversized upload only costs resume depth.
                 if let Ok(bytes) = std::fs::read(&snap) {
@@ -215,7 +257,21 @@ fn run_unit(
                             unit: lease.unit,
                             payload: bytes,
                         };
+                        let upload_start = clock::now();
                         let _ = post(authority, "/v2/fleet/progress", &upload.to_json());
+                        cfg.obs.metrics.observe(
+                            "ising_upload_duration_seconds",
+                            "Wall duration of worker uploads to the coordinator by kind.",
+                            &[("kind", "progress")],
+                            upload_start.elapsed().as_secs_f64(),
+                        );
+                        cfg.obs.trace.complete(
+                            "upload",
+                            "worker",
+                            &lane,
+                            upload_start,
+                            &[("kind", "progress")],
+                        );
                     }
                 }
                 let hook_exit = cfg.max_passes.is_some_and(|n| *passes >= n);
@@ -224,6 +280,13 @@ fn run_unit(
                 }
             }
             Err(e) => {
+                cfg.obs.trace.complete(
+                    "run",
+                    "worker",
+                    &lane,
+                    pass_start,
+                    &[("engine", engine), ("outcome", "error")],
+                );
                 let upload = UnitFail {
                     worker: cfg.name.clone(),
                     unit: lease.unit,
@@ -269,11 +332,22 @@ pub fn run_worker(cfg: WorkerConfig) -> Result<()> {
         let stop = Arc::clone(&cfg.stop);
         let authority = authority.clone();
         let name = cfg.name.clone();
+        let obs = Arc::clone(&cfg.obs);
         let cadence = Duration::from_millis(ack.heartbeat_ms);
         std::thread::spawn(move || {
             while !done.load(Ordering::Relaxed) && !stop.load(Ordering::Relaxed) {
                 let ping = Heartbeat { worker: name.clone() };
-                let _ = post(&authority, "/v2/fleet/heartbeat", &ping.to_json());
+                let sent = clock::now();
+                if post(&authority, "/v2/fleet/heartbeat", &ping.to_json()).is_ok() {
+                    // Failed posts are excluded: a timeout would record
+                    // IO_TIMEOUT, swamping the RTT distribution.
+                    obs.metrics.observe(
+                        "ising_heartbeat_rtt_seconds",
+                        "Round-trip time of worker heartbeat posts to the coordinator.",
+                        &[],
+                        sent.elapsed().as_secs_f64(),
+                    );
+                }
                 std::thread::sleep(cadence);
             }
         })

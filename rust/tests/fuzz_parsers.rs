@@ -209,6 +209,9 @@ fn decode_all_fleet_messages(doc: &Json) {
     let _ = wire::ProgressUpload::from_json(doc);
     let _ = wire::ResultUpload::from_json(doc);
     let _ = wire::UnitFail::from_json(doc);
+    let _ = wire::MetricSample::from_json(doc);
+    let _ = wire::MetricsSnapshot::from_json(doc);
+    let _ = ising_dgx::obs::TraceEvent::from_json(doc);
 }
 
 #[test]
@@ -292,6 +295,42 @@ fn wire_messages_roundtrip() {
                 .unwrap(),
             fail
         );
+    });
+}
+
+#[test]
+fn metrics_snapshot_and_trace_events_roundtrip() {
+    use ising_dgx::obs::{trace, Obs, TraceEvent};
+    check("obs roundtrip", 100, |g| {
+        // Metrics snapshot: random counters/gauges survive the wire.
+        let obs = Obs::new("fuzz");
+        let n = g.int_in(1, 6);
+        for i in 0..n {
+            let v = g.int_in(0, 1_000_000) as f64;
+            obs.metrics.counter(&format!("fuzz_total_{i}"), "h", &[("k", "v\"x\\y")], v);
+        }
+        obs.metrics.gauge("fuzz_gauge", "h", &[], g.f64());
+        let snap = wire::MetricsSnapshot::from_registry(&obs.metrics);
+        let doc = Json::parse(&snap.to_json().to_string_compact()).unwrap();
+        assert_eq!(wire::MetricsSnapshot::from_json(&doc).unwrap(), snap);
+        // Trace events: spans/instants/counters survive JSONL.
+        obs.trace.instant("i", "cat", "lane", &[("arg", "value")]);
+        obs.trace.counter("c", "cat", "lane", g.int_in(0, 1000) as f64);
+        let (events, dropped) = obs.trace.drain();
+        assert_eq!(dropped, 0);
+        let back = trace::parse_jsonl(&trace::to_jsonl(&events)).unwrap();
+        assert_eq!(back, events);
+        // A mutated event document must decode to Ok/Err, never panic.
+        let mut bytes = events[0].to_json().to_string_compact().into_bytes();
+        for _ in 0..g.int_in(0, 5) {
+            let i = g.int_in(0, bytes.len() as i64 - 1) as usize;
+            bytes[i] = g.int_in(32, 126) as u8;
+        }
+        if let Ok(s) = String::from_utf8(bytes) {
+            if let Ok(doc) = Json::parse(&s) {
+                let _ = TraceEvent::from_json(&doc);
+            }
+        }
     });
 }
 

@@ -7,6 +7,7 @@
 //! dead worker's uploaded snapshot, not from scratch.
 
 use ising_dgx::config::FleetConfig;
+use ising_dgx::obs::Obs;
 use ising_dgx::coordinator::farm::{run_farm, FarmConfig};
 use ising_dgx::server::fleet::{Coordinator, FleetState, RunPhase};
 use ising_dgx::server::worker::{run_worker, WorkerConfig};
@@ -46,6 +47,7 @@ fn fleet_report_is_bit_identical_to_single_node_despite_a_dying_worker() {
         lease_ms: 60_000,
         poll_ms: 25,
         checkpoint_dir: root.join("coordinator"),
+        trace_out: None,
     };
     let state = Arc::new(FleetState::open(cfg, fleet, false).unwrap());
     let coordinator = match Coordinator::bind("127.0.0.1:0", Arc::clone(&state)) {
@@ -69,6 +71,7 @@ fn fleet_report_is_bit_identical_to_single_node_despite_a_dying_worker() {
         slice_samples: Some(2),
         stop: Arc::new(AtomicBool::new(false)),
         max_passes: Some(1),
+        obs: Arc::new(Obs::new("a")),
     };
     run_worker(a).unwrap();
 
@@ -82,6 +85,7 @@ fn fleet_report_is_bit_identical_to_single_node_despite_a_dying_worker() {
         slice_samples: None,
         stop: Arc::new(AtomicBool::new(false)),
         max_passes: None,
+        obs: Arc::new(Obs::new("b")),
     };
     run_worker(b).unwrap();
 

@@ -1,0 +1,183 @@
+//! Integration tests for the observability subsystem's two user-facing
+//! guarantees:
+//!
+//! 1. **Tracing never perturbs physics** — `ising sweep --report` writes
+//!    byte-identical replica series with `--trace-out` on and off, for
+//!    every farm engine. Instrumentation lives outside the deterministic
+//!    zones (engines report pure counters; timing happens at the CLI /
+//!    server layer), so this must hold exactly, not approximately.
+//! 2. **`/v2/metrics` is real Prometheus exposition** — the text parses
+//!    under the exposition-format grammar and carries the documented
+//!    serve-side metric catalogue after a job has run.
+
+use ising_dgx::obs::trace::parse_jsonl;
+use ising_dgx::server::api::{self, ApiCtx};
+use ising_dgx::server::http::Request;
+use ising_dgx::server::queue::Scheduler;
+use ising_dgx::util::Json;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ising-obs-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sweep(extra: &[&str]) -> ising_dgx::Result<()> {
+    let base = [
+        "sweep", "--size", "32", "--betas", "0.42,0.44", "--replicas", "2",
+        "--seed", "7", "--burn-in", "2", "--samples", "3", "--thin", "1",
+        "--workers", "1", "--quiet",
+    ];
+    let argv: Vec<String> =
+        base.iter().chain(extra).map(|s| s.to_string()).collect();
+    ising_dgx::cli::main_with_args(argv)
+}
+
+/// The acceptance invariant from the issue: for every farm engine, the
+/// `--report` bytes are identical with tracing enabled and disabled, and
+/// the trace file itself is valid JSONL carrying the farm span.
+#[test]
+fn sweep_report_is_byte_identical_with_tracing_on_and_off() {
+    let dir = temp_dir("trace-identity");
+    for engine in ["multispin", "tensor", "batch"] {
+        let plain = dir.join(format!("{engine}-plain.txt"));
+        let traced = dir.join(format!("{engine}-traced.txt"));
+        let jsonl = dir.join(format!("{engine}.jsonl"));
+        sweep(&["--engine", engine, "--report", plain.to_str().unwrap()]).unwrap();
+        sweep(&[
+            "--engine", engine,
+            "--report", traced.to_str().unwrap(),
+            "--trace-out", jsonl.to_str().unwrap(),
+        ])
+        .unwrap();
+        let a = std::fs::read(&plain).unwrap();
+        let b = std::fs::read(&traced).unwrap();
+        assert!(!a.is_empty(), "{engine}: report must not be empty");
+        assert_eq!(a, b, "{engine}: tracing changed the replica report");
+
+        // The trace drained to disk is parseable JSONL with the farm span.
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        let events = parse_jsonl(&text).unwrap();
+        let farm = events
+            .iter()
+            .find(|e| e.name == "farm" && e.ph == "X")
+            .unwrap_or_else(|| panic!("{engine}: no farm span in {events:?}"));
+        assert_eq!(farm.pid, "sweep");
+        assert!(
+            farm.args.iter().any(|(k, v)| k == "engine" && v == engine),
+            "{engine}: span args {:?}",
+            farm.args
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Prometheus exposition grammar.
+
+/// Validate `text` against the exposition format: every line is a HELP
+/// comment, a TYPE comment, or a `name{labels} value` sample whose
+/// family was declared; HELP and TYPE cover exactly the same families.
+/// Returns the set of declared family names.
+fn assert_valid_exposition(text: &str) -> BTreeSet<String> {
+    let mut typed = BTreeSet::new();
+    let mut helped = BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap();
+            assert!(helped.insert(name.to_string()), "duplicate HELP: {line}");
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            let name = parts.next().unwrap();
+            let kind = parts.next().unwrap_or_else(|| panic!("TYPE needs a kind: {line}"));
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind),
+                "unknown family kind: {line}"
+            );
+            assert!(typed.insert(name.to_string()), "duplicate TYPE: {line}");
+        } else if !line.is_empty() {
+            let (series, value) = line
+                .rsplit_once(' ')
+                .unwrap_or_else(|| panic!("malformed sample line: {line}"));
+            value
+                .parse::<f64>()
+                .unwrap_or_else(|_| panic!("non-numeric sample value: {line}"));
+            let name = series.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name: {line}"
+            );
+            if series.contains('{') {
+                assert!(series.ends_with('}'), "unterminated labels: {line}");
+            }
+            // The sample's family (histogram samples carry a suffix)
+            // must have been declared above it.
+            let declared = typed.iter().any(|f| {
+                name == f
+                    || name
+                        .strip_prefix(f.as_str())
+                        .is_some_and(|s| ["_bucket", "_sum", "_count"].contains(&s))
+            });
+            assert!(declared, "sample before/without TYPE: {line}");
+        }
+    }
+    assert_eq!(typed, helped, "HELP and TYPE must cover the same families");
+    typed
+}
+
+/// Drive a job through the scheduler via the /v2 API, then check the
+/// scrape parses and the documented serve-side catalogue is present.
+#[test]
+fn metrics_endpoint_parses_and_covers_the_documented_catalogue() {
+    let dir = temp_dir("exposition");
+    let server = ising_dgx::config::ServerConfig {
+        checkpoint_dir: dir.clone(),
+        ..ising_dgx::config::ServerConfig::default()
+    };
+    let scheduler = Arc::new(Scheduler::open(&server).unwrap());
+    let ctx = ApiCtx { scheduler: Arc::clone(&scheduler), server };
+
+    let mut req = Request::new("POST", "/v2/jobs");
+    req.body = br#"{"size": 32, "engine": "multispin", "betas": [0.42],
+                    "replicas": 1, "seed": 3, "burn_in": 2, "samples": 2,
+                    "thin": 1}"#
+        .to_vec();
+    assert_eq!(api::handle(&req, &ctx).status, 202);
+    assert!(scheduler.step(), "one pass runs the whole job");
+
+    let resp = api::handle(&Request::new("GET", "/v2/metrics"), &ctx);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.content_type, "text/plain; version=0.0.4");
+    let text = String::from_utf8(resp.body).unwrap();
+    let families = assert_valid_exposition(&text);
+
+    // The documented catalogue (README "Observability") for `ising serve`.
+    for family in [
+        "ising_scheduler_passes_total",
+        "ising_jobs_submitted_total",
+        "ising_job_transitions_total",
+        "ising_slice_duration_seconds",
+        "ising_checkpoint_duration_seconds",
+        "ising_http_requests_total",
+        "ising_queue_depth",
+        "ising_queue_capacity",
+        "ising_jobs",
+        "ising_replicas_completed_total",
+        "ising_flips_total",
+        "ising_engine_flips_per_ns",
+    ] {
+        assert!(families.contains(family), "missing family {family}:\n{text}");
+    }
+    // Histograms render the full bucket/sum/count triplet.
+    assert!(
+        text.contains("ising_slice_duration_seconds_bucket{engine=\"multispin\",le=\"+Inf\"}"),
+        "{text}"
+    );
+    assert!(text.contains("ising_slice_duration_seconds_count{engine=\"multispin\"} 1"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -34,6 +34,7 @@ fn server_cfg(tag: &str) -> ServerConfig {
         checkpoint_dir: temp_dir(tag),
         checkpoint_every: 1,
         slice_samples: None,
+        trace_out: None,
     }
 }
 
@@ -311,6 +312,40 @@ fn post_tcp(addr: std::net::SocketAddr, path: &str, body: &str) -> (u16, Vec<u8>
     )
 }
 
+/// Pull one series value out of Prometheus text exposition. `series` is
+/// the full sample name including labels, e.g. `ising_jobs{status="done"}`.
+fn metric_value(text: &str, series: &str) -> Option<f64> {
+    text.lines().filter(|l| !l.starts_with('#')).find_map(|l| {
+        let (name, value) = l.rsplit_once(' ')?;
+        if name == series { value.parse().ok() } else { None }
+    })
+}
+
+/// Deadline-bounded wait on a `/v2/metrics` gauge instead of a fixed
+/// sleep: the test proceeds the instant the series satisfies `pred`, and
+/// a timeout fails with the last scrape attached rather than hanging.
+/// Returns the scrape text that satisfied the predicate.
+fn wait_for_metric(
+    addr: std::net::SocketAddr,
+    series: &str,
+    pred: impl Fn(f64) -> bool,
+) -> String {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let (status, body) = get(addr, "/v2/metrics");
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        if metric_value(&text, series).is_some_and(&pred) {
+            return text;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "timed out waiting for {series}; last scrape:\n{text}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
 #[test]
 fn http_end_to_end_submit_poll_result_shutdown() {
     let cfg = server_cfg("tcp");
@@ -341,22 +376,29 @@ fn http_end_to_end_submit_poll_result_shutdown() {
     let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     let id = doc.path("id").unwrap().as_str().unwrap().to_string();
 
-    // Poll to completion.
-    let mut done = false;
-    for _ in 0..300 {
-        let (status, body) = get(addr, &format!("/v1/jobs/{id}"));
-        assert_eq!(status, 200);
-        let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
-        match doc.path("status").unwrap().as_str().unwrap() {
-            "done" => {
-                done = true;
-                break;
-            }
-            "failed" => panic!("job failed: {doc:?}"),
-            _ => std::thread::sleep(std::time::Duration::from_millis(20)),
-        }
-    }
-    assert!(done, "job did not finish in time");
+    // Wait for completion by polling the /v2/metrics job gauges (no
+    // fixed sleeps): the done gauge and the job endpoint are computed
+    // from the same registry, so they cannot disagree.
+    let text = wait_for_metric(addr, "ising_jobs{status=\"done\"}", |v| v >= 1.0);
+    assert_eq!(metric_value(&text, "ising_jobs{status=\"failed\"}"), Some(0.0), "{text}");
+    assert!(
+        metric_value(&text, "ising_scheduler_passes_total").is_some_and(|v| v >= 1.0),
+        "{text}"
+    );
+    let requests_seen = metric_value(&text, "ising_http_requests_total{code=\"200\"}")
+        .expect("request counter must be exposed");
+    let (status, body) = get(addr, &format!("/v1/jobs/{id}"));
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(doc.path("status").unwrap().as_str().unwrap(), "done");
+    // Request counting is monotone across scrapes.
+    let (_, body) = get(addr, "/v2/metrics");
+    let text = String::from_utf8(body).unwrap();
+    assert!(
+        metric_value(&text, "ising_http_requests_total{code=\"200\"}")
+            .is_some_and(|v| v > requests_seen),
+        "{text}"
+    );
 
     // The HTTP result is byte-identical to the offline report of the
     // equivalent FarmConfig (the acceptance invariant).

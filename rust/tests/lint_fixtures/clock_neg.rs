@@ -1,0 +1,7 @@
+//! Negative fixture: timing through the `obs::clock` chokepoint only.
+
+pub fn stamp() -> f64 {
+    let start = crate::obs::clock::now();
+    let _wall = crate::obs::clock::wall_micros();
+    start.elapsed().as_secs_f64()
+}

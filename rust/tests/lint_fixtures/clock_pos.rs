@@ -1,0 +1,8 @@
+//! Positive fixture: wall-clock identifiers outside `obs/clock.rs`.
+use std::time::Instant;
+
+pub fn stamp() -> u64 {
+    let start = Instant::now();
+    let _ = std::time::SystemTime::now();
+    start.elapsed().as_micros() as u64
+}

@@ -9,7 +9,8 @@
 
 use ising_dgx::lint::{
     check_deps_policy, check_file, check_wire_drift, lint_repo, Diagnostic, FileClass, LockSpec,
-    RULE_ALLOW, RULE_DEPS, RULE_FLOAT_SUM, RULE_INDEX, RULE_LOCK, RULE_PANIC, RULE_WIRE, RULE_ZONE,
+    RULE_ALLOW, RULE_CLOCK, RULE_DEPS, RULE_FLOAT_SUM, RULE_INDEX, RULE_LOCK, RULE_PANIC,
+    RULE_WIRE, RULE_ZONE,
 };
 
 /// Lock-order table for the lock fixtures: `a` before `b` in each file,
@@ -139,6 +140,27 @@ fn allow_rule_negative_used_annotation_is_clean() {
 }
 
 #[test]
+fn clock_rule_positive_spans() {
+    let src = include_str!("lint_fixtures/clock_pos.rs");
+    let class = FileClass { clock_audit: true, ..FileClass::NONE };
+    let diags = check_file("clock_pos.rs", src, &class, &[]);
+    assert_eq!(
+        spans(&diags),
+        vec![(2, 16, RULE_CLOCK), (5, 17, RULE_CLOCK), (6, 24, RULE_CLOCK)]
+    );
+    assert!(diags[0].msg.contains("obs/clock.rs"), "{}", diags[0].msg);
+    assert!(diags[2].msg.contains("SystemTime"), "{}", diags[2].msg);
+}
+
+#[test]
+fn clock_rule_negative_chokepoint_timing_is_clean() {
+    let src = include_str!("lint_fixtures/clock_neg.rs");
+    let class = FileClass { clock_audit: true, ..FileClass::NONE };
+    let diags = check_file("clock_neg.rs", src, &class, &[]);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
 fn wire_drift_positive_span() {
     let wire = include_str!("lint_fixtures/wire_pos.rs");
     let diags = check_wire_drift("wire_pos.rs", wire, "Alpha::from_json");
@@ -170,9 +192,15 @@ fn deps_policy_negative_is_clean() {
 }
 
 #[test]
-fn declared_lock_order_covers_the_four_lock_modules() {
-    let files =
-        ["server/fleet.rs", "server/queue.rs", "coordinator/checkpoint.rs", "coordinator/farm.rs"];
+fn declared_lock_order_covers_every_lock_module() {
+    let files = [
+        "server/fleet.rs",
+        "server/queue.rs",
+        "coordinator/checkpoint.rs",
+        "coordinator/farm.rs",
+        "obs/metrics.rs",
+        "obs/trace.rs",
+    ];
     for f in files {
         assert!(
             ising_dgx::lint::LOCK_ORDER.iter().any(|s| s.file == f),
