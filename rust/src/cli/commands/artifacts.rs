@@ -1,0 +1,330 @@
+//! `ising artifacts` — operate the content-addressed artifact registry
+//! (see [`crate::registry`]): list and inspect stored artifacts, pack a
+//! farm checkpoint directory into a layered artifact (and unpack one
+//! back), push/pull artifacts to and from a running `/v2` server, and
+//! garbage-collect unreferenced blobs.
+//!
+//! Actions (all take `--store DIR`, the registry root):
+//!
+//! * `list` — every tag with its manifest digest, plus store totals.
+//! * `inspect REF` — one artifact's config, layers, and annotations.
+//! * `pack --ckpt DIR --tag NAME` — farm checkpoint dir → artifact.
+//! * `unpack REF --dest DIR` — artifact → farm checkpoint dir.
+//! * `push REF --remote http://HOST:PORT [--tag NAME]` — blobs first
+//!   (skipping ones the remote already has), then the manifest.
+//! * `pull REF --remote http://HOST:PORT [--tag NAME]` — manifest
+//!   first, then missing blobs; every byte is verified against its
+//!   digest before it lands in the local store.
+//! * `gc [--keep REF,...] [--dry-run]` — mark from tags (plus `--keep`
+//!   roots), sweep the rest.
+
+use crate::cli::args::Args;
+use crate::error::{Error, Result};
+use crate::registry::manifest::MANIFEST_MEDIA_TYPE;
+use crate::registry::{self, Manifest, Store};
+use crate::server::worker::{get_bytes, parse_authority, request_bytes};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+const KNOWN: &[&str] = &["store", "remote", "ckpt", "dest", "tag", "keep", "dry-run"];
+
+const USAGE: &str = "usage: ising artifacts <action> [REF] --store DIR
+  actions: list | inspect REF | pack --ckpt DIR --tag NAME |
+           unpack REF --dest DIR | push REF --remote URL [--tag NAME] |
+           pull REF --remote URL [--tag NAME] | gc [--keep REF,...] [--dry-run]";
+
+/// Execute the subcommand.
+pub fn exec(args: &Args) -> Result<()> {
+    args.ensure_known(KNOWN)?;
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    match action {
+        "list" => list(args),
+        "inspect" => inspect(args),
+        "pack" => pack(args),
+        "unpack" => unpack(args),
+        "push" => push(args),
+        "pull" => pull(args),
+        "gc" => gc(args),
+        "" => Err(Error::Usage(USAGE.into())),
+        other => Err(Error::Usage(format!("unknown artifacts action '{other}'\n\n{USAGE}"))),
+    }
+}
+
+/// Open the registry store named by `--store`.
+fn store_from(args: &Args) -> Result<Store> {
+    let dir = args.opt("store").ok_or_else(|| {
+        Error::Usage("--store DIR is required (the registry root, e.g. jobs/registry)".into())
+    })?;
+    Store::open(PathBuf::from(dir))
+}
+
+/// The artifact reference (tag or `sha256:<digest>`) after the action.
+fn reference(args: &Args) -> Result<&str> {
+    args.positional.get(1).map(String::as_str).ok_or_else(|| {
+        Error::Usage("this action needs an artifact reference (tag or sha256:<digest>)".into())
+    })
+}
+
+/// `host:port` of the `--remote` server.
+fn remote_authority(args: &Args) -> Result<String> {
+    let url = args.opt("remote").ok_or_else(|| {
+        Error::Usage("this action needs --remote http://HOST:PORT (a running /v2 server)".into())
+    })?;
+    parse_authority(url)
+}
+
+/// Render a refused remote reply (status + envelope body) for errors.
+fn remote_refusal(what: &str, status: u16, body: &[u8]) -> Error {
+    let text: String = String::from_utf8_lossy(body).chars().take(256).collect();
+    Error::Artifact(format!("{what} refused ({status}): {text}"))
+}
+
+fn list(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let tags = store.tags()?;
+    for (name, digest) in &tags {
+        println!("{digest}  {name}");
+    }
+    let stats = store.stats()?;
+    println!(
+        "{} tag(s), {} blob(s), {} byte(s) in '{}'",
+        tags.len(),
+        stats.blobs,
+        stats.bytes,
+        args.opt("store").unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let reference = reference(args)?;
+    let digest = store.resolve(reference)?;
+    let artifact = store.get_manifest(&digest)?;
+    println!("{reference} -> {digest}");
+    println!(
+        "  config: {} {} ({} bytes)",
+        artifact.config.media_type, artifact.config.digest, artifact.config.size
+    );
+    for layer in &artifact.layers {
+        println!(
+            "  layer:  {} {} ({} bytes, {})",
+            layer.name().unwrap_or("-"),
+            layer.digest,
+            layer.size,
+            layer.media_type
+        );
+    }
+    for (key, value) in &artifact.annotations {
+        println!("  note:   {key}={value}");
+    }
+    Ok(())
+}
+
+fn pack(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let ckpt = args.opt("ckpt").ok_or_else(|| {
+        Error::Usage("pack needs --ckpt DIR (a farm checkpoint directory)".into())
+    })?;
+    let tag = args
+        .opt("tag")
+        .ok_or_else(|| Error::Usage("pack needs --tag NAME".into()))?;
+    let digest = registry::pack_checkpoint(&store, Path::new(ckpt), tag)?;
+    println!("packed '{ckpt}' as {tag} -> {digest}");
+    Ok(())
+}
+
+fn unpack(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let reference = reference(args)?;
+    let dest = args
+        .opt("dest")
+        .ok_or_else(|| Error::Usage("unpack needs --dest DIR".into()))?;
+    let artifact = registry::unpack_checkpoint(&store, reference, Path::new(dest))?;
+    println!(
+        "unpacked {reference} into '{dest}' ({} snapshot layer(s))",
+        artifact.layers.len()
+    );
+    Ok(())
+}
+
+fn push(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let reference = reference(args)?;
+    let authority = remote_authority(args)?;
+    let digest = store.resolve(reference)?;
+    let artifact = store.get_manifest(&digest)?;
+    // Blobs first: the remote refuses a manifest whose blobs are absent.
+    let mut pushed = 0usize;
+    let mut skipped = 0usize;
+    for blob in artifact.referenced_blobs() {
+        let path = format!("/v2/artifacts/blobs/{blob}");
+        let (probe, _) = request_bytes(&authority, "HEAD", &path, "application/octet-stream", &[])?;
+        if probe == 200 {
+            skipped += 1;
+            continue;
+        }
+        let bytes = store.get_blob(blob)?;
+        let (status, body) =
+            request_bytes(&authority, "PUT", &path, "application/octet-stream", &bytes)?;
+        if status != 200 {
+            return Err(remote_refusal(&format!("blob {blob} push"), status, &body));
+        }
+        pushed += 1;
+    }
+    // The manifest goes to the requested tag (or `REF` itself when it is
+    // a tag; a bare-digest push stays untagged on the remote).
+    let target = args.opt("tag").unwrap_or(reference);
+    let (status, body) = request_bytes(
+        &authority,
+        "PUT",
+        &format!("/v2/artifacts/manifests/{target}"),
+        MANIFEST_MEDIA_TYPE,
+        &artifact.canonical_bytes(),
+    )?;
+    if status != 200 {
+        return Err(remote_refusal("manifest push", status, &body));
+    }
+    println!(
+        "pushed {reference} -> {target} @ {authority} \
+         ({pushed} blob(s) sent, {skipped} already present)"
+    );
+    Ok(())
+}
+
+fn pull(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let reference = reference(args)?;
+    let authority = remote_authority(args)?;
+    let (status, body) =
+        get_bytes(&authority, &format!("/v2/artifacts/manifests/{reference}"))?;
+    if status != 200 {
+        return Err(remote_refusal(&format!("manifest '{reference}' pull"), status, &body));
+    }
+    let text = std::str::from_utf8(&body)
+        .map_err(|_| Error::Artifact("remote manifest is not UTF-8".into()))?;
+    let artifact = Manifest::from_json(&Json::parse(text)?)?;
+    let mut fetched = 0usize;
+    let mut cached = 0usize;
+    for blob in artifact.referenced_blobs() {
+        if store.has_blob(blob) {
+            cached += 1;
+            continue;
+        }
+        let (status, bytes) = get_bytes(&authority, &format!("/v2/artifacts/blobs/{blob}"))?;
+        if status != 200 {
+            return Err(remote_refusal(&format!("blob {blob} pull"), status, &bytes));
+        }
+        // Verified ingest: bytes that do not hash to the manifest's
+        // declared digest never land in the store.
+        store.put_blob_verified(&bytes, blob)?;
+        fetched += 1;
+    }
+    let stored = store.put_manifest(&artifact)?;
+    let tag = match args.opt("tag") {
+        Some(name) => Some(name),
+        None if !registry::is_valid_digest(reference) => Some(reference),
+        None => None,
+    };
+    if let Some(name) = tag {
+        store.tag(name, &stored)?;
+    }
+    println!(
+        "pulled {reference} @ {authority} -> {stored}{} \
+         ({fetched} blob(s) fetched, {cached} already present)",
+        tag.map(|t| format!(" (tag {t})")).unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn gc(args: &Args) -> Result<()> {
+    let store = store_from(args)?;
+    let keep: Vec<String> = args
+        .opt("keep")
+        .map(|s| s.split(',').filter(|p| !p.is_empty()).map(str::to_string).collect())
+        .unwrap_or_default();
+    let report = store.gc(&keep, args.flag("dry-run"))?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    fn temp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ising-artifacts-cli-{tag}-{}", std::process::id()))
+    }
+
+    /// pack → inspect → unpack round-trips a checkpoint dir bit-exactly
+    /// through the store, and gc sweeps it once the tag is dropped.
+    #[test]
+    fn pack_unpack_and_gc_drive_the_store() {
+        let root = temp_root("roundtrip");
+        let _ = std::fs::remove_dir_all(&root);
+        let ckpt = root.join("ckpt");
+        std::fs::create_dir_all(&ckpt).unwrap();
+        let farm = b"{\"fingerprint\": \"0123456789abcdef\"}";
+        std::fs::write(ckpt.join(crate::coordinator::checkpoint::MANIFEST_FILE), farm).unwrap();
+        std::fs::write(ckpt.join("replica-00000.snap"), [7u8; 32]).unwrap();
+        let store_dir = root.join("registry");
+        let store_arg = store_dir.to_str().unwrap();
+
+        let argv =
+            ["artifacts", "pack", "--store", store_arg, "--ckpt", ckpt.to_str().unwrap(),
+             "--tag", "run/demo"];
+        exec(&parse(&argv)).unwrap();
+        let store = Store::open(store_dir.clone()).unwrap();
+        let digest = store.resolve("run/demo").unwrap();
+        assert!(store.has_blob(&digest));
+
+        let dest = root.join("restored");
+        let argv = ["artifacts", "unpack", "run/demo", "--store", store_arg, "--dest",
+            dest.to_str().unwrap()];
+        exec(&parse(&argv)).unwrap();
+        let back =
+            std::fs::read(dest.join(crate::coordinator::checkpoint::MANIFEST_FILE)).unwrap();
+        assert_eq!(back, farm);
+        assert_eq!(std::fs::read(dest.join("replica-00000.snap")).unwrap(), vec![7u8; 32]);
+
+        // list/inspect run clean over the populated store.
+        exec(&parse(&["artifacts", "list", "--store", store_arg])).unwrap();
+        exec(&parse(&["artifacts", "inspect", "run/demo", "--store", store_arg])).unwrap();
+
+        // A dry-run gc with the tag in place sweeps nothing...
+        exec(&parse(&["artifacts", "gc", "--store", store_arg, "--dry-run"])).unwrap();
+        assert!(store.stats().unwrap().blobs > 0);
+        // ...dropping the tag makes a real gc reclaim every blob.
+        store.delete_tag("run/demo").unwrap();
+        exec(&parse(&["artifacts", "gc", "--store", store_arg])).unwrap();
+        assert_eq!(store.stats().unwrap().blobs, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Bad invocations answer with usage errors, never panics.
+    #[test]
+    fn usage_errors_are_loud_and_specific() {
+        let err = exec(&parse(&["artifacts"])).unwrap_err().to_string();
+        assert!(err.contains("usage: ising artifacts"), "{err}");
+        let err = exec(&parse(&["artifacts", "wibble"])).unwrap_err().to_string();
+        assert!(err.contains("unknown artifacts action 'wibble'"), "{err}");
+        let err = exec(&parse(&["artifacts", "list"])).unwrap_err().to_string();
+        assert!(err.contains("--store"), "{err}");
+        let root = temp_root("usage");
+        let _ = std::fs::remove_dir_all(&root);
+        let store_arg = root.to_str().unwrap().to_string();
+        let err = exec(&parse(&["artifacts", "inspect", "--store", &store_arg]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("reference"), "{err}");
+        let err = exec(&parse(&["artifacts", "push", "nope", "--store", &store_arg]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--remote"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,5 +1,6 @@
 //! Subcommand implementations.
 
+pub mod artifacts;
 pub mod coordinate;
 pub mod info;
 pub mod run;

@@ -10,6 +10,8 @@
 //! * `validate`   — temperature sweep vs the Onsager solution (paper §5.3).
 //! * `scaling`  — multi-device weak/strong scaling (real slabs + DGX model).
 //! * `trace`    — merge `--trace-out` JSONL files into Chrome trace JSON.
+//! * `artifacts` — content-addressed checkpoint/result registry: list,
+//!   inspect, pack/unpack, push/pull to a `/v2` server, gc.
 //! * `info`     — platform, artifact inventory, analytic constants.
 
 pub mod args;
@@ -49,6 +51,10 @@ COMMANDS:
             --mode weak|strong --size N --max-workers W
   trace     merge --trace-out JSONL files into Chrome trace JSON
             ising trace FILE.jsonl [FILE.jsonl ...] [--out trace.json]
+  artifacts content-addressed checkpoint/result registry
+            ising artifacts list|inspect|pack|unpack|push|pull|gc
+            --store DIR [REF] [--ckpt DIR] [--dest DIR] [--tag NAME]
+            [--remote http://HOST:PORT] [--keep REF,...] [--dry-run]
   info      platform, artifacts, constants, engine matrix
             --artifacts DIR
 ";
@@ -76,8 +82,10 @@ pub fn usage() -> String {
 
 /// The subcommand registry: every routable name, including the help
 /// aliases — the source for unknown-command suggestions.
-pub const COMMANDS: &[&str] =
-    &["run", "sweep", "serve", "coordinate", "validate", "scaling", "trace", "info", "help"];
+pub const COMMANDS: &[&str] = &[
+    "run", "sweep", "serve", "coordinate", "validate", "scaling", "trace", "artifacts", "info",
+    "help",
+];
 
 /// Levenshtein edit distance (std-only; the strings are subcommand-sized,
 /// so the O(len²) two-row DP is plenty).
@@ -118,6 +126,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "validate" => commands::validate::exec(&args),
         "scaling" => commands::scaling::exec(&args),
         "trace" => commands::trace::exec(&args),
+        "artifacts" => commands::artifacts::exec(&args),
         "info" => commands::info::exec(&args),
         "" | "help" | "--help" => {
             print!("{}", usage());

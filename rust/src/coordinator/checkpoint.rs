@@ -378,6 +378,26 @@ impl BatchProgress {
     }
 }
 
+/// Enumerate the replica/batch snapshot files of a checkpoint
+/// directory, sorted by file name (which is index order, thanks to the
+/// zero-padded `replica-NNNNN.snap` naming). This is the file set the
+/// artifact registry packages when a checkpoint is pushed as a layered
+/// artifact (`registry::pack_checkpoint`); anything that is not a
+/// snapshot file — the manifest, temp files, stray notes — is excluded.
+pub fn snapshot_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.starts_with("replica-") && name.ends_with(".snap") && entry.path().is_file() {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
 /// Shared checkpointing state for one farm invocation (thread-safe: the
 /// farm's scoped workers all hold `&Checkpointer`).
 pub struct Checkpointer {
@@ -460,6 +480,12 @@ impl Checkpointer {
     /// Replica snapshot path for grid task `idx`.
     pub fn replica_path(&self, idx: usize) -> PathBuf {
         self.dir.join(format!("replica-{idx:05}.snap"))
+    }
+
+    /// Every snapshot file currently in this checkpoint directory, in
+    /// index order (see the free function [`snapshot_files`]).
+    pub fn snapshot_files(&self) -> Result<Vec<PathBuf>> {
+        snapshot_files(&self.dir)
     }
 
     /// Was a cooperative stop requested? (Never true without a flag.)

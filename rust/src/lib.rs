@@ -46,6 +46,7 @@ pub mod lattice;
 pub mod lint;
 pub mod obs;
 pub mod observables;
+pub mod registry;
 pub mod rng;
 pub mod runtime;
 pub mod server;

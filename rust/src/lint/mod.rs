@@ -137,6 +137,11 @@ pub const LOCK_ORDER: &[LockSpec] = &[
     LockSpec { file: "server/queue.rs", receiver: "state" },
     LockSpec { file: "coordinator/checkpoint.rs", receiver: "manifest" },
     LockSpec { file: "coordinator/farm.rs", receiver: "slots" },
+    // The artifact store's namespace lock: serving and coordinator
+    // paths ingest blobs while holding their own state locks, and the
+    // store records metrics, so it ranks below every subsystem lock and
+    // above the observability leaves.
+    LockSpec { file: "registry/store.rs", receiver: "refs" },
     // Observability leaves: safe to take while holding any lock above,
     // never the other way around.
     LockSpec { file: "obs/metrics.rs", receiver: "families" },
@@ -151,8 +156,10 @@ pub const ALLOWED_DEPS: &[&str] = &["xla"];
 pub fn classify(rel: &str) -> FileClass {
     FileClass {
         det_zone: DET_ZONES.iter().any(|z| rel.starts_with(z)),
-        panic_audit: rel.starts_with("server/") || rel.starts_with("coordinator/"),
-        index_audit: rel.starts_with("server/"),
+        panic_audit: rel.starts_with("server/")
+            || rel.starts_with("coordinator/")
+            || rel.starts_with("registry/"),
+        index_audit: rel.starts_with("server/") || rel.starts_with("registry/"),
         lock_audit: LOCK_ORDER.iter().any(|s| s.file == rel),
         clock_audit: !DET_ZONES.iter().any(|z| rel.starts_with(z)) && rel != "obs/clock.rs",
     }
@@ -304,11 +311,16 @@ pub fn lint_repo(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
         let src = std::fs::read_to_string(path)?;
         diags.extend(check_file(&rel, &src, &classify(&rel), LOCK_ORDER));
     }
-    let wire_path = src_root.join("server").join("wire.rs");
+    // Anti-drift: every type with a `from_json` decoder in the wire
+    // module *and* the registry manifest module must be exercised by
+    // the fuzz harness — new decoders cannot land without coverage.
     let fuzz_path = root.join("rust").join("tests").join("fuzz_parsers.rs");
-    let wire_src = std::fs::read_to_string(&wire_path)?;
     let fuzz_src = std::fs::read_to_string(&fuzz_path)?;
-    diags.extend(check_wire_drift("server/wire.rs", &wire_src, &fuzz_src));
+    for rel in ["server/wire.rs", "registry/manifest.rs"] {
+        let path = src_root.join(rel.replace('/', std::path::MAIN_SEPARATOR_STR));
+        let src = std::fs::read_to_string(&path)?;
+        diags.extend(check_wire_drift(rel, &src, &fuzz_src));
+    }
     for manifest in ["Cargo.toml", "rust/xla_stub/Cargo.toml"] {
         let text = std::fs::read_to_string(root.join(manifest))?;
         let allowed = if manifest == "Cargo.toml" { ALLOWED_DEPS } else { &[] };
@@ -353,6 +365,12 @@ mod tests {
         let m = classify("obs/metrics.rs");
         assert!(m.lock_audit && m.clock_audit && !m.det_zone && !m.panic_audit);
         assert!(classify("obs/trace.rs").lock_audit);
+        // The artifact registry is fully audited: panic paths, indexing,
+        // the store's namespace lock, and clock confinement.
+        let r = classify("registry/store.rs");
+        assert!(r.panic_audit && r.index_audit && r.lock_audit && r.clock_audit && !r.det_zone);
+        let d = classify("registry/digest.rs");
+        assert!(d.panic_audit && d.index_audit && !d.lock_audit);
     }
 
     #[test]

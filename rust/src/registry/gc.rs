@@ -1,0 +1,60 @@
+//! Garbage-collection accounting for the artifact store.
+//!
+//! The sweep itself lives in [`Store::gc`](super::store::Store::gc) —
+//! mark from every tag plus the caller's live roots, follow manifests
+//! to the blobs they reference, sweep the rest — because it must run
+//! under the store's namespace lock. This module holds the report the
+//! sweep returns, shared by the `ising artifacts gc` CLI, the tests,
+//! and the CI smoke that checks `--dry-run` output.
+
+use crate::util::json::{obj, Json};
+
+/// What one mark/sweep pass found (and, unless `dry_run`, did).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Blobs reachable from a tag or live root (kept).
+    pub kept: usize,
+    /// Unreferenced blobs swept — or merely counted under `dry_run`.
+    pub swept: usize,
+    /// Bytes those swept blobs occupied.
+    pub reclaimed_bytes: u64,
+    /// True if nothing was deleted.
+    pub dry_run: bool,
+}
+
+impl GcReport {
+    /// JSON form (CLI `--json`-ish consumers and tests).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kept", Json::Num(self.kept as f64)),
+            ("swept", Json::Num(self.swept as f64)),
+            ("reclaimed_bytes", Json::Num(self.reclaimed_bytes as f64)),
+            ("dry_run", Json::Bool(self.dry_run)),
+        ])
+    }
+
+    /// One human line for the CLI (stable: the CI smoke greps it).
+    pub fn render(&self) -> String {
+        let verb = if self.dry_run { "would sweep" } else { "swept" };
+        format!(
+            "gc: kept {} blob(s), {verb} {} blob(s) ({} bytes)",
+            self.kept, self.swept, self.reclaimed_bytes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let r = GcReport { kept: 3, swept: 2, reclaimed_bytes: 640, dry_run: true };
+        assert_eq!(r.render(), "gc: kept 3 blob(s), would sweep 2 blob(s) (640 bytes)");
+        let doc = r.to_json();
+        assert_eq!(doc.field("swept").unwrap().as_usize().unwrap(), 2);
+        assert!(doc.field("dry_run").unwrap().as_bool().unwrap());
+        let wet = GcReport { dry_run: false, ..r };
+        assert!(wet.render().starts_with("gc: kept 3 blob(s), swept 2"));
+    }
+}

@@ -1,0 +1,341 @@
+//! Versioned artifact manifests — the registry's metadata documents.
+//!
+//! A manifest is a small JSON document modeled on the OCI image
+//! manifest: a schema version, its own media type, one `config`
+//! descriptor, and a list of `layers` descriptors. Every descriptor is
+//! `{mediaType, digest, size}` (plus optional string annotations, used
+//! to carry checkpoint file names), and every digest is a
+//! `sha256:<hex>` address into the blob store. A farm checkpoint
+//! becomes a layered artifact this way: the farm manifest (`farm.json`)
+//! is the config layer and each replica/unit snapshot is one blob
+//! layer, so two jobs sharing a run prefix share their common snapshot
+//! blobs byte-for-byte.
+//!
+//! Parsing is strict, like the `/v2` wire messages: unknown fields,
+//! malformed digests, and oversized documents are rejected — a manifest
+//! that round-trips is exactly the manifest that was written. The
+//! canonical byte form (compact JSON, `BTreeMap`-sorted keys) is what
+//! gets digested, so a manifest's address is deterministic.
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+
+use super::digest::{digest_of, is_valid_digest};
+
+/// Manifest schema version this build reads and writes.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Media type of the manifest document itself.
+pub const MANIFEST_MEDIA_TYPE: &str = "application/vnd.ising.artifact.manifest.v1+json";
+/// Media type of a farm checkpoint manifest (`farm.json`) config layer.
+pub const FARM_CONFIG_MEDIA_TYPE: &str = "application/vnd.ising.farm.manifest.v1+json";
+/// Media type of one replica/unit snapshot blob (an `ISNGSNAP`
+/// container, CRC framing included — the registry digest covers it).
+pub const SNAPSHOT_MEDIA_TYPE: &str = "application/vnd.ising.replica.snapshot.v1";
+/// Media type of a canonical job spec (`job.json`) config layer.
+pub const SPEC_MEDIA_TYPE: &str = "application/vnd.ising.job.spec.v1+json";
+/// Media type of a finished job's replica report (`result.txt` bytes).
+pub const REPORT_MEDIA_TYPE: &str = "application/vnd.ising.replica.report.v1";
+
+/// Descriptor annotation key carrying a checkpoint file name, so a
+/// pulled artifact can be materialized back into a checkpoint dir.
+pub const NAME_ANNOTATION: &str = "org.ising.name";
+
+/// Layer-count cap (a 4-unit fleet writes 4; a hostile manifest does
+/// not get to allocate unbounded descriptors).
+pub const MAX_LAYERS: usize = 4096;
+/// Annotation caps per map and per string.
+pub const MAX_ANNOTATIONS: usize = 64;
+/// Longest accepted media type / annotation string.
+pub const MAX_STRING: usize = 256;
+
+/// Reject unknown fields the same way the `/v2` wire decoders do, so a
+/// manifest never silently drops data it does not understand.
+fn strict_keys(doc: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    for key in doc.as_obj()?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(Error::Artifact(format!("unknown {what} field '{key}'")));
+        }
+    }
+    Ok(())
+}
+
+fn check_media_type(s: &str, what: &str) -> Result<()> {
+    if s.is_empty() || s.len() > MAX_STRING || !s.contains('/') {
+        return Err(Error::Artifact(format!("{what}: malformed mediaType '{s}'")));
+    }
+    Ok(())
+}
+
+fn parse_annotations(doc: &Json) -> Result<BTreeMap<String, String>> {
+    let fields = doc.as_obj()?;
+    if fields.len() > MAX_ANNOTATIONS {
+        return Err(Error::Artifact(format!(
+            "too many annotations ({} > {MAX_ANNOTATIONS})",
+            fields.len()
+        )));
+    }
+    let mut out = BTreeMap::new();
+    for (key, value) in fields {
+        let value = value.as_str()?;
+        if key.is_empty() || key.len() > MAX_STRING || value.len() > MAX_STRING {
+            return Err(Error::Artifact(format!("oversized annotation '{key}'")));
+        }
+        out.insert(key.clone(), value.to_string());
+    }
+    Ok(out)
+}
+
+fn annotations_json(annotations: &BTreeMap<String, String>) -> Json {
+    Json::Obj(
+        annotations
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect(),
+    )
+}
+
+/// One content-addressed reference: what the bytes are (`media_type`),
+/// where they live (`digest`), and how many there are (`size`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Descriptor {
+    /// Media type of the referenced blob.
+    pub media_type: String,
+    /// Blob address (`sha256:<64 hex>`).
+    pub digest: String,
+    /// Blob length in bytes (verified against the stored blob on pull).
+    pub size: u64,
+    /// Optional string annotations (e.g. [`NAME_ANNOTATION`]).
+    pub annotations: BTreeMap<String, String>,
+}
+
+impl Descriptor {
+    /// Descriptor for `bytes` under `media_type` (digest computed here).
+    pub fn for_bytes(media_type: &str, bytes: &[u8]) -> Self {
+        Self {
+            media_type: media_type.to_string(),
+            digest: digest_of(bytes),
+            size: bytes.len() as u64,
+            annotations: BTreeMap::new(),
+        }
+    }
+
+    /// The same descriptor carrying a file-name annotation.
+    pub fn named(mut self, name: &str) -> Self {
+        self.annotations.insert(NAME_ANNOTATION.to_string(), name.to_string());
+        self
+    }
+
+    /// The file-name annotation, if present.
+    pub fn name(&self) -> Option<&str> {
+        self.annotations.get(NAME_ANNOTATION).map(String::as_str)
+    }
+
+    /// Serialize to the wire/disk document.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("mediaType", Json::Str(self.media_type.clone())),
+            ("digest", Json::Str(self.digest.clone())),
+            ("size", Json::Num(self.size as f64)),
+        ];
+        if !self.annotations.is_empty() {
+            fields.push(("annotations", annotations_json(&self.annotations)));
+        }
+        obj(fields)
+    }
+
+    /// Strict parse: unknown fields, malformed digests, and oversized
+    /// strings are errors, not warnings.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_keys(doc, "descriptor", &["mediaType", "digest", "size", "annotations"])?;
+        let media_type = doc.field("mediaType")?.as_str()?.to_string();
+        check_media_type(&media_type, "descriptor")?;
+        let digest = doc.field("digest")?.as_str()?.to_string();
+        if !is_valid_digest(&digest) {
+            return Err(Error::Artifact(format!(
+                "descriptor '{media_type}': malformed digest"
+            )));
+        }
+        let size = doc.field("size")?.as_u64()?;
+        let annotations = match doc.field("annotations") {
+            Ok(v) => parse_annotations(v)?,
+            Err(_) => BTreeMap::new(),
+        };
+        Ok(Self { media_type, digest, size, annotations })
+    }
+}
+
+/// The artifact manifest: one config descriptor plus ordered layers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Manifest media type (always [`MANIFEST_MEDIA_TYPE`] today;
+    /// carried explicitly so readers can refuse documents they do not
+    /// speak, the way `trow` validates incoming manifest types).
+    pub media_type: String,
+    /// The artifact's configuration blob (farm manifest or job spec).
+    pub config: Descriptor,
+    /// Content layers in materialization order (snapshots, reports).
+    pub layers: Vec<Descriptor>,
+    /// Manifest-level annotations (job id, unit index, ...).
+    pub annotations: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    /// A manifest over `config` and `layers` with no annotations.
+    pub fn new(config: Descriptor, layers: Vec<Descriptor>) -> Self {
+        Self {
+            media_type: MANIFEST_MEDIA_TYPE.to_string(),
+            config,
+            layers,
+            annotations: BTreeMap::new(),
+        }
+    }
+
+    /// Serialize to the wire/disk document.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("schemaVersion", Json::Num(SCHEMA_VERSION as f64)),
+            ("mediaType", Json::Str(self.media_type.clone())),
+            ("config", self.config.to_json()),
+            ("layers", Json::Arr(self.layers.iter().map(Descriptor::to_json).collect())),
+        ];
+        if !self.annotations.is_empty() {
+            fields.push(("annotations", annotations_json(&self.annotations)));
+        }
+        obj(fields)
+    }
+
+    /// Strict parse (see [`Descriptor::from_json`]).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        strict_keys(
+            doc,
+            "manifest",
+            &["schemaVersion", "mediaType", "config", "layers", "annotations"],
+        )?;
+        let version = doc.field("schemaVersion")?.as_usize()?;
+        if version != SCHEMA_VERSION {
+            return Err(Error::Artifact(format!(
+                "unsupported manifest schemaVersion {version} (this build reads {SCHEMA_VERSION})"
+            )));
+        }
+        let media_type = doc.field("mediaType")?.as_str()?.to_string();
+        if media_type != MANIFEST_MEDIA_TYPE {
+            return Err(Error::Artifact(format!(
+                "unsupported manifest mediaType '{media_type}'"
+            )));
+        }
+        let config = Descriptor::from_json(doc.field("config")?)?;
+        let raw_layers = doc.field("layers")?.as_arr()?;
+        if raw_layers.len() > MAX_LAYERS {
+            return Err(Error::Artifact(format!(
+                "manifest claims {} layers (cap {MAX_LAYERS})",
+                raw_layers.len()
+            )));
+        }
+        let layers = raw_layers.iter().map(Descriptor::from_json).collect::<Result<Vec<_>>>()?;
+        let annotations = match doc.field("annotations") {
+            Ok(v) => parse_annotations(v)?,
+            Err(_) => BTreeMap::new(),
+        };
+        Ok(Self { media_type, config, layers, annotations })
+    }
+
+    /// The canonical byte form: compact JSON with `BTreeMap`-sorted
+    /// keys. These are the bytes a manifest digest addresses, so the
+    /// same manifest always has the same address.
+    pub fn canonical_bytes(&self) -> Vec<u8> {
+        self.to_json().to_string_compact().into_bytes()
+    }
+
+    /// This manifest's own registry address.
+    pub fn digest(&self) -> String {
+        digest_of(&self.canonical_bytes())
+    }
+
+    /// Every blob digest this manifest references (config first, then
+    /// layers in order) — the GC mark set contribution of one manifest.
+    pub fn referenced_blobs(&self) -> Vec<&str> {
+        let mut out = Vec::with_capacity(1 + self.layers.len());
+        out.push(self.config.digest.as_str());
+        out.extend(self.layers.iter().map(|l| l.digest.as_str()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let config = Descriptor::for_bytes(FARM_CONFIG_MEDIA_TYPE, b"{\"farm\":1}");
+        let layers = vec![
+            Descriptor::for_bytes(SNAPSHOT_MEDIA_TYPE, b"snap-a").named("replica-00000.snap"),
+            Descriptor::for_bytes(SNAPSHOT_MEDIA_TYPE, b"snap-b").named("replica-00001.snap"),
+        ];
+        let mut m = Manifest::new(config, layers);
+        m.annotations.insert("org.ising.unit".to_string(), "3".to_string());
+        m
+    }
+
+    #[test]
+    fn roundtrip_is_exact_and_address_is_stable() {
+        let m = sample();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.digest(), m.digest());
+        assert!(is_valid_digest(&m.digest()));
+        // The canonical bytes parse back to the same document.
+        let text = String::from_utf8(m.canonical_bytes()).unwrap();
+        let again = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(again, m);
+        assert_eq!(again.referenced_blobs().len(), 3);
+        assert_eq!(m.layers[0].name(), Some("replica-00000.snap"));
+    }
+
+    #[test]
+    fn unknown_fields_and_versions_are_rejected() {
+        let m = sample();
+        let mut doc = m.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("extra".to_string(), Json::Num(1.0));
+        }
+        assert!(Manifest::from_json(&doc).is_err());
+
+        let mut doc = m.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("schemaVersion".to_string(), Json::Num(2.0));
+        }
+        assert!(Manifest::from_json(&doc).is_err());
+
+        let mut doc = m.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("mediaType".to_string(), Json::Str("text/plain".to_string()));
+        }
+        assert!(Manifest::from_json(&doc).is_err());
+
+        // Descriptor-level strictness: unknown field, bad digest.
+        let mut doc = m.config.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("urls".to_string(), Json::Arr(vec![]));
+        }
+        assert!(Descriptor::from_json(&doc).is_err());
+        let mut doc = m.config.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("digest".to_string(), Json::Str("sha256:nope".to_string()));
+        }
+        assert!(Descriptor::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn caps_bound_hostile_documents() {
+        let mut m = sample();
+        let layer = m.layers[0].clone();
+        m.layers = vec![layer; MAX_LAYERS + 1];
+        assert!(Manifest::from_json(&m.to_json()).is_err());
+
+        let mut m = sample();
+        m.annotations.insert("k".to_string(), "v".repeat(MAX_STRING + 1));
+        assert!(Manifest::from_json(&m.to_json()).is_err());
+    }
+}

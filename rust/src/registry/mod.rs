@@ -1,0 +1,238 @@
+//! Content-addressed artifact registry — the storage substrate under
+//! the result cache, the distributed farm, and `ising artifacts`.
+//!
+//! The paper's multi-GPU scaling story (§4) depends on cheaply moving
+//! lattice state between workers. This layer gives those bytes a real
+//! storage model, shaped like an OCI registry (see the `oci-spec` /
+//! `ocitool` manifest shapes): immutable blobs addressed by their own
+//! SHA-256, small JSON **manifests** describing an artifact as a config
+//! descriptor plus content layers, and mutable **tags** naming
+//! manifests. A farm checkpoint becomes a layered artifact — the
+//! `farm.json` manifest as config, one blob per replica/unit snapshot —
+//! so jobs sharing a run prefix dedup their common snapshot blobs, a
+//! checkpoint can be pushed to / pulled from another node over
+//! `/v2/artifacts/...` and verified end-to-end by digest, and
+//! refcounted GC ([`Store::gc`]) reclaims whatever no tag or live job
+//! reaches.
+//!
+//! ```text
+//! <store>/blobs/sha256/<digest>   immutable bytes (snapshots, specs,
+//!                                 reports, manifests)
+//! <store>/refs/<name>             tag -> manifest digest
+//! ```
+//!
+//! Module map: [`digest`] (in-tree streaming SHA-256 + digest syntax),
+//! [`manifest`] (strict descriptor/manifest documents), [`store`] (the
+//! on-disk store + GC), [`gc`] (sweep reports). The helpers below pack
+//! a farm checkpoint directory into an artifact and materialize one
+//! back — the unit of `ising artifacts push/pull`.
+
+pub mod digest;
+pub mod gc;
+pub mod manifest;
+pub mod store;
+
+pub use digest::{digest_of, is_valid_digest, sha256_hex, Sha256};
+pub use gc::GcReport;
+pub use manifest::{Descriptor, Manifest};
+pub use store::{is_valid_tag, Store, StoreStats};
+
+use crate::coordinator::checkpoint::MANIFEST_FILE;
+use crate::error::{Error, Result};
+use crate::util::snapshot::atomic_write;
+use std::path::Path;
+
+/// Is `name` safe to create inside a checkpoint directory when
+/// materializing a pulled artifact? One path segment, conservative
+/// charset — a hostile layer annotation cannot escape the directory.
+pub fn is_safe_file_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && name != "."
+        && name != ".."
+        && name
+            .bytes()
+            .all(|b| matches!(b, b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.'))
+}
+
+/// Package a farm checkpoint directory as a layered artifact: the
+/// `farm.json` manifest becomes the config layer, every
+/// `replica-*.snap` a snapshot layer (streamed into the store, named by
+/// a descriptor annotation), and `tag` points at the result. Returns
+/// the artifact manifest's digest.
+pub fn pack_checkpoint(store: &Store, ckpt_dir: &Path, tag: &str) -> Result<String> {
+    let farm_path = ckpt_dir.join(MANIFEST_FILE);
+    let farm_bytes = std::fs::read(&farm_path).map_err(|e| {
+        Error::Artifact(format!(
+            "no farm manifest at '{}': {e} (is this a checkpoint dir?)",
+            farm_path.display()
+        ))
+    })?;
+    store.put_blob(&farm_bytes)?;
+    let config = Descriptor::for_bytes(manifest::FARM_CONFIG_MEDIA_TYPE, &farm_bytes)
+        .named(MANIFEST_FILE);
+
+    let mut layers = Vec::new();
+    for path in crate::coordinator::checkpoint::snapshot_files(ckpt_dir)? {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let name = name.to_string();
+        let (digest, size) = store.ingest_file(&path)?;
+        layers.push(Descriptor {
+            media_type: manifest::SNAPSHOT_MEDIA_TYPE.to_string(),
+            digest,
+            size,
+            annotations: std::collections::BTreeMap::new(),
+        }
+        .named(&name));
+    }
+    let artifact = Manifest::new(config, layers);
+    let digest = store.put_manifest(&artifact)?;
+    store.tag(tag, &digest)?;
+    Ok(digest)
+}
+
+/// Materialize an artifact back into a checkpoint directory: the config
+/// layer becomes `farm.json`, every named snapshot layer its file. All
+/// bytes are digest-verified on the way out of the store, and layer
+/// names are validated before any file is created. Returns the parsed
+/// manifest.
+pub fn unpack_checkpoint(store: &Store, reference: &str, dest: &Path) -> Result<Manifest> {
+    let artifact = store.get_manifest(reference)?;
+    if artifact.config.media_type != manifest::FARM_CONFIG_MEDIA_TYPE {
+        return Err(Error::Artifact(format!(
+            "artifact '{reference}' is not a farm checkpoint (config is '{}')",
+            artifact.config.media_type
+        )));
+    }
+    std::fs::create_dir_all(dest)?;
+    let farm_bytes = store.get_blob(&artifact.config.digest)?;
+    atomic_write(&dest.join(MANIFEST_FILE), &farm_bytes)?;
+    for layer in &artifact.layers {
+        let Some(name) = layer.name() else {
+            return Err(Error::Artifact(format!(
+                "layer {} carries no file name annotation",
+                layer.digest
+            )));
+        };
+        if !is_safe_file_name(name) || name == MANIFEST_FILE {
+            return Err(Error::Artifact(format!("unsafe layer file name '{name}'")));
+        }
+        let bytes = store.get_blob(&layer.digest)?;
+        if bytes.len() as u64 != layer.size {
+            return Err(Error::Artifact(format!(
+                "layer {name}: stored {} bytes, descriptor says {}",
+                bytes.len(),
+                layer.size
+            )));
+        }
+        atomic_write(&dest.join(name), &bytes)?;
+    }
+    Ok(artifact)
+}
+
+/// Package one fleet unit's leased-checkpoint state: the unit's job
+/// spec as config, its snapshot payload as the single layer. This is
+/// the manifest the coordinator stores per unit; workers pull the
+/// snapshot blob by digest instead of receiving it inline.
+pub fn pack_unit(store: &Store, spec_json: &str, snapshot: &[u8], unit: usize) -> Result<String> {
+    store.put_blob(spec_json.as_bytes())?;
+    store.put_blob(snapshot)?;
+    let config = Descriptor::for_bytes(manifest::SPEC_MEDIA_TYPE, spec_json.as_bytes());
+    let layer = Descriptor::for_bytes(manifest::SNAPSHOT_MEDIA_TYPE, snapshot)
+        .named("replica-00000.snap");
+    let mut artifact = Manifest::new(config, vec![layer]);
+    artifact
+        .annotations
+        .insert("org.ising.unit".to_string(), unit.to_string());
+    store.put_manifest(&artifact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ising-registry-mod-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn safe_file_names() {
+        assert!(is_safe_file_name("replica-00003.snap"));
+        assert!(is_safe_file_name("farm.json"));
+        for bad in ["", ".", "..", "a/b", "A.snap", "sp ace", &"x".repeat(129)] {
+            assert!(!is_safe_file_name(bad), "must reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_checkpoint_roundtrip() {
+        let root = temp_dir("roundtrip");
+        let ckpt = root.join("ckpt");
+        std::fs::create_dir_all(&ckpt).unwrap();
+        std::fs::write(ckpt.join(MANIFEST_FILE), b"{\"version\": 1}").unwrap();
+        std::fs::write(ckpt.join("replica-00000.snap"), b"snap zero").unwrap();
+        std::fs::write(ckpt.join("replica-00001.snap"), b"snap one").unwrap();
+        // Non-snapshot droppings are not packaged.
+        std::fs::write(ckpt.join("notes.txt"), b"ignore me").unwrap();
+
+        let store = Store::open(root.join("store")).unwrap();
+        let digest = pack_checkpoint(&store, &ckpt, "runs/demo").unwrap();
+        assert_eq!(store.resolve("runs/demo").unwrap(), digest);
+        let artifact = store.get_manifest("runs/demo").unwrap();
+        assert_eq!(artifact.layers.len(), 2);
+        assert_eq!(artifact.layers[0].name(), Some("replica-00000.snap"));
+
+        let out = root.join("restored");
+        let back = unpack_checkpoint(&store, "runs/demo", &out).unwrap();
+        assert_eq!(back, artifact);
+        assert_eq!(std::fs::read(out.join(MANIFEST_FILE)).unwrap(), b"{\"version\": 1}");
+        assert_eq!(std::fs::read(out.join("replica-00001.snap")).unwrap(), b"snap one");
+        assert!(!out.join("notes.txt").exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn pack_requires_a_checkpoint_dir_and_unpack_validates_names() {
+        let root = temp_dir("invalid");
+        let store = Store::open(root.join("store")).unwrap();
+        assert!(pack_checkpoint(&store, &root.join("empty"), "t").is_err());
+
+        // A manifest with a hostile layer name is refused at unpack.
+        let spec = b"{}";
+        let snap = b"payload";
+        store.put_blob(spec).unwrap();
+        store.put_blob(snap).unwrap();
+        let config = Descriptor::for_bytes(manifest::FARM_CONFIG_MEDIA_TYPE, spec);
+        let evil =
+            Descriptor::for_bytes(manifest::SNAPSHOT_MEDIA_TYPE, snap).named("../escape.snap");
+        let m = Manifest::new(config, vec![evil]);
+        let d = store.put_manifest(&m).unwrap();
+        assert!(unpack_checkpoint(&store, &d, &root.join("out")).is_err());
+        assert!(!root.join("escape.snap").exists());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unit_artifacts_share_spec_blobs() {
+        let root = temp_dir("unit");
+        let store = Store::open(root.join("store")).unwrap();
+        let d0 = pack_unit(&store, "{\"spec\": 1}", b"snapshot-0", 0).unwrap();
+        let d1 = pack_unit(&store, "{\"spec\": 1}", b"snapshot-1", 1).unwrap();
+        assert_ne!(d0, d1);
+        let m0 = store.get_manifest(&d0).unwrap();
+        let m1 = store.get_manifest(&d1).unwrap();
+        // The shared spec blob is stored once.
+        assert_eq!(m0.config.digest, m1.config.digest);
+        // 1 spec + 2 snapshots + 2 manifests.
+        assert_eq!(store.stats().unwrap().blobs, 5);
+        assert_eq!(m0.annotations.get("org.ising.unit").map(String::as_str), Some("0"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,686 @@
+//! The content-addressed store: blobs, manifests, and tags on disk.
+//!
+//! Layout (all paths under one store root):
+//!
+//! ```text
+//! <root>/blobs/sha256/<64 hex>   blob bytes, named by their own digest
+//! <root>/refs/<name>             tag file: one manifest digest + '\n'
+//! ```
+//!
+//! Blobs are immutable once published: ingest streams the bytes through
+//! SHA-256, writes a uniquely-named temp file, and renames it into
+//! place, so a crash mid-ingest leaves garbage temp files (reclaimed by
+//! GC) but never a half-written blob under a valid address. Reads
+//! rehash the file and refuse to return bytes whose digest does not
+//! match the address — disk corruption surfaces as an error, not as
+//! wrong physics. Manifests are ordinary blobs holding their canonical
+//! JSON, so one namespace and one GC walk covers everything; tags are
+//! the only mutable state.
+//!
+//! Concurrency: one mutex (`refs`, see the `ising-lint` lock table)
+//! serializes namespace mutation — blob publication, tag writes, and
+//! the GC mark/sweep — so a sweep can never race a rename and collect a
+//! blob that just became referenced. Reads take no lock: blob files are
+//! immutable and tag files are replaced atomically.
+
+use crate::error::{Error, Result};
+use crate::obs::Obs;
+use crate::util::json::Json;
+use crate::util::snapshot::atomic_write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::digest::{digest_of, is_valid_digest, to_hex, Sha256, ALGORITHM};
+use super::gc::GcReport;
+use super::manifest::{Manifest, MANIFEST_MEDIA_TYPE};
+
+/// Blob subdirectory under the store root.
+pub const BLOBS_SUBDIR: &str = "blobs";
+/// Tag subdirectory under the store root.
+pub const REFS_SUBDIR: &str = "refs";
+/// Longest accepted tag name.
+pub const MAX_TAG: usize = 128;
+/// Streaming-ingest chunk size (file ingest hashes and copies in these
+/// units instead of buffering whole artifacts).
+const INGEST_CHUNK: usize = 64 * 1024;
+
+/// Per-process temp-name disambiguator for concurrent ingests of the
+/// same content (each writer gets its own temp file; the rename is what
+/// races, harmlessly, under the namespace lock).
+static INGEST_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Is `name` a well-formed tag? Lowercase path-ish names only
+/// (`jobs/<id>/result`, `units/unit-00003`), every segment non-empty
+/// and free of path tricks — enforced before any name coming off the
+/// wire or the CLI touches the filesystem.
+pub fn is_valid_tag(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= MAX_TAG
+        && name.split('/').all(|seg| {
+            !seg.is_empty()
+                && seg != "."
+                && seg != ".."
+                && seg
+                    .bytes()
+                    .all(|b| matches!(b, b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.'))
+        })
+}
+
+/// Aggregate store accounting for the scrape-time gauges and `gc`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Number of stored blobs (manifests included).
+    pub blobs: usize,
+    /// Total stored bytes across all blobs.
+    pub bytes: u64,
+}
+
+/// A content-addressed artifact store rooted at one directory.
+#[derive(Debug)]
+pub struct Store {
+    root: PathBuf,
+    /// Namespace mutation lock: blob publication, tag writes, GC.
+    refs: Mutex<()>,
+    /// Metrics/trace sink; `None` for plain CLI use.
+    obs: Option<Arc<Obs>>,
+}
+
+impl Store {
+    /// Open (creating the layout if missing), without observability.
+    pub fn open(root: PathBuf) -> Result<Self> {
+        Self::build(root, None)
+    }
+
+    /// Open with a metrics/trace sink (the serving layers).
+    pub fn with_obs(root: PathBuf, obs: Arc<Obs>) -> Result<Self> {
+        Self::build(root, Some(obs))
+    }
+
+    fn build(root: PathBuf, obs: Option<Arc<Obs>>) -> Result<Self> {
+        std::fs::create_dir_all(root.join(BLOBS_SUBDIR).join(ALGORITHM))?;
+        std::fs::create_dir_all(root.join(REFS_SUBDIR))?;
+        Ok(Self { root, refs: Mutex::new(()), obs })
+    }
+
+    /// Store root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// On-disk path of a (validated) digest.
+    pub fn blob_path(&self, digest: &str) -> Result<PathBuf> {
+        let hex = super::digest::digest_hex(digest)?;
+        Ok(self.root.join(BLOBS_SUBDIR).join(ALGORITHM).join(hex))
+    }
+
+    fn count_ingest(&self, outcome: &str) {
+        if let Some(obs) = &self.obs {
+            obs.metrics.counter(
+                "registry_blob_ingests_total",
+                "Blob ingests into the artifact store by outcome.",
+                &[("outcome", outcome)],
+                1.0,
+            );
+        }
+    }
+
+    fn count_read(&self, outcome: &str) {
+        if let Some(obs) = &self.obs {
+            obs.metrics.counter(
+                "registry_blob_reads_total",
+                "Blob reads from the artifact store by outcome.",
+                &[("outcome", outcome)],
+                1.0,
+            );
+        }
+    }
+
+    /// Publish `tmp` (already holding the full bytes) at the blob
+    /// address, under the namespace lock. Returns `true` if this call
+    /// created the blob, `false` on dedup (the temp file is removed).
+    fn publish_tmp(&self, tmp: &Path, path: &Path) -> Result<bool> {
+        let _guard = self.refs.lock().expect("registry refs lock poisoned");
+        if path.is_file() {
+            let _ = std::fs::remove_file(tmp);
+            return Ok(false);
+        }
+        std::fs::rename(tmp, path)?;
+        Ok(true)
+    }
+
+    /// Ingest in-memory bytes; returns the blob's digest. Idempotent:
+    /// re-ingesting existing content is a dedup hit, not a rewrite.
+    pub fn put_blob(&self, bytes: &[u8]) -> Result<String> {
+        let digest = digest_of(bytes);
+        let path = self.blob_path(&digest)?;
+        let tmp = self.tmp_path(&path);
+        std::fs::write(&tmp, bytes)?;
+        let created = self.publish_tmp(&tmp, &path)?;
+        self.count_ingest(if created { "new" } else { "dedup" });
+        Ok(digest)
+    }
+
+    /// Ingest bytes that arrived with a claimed address (a blob PUT off
+    /// the wire): the claim is verified against the actual content and
+    /// a mismatch is rejected before anything is stored.
+    pub fn put_blob_verified(&self, bytes: &[u8], claimed: &str) -> Result<String> {
+        super::digest::digest_hex(claimed)?;
+        let actual = digest_of(bytes);
+        if actual != claimed {
+            self.count_ingest("rejected");
+            return Err(Error::Artifact(format!(
+                "digest mismatch: body hashes to {actual}, request claimed {claimed}"
+            )));
+        }
+        self.put_blob(bytes)
+    }
+
+    /// Ingest a file without buffering it: stream it through SHA-256
+    /// while copying into a temp file, then publish under the computed
+    /// address. Returns `(digest, size)`.
+    pub fn ingest_file(&self, src: &Path) -> Result<(String, u64)> {
+        use std::io::{Read, Write};
+        let mut reader = std::fs::File::open(src)?;
+        let staging = self.root.join(BLOBS_SUBDIR).join(ALGORITHM).join(format!(
+            "ingest-{}-{}.tmp",
+            std::process::id(),
+            INGEST_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut writer = std::fs::File::create(&staging)?;
+        let mut hasher = Sha256::new();
+        let mut size = 0u64;
+        let mut buf = vec![0u8; INGEST_CHUNK];
+        loop {
+            let n = reader.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            let (chunk, _) = buf.split_at(n);
+            hasher.update(chunk);
+            writer.write_all(chunk)?;
+            size += n as u64;
+        }
+        writer.sync_all()?;
+        drop(writer);
+        let digest = format!("{ALGORITHM}:{}", to_hex(&hasher.finalize()));
+        let path = self.blob_path(&digest)?;
+        let created = self.publish_tmp(&staging, &path)?;
+        self.count_ingest(if created { "new" } else { "dedup" });
+        Ok((digest, size))
+    }
+
+    /// Is this digest stored?
+    pub fn has_blob(&self, digest: &str) -> bool {
+        self.blob_path(digest).map(|p| p.is_file()).unwrap_or(false)
+    }
+
+    /// Stored size of a blob, if present.
+    pub fn blob_size(&self, digest: &str) -> Option<u64> {
+        let path = self.blob_path(digest).ok()?;
+        std::fs::metadata(path).ok().map(|m| m.len())
+    }
+
+    /// Read a blob and verify it still hashes to its address. A missing
+    /// blob is a miss; a corrupt blob is a loud error, never bytes.
+    pub fn get_blob(&self, digest: &str) -> Result<Vec<u8>> {
+        let path = self.blob_path(digest)?;
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.count_read("miss");
+                return Err(Error::Artifact(format!("no blob {digest} in store")));
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let actual = digest_of(&bytes);
+        if actual != digest {
+            self.count_read("corrupt");
+            return Err(Error::Artifact(format!(
+                "blob {digest} is corrupt on disk (content hashes to {actual})"
+            )));
+        }
+        self.count_read("hit");
+        Ok(bytes)
+    }
+
+    /// Store a manifest (as a blob of its canonical bytes) and return
+    /// its digest. Every blob it references must already be present —
+    /// the same "layers before manifest" ordering real registries
+    /// enforce, so a stored manifest is always materializable.
+    pub fn put_manifest(&self, manifest: &Manifest) -> Result<String> {
+        for digest in manifest.referenced_blobs() {
+            if !self.has_blob(digest) {
+                return Err(Error::Artifact(format!(
+                    "manifest references missing blob {digest}; push blobs before the manifest"
+                )));
+            }
+        }
+        self.put_blob(&manifest.canonical_bytes())
+    }
+
+    /// Load a manifest by tag or digest, verifying blob integrity and
+    /// strict-parsing the document.
+    pub fn get_manifest(&self, reference: &str) -> Result<Manifest> {
+        let digest = self.resolve(reference)?;
+        let bytes = self.get_blob(&digest)?;
+        let text = String::from_utf8(bytes)
+            .map_err(|_| Error::Artifact(format!("manifest {digest} is not UTF-8")))?;
+        Manifest::from_json(&Json::parse(&text)?)
+    }
+
+    /// On-disk path of a (validated) tag.
+    fn tag_path(&self, name: &str) -> Result<PathBuf> {
+        if !is_valid_tag(name) {
+            let shown: String = name.chars().take(80).collect();
+            return Err(Error::Artifact(format!("malformed tag name '{shown}'")));
+        }
+        Ok(self.root.join(REFS_SUBDIR).join(name))
+    }
+
+    /// Point tag `name` at a stored manifest digest (atomic replace).
+    pub fn tag(&self, name: &str, manifest_digest: &str) -> Result<()> {
+        let path = self.tag_path(name)?;
+        super::digest::digest_hex(manifest_digest)?;
+        if !self.has_blob(manifest_digest) {
+            return Err(Error::Artifact(format!(
+                "cannot tag '{name}': no manifest blob {manifest_digest} in store"
+            )));
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let _guard = self.refs.lock().expect("registry refs lock poisoned");
+        atomic_write(&path, format!("{manifest_digest}\n").as_bytes())
+    }
+
+    /// Remove a tag; `true` if it existed. The manifest and blobs stay
+    /// until a GC sweep finds them unreferenced.
+    pub fn delete_tag(&self, name: &str) -> Result<bool> {
+        let path = self.tag_path(name)?;
+        let _guard = self.refs.lock().expect("registry refs lock poisoned");
+        match std::fs::remove_file(path) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Resolve a reference: a digest resolves to itself, a tag to the
+    /// digest its file records.
+    pub fn resolve(&self, reference: &str) -> Result<String> {
+        if is_valid_digest(reference) {
+            return Ok(reference.to_string());
+        }
+        let path = self.tag_path(reference)?;
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(Error::Artifact(format!("no tag '{reference}' in store")));
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let digest = text.trim();
+        if !is_valid_digest(digest) {
+            return Err(Error::Artifact(format!("tag '{reference}' holds a malformed digest")));
+        }
+        Ok(digest.to_string())
+    }
+
+    /// All tags as `(name, manifest digest)`, sorted by name.
+    pub fn tags(&self) -> Result<Vec<(String, String)>> {
+        let refs_root = self.root.join(REFS_SUBDIR);
+        let mut out = Vec::new();
+        let mut stack = vec![refs_root.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match std::fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries.flatten() {
+                let path = entry.path();
+                if path.is_dir() {
+                    stack.push(path);
+                    continue;
+                }
+                let Ok(rel) = path.strip_prefix(&refs_root) else { continue };
+                let Some(name) = rel.to_str() else { continue };
+                let name = name.replace('\\', "/");
+                if !is_valid_tag(&name) {
+                    continue;
+                }
+                if let Ok(digest) = self.resolve(&name) {
+                    out.push((name, digest));
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// All stored blob digests, sorted.
+    pub fn blobs(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        let dir = self.root.join(BLOBS_SUBDIR).join(ALGORITHM);
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(hex) = name.to_str() else { continue };
+                let digest = format!("{ALGORITHM}:{hex}");
+                if is_valid_digest(&digest) && entry.path().is_file() {
+                    out.push(digest);
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Blob count and total bytes (the scrape-time store gauges).
+    pub fn stats(&self) -> Result<StoreStats> {
+        let mut stats = StoreStats::default();
+        for digest in self.blobs()? {
+            stats.blobs += 1;
+            stats.bytes += self.blob_size(&digest).unwrap_or(0);
+        }
+        Ok(stats)
+    }
+
+    /// Refcounted mark/sweep GC. Roots are every tag plus the caller's
+    /// `live_roots` (tags or digests — how the serving layers pin
+    /// in-flight jobs that have no tag yet); marking follows manifests
+    /// to the blobs they reference. Unmarked blobs (and stale ingest
+    /// temp files) are swept — or only counted when `dry_run`. The
+    /// whole walk holds the namespace lock, so a concurrent tag or
+    /// publish either lands before the mark or after the sweep.
+    pub fn gc(&self, live_roots: &[String], dry_run: bool) -> Result<GcReport> {
+        let start = crate::obs::clock::now();
+        let guard = self.refs.lock().expect("registry refs lock poisoned");
+        let mut marked: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        let mut roots: Vec<String> = Vec::new();
+        for (_, digest) in self.tags_unlocked()? {
+            roots.push(digest);
+        }
+        for root in live_roots {
+            if is_valid_digest(root) {
+                roots.push(root.clone());
+            } else if let Ok(digest) = self.resolve_unlocked(root) {
+                roots.push(digest);
+            }
+            // An unresolvable live root pins nothing — the job it
+            // described has no artifact yet.
+        }
+        for digest in roots {
+            if !marked.insert(digest.clone()) {
+                continue;
+            }
+            // Follow manifests one level down to the blobs they pin.
+            if let Ok(manifest) = self.read_manifest_unlocked(&digest) {
+                for blob in manifest.referenced_blobs() {
+                    marked.insert(blob.to_string());
+                }
+            }
+        }
+        let mut report = GcReport { dry_run, ..GcReport::default() };
+        for digest in self.blobs()? {
+            if marked.contains(&digest) {
+                report.kept += 1;
+                continue;
+            }
+            let size = self.blob_size(&digest).unwrap_or(0);
+            if !dry_run {
+                std::fs::remove_file(self.blob_path(&digest)?)?;
+            }
+            report.swept += 1;
+            report.reclaimed_bytes += size;
+        }
+        // Stale ingest temp files (a crashed writer) are garbage too.
+        let blob_dir = self.root.join(BLOBS_SUBDIR).join(ALGORITHM);
+        if let Ok(entries) = std::fs::read_dir(&blob_dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if name.ends_with(".tmp") && !dry_run {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        drop(guard);
+        if let Some(obs) = &self.obs {
+            obs.metrics.observe(
+                "registry_gc_duration_seconds",
+                "Wall time of registry GC mark/sweep passes.",
+                &[],
+                start.elapsed().as_secs_f64(),
+            );
+            obs.metrics.counter(
+                "registry_gc_swept_blobs_total",
+                "Blobs reclaimed by registry GC (dry runs excluded).",
+                &[],
+                if dry_run { 0.0 } else { report.swept as f64 },
+            );
+        }
+        Ok(report)
+    }
+
+    /// Tag enumeration under the GC guard. `tags()` never locks (tag
+    /// files are replaced atomically), so this alias only documents
+    /// that the call is intentional, not a re-entrancy hazard.
+    fn tags_unlocked(&self) -> Result<Vec<(String, String)>> {
+        self.tags()
+    }
+
+    /// Reference resolution under the GC guard (see `tags_unlocked`).
+    fn resolve_unlocked(&self, reference: &str) -> Result<String> {
+        self.resolve(reference)
+    }
+
+    /// Parse a stored blob as a manifest if it is one (lock-free read).
+    fn read_manifest_unlocked(&self, digest: &str) -> Result<Manifest> {
+        let path = self.blob_path(digest)?;
+        let bytes = std::fs::read(path)?;
+        if digest_of(&bytes) != digest {
+            return Err(Error::Artifact(format!("blob {digest} is corrupt on disk")));
+        }
+        let text = String::from_utf8(bytes)
+            .map_err(|_| Error::Artifact("not a manifest".to_string()))?;
+        let manifest = Manifest::from_json(&Json::parse(&text)?)?;
+        if manifest.media_type != MANIFEST_MEDIA_TYPE {
+            return Err(Error::Artifact("not a manifest".to_string()));
+        }
+        Ok(manifest)
+    }
+
+    fn tmp_path(&self, path: &Path) -> PathBuf {
+        let mut name = path.as_os_str().to_os_string();
+        name.push(format!(
+            ".{}-{}.tmp",
+            std::process::id(),
+            INGEST_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        PathBuf::from(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::manifest::{Descriptor, SNAPSHOT_MEDIA_TYPE, SPEC_MEDIA_TYPE};
+
+    fn temp_store(tag: &str) -> Store {
+        let dir = std::env::temp_dir().join(format!(
+            "ising-registry-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open(dir).unwrap()
+    }
+
+    fn manifest_for(config: &[u8], layers: &[&[u8]]) -> Manifest {
+        Manifest::new(
+            Descriptor::for_bytes(SPEC_MEDIA_TYPE, config),
+            layers
+                .iter()
+                .map(|l| Descriptor::for_bytes(SNAPSHOT_MEDIA_TYPE, l))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn blob_roundtrip_dedup_and_corruption() {
+        let store = temp_store("blob");
+        let digest = store.put_blob(b"hello registry").unwrap();
+        assert!(store.has_blob(&digest));
+        assert_eq!(store.blob_size(&digest), Some(14));
+        assert_eq!(store.get_blob(&digest).unwrap(), b"hello registry");
+        // Idempotent re-ingest.
+        assert_eq!(store.put_blob(b"hello registry").unwrap(), digest);
+        assert_eq!(store.blobs().unwrap(), vec![digest.clone()]);
+        // A flipped byte on disk is detected on read.
+        let path = store.blob_path(&digest).unwrap();
+        std::fs::write(&path, b"hello Registry").unwrap();
+        assert!(store.get_blob(&digest).is_err());
+        // Missing blobs are a miss, not a panic.
+        let ghost = digest_of(b"never stored");
+        assert!(!store.has_blob(&ghost));
+        assert!(store.get_blob(&ghost).is_err());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn verified_ingest_rejects_wrong_claims() {
+        let store = temp_store("verified");
+        let claimed = digest_of(b"other bytes");
+        assert!(store.put_blob_verified(b"these bytes", &claimed).is_err());
+        assert!(!store.has_blob(&claimed));
+        let good = digest_of(b"these bytes");
+        assert_eq!(store.put_blob_verified(b"these bytes", &good).unwrap(), good);
+        assert!(store.put_blob_verified(b"x", "sha256:zz").is_err());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn file_ingest_streams_and_matches_in_memory_digest() {
+        let store = temp_store("ingest");
+        let src = store.root().join("payload.bin");
+        let data: Vec<u8> = (0u32..200_000).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&src, &data).unwrap();
+        let (digest, size) = store.ingest_file(&src).unwrap();
+        assert_eq!(size, data.len() as u64);
+        assert_eq!(digest, digest_of(&data));
+        assert_eq!(store.get_blob(&digest).unwrap(), data);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn manifests_require_their_blobs_and_tags_resolve() {
+        let store = temp_store("manifest");
+        let m = manifest_for(b"{\"cfg\":1}", &[b"snap"]);
+        // Blobs must land first.
+        assert!(store.put_manifest(&m).is_err());
+        store.put_blob(b"{\"cfg\":1}").unwrap();
+        store.put_blob(b"snap").unwrap();
+        let digest = store.put_manifest(&m).unwrap();
+        assert_eq!(digest, m.digest());
+        assert_eq!(store.get_manifest(&digest).unwrap(), m);
+
+        store.tag("jobs/abc/result", &digest).unwrap();
+        assert_eq!(store.resolve("jobs/abc/result").unwrap(), digest);
+        assert_eq!(store.get_manifest("jobs/abc/result").unwrap(), m);
+        assert_eq!(
+            store.tags().unwrap(),
+            vec![("jobs/abc/result".to_string(), digest.clone())]
+        );
+        assert!(store.delete_tag("jobs/abc/result").unwrap());
+        assert!(!store.delete_tag("jobs/abc/result").unwrap());
+        assert!(store.resolve("jobs/abc/result").is_err());
+        // Tagging an absent manifest is refused.
+        assert!(store.tag("x", &digest_of(b"ghost")).is_err());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn tag_names_are_validated() {
+        assert!(is_valid_tag("jobs/0011aabb/result"));
+        assert!(is_valid_tag("units/unit-00003"));
+        for bad in [
+            "",
+            "/lead",
+            "trail/",
+            "a//b",
+            "../escape",
+            "a/../b",
+            "UPPER",
+            "sp ace",
+            "way/too/long/aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa",
+        ] {
+            assert!(!is_valid_tag(bad), "must reject '{bad}'");
+        }
+        let store = temp_store("tags");
+        assert!(store.tag("../escape", "sha256:00").is_err());
+        assert!(store.resolve("../escape").is_err());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn gc_keeps_tagged_and_live_sweeps_the_rest() {
+        let store = temp_store("gc");
+        // Artifact A: tagged. Artifact B: untagged but live. C: orphan.
+        let config = b"{\"cfg\":1}";
+        store.put_blob(config).unwrap();
+        store.put_blob(b"snap-a").unwrap();
+        store.put_blob(b"snap-b").unwrap();
+        let orphan = store.put_blob(b"orphan").unwrap();
+        let ma = manifest_for(config, &[b"snap-a"]);
+        let mb = manifest_for(config, &[b"snap-b"]);
+        let da = store.put_manifest(&ma).unwrap();
+        let db = store.put_manifest(&mb).unwrap();
+        store.tag("keep/a", &da).unwrap();
+
+        // Dry run reports but removes nothing.
+        let dry = store.gc(&[db.clone()], true).unwrap();
+        assert!(dry.dry_run);
+        assert_eq!(dry.swept, 1, "{dry:?}");
+        assert!(store.has_blob(&orphan));
+
+        let report = store.gc(&[db.clone()], false).unwrap();
+        assert_eq!(report.swept, 1);
+        assert!(!store.has_blob(&orphan));
+        // Everything reachable from the tag or the live root survives,
+        // including the shared config blob.
+        for d in [&da, &db] {
+            assert!(store.has_blob(d));
+        }
+        assert_eq!(store.get_manifest(&da).unwrap(), ma);
+        assert_eq!(store.get_manifest(&db).unwrap(), mb);
+        // Dropping the live root sweeps B's manifest and private layer
+        // but keeps the config blob A still references.
+        let report = store.gc(&[], false).unwrap();
+        assert_eq!(report.swept, 2);
+        assert!(store.has_blob(&da));
+        assert!(!store.has_blob(&db));
+        assert_eq!(store.get_manifest("keep/a").unwrap(), ma);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn shared_layers_dedup_by_blob_count() {
+        let store = temp_store("dedup");
+        let config = b"{\"run\":\"prefix\"}";
+        let shared = b"common-snapshot";
+        store.put_blob(config).unwrap();
+        store.put_blob(shared).unwrap();
+        store.put_blob(b"only-a").unwrap();
+        store.put_blob(b"only-b").unwrap();
+        let ma = manifest_for(config, &[shared, b"only-a"]);
+        let mb = manifest_for(config, &[shared, b"only-b"]);
+        let da = store.put_manifest(&ma).unwrap();
+        let db = store.put_manifest(&mb).unwrap();
+        store.tag("jobs/a", &da).unwrap();
+        store.tag("jobs/b", &db).unwrap();
+        // 4 content blobs + 2 manifests — the shared config and shared
+        // snapshot exist exactly once.
+        assert_eq!(store.stats().unwrap().blobs, 6);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

@@ -35,6 +35,9 @@ use super::wire::{ErrorEnvelope, JobSpec};
 use crate::config::ServerConfig;
 use crate::coordinator::farm::{FarmConfig, FarmEngine};
 use crate::error::{Error, Result};
+use crate::obs::{clock, Obs};
+use crate::registry::manifest::MANIFEST_MEDIA_TYPE;
+use crate::registry::{is_valid_digest, is_valid_tag, Manifest, Store};
 use crate::util::json::{obj, Json};
 use std::sync::Arc;
 
@@ -90,6 +93,38 @@ pub fn handle(req: &Request, ctx: &ApiCtx) -> Response {
         ("GET", ["v2", "info"]) => info(ctx),
         ("GET", ["v2", "metrics"]) => metrics(ctx),
         ("POST", ["v2", "shutdown"]) => shutdown(ctx),
+        // ----- /v2/artifacts: the registry push/pull surface -----
+        ("GET", ["v2", "artifacts", "tags"]) => {
+            artifact_tags(&ctx.scheduler.artifact_store())
+        }
+        ("GET", ["v2", "artifacts", "manifests", reference @ ..]) => artifact_manifest_get(
+            &ctx.scheduler.artifact_store(),
+            &ctx.scheduler.obs(),
+            &reference.join("/"),
+        ),
+        ("PUT", ["v2", "artifacts", "manifests", target @ ..]) => artifact_manifest_put(
+            &ctx.scheduler.artifact_store(),
+            &ctx.scheduler.obs(),
+            &target.join("/"),
+            &req.body,
+        ),
+        ("HEAD", ["v2", "artifacts", "blobs", digest]) => {
+            artifact_blob_head(&ctx.scheduler.artifact_store(), digest)
+        }
+        ("GET", ["v2", "artifacts", "blobs", digest]) => {
+            artifact_blob_get(&ctx.scheduler.artifact_store(), digest)
+        }
+        ("PUT", ["v2", "artifacts", "blobs", digest]) => {
+            artifact_blob_put(&ctx.scheduler.artifact_store(), digest, &req.body)
+        }
+        (_, ["v2", "artifacts", "tags"])
+        | (_, ["v2", "artifacts", "manifests", ..])
+        | (_, ["v2", "artifacts", "blobs", _]) => ErrorEnvelope::new(
+            405,
+            "usage",
+            "artifacts endpoints speak GET/HEAD/PUT",
+        )
+        .to_response(),
         (_, ["v2", "jobs"]) | (_, ["v2", "shutdown"]) => {
             ErrorEnvelope::new(405, "usage", "use POST for this endpoint").to_response()
         }
@@ -151,7 +186,193 @@ fn metrics(ctx: &ApiCtx) -> Response {
             n as f64,
         );
     }
+    let store = ctx.scheduler.artifact_store();
+    record_store_gauges(&obs, &store);
     Response::prometheus(obs.metrics.render())
+}
+
+/// Scrape-time registry gauges (blob count + store size) — shared by the
+/// job server's `/v2/metrics` and the fleet coordinator's.
+pub fn record_store_gauges(obs: &Obs, store: &Store) {
+    if let Ok(stats) = store.stats() {
+        obs.metrics.gauge(
+            "registry_store_blobs",
+            "Blobs in the artifact registry store right now.",
+            &[],
+            stats.blobs as f64,
+        );
+        obs.metrics.gauge(
+            "registry_store_size_bytes",
+            "Total blob bytes in the artifact registry store right now.",
+            &[],
+            stats.bytes as f64,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// /v2/artifacts handlers — shared verbatim by the job server and (GET
+// side) the fleet coordinator, so `ising artifacts push/pull` and worker
+// checkpoint pulls speak to one implementation.
+
+/// `GET /v2/artifacts/tags` — every tag with the digest it names.
+pub fn artifact_tags(store: &Store) -> Response {
+    match store.tags() {
+        Ok(tags) => Response::json(
+            200,
+            &obj(vec![(
+                "tags",
+                Json::Arr(
+                    tags.into_iter()
+                        .map(|(name, digest)| {
+                            obj(vec![
+                                ("name", Json::Str(name)),
+                                ("digest", Json::Str(digest)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+        ),
+        Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+    }
+}
+
+/// `GET /v2/artifacts/manifests/{ref}` — serve a manifest's canonical
+/// bytes by tag or digest (the pull side of a transfer).
+pub fn artifact_manifest_get(store: &Store, obs: &Obs, reference: &str) -> Response {
+    let started = clock::now();
+    let resp = match store.resolve(reference) {
+        Err(e) => ErrorEnvelope::new(404, "not_found", e.to_string()).to_response(),
+        Ok(digest) if !store.has_blob(&digest) => {
+            ErrorEnvelope::new(404, "not_found", format!("no manifest '{reference}'"))
+                .to_response()
+        }
+        Ok(digest) => match store.get_manifest(&digest) {
+            Ok(m) => {
+                let mut resp = Response::octets(200, m.canonical_bytes());
+                resp.content_type = MANIFEST_MEDIA_TYPE;
+                resp.with_header("Docker-Content-Digest", digest)
+            }
+            Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+        },
+    };
+    let code = resp.status.to_string();
+    obs.trace.complete(
+        "artifact_pull",
+        "registry",
+        "artifacts",
+        started,
+        &[("ref", reference), ("code", code.as_str())],
+    );
+    resp
+}
+
+/// `PUT /v2/artifacts/manifests/{tag|digest}` — accept a manifest whose
+/// referenced blobs were pushed first; a tag target additionally points
+/// the tag at it (the push side of a transfer).
+pub fn artifact_manifest_put(store: &Store, obs: &Obs, target: &str, body: &[u8]) -> Response {
+    let started = clock::now();
+    let resp = artifact_manifest_put_inner(store, target, body);
+    let code = resp.status.to_string();
+    obs.trace.complete(
+        "artifact_push",
+        "registry",
+        "artifacts",
+        started,
+        &[("ref", target), ("code", code.as_str())],
+    );
+    resp
+}
+
+fn artifact_manifest_put_inner(store: &Store, target: &str, body: &[u8]) -> Response {
+    let doc = match std::str::from_utf8(body).map_err(|_| ()).and_then(|s| {
+        Json::parse(s).map_err(|_| ())
+    }) {
+        Ok(d) => d,
+        Err(()) => {
+            return ErrorEnvelope::new(400, "usage", "manifest body must be JSON").to_response();
+        }
+    };
+    let manifest = match Manifest::from_json(&doc) {
+        Ok(m) => m,
+        Err(e) => return ErrorEnvelope::new(400, "usage", e.to_string()).to_response(),
+    };
+    let digest = manifest.digest();
+    if is_valid_digest(target) {
+        if target != digest {
+            return ErrorEnvelope::new(
+                400,
+                "usage",
+                format!("manifest bytes hash to {digest}, not the requested {target}"),
+            )
+            .to_response();
+        }
+    } else if !is_valid_tag(target) {
+        return ErrorEnvelope::new(
+            400,
+            "usage",
+            format!("'{target}' is neither a digest nor a valid tag"),
+        )
+        .to_response();
+    }
+    match store.put_manifest(&manifest) {
+        // Missing layer blobs are the client's sequencing error (push
+        // blobs first), not a server fault.
+        Err(Error::Artifact(msg)) => ErrorEnvelope::new(400, "usage", msg).to_response(),
+        Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+        Ok(stored) => {
+            if is_valid_tag(target) {
+                if let Err(e) = store.tag(target, &stored) {
+                    return ErrorEnvelope::from_error(&e).to_response();
+                }
+            }
+            Response::json(200, &obj(vec![("digest", Json::Str(stored))]))
+        }
+    }
+}
+
+/// `HEAD /v2/artifacts/blobs/{digest}` — existence probe (the push side
+/// skips blobs the remote already has). Bodyless by protocol; the size
+/// rides in a header.
+pub fn artifact_blob_head(store: &Store, digest: &str) -> Response {
+    if !is_valid_digest(digest) {
+        return Response::octets(400, Vec::new());
+    }
+    match store.blob_size(digest) {
+        Some(size) => {
+            Response::octets(200, Vec::new()).with_header("X-Blob-Size", size.to_string())
+        }
+        None => Response::octets(404, Vec::new()),
+    }
+}
+
+/// `GET /v2/artifacts/blobs/{digest}` — the blob bytes, rehashed against
+/// their address before they leave the store.
+pub fn artifact_blob_get(store: &Store, digest: &str) -> Response {
+    if !is_valid_digest(digest) {
+        return ErrorEnvelope::new(400, "usage", "malformed blob digest").to_response();
+    }
+    if !store.has_blob(digest) {
+        return ErrorEnvelope::new(404, "not_found", format!("no blob {digest}")).to_response();
+    }
+    match store.get_blob(digest) {
+        Ok(bytes) => Response::octets(200, bytes),
+        Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+    }
+}
+
+/// `PUT /v2/artifacts/blobs/{digest}` — ingest pushed bytes, refusing
+/// (400, nothing stored) when they do not hash to the claimed digest.
+pub fn artifact_blob_put(store: &Store, digest: &str, body: &[u8]) -> Response {
+    if !is_valid_digest(digest) {
+        return ErrorEnvelope::new(400, "usage", "malformed blob digest").to_response();
+    }
+    match store.put_blob_verified(body, digest) {
+        Ok(stored) => Response::json(200, &obj(vec![("digest", Json::Str(stored))])),
+        Err(Error::Artifact(msg)) => ErrorEnvelope::new(400, "usage", msg).to_response(),
+        Err(e) => ErrorEnvelope::from_error(&e).to_response(),
+    }
 }
 
 fn error_response(status: u16, msg: &str) -> Response {
@@ -504,6 +725,90 @@ mod tests {
         assert!(text.contains("ising_http_requests_total{code=\"200\"} 1\n"), "{text}");
 
         let r = handle(&req("POST /v2/metrics HTTP/1.1\r\n\r\n"), &ctx);
+        assert_eq!(r.status, 405);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The `/v2/artifacts` surface end to end over `handle`: blob push
+    /// (verified), probe, pull; manifest push + tag; tag listing; and
+    /// the digest-mismatch rejection that makes transfers trustworthy.
+    #[test]
+    fn artifacts_routes_push_probe_pull_and_reject_mismatches() {
+        use crate::registry::manifest::SPEC_MEDIA_TYPE;
+        use crate::registry::{digest_of, Descriptor};
+
+        let dir = std::env::temp_dir().join(format!("ising-api-art-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = ServerConfig { checkpoint_dir: dir.clone(), ..ServerConfig::default() };
+        let scheduler = Arc::new(Scheduler::open(&server).unwrap());
+        let ctx = ApiCtx { scheduler, server };
+        let put = |path: &str, body: &[u8]| {
+            let mut r = Request::new("PUT", path);
+            r.body = body.to_vec();
+            handle(&r, &ctx)
+        };
+
+        // Push a blob under its true digest; wrong digest is refused.
+        let payload = b"replica snapshot bytes";
+        let digest = digest_of(payload);
+        let bogus = digest_of(b"other bytes");
+        let r = put(&format!("/v2/artifacts/blobs/{bogus}"), payload);
+        assert_eq!(r.status, 400);
+        let env = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(env.field("kind").unwrap().as_str().unwrap(), "usage");
+        let r = put(&format!("/v2/artifacts/blobs/{digest}"), payload);
+        assert_eq!(r.status, 200);
+
+        // Probe + pull: HEAD carries the size, GET the verbatim bytes.
+        let r = handle(&Request::new("HEAD", &format!("/v2/artifacts/blobs/{digest}")), &ctx);
+        assert_eq!(r.status, 200);
+        assert!(r.headers.contains(&("X-Blob-Size", payload.len().to_string())));
+        assert!(r.body.is_empty());
+        let r = handle(&Request::new("GET", &format!("/v2/artifacts/blobs/{digest}")), &ctx);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.content_type, "application/octet-stream");
+        assert_eq!(r.body, payload);
+        let r = handle(&Request::new("HEAD", &format!("/v2/artifacts/blobs/{bogus}")), &ctx);
+        assert_eq!(r.status, 404);
+
+        // A manifest referencing the blob, pushed to a tag.
+        let m = Manifest::new(Descriptor::for_bytes(SPEC_MEDIA_TYPE, payload), vec![]);
+        let r = put("/v2/artifacts/manifests/demo/ckpt", &m.canonical_bytes());
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+        let body = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(body.field("digest").unwrap().as_str().unwrap(), m.digest());
+
+        // Pull it back by tag: canonical bytes, digest echoed in a header.
+        let r = handle(&Request::new("GET", "/v2/artifacts/manifests/demo/ckpt"), &ctx);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, m.canonical_bytes());
+        assert!(r.headers.contains(&("Docker-Content-Digest", m.digest())));
+        // Unknown refs are 404 envelopes.
+        let r = handle(&Request::new("GET", "/v2/artifacts/manifests/no/such/tag"), &ctx);
+        assert_eq!(r.status, 404);
+
+        // A manifest whose blobs were never pushed is a sequencing error.
+        let orphan =
+            Manifest::new(Descriptor::for_bytes(SPEC_MEDIA_TYPE, b"never pushed"), vec![]);
+        let r = put("/v2/artifacts/manifests/demo/orphan", &orphan.canonical_bytes());
+        assert_eq!(r.status, 400);
+
+        // Tags listing sees the pushed tag.
+        let r = handle(&Request::new("GET", "/v2/artifacts/tags"), &ctx);
+        assert_eq!(r.status, 200);
+        let tags = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let names: Vec<String> = tags
+            .field("tags")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.field("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(names.contains(&"demo/ckpt".to_string()), "{names:?}");
+
+        // Wrong verbs are 405, not 404.
+        let r = handle(&Request::new("POST", "/v2/artifacts/tags"), &ctx);
         assert_eq!(r.status, 405);
         let _ = std::fs::remove_dir_all(&dir);
     }

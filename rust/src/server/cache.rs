@@ -1,30 +1,52 @@
-//! Content-addressed result cache for the job service.
+//! Content-addressed result cache for the job service, backed by the
+//! artifact registry.
 //!
 //! Jobs are keyed by the farm-manifest fingerprint
 //! ([`Manifest::fingerprint`](crate::coordinator::checkpoint::Manifest) —
 //! engine/geometry/β-grid/seeds/protocol, 16 hex chars), so the key *is*
 //! the physics: duplicate submissions hit the cache instead of re-running
-//! the farm, and a result can never be served for a different grid. Each
-//! job owns one directory under the cache root:
+//! the farm, and a result can never be served for a different grid.
+//!
+//! Since the registry refactor the durable state lives in a
+//! [`Store`](crate::registry::Store) under the cache root; only the farm
+//! checkpoint working directory of an in-flight job stays as plain files:
 //!
 //! ```text
-//! <root>/<fingerprint>/job.json     canonical job spec (restart scan)
-//! <root>/<fingerprint>/ckpt/        farm checkpoint dir while running
-//! <root>/<fingerprint>/result.txt   bit-exact replica report when done
+//! <root>/registry/blobs/sha256/<digest>   spec + report bytes
+//! <root>/registry/refs/jobs/<id>/spec     tag -> spec artifact
+//! <root>/registry/refs/jobs/<id>/result   tag -> result artifact
+//! <root>/<fingerprint>/ckpt/              farm checkpoint dir while running
 //! ```
 //!
-//! `result.txt` is written atomically (temp + rename), so its presence is
-//! the durable "done" bit a restarted server trusts.
+//! The `jobs/<id>/result` tag is the durable "done" bit a restarted
+//! server trusts (the tag is written atomically, and the blob it names is
+//! rehashed on every read). Job results from different submissions that
+//! produce identical reports share one report blob — content addressing
+//! dedups them for free.
+//!
+//! **Legacy layout.** Before the registry, specs and results were plain
+//! `<root>/<id>/job.json` / `<root>/<id>/result.txt` files. Opening a
+//! cache over such a root migrates them into the store once (ingest +
+//! tag, then remove the legacy file) so old servers upgrade in place; the
+//! bytes served afterwards are bit-identical to what the files held.
 
 use crate::error::Result;
+use crate::obs::Obs;
+use crate::registry::manifest::{REPORT_MEDIA_TYPE, SPEC_MEDIA_TYPE};
+use crate::registry::{Descriptor, Manifest, Store};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-/// Canonical job-spec file inside a job directory.
+/// Legacy job-spec file inside a job directory (pre-registry layout,
+/// migrated on open).
 pub const SPEC_FILE: &str = "job.json";
-/// Cached result file inside a job directory.
+/// Legacy result file inside a job directory (pre-registry layout,
+/// migrated on open).
 pub const RESULT_FILE: &str = "result.txt";
 /// Farm checkpoint subdirectory inside a job directory.
 pub const CKPT_SUBDIR: &str = "ckpt";
+/// Registry store subdirectory under the cache root.
+pub const REGISTRY_SUBDIR: &str = "registry";
 
 /// Is `id` a well-formed job key (16 lowercase hex chars)? Enforced
 /// before any id coming off the wire touches the filesystem, so a URL
@@ -33,22 +55,64 @@ pub fn is_valid_id(id: &str) -> bool {
     id.len() == 16 && id.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
 }
 
+/// Registry tag naming job `id`'s canonical spec artifact.
+pub fn spec_tag(id: &str) -> String {
+    format!("jobs/{id}/spec")
+}
+
+/// Registry tag naming job `id`'s result artifact.
+pub fn result_tag(id: &str) -> String {
+    format!("jobs/{id}/result")
+}
+
 /// The on-disk job store.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ResultCache {
     root: PathBuf,
+    store: Arc<Store>,
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache").field("root", &self.root).finish()
+    }
 }
 
 impl ResultCache {
-    /// Open (creating the root if missing).
+    /// Open (creating the root and its registry store if missing) and
+    /// migrate any pre-registry `job.json` / `result.txt` files into the
+    /// store.
     pub fn open(root: PathBuf) -> Result<Self> {
+        Self::build(root, None)
+    }
+
+    /// [`ResultCache::open`] with an observability handle: blob
+    /// ingest/read counters land in the server's metrics registry.
+    pub fn open_with_obs(root: PathBuf, obs: Arc<Obs>) -> Result<Self> {
+        Self::build(root, Some(obs))
+    }
+
+    fn build(root: PathBuf, obs: Option<Arc<Obs>>) -> Result<Self> {
         std::fs::create_dir_all(&root)?;
-        Ok(Self { root })
+        let store_root = root.join(REGISTRY_SUBDIR);
+        let store = Arc::new(match obs {
+            Some(obs) => Store::with_obs(store_root, obs)?,
+            None => Store::open(store_root)?,
+        });
+        let cache = Self { root, store };
+        cache.migrate_legacy()?;
+        Ok(cache)
     }
 
     /// Cache root.
     pub fn root(&self) -> &Path {
         &self.root
+    }
+
+    /// The registry store backing this cache — the `/v2/artifacts` API
+    /// and `ising artifacts` serve straight from it.
+    pub fn store(&self) -> Arc<Store> {
+        Arc::clone(&self.store)
     }
 
     /// Directory owned by job `id`.
@@ -62,18 +126,18 @@ impl ResultCache {
         self.job_dir(id).join(CKPT_SUBDIR)
     }
 
-    /// Cached result of job `id`, if complete.
+    /// Cached result of job `id`, if complete. Bytes are digest-verified
+    /// on the way out of the store.
     pub fn lookup(&self, id: &str) -> Option<String> {
-        std::fs::read_to_string(self.job_dir(id).join(RESULT_FILE)).ok()
+        self.load_tagged(&result_tag(id))
     }
 
-    /// Persist a completed job's report atomically, then drop its farm
+    /// Persist a completed job's report through the registry (blob +
+    /// manifest + `jobs/<id>/result` tag), then drop its farm
     /// checkpoints (the result is the durable artifact; stale snapshots
     /// would only waste disk).
     pub fn store(&self, id: &str, report: &str) -> Result<()> {
-        let dir = self.job_dir(id);
-        std::fs::create_dir_all(&dir)?;
-        crate::util::snapshot::atomic_write(&dir.join(RESULT_FILE), report.as_bytes())?;
+        self.store_tagged(&result_tag(id), REPORT_MEDIA_TYPE, RESULT_FILE, report.as_bytes())?;
         let _ = std::fs::remove_dir_all(self.checkpoint_dir(id));
         Ok(())
     }
@@ -81,31 +145,75 @@ impl ResultCache {
     /// Persist the canonical job spec (submit time — what the restart
     /// scan rebuilds the queue from).
     pub fn store_spec(&self, id: &str, spec_json: &str) -> Result<()> {
-        let dir = self.job_dir(id);
-        std::fs::create_dir_all(&dir)?;
-        crate::util::snapshot::atomic_write(&dir.join(SPEC_FILE), spec_json.as_bytes())
+        self.store_tagged(&spec_tag(id), SPEC_MEDIA_TYPE, SPEC_FILE, spec_json.as_bytes())
     }
 
     /// Load the canonical job spec, if present.
     pub fn load_spec(&self, id: &str) -> Option<String> {
-        std::fs::read_to_string(self.job_dir(id).join(SPEC_FILE)).ok()
+        self.load_tagged(&spec_tag(id))
     }
 
     /// All job ids with a persisted spec, sorted (deterministic restart
-    /// scan order). Entries that aren't well-formed ids are ignored.
+    /// scan order). Tags that aren't `jobs/<valid id>/spec` are ignored.
     pub fn job_ids(&self) -> Vec<String> {
         let mut ids = Vec::new();
-        if let Ok(entries) = std::fs::read_dir(&self.root) {
-            for entry in entries.flatten() {
-                let name = entry.file_name();
-                let Some(name) = name.to_str() else { continue };
-                if is_valid_id(name) && entry.path().join(SPEC_FILE).is_file() {
-                    ids.push(name.to_string());
-                }
+        let Ok(tags) = self.store.tags() else { return ids };
+        for (name, _) in tags {
+            let Some(rest) = name.strip_prefix("jobs/") else { continue };
+            let Some(id) = rest.strip_suffix("/spec") else { continue };
+            if is_valid_id(id) {
+                ids.push(id.to_string());
             }
         }
+        // Tags come back sorted, but don't rely on it.
         ids.sort_unstable();
         ids
+    }
+
+    /// Store `bytes` as a single-config artifact and point `tag` at it.
+    fn store_tagged(&self, tag: &str, media_type: &str, name: &str, bytes: &[u8]) -> Result<()> {
+        self.store.put_blob(bytes)?;
+        let artifact = Manifest::new(Descriptor::for_bytes(media_type, bytes).named(name), vec![]);
+        let digest = self.store.put_manifest(&artifact)?;
+        self.store.tag(tag, &digest)
+    }
+
+    /// Resolve `tag` and return its artifact's config bytes as UTF-8.
+    fn load_tagged(&self, tag: &str) -> Option<String> {
+        let artifact = self.store.get_manifest(tag).ok()?;
+        let bytes = self.store.get_blob(&artifact.config.digest).ok()?;
+        String::from_utf8(bytes).ok()
+    }
+
+    /// One-shot migration of the pre-registry layout: every
+    /// `<root>/<id>/job.json` / `result.txt` is ingested + tagged, then
+    /// removed; emptied job directories are cleaned up. Idempotent —
+    /// a migrated root has no such files left.
+    fn migrate_legacy(&self) -> Result<()> {
+        let Ok(entries) = std::fs::read_dir(&self.root) else { return Ok(()) };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(id) = name.to_str() else { continue };
+            if !is_valid_id(id) {
+                continue;
+            }
+            let dir = entry.path();
+            for (file, tag, media_type) in [
+                (SPEC_FILE, spec_tag(id), SPEC_MEDIA_TYPE),
+                (RESULT_FILE, result_tag(id), REPORT_MEDIA_TYPE),
+            ] {
+                let path = dir.join(file);
+                let Ok(bytes) = std::fs::read(&path) else { continue };
+                self.store_tagged(&tag, media_type, file, &bytes)?;
+                std::fs::remove_file(&path)?;
+            }
+            // Drop the job dir if the migration emptied it (a live job
+            // keeps its ckpt/ working directory).
+            if std::fs::read_dir(&dir).map(|mut d| d.next().is_none()).unwrap_or(false) {
+                let _ = std::fs::remove_dir(&dir);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -152,6 +260,75 @@ mod tests {
         // Junk entries are not scanned as jobs.
         std::fs::create_dir_all(root.join("not-a-job")).unwrap();
         assert_eq!(cache.job_ids(), vec![id.to_string()]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reopen_sees_registry_state() {
+        let root = temp_root("reopen");
+        let id = "ffeeddccbbaa0099";
+        {
+            let cache = ResultCache::open(root.clone()).unwrap();
+            cache.store_spec(id, "{\"spec\":true}").unwrap();
+            cache.store(id, "line a\nline b\n").unwrap();
+        }
+        let cache = ResultCache::open(root.clone()).unwrap();
+        assert_eq!(cache.job_ids(), vec![id.to_string()]);
+        assert_eq!(cache.load_spec(id).unwrap(), "{\"spec\":true}");
+        assert_eq!(cache.lookup(id).unwrap(), "line a\nline b\n");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn legacy_layout_migrates_bit_exactly_on_open() {
+        let root = temp_root("migrate");
+        let done = "00000000000000aa";
+        let live = "00000000000000bb";
+        // A finished legacy job: spec + result files, no ckpt.
+        std::fs::create_dir_all(root.join(done)).unwrap();
+        std::fs::write(root.join(done).join(SPEC_FILE), b"{\"legacy\":1}").unwrap();
+        std::fs::write(root.join(done).join(RESULT_FILE), b"legacy report\n").unwrap();
+        // An interrupted legacy job: spec + live checkpoint dir.
+        std::fs::create_dir_all(root.join(live).join(CKPT_SUBDIR)).unwrap();
+        std::fs::write(root.join(live).join(SPEC_FILE), b"{\"legacy\":2}").unwrap();
+        std::fs::write(
+            root.join(live).join(CKPT_SUBDIR).join("replica-00000.snap"),
+            b"snap",
+        )
+        .unwrap();
+
+        let cache = ResultCache::open(root.clone()).unwrap();
+        // Bytes served through the registry are what the files held.
+        assert_eq!(cache.load_spec(done).unwrap(), "{\"legacy\":1}");
+        assert_eq!(cache.lookup(done).unwrap(), "legacy report\n");
+        assert_eq!(cache.load_spec(live).unwrap(), "{\"legacy\":2}");
+        assert!(cache.lookup(live).is_none());
+        assert_eq!(cache.job_ids(), vec![done.to_string(), live.to_string()]);
+        // Legacy files are gone; the finished job dir is gone entirely,
+        // the live job keeps its checkpoint working directory.
+        assert!(!root.join(done).exists());
+        assert!(!root.join(live).join(SPEC_FILE).exists());
+        assert!(root.join(live).join(CKPT_SUBDIR).join("replica-00000.snap").is_file());
+        // Re-opening is a no-op (idempotent migration).
+        let again = ResultCache::open(root.clone()).unwrap();
+        assert_eq!(again.lookup(done).unwrap(), "legacy report\n");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn identical_reports_share_one_blob() {
+        let root = temp_root("dedup");
+        let cache = ResultCache::open(root.clone()).unwrap();
+        let before = cache.store().stats().unwrap().blobs;
+        cache.store("1111111111111111", "same report\n").unwrap();
+        let after_first = cache.store().stats().unwrap().blobs;
+        cache.store("2222222222222222", "same report\n").unwrap();
+        let after_second = cache.store().stats().unwrap().blobs;
+        // First store adds report blob + manifest blob; the second job's
+        // report dedups onto the same report blob but carries its own
+        // manifest (the name annotation matches, so even that dedups).
+        assert_eq!(after_first, before + 2);
+        assert_eq!(after_second, after_first);
         let _ = std::fs::remove_dir_all(&root);
     }
 }

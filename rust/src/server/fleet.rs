@@ -34,6 +34,16 @@
 //! | POST   | `/v2/fleet/fail`     | [`UnitFail`] → `{"status":"ok"}`   |
 //! | GET    | `/v2/fleet/status`   | progress counters                  |
 //! | GET    | `/v2/healthz`        | liveness                           |
+//!
+//! Mid-unit checkpoints live in a content-addressed artifact registry
+//! under `<dir>/registry` (see [`crate::registry`]): a `progress` upload
+//! is packed into a manifest (spec config + snapshot layer) tagged
+//! `units/unit-{i:05}`, and the lease carries only the manifest digest.
+//! Workers pull the bytes back through the coordinator's read-only
+//! registry surface — `GET /v2/artifacts/manifests/{ref}` and
+//! `GET|HEAD /v2/artifacts/blobs/{digest}` — verifying every blob
+//! against its digest on receipt. Identical snapshots across units (or
+//! re-uploads of an unchanged snapshot) dedup to one blob.
 
 use super::http::{read_request, Request, Response};
 use super::queue::{enforce_job_limits, fingerprint, requeue_interrupted};
@@ -46,6 +56,7 @@ use crate::coordinator::farm::{work_units, FarmConfig, REPORT_HEADER};
 use crate::error::{Error, Result};
 use crate::obs::clock::{self, Tick};
 use crate::obs::Obs;
+use crate::registry::Store;
 use crate::util::json::{obj, Json};
 use crate::util::snapshot::atomic_write;
 use std::collections::BTreeMap;
@@ -95,8 +106,9 @@ struct Unit {
     pending_since: Tick,
     /// Leases granted so far.
     attempts: u32,
-    /// Last uploaded mid-unit checkpoint (raw snapshot-file bytes).
-    progress: Option<Vec<u8>>,
+    /// Registry manifest digest of the last uploaded mid-unit
+    /// checkpoint artifact (spec config + snapshot layer), if any.
+    progress: Option<String>,
     /// Validated report lines (no header), newline-terminated.
     lines: Option<String>,
     /// Last reported execution error (for the abort message).
@@ -138,6 +150,16 @@ pub struct FleetState {
     /// Coordinator-process observability (metrics + trace), served at
     /// `GET /v2/metrics` and drained to `--trace-out`.
     obs: Arc<Obs>,
+    /// Artifact registry under `<dir>/registry`: one manifest per unit
+    /// with uploaded progress (tag `units/unit-{i:05}`), snapshot blobs
+    /// deduped by content. Workers pull leased checkpoints from here by
+    /// digest via the coordinator's `/v2/artifacts/...` routes.
+    store: Arc<Store>,
+}
+
+/// Registry tag naming unit `i`'s progress artifact.
+fn unit_tag(unit: usize) -> String {
+    format!("units/unit-{unit:05}")
 }
 
 impl FleetState {
@@ -215,12 +237,15 @@ impl FleetState {
             )));
         }
 
+        let obs = Arc::new(Obs::new("coordinator"));
+        let store = Arc::new(Store::with_obs(dir.join("registry"), Arc::clone(&obs))?);
         let state = Self {
             cfg,
             fleet,
             dir,
             inner: Mutex::new(Inner::default()),
-            obs: Arc::new(Obs::new("coordinator")),
+            obs,
+            store,
         };
         if resume {
             for (i, unit) in units.iter_mut().enumerate() {
@@ -231,10 +256,15 @@ impl FleetState {
                     validate_unit_report(unit, state.cfg.samples, &report)?;
                     unit.lines = Some(lines);
                     unit.state = UnitState::Done;
+                } else if let Ok(digest) = state.store.resolve(&unit_tag(i)) {
+                    unit.progress = Some(digest);
                 } else if let Ok(bytes) = std::fs::read(state.progress_path(i)) {
+                    // One-shot migration of the deprecated per-unit
+                    // `.progress` file into the registry.
                     if bytes.len() <= MAX_PROGRESS_PAYLOAD {
-                        unit.progress = Some(bytes);
+                        unit.progress = Some(state.ingest_progress(i, &unit.spec, &bytes)?);
                     }
+                    let _ = std::fs::remove_file(state.progress_path(i));
                 }
             }
         }
@@ -258,6 +288,22 @@ impl FleetState {
     /// The coordinator's observability handle.
     pub fn obs(&self) -> Arc<Obs> {
         Arc::clone(&self.obs)
+    }
+
+    /// The coordinator's artifact registry: spec + snapshot layers for
+    /// in-flight units, served to workers over `/v2/artifacts/...`.
+    pub fn store(&self) -> Arc<Store> {
+        Arc::clone(&self.store)
+    }
+
+    /// Pack one unit's snapshot payload into the registry (spec config
+    /// plus one snapshot layer), tag it `units/unit-{i:05}`, and return
+    /// the manifest digest workers resume from.
+    fn ingest_progress(&self, unit: usize, spec: &FarmConfig, payload: &[u8]) -> Result<String> {
+        let spec_json = super::queue::encode_config(spec).to_string_pretty();
+        let digest = crate::registry::pack_unit(&self.store, &spec_json, payload, unit)?;
+        self.store.tag(&unit_tag(unit), &digest)?;
+        Ok(digest)
     }
 
     /// Register (or re-register) a worker; idempotent per name.
@@ -417,7 +463,7 @@ impl FleetState {
                     deadline: now.plus(Duration::from_millis(self.fleet.lease_ms)),
                 };
                 let store_start = clock::now();
-                atomic_write(&self.progress_path(unit), &payload)?;
+                let digest = self.ingest_progress(unit, &u.spec, &payload)?;
                 self.obs.metrics.observe(
                     "ising_checkpoint_duration_seconds",
                     "Wall duration of checkpoint/result persistence by operation.",
@@ -428,9 +474,9 @@ impl FleetState {
                     "checkpoint",
                     "fleet",
                     &format!("unit-{unit}"),
-                    &[("worker", worker)],
+                    &[("worker", worker), ("digest", digest.as_str())],
                 );
-                u.progress = Some(payload);
+                u.progress = Some(digest);
                 Ok(())
             }
             UnitState::Done => Err(Error::Coordinator(format!(
@@ -467,6 +513,8 @@ impl FleetState {
         u.lines = Some(lines.to_string());
         u.state = UnitState::Done;
         u.progress = None;
+        // Untag the progress artifact: its blobs become GC-reclaimable.
+        let _ = self.store.delete_tag(&unit_tag(unit));
         let _ = std::fs::remove_file(self.progress_path(unit));
         self.obs.metrics.counter(
             "ising_unit_results_total",
@@ -504,6 +552,7 @@ impl FleetState {
         u.progress = None;
         u.last_error = Some(error.to_string());
         inner.requeues += 1;
+        let _ = self.store.delete_tag(&unit_tag(unit));
         let _ = std::fs::remove_file(self.progress_path(unit));
         self.obs.metrics.counter(
             "ising_unit_requeues_total",
@@ -632,6 +681,7 @@ impl FleetState {
                 );
             }
         }
+        super::api::record_store_gauges(&self.obs, &self.store);
         self.obs.metrics.render()
     }
 }
@@ -718,6 +768,18 @@ pub fn handle_fleet_request(req: &Request, state: &FleetState) -> Response {
             Ok(ok_body())
         }),
         ("GET", ["v2", "fleet", "status"]) => Response::json(200, &state.status_json()),
+        // Read-only registry surface: workers pull leased checkpoints by
+        // manifest digest, then fetch the snapshot blobs it references.
+        ("GET", ["v2", "artifacts", "tags"]) => super::api::artifact_tags(&state.store),
+        ("GET", ["v2", "artifacts", "manifests", reference @ ..]) => {
+            super::api::artifact_manifest_get(&state.store, &state.obs, &reference.join("/"))
+        }
+        ("HEAD", ["v2", "artifacts", "blobs", digest]) => {
+            super::api::artifact_blob_head(&state.store, digest)
+        }
+        ("GET", ["v2", "artifacts", "blobs", digest]) => {
+            super::api::artifact_blob_get(&state.store, digest)
+        }
         ("GET", ["v2", "metrics"]) => Response::prometheus(state.metrics_text()),
         ("GET", ["v2", "healthz"]) => ok_body(),
         (_, ["v2", "metrics"]) => {
@@ -914,10 +976,14 @@ mod tests {
         assert_eq!(first.unit, 0);
         state.progress("a", 0, vec![1, 2, 3]).unwrap();
         std::thread::sleep(Duration::from_millis(5));
-        // Worker b steals the expired unit, with a's checkpoint attached.
+        // Worker b steals the expired unit, with a's checkpoint attached
+        // as a registry manifest digest that resolves to the bytes.
         let LeaseReply::Unit(stolen) = state.lease("b") else { panic!("expected a unit") };
         assert_eq!(stolen.unit, 0);
-        assert_eq!(stolen.checkpoint.as_deref(), Some(&[1u8, 2, 3][..]));
+        let ckpt = stolen.checkpoint.clone().expect("stolen lease resumes from a checkpoint");
+        let artifact = state.store().get_manifest(&ckpt).unwrap();
+        let layer = artifact.layers.first().expect("one snapshot layer");
+        assert_eq!(state.store().get_blob(&layer.digest).unwrap(), vec![1, 2, 3]);
         assert!(state.requeue_count() >= 1);
         assert_eq!(state.resumed_count(), 1);
         // Progress from the dispossessed holder is refused.
@@ -926,6 +992,8 @@ mod tests {
         // the same dir: the stored lines must be re-adopted.
         let report = run_farm(&stolen.spec).unwrap().replica_report();
         state.result("b", 0, &report).unwrap();
+        // Completion untags the progress artifact (GC-reclaimable now).
+        assert!(state.store().resolve(&unit_tag(0)).is_err());
         drop(state);
         let resumed = FleetState::open(cfg.clone(), fleet.clone(), true).unwrap();
         let resumed_status = resumed.status_json();
@@ -961,6 +1029,9 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("ising_fleet_heartbeat_age_seconds{worker=\"w0\"}"), "{text}");
+        // Registry store gauges ride along on the same exposition.
+        assert!(text.contains("registry_store_blobs 0\n"), "{text}");
+        assert!(text.contains("registry_store_size_bytes 0\n"), "{text}");
         // register + lease instants landed in the trace ring.
         assert!(state.obs().trace.len() >= 2, "trace ring has the protocol instants");
         // The HTTP route serves the same body with the exposition type.
@@ -1061,6 +1132,58 @@ mod tests {
         let raw = "GET /v2/fleet/nope HTTP/1.1\r\n\r\n";
         let req = read_request(&mut raw.as_bytes()).unwrap().unwrap();
         assert_eq!(handle_fleet_request(&req, &state).status, 404);
+        // The read-only registry surface serves an uploaded checkpoint:
+        // manifest by tag, then its snapshot blob by digest.
+        state.progress("w0", 0, vec![4, 5, 6]).unwrap();
+        let get = |path: &str| -> Response {
+            let raw = format!("GET {path} HTTP/1.1\r\n\r\n");
+            let req = read_request(&mut raw.as_bytes()).unwrap().unwrap();
+            handle_fleet_request(&req, &state)
+        };
+        let resp = get(&format!("/v2/artifacts/manifests/{}", unit_tag(0)));
+        assert_eq!(resp.status, 200);
+        let artifact = crate::registry::Manifest::from_json(
+            &Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap(),
+        )
+        .unwrap();
+        let layer = artifact.layers.first().expect("one snapshot layer");
+        let resp = get(&format!("/v2/artifacts/blobs/{}", layer.digest));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, vec![4, 5, 6]);
+        assert_eq!(get("/v2/artifacts/manifests/units/no-such-unit").status, 404);
+        cleanup(&fleet);
+    }
+
+    /// Progress checkpoints survive a coordinator restart through the
+    /// registry, and deprecated `.progress` files migrate in one-shot.
+    #[test]
+    fn progress_artifacts_survive_coordinator_restart() {
+        let cfg = grid_cfg();
+        let fleet = fleet_cfg("restart");
+        cleanup(&fleet);
+        let state = FleetState::open(cfg.clone(), fleet.clone(), false).unwrap();
+        let LeaseReply::Unit(lease) = state.lease("w") else { panic!("expected a unit") };
+        assert_eq!(lease.unit, 0);
+        state.progress("w", 0, vec![7, 7, 7]).unwrap();
+        drop(state);
+        // Plant a legacy progress file for unit 1 next to the registry.
+        let legacy = fleet.checkpoint_dir.join("unit-00001.progress");
+        std::fs::write(&legacy, [9u8, 9]).unwrap();
+        let resumed = FleetState::open(cfg, fleet.clone(), true).unwrap();
+        // Unit 0 resumes from the registry tag written before the crash.
+        let LeaseReply::Unit(again) = resumed.lease("w2") else { panic!("expected a unit") };
+        assert_eq!(again.unit, 0);
+        let ckpt = again.checkpoint.expect("resume lease carries the stored checkpoint");
+        let artifact = resumed.store().get_manifest(&ckpt).unwrap();
+        let layer = artifact.layers.first().expect("one snapshot layer");
+        assert_eq!(resumed.store().get_blob(&layer.digest).unwrap(), vec![7, 7, 7]);
+        assert_eq!(resumed.resumed_count(), 1);
+        // The legacy file was ingested into the registry and removed.
+        assert!(!legacy.exists(), "migration must remove the legacy file");
+        let migrated = resumed.store().resolve(&unit_tag(1)).unwrap();
+        let artifact = resumed.store().get_manifest(&migrated).unwrap();
+        let layer = artifact.layers.first().expect("one snapshot layer");
+        assert_eq!(resumed.store().get_blob(&layer.digest).unwrap(), vec![9, 9]);
         cleanup(&fleet);
     }
 

@@ -279,6 +279,12 @@ impl Response {
         }
     }
 
+    /// Binary response (registry blob bytes are served verbatim; the
+    /// client re-hashes them against the digest it asked for).
+    pub fn octets(status: u16, body: Vec<u8>) -> Self {
+        Self { status, content_type: "application/octet-stream", headers: Vec::new(), body }
+    }
+
     /// Prometheus text-exposition response (`GET /v2/metrics`). The
     /// version parameter is part of the format contract scrapers sniff.
     pub fn prometheus(body: impl Into<Vec<u8>>) -> Self {

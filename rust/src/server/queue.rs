@@ -240,7 +240,7 @@ impl Scheduler {
     /// lane its worker name instead of the generic `serve`.
     pub fn open_with_obs(cfg: &ServerConfig, obs: Arc<Obs>) -> Result<Self> {
         cfg.validate()?;
-        let cache = ResultCache::open(cfg.checkpoint_dir.clone())?;
+        let cache = ResultCache::open_with_obs(cfg.checkpoint_dir.clone(), Arc::clone(&obs))?;
         let mut state = State::default();
         for id in cache.job_ids() {
             let Some(spec) = cache.load_spec(&id) else { continue };
@@ -400,6 +400,12 @@ impl Scheduler {
     /// Cached result of a completed job.
     pub fn result(&self, id: &str) -> Option<String> {
         self.inner.cache.lookup(id)
+    }
+
+    /// The artifact registry store behind the result cache — the
+    /// `/v2/artifacts` routes push to and pull from it.
+    pub fn artifact_store(&self) -> Arc<crate::registry::Store> {
+        self.inner.cache.store()
     }
 
     /// Registry counts for the health endpoint.

@@ -16,11 +16,14 @@
 //!   allocating, so a hostile body can neither panic the coordinator nor
 //!   balloon its memory (fuzzed by `tests/fuzz_parsers.rs`).
 //!
-//! Checkpoint payloads travel as lowercase hex of the snapshot *file*
-//! bytes (`util::snapshot` container, CRC included): the worker writes
-//! them to disk verbatim and the existing checkpoint loader re-validates
-//! magic, CRC and replica identity before resuming, so a corrupted or
-//! mismatched payload fails loudly instead of poisoning a trajectory.
+//! Checkpoint *uploads* travel as lowercase hex of the snapshot file
+//! bytes (`util::snapshot` container, CRC included). Leases, however,
+//! carry only an artifact-registry manifest **digest**: the worker pulls
+//! the snapshot blob from the coordinator's `/v2/artifacts/...` routes
+//! and verifies it by SHA-256 before the checkpoint loader re-validates
+//! magic, CRC and replica identity — a corrupted or mismatched payload
+//! fails loudly at two independent layers instead of poisoning a
+//! trajectory.
 
 use crate::cli::args::Args;
 use crate::config::Toml;
@@ -579,16 +582,17 @@ impl LeaseRequest {
 /// One leased work unit: its index in grid order, the single-unit
 /// sub-configuration (one β, that unit's seeds, `workers = 1`) encoded
 /// with the same canonical spec codec the job store uses, and — when a
-/// previous holder uploaded progress — the checkpoint snapshot to resume
-/// from.
+/// previous holder uploaded progress — the registry digest of the unit
+/// artifact whose snapshot layer the worker pulls to resume from.
 #[derive(Clone, Debug)]
 pub struct UnitLease {
     /// Unit index (grid order; also the result-merge position).
     pub unit: usize,
     /// The unit's own farm configuration.
     pub spec: FarmConfig,
-    /// Raw snapshot-file bytes from the previous holder, if any.
-    pub checkpoint: Option<Vec<u8>>,
+    /// Manifest digest of the previous holder's progress artifact, if
+    /// any (`sha256:<hex>`; pull via `GET /v2/artifacts/...`).
+    pub checkpoint: Option<String>,
 }
 
 /// `POST /v2/fleet/lease` reply.
@@ -614,8 +618,8 @@ impl LeaseReply {
                     ("unit", Json::Num(lease.unit as f64)),
                     ("spec", super::queue::encode_config(&lease.spec)),
                 ];
-                if let Some(p) = &lease.checkpoint {
-                    fields.push(("checkpoint", Json::Str(hex_encode(p))));
+                if let Some(digest) = &lease.checkpoint {
+                    fields.push(("checkpoint", Json::Str(digest.clone())));
                 }
                 obj(fields)
             }
@@ -652,14 +656,19 @@ impl LeaseReply {
                 let unit = unit_index(doc)?;
                 let spec = super::queue::decode_config(doc.field("spec")?)?;
                 let checkpoint = match doc.get("checkpoint") {
-                    Some(v) => Some(hex_decode(
-                        v.as_str().map_err(|_| {
+                    Some(v) => {
+                        let digest = v.as_str().map_err(|_| {
                             Error::Usage(
-                                "fleet message key 'checkpoint' must be a hex string".into(),
+                                "fleet message key 'checkpoint' must be a digest string".into(),
                             )
-                        })?,
-                        MAX_PROGRESS_PAYLOAD,
-                    )?),
+                        })?;
+                        if !crate::registry::is_valid_digest(digest) {
+                            return Err(Error::Usage(
+                                "fleet message key 'checkpoint' must be sha256:<64 hex>".into(),
+                            ));
+                        }
+                        Some(digest.to_string())
+                    }
                     None => None,
                 };
                 Ok(LeaseReply::Unit(Box::new(UnitLease { unit, spec, checkpoint })))
@@ -1040,21 +1049,28 @@ mod tests {
         }
         .resolve()
         .unwrap();
+        let digest = crate::registry::digest_of(b"unit progress artifact");
         let lease = LeaseReply::Unit(Box::new(UnitLease {
             unit: 2,
             spec: spec.clone(),
-            checkpoint: Some(vec![1, 2, 3, 255]),
+            checkpoint: Some(digest.clone()),
         }));
         match LeaseReply::from_json(&lease.to_json()).unwrap() {
             LeaseReply::Unit(back) => {
                 assert_eq!(back.unit, 2);
                 assert_eq!(fingerprint(&back.spec), fingerprint(&spec));
-                assert_eq!(back.checkpoint.as_deref(), Some(&[1u8, 2, 3, 255][..]));
+                assert_eq!(back.checkpoint.as_deref(), Some(digest.as_str()));
             }
             other => panic!("wrong reply {other:?}"),
         }
         assert!(LeaseReply::from_json(&Json::parse(r#"{"lease": "huh"}"#).unwrap()).is_err());
         assert!(LeaseReply::from_json(&Json::parse(r#"{"lease": "unit"}"#).unwrap()).is_err());
+        // A lease checkpoint must be a well-formed digest, not raw hex.
+        let mut doc = lease.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("checkpoint".into(), Json::Str("deadbeef".into()));
+        }
+        assert!(LeaseReply::from_json(&doc).is_err());
     }
 
     #[test]

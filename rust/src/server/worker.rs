@@ -11,13 +11,16 @@
 //! the coordinator's merged report stays bit-identical to single-node
 //! output.
 //!
-//! Mid-unit resume works by shipping raw snapshot bytes: a leased unit
-//! may carry the previous holder's checkpoint, which the worker writes
-//! into the fresh unit directory *before* opening it. The farm loads
-//! replica snapshots unconditionally whenever a checkpointer is present
-//! and validates them against the unit identity and protocol, so a
-//! resumed trajectory continues bit-exactly — and a corrupt payload
-//! fails loudly into a `fail` upload instead of diverging silently.
+//! Mid-unit resume is pulled from the coordinator's artifact registry:
+//! a leased unit may carry the previous holder's checkpoint as a
+//! content-addressed manifest digest. The worker fetches the manifest
+//! over `GET /v2/artifacts/manifests/{digest}`, verifies it hashes to
+//! exactly that digest, fetches the snapshot layer's blob, verifies it
+//! against the layer digest, and only then seeds the fresh unit
+//! directory *before* opening it. The farm still loads and validates
+//! the snapshot against the unit identity and protocol, so a resumed
+//! trajectory continues bit-exactly — and a corrupt or tampered payload
+//! fails loudly instead of diverging silently.
 //!
 //! The HTTP client is std-only: one `TcpStream` per request,
 //! `Connection: close`, bounded response reads.
@@ -83,7 +86,7 @@ pub struct WorkerConfig {
 }
 
 /// Extract `host:port` from an `http://` base URL.
-fn parse_authority(url: &str) -> Result<String> {
+pub(crate) fn parse_authority(url: &str) -> Result<String> {
     let rest = url
         .strip_prefix("http://")
         .ok_or_else(|| Error::Usage(format!("coordinator URL '{url}' must be http://host:port")))?;
@@ -96,14 +99,17 @@ fn parse_authority(url: &str) -> Result<String> {
     Ok(authority.to_string())
 }
 
-/// Split a raw HTTP/1.1 response into (status, body).
-fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
-    let text = std::str::from_utf8(raw)
-        .map_err(|_| Error::Coordinator("coordinator response is not UTF-8".into()))?;
-    let head_end = text
-        .find("\r\n\r\n")
+/// Split a raw HTTP/1.1 response into (status, body bytes). Blob pulls
+/// carry binary snapshot payloads, so only the head must be UTF-8.
+fn parse_response_bytes(raw: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
         .ok_or_else(|| Error::Coordinator("truncated coordinator response".into()))?;
-    let status_line = text.lines().next().unwrap_or_default();
+    // lint: allow(index, "head_end is a windows() match position within raw")
+    let head = std::str::from_utf8(&raw[..head_end])
+        .map_err(|_| Error::Coordinator("coordinator response head is not UTF-8".into()))?;
+    let status_line = head.lines().next().unwrap_or_default();
     let status: u16 = status_line
         .split(' ')
         .nth(1)
@@ -111,30 +117,34 @@ fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
         .ok_or_else(|| {
             Error::Coordinator(format!("malformed status line '{status_line}'"))
         })?;
-    // lint: allow(index, "head_end + 4 is the end of the find() match above")
-    Ok((status, text[head_end + 4..].to_string()))
+    // lint: allow(index, "head_end + 4 is the end of the windows() match above")
+    Ok((status, raw[head_end + 4..].to_vec()))
 }
 
-/// POST one JSON document; returns (status, parsed body). Transport
-/// failures (refused, timeout, oversized reply) are `Err`; HTTP-level
-/// failures come back as their status plus the envelope body.
-fn post(authority: &str, path: &str, body: &Json) -> Result<(u16, Json)> {
+/// Split a raw HTTP/1.1 response into (status, UTF-8 body).
+fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
+    let (status, body) = parse_response_bytes(raw)?;
+    let text = String::from_utf8(body)
+        .map_err(|_| Error::Coordinator("coordinator response is not UTF-8".into()))?;
+    Ok((status, text))
+}
+
+/// Open one request connection to the coordinator with transport bounds.
+fn connect(authority: &str) -> Result<TcpStream> {
     let addr = authority
         .to_socket_addrs()
         .map_err(|e| Error::Coordinator(format!("cannot resolve '{authority}': {e}")))?
         .next()
         .ok_or_else(|| Error::Coordinator(format!("'{authority}' resolves to no address")))?;
-    let mut stream = TcpStream::connect_timeout(&addr, IO_TIMEOUT)
+    let stream = TcpStream::connect_timeout(&addr, IO_TIMEOUT)
         .map_err(|e| Error::Coordinator(format!("cannot connect to '{authority}': {e}")))?;
     stream.set_read_timeout(Some(IO_TIMEOUT))?;
     stream.set_write_timeout(Some(IO_TIMEOUT))?;
-    let payload = body.to_string_compact();
-    write!(
-        stream,
-        "POST {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
-        payload.len()
-    )?;
+    Ok(stream)
+}
+
+/// Read a whole bounded response from one connection.
+fn read_response(stream: TcpStream, authority: &str) -> Result<Vec<u8>> {
     let mut raw = Vec::new();
     stream
         .take(MAX_RESPONSE as u64 + 1)
@@ -143,9 +153,101 @@ fn post(authority: &str, path: &str, body: &Json) -> Result<(u16, Json)> {
     if raw.len() > MAX_RESPONSE {
         return Err(Error::Coordinator("oversized coordinator response".into()));
     }
-    let (status, text) = parse_response(&raw)?;
+    Ok(raw)
+}
+
+/// GET one path; returns (status, raw body bytes). Used for registry
+/// pulls, where the body is a manifest document or a binary blob.
+pub(crate) fn get_bytes(authority: &str, path: &str) -> Result<(u16, Vec<u8>)> {
+    let mut stream = connect(authority)?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {authority}\r\nConnection: close\r\n\r\n"
+    )?;
+    parse_response_bytes(&read_response(stream, authority)?)
+}
+
+/// Send one request with an arbitrary method and raw body; returns
+/// (status, raw body bytes). `ising artifacts push/pull` shares the
+/// worker's bounded std-only client through this.
+pub(crate) fn request_bytes(
+    authority: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = connect(authority)?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    parse_response_bytes(&read_response(stream, authority)?)
+}
+
+/// POST one JSON document; returns (status, parsed body). Transport
+/// failures (refused, timeout, oversized reply) are `Err`; HTTP-level
+/// failures come back as their status plus the envelope body.
+fn post(authority: &str, path: &str, body: &Json) -> Result<(u16, Json)> {
+    let mut stream = connect(authority)?;
+    let payload = body.to_string_compact();
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        payload.len()
+    )?;
+    let (status, text) = parse_response(&read_response(stream, authority)?)?;
     let doc = Json::parse(&text).unwrap_or(Json::Null);
     Ok((status, doc))
+}
+
+/// Pull a leased checkpoint from the coordinator's artifact registry.
+/// Nothing is trusted that the worker did not hash itself: the manifest
+/// body must hash to the leased digest, and the snapshot blob must hash
+/// to the layer digest the (now verified) manifest declares.
+fn pull_checkpoint(authority: &str, manifest_digest: &str) -> Result<Vec<u8>> {
+    let path = format!("/v2/artifacts/manifests/{manifest_digest}");
+    let (status, body) = get_bytes(authority, &path)?;
+    if status != 200 {
+        return Err(Error::Coordinator(format!(
+            "checkpoint manifest '{manifest_digest}' fetch refused ({status})"
+        )));
+    }
+    if crate::registry::digest_of(&body) != manifest_digest {
+        return Err(Error::Coordinator(format!(
+            "checkpoint manifest '{manifest_digest}' failed digest verification"
+        )));
+    }
+    let text = std::str::from_utf8(&body)
+        .map_err(|_| Error::Coordinator("checkpoint manifest is not UTF-8".into()))?;
+    let artifact = crate::registry::Manifest::from_json(&Json::parse(text)?)?;
+    let layer = artifact
+        .layers
+        .iter()
+        .find(|l| l.media_type == crate::registry::manifest::SNAPSHOT_MEDIA_TYPE)
+        .ok_or_else(|| {
+            Error::Coordinator(format!(
+                "checkpoint manifest '{manifest_digest}' has no snapshot layer"
+            ))
+        })?;
+    let (status, blob) = get_bytes(authority, &format!("/v2/artifacts/blobs/{}", layer.digest))?;
+    if status != 200 {
+        return Err(Error::Coordinator(format!(
+            "checkpoint blob '{}' fetch refused ({status})",
+            layer.digest
+        )));
+    }
+    if crate::registry::digest_of(&blob) != layer.digest {
+        return Err(Error::Coordinator(format!(
+            "checkpoint blob '{}' failed digest verification",
+            layer.digest
+        )));
+    }
+    Ok(blob)
 }
 
 /// What happened to one leased unit.
@@ -178,8 +280,17 @@ fn run_unit(
     // and validates it unconditionally, resuming the trajectory
     // bit-exactly (a corrupt payload errors loudly instead).
     let snap = dir.join("replica-00000.snap");
-    if let Some(bytes) = &lease.checkpoint {
-        atomic_write(&snap, bytes)?;
+    if let Some(digest) = &lease.checkpoint {
+        let pull_start = clock::now();
+        let bytes = pull_checkpoint(authority, digest)?;
+        cfg.obs.trace.complete(
+            "artifact_pull",
+            "worker",
+            &lane,
+            pull_start,
+            &[("digest", digest.as_str())],
+        );
+        atomic_write(&snap, &bytes)?;
     }
     loop {
         let spec = CheckpointSpec {
@@ -427,5 +538,15 @@ mod tests {
         for bad in &[&b"HTTP/1.1 200 OK\r\n"[..], &b"garbage"[..], &b"HTTP/1.1 xx\r\n\r\n"[..]] {
             assert!(parse_response(bad).is_err());
         }
+    }
+
+    #[test]
+    fn binary_response_bodies_survive_parsing() {
+        let mut raw = b"HTTP/1.1 200 OK\r\nContent-Type: application/octet-stream\r\n\r\n".to_vec();
+        raw.extend([0u8, 159, 146, 150]); // deliberately not UTF-8
+        let (status, body) = parse_response_bytes(&raw).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, [0u8, 159, 146, 150]);
+        assert!(parse_response(&raw).is_err(), "text parse must refuse non-UTF-8");
     }
 }

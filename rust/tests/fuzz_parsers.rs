@@ -2,6 +2,8 @@
 //! must never panic, and valid documents must round-trip.
 
 use ising_dgx::config::Toml;
+use ising_dgx::registry::manifest::{SNAPSHOT_MEDIA_TYPE, SPEC_MEDIA_TYPE};
+use ising_dgx::registry::{digest_of, Descriptor, Manifest, Store};
 use ising_dgx::server::http::{read_request, MAX_BODY, MAX_HEADERS, MAX_REQUEST_LINE};
 use ising_dgx::server::wire;
 use ising_dgx::util::json::{obj, Json};
@@ -332,6 +334,80 @@ fn metrics_snapshot_and_trace_events_roundtrip() {
             }
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Registry artifact manifests (registry::manifest) — these documents
+// cross the `/v2/artifacts` wire on push/pull, so their decoders are
+// wire decoders too: hostile input must produce Ok/Err, never a panic.
+
+fn sample_manifest() -> Manifest {
+    let config = Descriptor::for_bytes(SPEC_MEDIA_TYPE, b"{\"spec\": true}").named("job.json");
+    let layers = vec![
+        Descriptor::for_bytes(SNAPSHOT_MEDIA_TYPE, b"snapshot-bytes").named("replica-00000.snap"),
+    ];
+    Manifest::new(config, layers)
+}
+
+#[test]
+fn registry_manifest_decoders_never_panic_on_random_documents() {
+    check("manifest fuzz", 400, |g| {
+        let s = random_bytes(g, 300);
+        if let Ok(doc) = Json::parse(&s) {
+            let _ = Manifest::from_json(&doc);
+            let _ = Descriptor::from_json(&doc);
+        }
+    });
+}
+
+#[test]
+fn registry_manifests_roundtrip_and_survive_mutation() {
+    let artifact = sample_manifest();
+    let canonical = artifact.canonical_bytes();
+    let doc = Json::parse(std::str::from_utf8(&canonical).unwrap()).unwrap();
+    let back = Manifest::from_json(&doc).unwrap();
+    assert_eq!(back.canonical_bytes(), canonical, "canonical bytes must be a fixed point");
+    assert_eq!(back.digest(), artifact.digest());
+    // Mutated / truncated manifest bytes: whatever still parses as JSON
+    // must decode to Ok/Err without panicking, and a decode that
+    // survives must re-address itself consistently.
+    check("manifest mutate", 300, |g| {
+        let mut bytes = canonical.clone();
+        for _ in 0..g.int_in(1, 6) {
+            let i = g.int_in(0, bytes.len() as i64 - 1) as usize;
+            bytes[i] = g.int_in(32, 126) as u8;
+        }
+        bytes.truncate(g.int_in(0, bytes.len() as i64) as usize);
+        if let Ok(s) = String::from_utf8(bytes) {
+            if let Ok(doc) = Json::parse(&s) {
+                if let Ok(m) = Manifest::from_json(&doc) {
+                    assert_eq!(digest_of(&m.canonical_bytes()), m.digest());
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn wrong_digest_ingest_is_rejected_without_panics() {
+    let root = std::env::temp_dir().join(format!("ising-fuzz-registry-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = Store::open(root.clone()).unwrap();
+    check("verified ingest", 200, |g| {
+        let n = g.int_in(0, 64) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| g.int_in(0, 255) as u8).collect();
+        // A digest claimed for *different* bytes must be refused (the
+        // `||` arm covers the astronomically unlikely collision draw)...
+        let wrong = digest_of(b"something else entirely");
+        assert!(store.put_blob_verified(&bytes, &wrong).is_err() || digest_of(&bytes) == wrong);
+        // ...and malformed digest syntax is refused before hashing.
+        assert!(store.put_blob_verified(&bytes, "sha256:nothex").is_err());
+        assert!(store.put_blob_verified(&bytes, &format!("x{}", random_bytes(g, 80))).is_err());
+        // The honest digest is accepted and the bytes read back intact.
+        let stored = store.put_blob_verified(&bytes, &digest_of(&bytes)).unwrap();
+        assert_eq!(store.get_blob(&stored).unwrap(), bytes);
+    });
+    let _ = std::fs::remove_dir_all(&root);
 }
 
 #[test]

@@ -1,0 +1,249 @@
+//! Artifact-registry integration: the `/v2/artifacts` surface over a
+//! real TCP socket driven by the `ising artifacts` CLI, GC safety
+//! (tagged and kept artifacts are never collected), snapshot dedup
+//! asserted by blob count, and the acceptance invariant — a sweep
+//! killed on node A, packed, pushed, pulled onto node B and resumed
+//! there reproduces the uninterrupted `--report` bytes exactly.
+
+use ising_dgx::config::ServerConfig;
+use ising_dgx::coordinator::checkpoint::MANIFEST_FILE;
+use ising_dgx::coordinator::{
+    run_farm, run_farm_checkpointed, CheckpointSpec, FarmConfig, FarmEngine, FarmOutcome,
+};
+use ising_dgx::lattice::Geometry;
+use ising_dgx::registry::{digest_of, pack_checkpoint, pack_unit, Store};
+use ising_dgx::server::Server;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ising-registry-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run one `ising` CLI invocation in-process.
+fn ising(argv: &[&str]) -> ising_dgx::error::Result<()> {
+    ising_dgx::cli::main_with_args(argv.iter().map(|s| s.to_string()).collect())
+}
+
+/// A fast deterministic farm whose 24-sample grid a 5-sample budget
+/// is guaranteed to interrupt.
+fn farm_cfg() -> FarmConfig {
+    FarmConfig {
+        geom: Geometry::new(8, 32).unwrap(),
+        betas: vec![0.42, 0.44],
+        seeds: vec![7, 8],
+        shards: 1,
+        workers: 1,
+        burn_in: 4,
+        samples: 6,
+        thin: 1,
+        threaded_shards: false,
+        engine: FarmEngine::Multispin,
+    }
+}
+
+/// One-shot HTTP client: send `raw`, read to EOF, split the response.
+fn roundtrip(addr: std::net::SocketAddr, raw: String) -> (u16, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut bytes = Vec::new();
+    stream.read_to_end(&mut bytes).unwrap();
+    let head_end = bytes
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response must have a header/body split");
+    let head = std::str::from_utf8(&bytes[..head_end]).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).expect("status line").parse().unwrap();
+    (status, bytes[head_end + 4..].to_vec())
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(
+        addr,
+        format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn post(addr: std::net::SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: 0\r\n\r\n"
+        ),
+    )
+}
+
+/// The headline acceptance flow: interrupt a checkpointed sweep on
+/// "node A", pack the checkpoint into A's registry, push it through a
+/// live `/v2` server, pull it into "node B"'s registry, unpack, resume
+/// — and get the straight-through report byte-for-byte. Pushes are
+/// idempotent and the remote serves back the exact canonical manifest.
+#[test]
+fn kill_push_pull_resume_reproduces_the_report_bit_exactly() {
+    let root = temp_dir("relay");
+    let cfg = farm_cfg();
+    let straight = run_farm(&cfg).unwrap().replica_report();
+
+    // Node A: guaranteed interruption mid-grid.
+    let ckpt_a = root.join("node-a/ckpt");
+    let spec = CheckpointSpec {
+        sample_budget: Some(5),
+        ..CheckpointSpec::new(ckpt_a.clone(), 1)
+    };
+    match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Interrupted { total, .. } => assert_eq!(total, 4),
+        FarmOutcome::Complete(_) => panic!("5-sample budget must interrupt a 24-sample farm"),
+    }
+
+    let store_a = root.join("node-a/registry");
+    let store_a_arg = store_a.to_str().unwrap();
+    ising(&[
+        "artifacts", "pack", "--store", store_a_arg,
+        "--ckpt", ckpt_a.to_str().unwrap(), "--tag", "runs/relay",
+    ])
+    .unwrap();
+    let packed = Store::open(store_a.clone()).unwrap().resolve("runs/relay").unwrap();
+
+    // The relay: a real `ising serve`-shaped server (its scheduler owns
+    // the registry the /v2/artifacts routes serve).
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_depth: 2,
+        checkpoint_dir: root.join("relay-server"),
+        checkpoint_every: 1,
+        slice_samples: None,
+        trace_out: None,
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    let remote = format!("http://{addr}");
+
+    ising(&["artifacts", "push", "runs/relay", "--store", store_a_arg, "--remote", &remote])
+        .unwrap();
+    // Idempotent: a second push finds every blob already present.
+    ising(&["artifacts", "push", "runs/relay", "--store", store_a_arg, "--remote", &remote])
+        .unwrap();
+
+    // The remote lists the tag and serves the canonical manifest bytes
+    // back under their own digest.
+    let (status, tags) = get(addr, "/v2/artifacts/tags");
+    assert_eq!(status, 200);
+    let tags = String::from_utf8(tags).unwrap();
+    assert!(tags.contains("runs/relay"), "{tags}");
+    assert!(tags.contains(&packed), "{tags}");
+    let (status, body) = get(addr, "/v2/artifacts/manifests/runs/relay");
+    assert_eq!(status, 200);
+    assert_eq!(digest_of(&body), packed, "served manifest must re-hash to its address");
+
+    // Node B: pull, unpack, resume to completion.
+    let store_b = root.join("node-b/registry");
+    let store_b_arg = store_b.to_str().unwrap();
+    ising(&["artifacts", "pull", "runs/relay", "--store", store_b_arg, "--remote", &remote])
+        .unwrap();
+    assert_eq!(Store::open(store_b.clone()).unwrap().resolve("runs/relay").unwrap(), packed);
+
+    let ckpt_b = root.join("node-b/ckpt");
+    ising(&[
+        "artifacts", "unpack", "runs/relay", "--store", store_b_arg,
+        "--dest", ckpt_b.to_str().unwrap(),
+    ])
+    .unwrap();
+    assert_eq!(
+        std::fs::read(ckpt_b.join(MANIFEST_FILE)).unwrap(),
+        std::fs::read(ckpt_a.join(MANIFEST_FILE)).unwrap(),
+        "the farm manifest must relay bit-exactly"
+    );
+
+    let spec = CheckpointSpec { resume: true, ..CheckpointSpec::new(ckpt_b, 1) };
+    let resumed = match run_farm_checkpointed(&cfg, Some(&spec)).unwrap() {
+        FarmOutcome::Complete(r) => r,
+        FarmOutcome::Interrupted { .. } => panic!("unbudgeted resume must finish the grid"),
+    };
+    assert_eq!(
+        resumed.replica_report(),
+        straight,
+        "relayed resume must reproduce the straight-through report"
+    );
+
+    let (status, _) = post(addr, "/v2/shutdown");
+    assert_eq!(status, 200);
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// GC safety: a mark/sweep pass never touches blobs reachable from a
+/// tag or from a caller-supplied live root (an in-flight job's
+/// artifact), a dry run deletes nothing at all, and only the
+/// unreferenced artifact's unshared blobs are reclaimed.
+#[test]
+fn gc_never_collects_tagged_or_kept_artifacts() {
+    let root = temp_dir("gc");
+    let store = Store::open(root.clone()).unwrap();
+    let tagged = pack_unit(&store, "{\"spec\": 1}", b"snapshot-tagged", 0).unwrap();
+    store.tag("runs/keep", &tagged).unwrap();
+    let in_flight = pack_unit(&store, "{\"spec\": 2}", b"snapshot-in-flight", 1).unwrap();
+    let orphan = pack_unit(&store, "{\"spec\": 3}", b"snapshot-orphan", 2).unwrap();
+    let orphan_blobs: Vec<String> = {
+        let m = store.get_manifest(&orphan).unwrap();
+        m.referenced_blobs().into_iter().map(str::to_string).collect()
+    };
+    let before = store.stats().unwrap().blobs;
+
+    // Dry run: the orphan is counted, nothing is deleted.
+    let keep = vec![in_flight.clone()];
+    let report = store.gc(&keep, true).unwrap();
+    assert!(report.dry_run);
+    assert!(report.swept > 0, "{report:?}");
+    assert!(report.render().contains("would sweep"), "{}", report.render());
+    assert_eq!(store.stats().unwrap().blobs, before, "dry run must delete nothing");
+
+    // Real pass: only the orphan's manifest + unshared blobs go.
+    let report = store.gc(&keep, false).unwrap();
+    assert!(!report.dry_run);
+    assert!(report.swept > 0 && report.reclaimed_bytes > 0, "{report:?}");
+    assert!(!store.has_blob(&orphan), "orphan manifest must be swept");
+    for digest in &orphan_blobs {
+        // The orphan's snapshot blob is unshared; its spec blob is too.
+        assert!(!store.has_blob(digest), "unreferenced blob {digest} survived gc");
+    }
+    for reference in [&tagged, &in_flight] {
+        let m = store.get_manifest(reference).unwrap();
+        for digest in m.referenced_blobs() {
+            assert!(store.has_blob(digest), "live blob {digest} was collected");
+        }
+    }
+    assert_eq!(store.resolve("runs/keep").unwrap(), tagged, "tags must survive gc");
+    // A second pass over the now-clean store is a no-op.
+    assert_eq!(store.gc(&keep, false).unwrap().swept, 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Dedup is structural: two checkpoints sharing a replica snapshot
+/// store that snapshot blob once. 2 farm configs + 1 shared snapshot +
+/// 2 manifests = 5 blobs, not 6.
+#[test]
+fn shared_snapshots_dedup_to_one_blob() {
+    let root = temp_dir("dedup");
+    let shared_snap = [42u8; 64];
+    for run in ["a", "b"] {
+        let ckpt = root.join(format!("ckpt-{run}"));
+        std::fs::create_dir_all(&ckpt).unwrap();
+        std::fs::write(ckpt.join(MANIFEST_FILE), format!("{{\"run\": \"{run}\"}}")).unwrap();
+        std::fs::write(ckpt.join("replica-00000.snap"), shared_snap).unwrap();
+    }
+    let store = Store::open(root.join("registry")).unwrap();
+    let da = pack_checkpoint(&store, &root.join("ckpt-a"), "runs/a").unwrap();
+    let db = pack_checkpoint(&store, &root.join("ckpt-b"), "runs/b").unwrap();
+    assert_ne!(da, db, "different configs make different artifacts");
+    let ma = store.get_manifest(&da).unwrap();
+    let mb = store.get_manifest(&db).unwrap();
+    assert_eq!(ma.layers[0].digest, mb.layers[0].digest, "shared snapshot, shared address");
+    assert_eq!(store.stats().unwrap().blobs, 5, "the shared snapshot must be stored once");
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,21 @@
+//! Negative fixture for the registry store's `refs` namespace rank:
+//! one acquisition per operation, poisoning surfaced via `.expect`,
+//! and the guard scope-released before the next acquisition.
+use std::sync::Mutex;
+
+pub struct Store {
+    refs: Mutex<u32>,
+}
+
+impl Store {
+    pub fn publish(&self) -> u32 {
+        let guard = self.refs.lock().expect("registry refs lock poisoned");
+        *guard
+    }
+
+    pub fn sweep_after_publish(&self) -> u32 {
+        let published = { *self.refs.lock().expect("registry refs lock poisoned") };
+        let guard = self.refs.lock().expect("registry refs lock poisoned");
+        published + *guard
+    }
+}

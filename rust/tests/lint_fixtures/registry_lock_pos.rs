@@ -1,0 +1,20 @@
+//! Positive fixture for the registry store's `refs` namespace rank:
+//! re-entrant acquisition (the GC hazard) and a bare `.unwrap()`.
+use std::sync::Mutex;
+
+pub struct Store {
+    refs: Mutex<u32>,
+}
+
+impl Store {
+    pub fn reentrant_gc(&self) -> u32 {
+        let g1 = self.refs.lock().expect("registry refs lock poisoned");
+        let g2 = self.refs.lock().expect("registry refs lock poisoned");
+        *g1 + *g2
+    }
+
+    pub fn bare(&self) -> u32 {
+        let _g = self.refs.lock().unwrap();
+        0
+    }
+}

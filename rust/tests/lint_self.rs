@@ -21,6 +21,8 @@ const FIXTURE_LOCKS: &[LockSpec] = &[
     LockSpec { file: "lock_neg.rs", receiver: "a" },
     LockSpec { file: "lock_neg.rs", receiver: "b" },
     LockSpec { file: "panic_neg.rs", receiver: "state" },
+    LockSpec { file: "registry_lock_pos.rs", receiver: "refs" },
+    LockSpec { file: "registry_lock_neg.rs", receiver: "refs" },
 ];
 
 fn spans(diags: &[Diagnostic]) -> Vec<(u32, u32, &'static str)> {
@@ -121,6 +123,29 @@ fn lock_rule_negative_scoped_guards_are_clean() {
     assert!(diags.is_empty(), "{diags:?}");
 }
 
+/// The registry store's `refs` rank: re-entrant acquisition (the GC
+/// hazard the store's `*_unlocked` helpers exist to avoid) and a bare
+/// unwrap are findings.
+#[test]
+fn registry_lock_rank_positive_spans() {
+    let src = include_str!("lint_fixtures/registry_lock_pos.rs");
+    let class = FileClass { lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("registry_lock_pos.rs", src, &class, FIXTURE_LOCKS);
+    assert_eq!(spans(&diags), vec![(12, 28, RULE_LOCK), (17, 28, RULE_LOCK)]);
+    assert!(diags[0].msg.contains("re-acquired"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("bare .lock().unwrap()"), "{}", diags[1].msg);
+}
+
+/// The store's actual discipline — one acquisition per operation, the
+/// poison idiom, scope release before the next acquisition — is clean.
+#[test]
+fn registry_lock_rank_negative_is_clean() {
+    let src = include_str!("lint_fixtures/registry_lock_neg.rs");
+    let class = FileClass { lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("registry_lock_neg.rs", src, &class, FIXTURE_LOCKS);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
 #[test]
 fn allow_rule_positive_spans() {
     let src = include_str!("lint_fixtures/allow_pos.rs");
@@ -198,6 +223,7 @@ fn declared_lock_order_covers_every_lock_module() {
         "server/queue.rs",
         "coordinator/checkpoint.rs",
         "coordinator/farm.rs",
+        "registry/store.rs",
         "obs/metrics.rs",
         "obs/trace.rs",
     ];
