@@ -41,6 +41,7 @@ fn farm_rate(
         samples,
         thin,
         threaded_shards: false,
+        threads: 1,
         engine,
     };
     let result = run_farm(&cfg).expect("bench farm must run");

@@ -1,0 +1,127 @@
+//! Domain-decomposition scaling — the paper's §5 multi-GPU scaling
+//! study transposed onto the CPU slab engine: one lattice split across
+//! 1..8 worker threads with checkerboard-phase halo exchange.
+//!
+//! * **Strong scaling** (Table 4 analogue): a fixed 2^26-spin lattice
+//!   (8192², the paper's single-GPU scale; 1024² in quick mode) across
+//!   a growing thread count. Every row is asserted bit-identical to the
+//!   scalar reference — the speedup column is only meaningful because
+//!   the trajectory is provably the same one.
+//! * **Weak scaling** (Table 3 analogue): a fixed slab of rows per
+//!   thread, so the lattice grows with the thread count; efficiency is
+//!   rate(n) / (n · rate(1)).
+//!
+//! The report feeds the CI perf gate: `scaling_domain/speedup/4` has a
+//! baseline floor (the acceptance bar for the engine is >1.5× at 4
+//! threads on the 2^26-spin lattice).
+
+use ising_dgx::algorithms::{DomainEngine, ScalarEngine, Sweeper};
+use ising_dgx::lattice::Geometry;
+use ising_dgx::util::bench::{quick_mode, write_report};
+use ising_dgx::util::json::{obj, Json};
+use ising_dgx::util::timer::Timer;
+use ising_dgx::util::{units, Table};
+
+fn flips_per_ns(sites: u64, sweeps: u64, secs: f64) -> f64 {
+    (sites * sweeps) as f64 / (secs * 1e9)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let beta = 0.4406868f32;
+    let seed = 4u32;
+
+    // ---- strong scaling: fixed lattice, growing thread count --------
+    let size = if quick { 1024 } else { 8192 };
+    let sweeps: u64 = if quick { 24 } else { 16 };
+    let geom = Geometry::square(size).unwrap();
+    let sites = geom.sites() as u64;
+
+    // Scalar reference: the 1-thread baseline the domain engine must
+    // reproduce bit for bit (and the denominator of every speedup).
+    let mut scalar = ScalarEngine::hot(geom, beta, seed);
+    let timer = Timer::start();
+    scalar.sweep_n(sweeps);
+    let scalar_secs = timer.secs();
+    let scalar_rate = flips_per_ns(sites, sweeps, scalar_secs);
+    let reference = scalar.spins();
+
+    let mut table = Table::new(&["threads", "flips/ns", "speedup", "state == scalar?"])
+        .with_title(
+            format!("Domain strong scaling — fixed {size}^2 lattice ({sites} spins)").as_str(),
+        );
+    let mut rows = Vec::new();
+    for &n in &[1usize, 2, 4, 8] {
+        let mut engine = DomainEngine::hot(geom, beta, seed, n).unwrap();
+        let timer = Timer::start();
+        engine.sweep_n(sweeps);
+        let secs = timer.secs();
+        let rate = flips_per_ns(sites, sweeps, secs);
+        assert_eq!(
+            engine.spins(),
+            reference,
+            "thread-count invariance violated at n = {n}"
+        );
+        table.row(&[
+            n.to_string(),
+            units::fmt_rate(rate),
+            format!("{:.2}x", scalar_secs / secs),
+            "yes".into(),
+        ]);
+        rows.push(obj(vec![
+            ("workers", Json::Num(n as f64)),
+            ("flips_per_ns", Json::Num(rate)),
+            ("speedup", Json::Num(scalar_secs / secs)),
+        ]));
+    }
+    table.print();
+    println!(
+        "shape check — strong scaling: halo traffic (4 rows/slab/sweep) is O(W) \
+         against an O(H·W/threads) bulk, so speedup tracks the thread count \
+         until slabs thin out (paper §5.2); scalar reference {} flips/ns.",
+        units::fmt_rate(scalar_rate)
+    );
+
+    // ---- weak scaling: fixed rows per thread, lattice grows ---------
+    let (slab_rows, width) = if quick { (256usize, 1024usize) } else { (2048, 8192) };
+    let weak_sweeps: u64 = if quick { 16 } else { 8 };
+    let mut weak_table = Table::new(&["threads", "lattice", "flips/ns", "efficiency"])
+        .with_title(format!("Domain weak scaling — {slab_rows} rows/thread × {width}").as_str());
+    let mut weak_rows = Vec::new();
+    let mut base_rate = None;
+    for &n in &[1usize, 2, 4, 8] {
+        let geom = Geometry::new(slab_rows * n, width).unwrap();
+        let sites = geom.sites() as u64;
+        let mut engine = DomainEngine::hot(geom, beta, seed, n).unwrap();
+        let timer = Timer::start();
+        engine.sweep_n(weak_sweeps);
+        let rate = flips_per_ns(sites, weak_sweeps, timer.secs());
+        let base = *base_rate.get_or_insert(rate);
+        let efficiency = rate / (n as f64 * base);
+        weak_table.row(&[
+            n.to_string(),
+            format!("{}x{width}", slab_rows * n),
+            units::fmt_rate(rate),
+            format!("{:.0}%", efficiency * 100.0),
+        ]);
+        weak_rows.push(obj(vec![
+            ("workers", Json::Num(n as f64)),
+            ("flips_per_ns", Json::Num(rate)),
+            ("efficiency", Json::Num(efficiency)),
+        ]));
+    }
+    weak_table.print();
+    println!(
+        "shape check — weak scaling: per-thread work is constant, so aggregate \
+         throughput grows with the thread count (paper §5.1/Table 3 analogue)."
+    );
+
+    let _ = write_report(
+        "scaling_domain",
+        &obj(vec![
+            ("bench", Json::Str("scaling_domain".into())),
+            ("rows", Json::Arr(rows)),
+            ("weak", Json::Arr(weak_rows)),
+        ]),
+    );
+}

@@ -1,0 +1,533 @@
+//! Domain-decomposed scalar Metropolis — the Rust analogue of the
+//! paper's multi-GPU slab decomposition (§4): one lattice split into
+//! horizontal slabs, one `std::thread::scope` worker per slab, with
+//! explicit halo-row exchange between neighbors at every checkerboard
+//! phase (the managed-memory boundary traffic of Fig. 7, done with
+//! mailbox buffers instead of page migration).
+//!
+//! Trajectories are bit-identical to [`super::metropolis::ScalarEngine`]
+//! for *any* thread count: every acceptance draw comes from the shared
+//! Philox site-group stream keyed by the **global** row index
+//! (`rng::philox::site_group`), and within a color phase the source
+//! plane is immutable, so the slab boundaries only have to be refreshed
+//! between phases — which the two per-phase barriers guarantee.
+//!
+//! Per sweep, each worker runs (for black, then white):
+//!
+//! 1. update its owned rows of the target color,
+//! 2. publish its first/last owned rows into its own halo mailbox,
+//! 3. barrier — every neighbor's boundary is now published,
+//! 4. pull the neighbors' boundary rows into its local halo rows,
+//! 5. barrier — nobody republishes until every pull has happened.
+
+use super::acceptance::AcceptanceTable;
+use crate::coordinator::partition::{partition, Slab};
+use crate::error::{Error, Result};
+use crate::lattice::{Checkerboard, Color, Geometry};
+use crate::rng::philox::site_group;
+use crate::util::snapshot::EngineSnapshot;
+use std::sync::{Condvar, Mutex};
+
+/// Validate a `height × threads` slab split with caller-facing errors
+/// (`Error::Usage`, HTTP 400 through the `/v2` error envelope — the
+/// lower-level [`partition`] reports `Error::Coordinator`, HTTP 500).
+///
+/// Shared by `RunConfig::validate`, the farm config, and the engine
+/// constructor, so CLI, TOML, and HTTP all reject a bad split with the
+/// same message instead of panicking a worker.
+pub fn validate_split(h: usize, threads: usize) -> Result<()> {
+    if threads == 0 {
+        return Err(Error::Usage("domain threads must be ≥ 1".into()));
+    }
+    if h % threads != 0 {
+        return Err(Error::Usage(format!(
+            "domain engine cannot split lattice height {h} into {threads} equal \
+             slabs (height % threads must be 0)"
+        )));
+    }
+    let height = h / threads;
+    if height < 2 || height % 2 != 0 {
+        return Err(Error::Usage(format!(
+            "domain slab height {height} (lattice height {h} / {threads} threads) \
+             must be even and ≥ 2: checkerboard parity needs an even row pair per \
+             slab, so halo rows stay opposite-colored"
+        )));
+    }
+    Ok(())
+}
+
+/// Boundary rows of one slab's most recently updated color plane,
+/// published for the neighbors' halo pulls.
+struct HaloRows {
+    /// First owned row (pulled by the slab above as its bottom halo).
+    top: Vec<i8>,
+    /// Last owned row (pulled by the slab below as its top halo).
+    bottom: Vec<i8>,
+}
+
+/// One slab's halo mailbox. Strictly publish-then-pull per phase (the
+/// barriers enforce it), so one buffer per side serves both colors.
+struct Mailbox {
+    slot: Mutex<HaloRows>,
+}
+
+impl Mailbox {
+    fn new(w2: usize) -> Self {
+        Mailbox { slot: Mutex::new(HaloRows { top: vec![1; w2], bottom: vec![1; w2] }) }
+    }
+}
+
+/// Generation-counting phase barrier (`Mutex` + `Condvar`): all workers
+/// must arrive before any proceeds. Rebuilt per `sweep_n` call, so a
+/// worker panic never leaves a future call waiting on a stale
+/// generation.
+struct PhaseBarrier {
+    gate: Mutex<BarrierGen>,
+    arrivals: Condvar,
+    parties: usize,
+}
+
+struct BarrierGen {
+    arrived: usize,
+    generation: u64,
+}
+
+impl PhaseBarrier {
+    fn new(parties: usize) -> Self {
+        PhaseBarrier {
+            gate: Mutex::new(BarrierGen { arrived: 0, generation: 0 }),
+            arrivals: Condvar::new(),
+            parties,
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.gate.lock().expect("domain barrier gate poisoned");
+        let generation = g.generation;
+        g.arrived += 1;
+        if g.arrived == self.parties {
+            g.arrived = 0;
+            g.generation = g.generation.wrapping_add(1);
+            self.arrivals.notify_all();
+            return;
+        }
+        while g.generation == generation {
+            g = self.arrivals.wait(g).expect("domain barrier gate poisoned");
+        }
+    }
+}
+
+/// One worker's slab: both color planes stored locally as
+/// `(height + 2) × W/2`, rows `1..=height` owned, row `0` the top halo
+/// and row `height + 1` the bottom halo (both periodic neighbors).
+struct Shard {
+    slab: Slab,
+    w2: usize,
+    /// `planes[c]` is the color-`c` slab plane with halo rows.
+    planes: [Vec<i8>; 2],
+}
+
+impl Shard {
+    /// Copy this slab's rows (plus halos) out of a full lattice.
+    fn scatter(lat: &Checkerboard, slab: Slab) -> Shard {
+        let g = lat.geometry();
+        let w2 = g.w2();
+        let rows = slab.height + 2;
+        let mut planes = [vec![1i8; rows * w2], vec![1i8; rows * w2]];
+        for color in Color::BOTH {
+            let src = lat.plane(color);
+            let dst = &mut planes[color.index()];
+            for li in 0..rows {
+                // li = 0 is the halo row above base_row (periodic).
+                let gi = (slab.base_row + g.h + li - 1) % g.h;
+                dst[li * w2..(li + 1) * w2].copy_from_slice(&src[gi * w2..(gi + 1) * w2]);
+            }
+        }
+        Shard { slab, w2, planes }
+    }
+
+    /// Copy the owned rows back into a full lattice (halos excluded).
+    fn gather_into(&self, lat: &mut Checkerboard) {
+        let w2 = self.w2;
+        for color in Color::BOTH {
+            let src = &self.planes[color.index()];
+            let dst = lat.plane_mut(color);
+            for li in 1..=self.slab.height {
+                let gi = self.slab.base_row + li - 1;
+                dst[gi * w2..(gi + 1) * w2].copy_from_slice(&src[li * w2..(li + 1) * w2]);
+            }
+        }
+    }
+
+    /// Update every owned site of `color` for sweep `step` — the exact
+    /// arithmetic of `metropolis::update_color`, with the local row
+    /// shifted by one for the halo row and the RNG/parity keyed by the
+    /// global row, so slab execution cannot change the trajectory.
+    fn update_color(&mut self, color: Color, table: &AcceptanceTable, seed: u32, step: u32) {
+        let w2 = self.w2;
+        let (target, source) = {
+            let [ref mut black, ref mut white] = self.planes;
+            match color {
+                Color::Black => (&mut black[..], &white[..]),
+                Color::White => (&mut white[..], &black[..]),
+            }
+        };
+        for li in 1..=self.slab.height {
+            let gi = self.slab.base_row + li - 1;
+            let up = (li - 1) * w2;
+            let down = (li + 1) * w2;
+            let row = li * w2;
+            let q = (gi + color.index()) % 2;
+            let mut k = 0usize;
+            while k < w2 {
+                // One Philox block serves four consecutive color columns.
+                let lanes =
+                    site_group(seed, color.index() as u32, gi as u32, (k >> 2) as u32, step);
+                let kend = (k + 4).min(w2);
+                while k < kend {
+                    let side = if q == 0 {
+                        if k == 0 {
+                            w2 - 1
+                        } else {
+                            k - 1
+                        }
+                    } else if k + 1 == w2 {
+                        0
+                    } else {
+                        k + 1
+                    };
+                    let s01 = ((source[up + k] as i32
+                        + source[down + k] as i32
+                        + source[row + k] as i32
+                        + source[row + side] as i32)
+                        + 4)
+                        / 2;
+                    let sigma = target[row + k];
+                    let sigma01 = ((sigma as i32 + 1) / 2) as usize;
+                    if table.accept(sigma01, s01 as usize, lanes[k & 3]) {
+                        target[row + k] = -sigma;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// Publish the just-updated color's boundary rows into this slab's
+    /// own mailbox for the neighbors to pull.
+    fn publish(&self, color: Color, mailboxes: &[Mailbox]) {
+        let w2 = self.w2;
+        let h = self.slab.height;
+        let plane = &self.planes[color.index()];
+        let mut slot = mailboxes[self.slab.device]
+            .slot
+            .lock()
+            .expect("domain halo mailbox slot poisoned");
+        slot.top.copy_from_slice(&plane[w2..2 * w2]);
+        slot.bottom.copy_from_slice(&plane[h * w2..(h + 1) * w2]);
+    }
+
+    /// Pull the neighbors' published boundary rows into this slab's
+    /// halo rows of `color` (periodic: with one slab, both neighbors
+    /// are the slab itself).
+    fn pull(&mut self, color: Color, mailboxes: &[Mailbox]) {
+        let n = mailboxes.len();
+        let w2 = self.w2;
+        let h = self.slab.height;
+        let above = (self.slab.device + n - 1) % n;
+        let below = (self.slab.device + 1) % n;
+        let plane = &mut self.planes[color.index()];
+        {
+            let slot = mailboxes[above].slot.lock().expect("domain halo mailbox slot poisoned");
+            plane[..w2].copy_from_slice(&slot.bottom);
+        }
+        {
+            let slot = mailboxes[below].slot.lock().expect("domain halo mailbox slot poisoned");
+            plane[(h + 1) * w2..(h + 2) * w2].copy_from_slice(&slot.top);
+        }
+    }
+
+    /// Run `n` sweeps from counter `step0` in lockstep with the other
+    /// workers: update → publish → barrier → pull → barrier, per color.
+    fn run_sweeps(
+        &mut self,
+        table: &AcceptanceTable,
+        mailboxes: &[Mailbox],
+        barrier: &PhaseBarrier,
+        seed: u32,
+        step0: u64,
+        n: u64,
+    ) {
+        for t in step0..step0 + n {
+            let step = t as u32;
+            for color in Color::BOTH {
+                self.update_color(color, table, seed, step);
+                self.publish(color, mailboxes);
+                barrier.wait();
+                self.pull(color, mailboxes);
+                barrier.wait();
+            }
+        }
+    }
+}
+
+/// The domain-decomposed engine: one lattice, `threads` slabs advanced
+/// concurrently, implementing [`super::sweeper::Sweeper`]. Snapshots go
+/// through the full-lattice [`EngineSnapshot`] form, so a run saved
+/// under one thread count resumes bit-identically under another.
+pub struct DomainEngine {
+    geom: Geometry,
+    /// Acceptance table (β).
+    table: AcceptanceTable,
+    /// Philox seed.
+    seed: u32,
+    /// Next sweep number.
+    step: u64,
+    shards: Vec<Shard>,
+    mailboxes: Vec<Mailbox>,
+    /// Halo rows exchanged so far (2 per slab per color phase) — a pure
+    /// deterministic counter; obs reporting happens at the CLI/server
+    /// layer, never in here.
+    halo_rows_exchanged: u64,
+}
+
+impl DomainEngine {
+    /// Hot-start engine at inverse temperature `beta`, split across
+    /// `threads` slabs. The initial state matches `ScalarEngine::hot`
+    /// with the same geometry and seed exactly.
+    pub fn hot(geom: Geometry, beta: f32, seed: u32, threads: usize) -> Result<Self> {
+        Self::from_lattice(&crate::lattice::init::hot(geom, seed), beta, seed, 0, threads)
+    }
+
+    /// Cold-start engine.
+    pub fn cold(geom: Geometry, beta: f32, seed: u32, threads: usize) -> Result<Self> {
+        Self::from_lattice(&Checkerboard::cold(geom), beta, seed, 0, threads)
+    }
+
+    /// Build from a full lattice at sweep counter `step`.
+    pub fn from_lattice(
+        lat: &Checkerboard,
+        beta: f32,
+        seed: u32,
+        step: u64,
+        threads: usize,
+    ) -> Result<Self> {
+        let geom = lat.geometry();
+        validate_split(geom.h, threads)?;
+        let slabs = partition(geom, threads)?;
+        let shards: Vec<Shard> = slabs.iter().map(|&slab| Shard::scatter(lat, slab)).collect();
+        let mailboxes = (0..threads).map(|_| Mailbox::new(geom.w2())).collect();
+        Ok(Self {
+            geom,
+            table: AcceptanceTable::new(beta),
+            seed,
+            step,
+            shards,
+            mailboxes,
+            halo_rows_exchanged: 0,
+        })
+    }
+
+    /// Worker/slab count.
+    pub fn threads(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Next sweep number (the farm's chunked-run cursor).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Halo rows exchanged so far (deterministic in the sweep count).
+    pub fn halo_rows_exchanged(&self) -> u64 {
+        self.halo_rows_exchanged
+    }
+
+    /// Reassemble the full lattice from the owned slab rows.
+    pub fn gather(&self) -> Checkerboard {
+        let mut lat = Checkerboard::cold(self.geom);
+        for shard in &self.shards {
+            shard.gather_into(&mut lat);
+        }
+        lat
+    }
+
+    /// Full engine state as a checkpointable snapshot — the same
+    /// full-lattice format `ScalarEngine` writes, independent of the
+    /// thread count.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot::from_checkerboard(&self.gather(), self.table.beta, self.seed, self.step)
+    }
+
+    /// Rebuild from a snapshot under `threads` workers; continues
+    /// bit-identically regardless of the thread count that saved it.
+    pub fn from_snapshot(snap: &EngineSnapshot, threads: usize) -> Result<Self> {
+        Self::from_lattice(&snap.to_checkerboard()?, snap.beta(), snap.seed, snap.step, threads)
+    }
+}
+
+impl super::sweeper::Sweeper for DomainEngine {
+    fn name(&self) -> &'static str {
+        "metropolis-domain"
+    }
+
+    fn geometry(&self) -> Geometry {
+        self.geom
+    }
+
+    fn sweep_n(&mut self, n: u64) {
+        let seed = self.seed;
+        let step0 = self.step;
+        let table = &self.table;
+        let mailboxes: &[Mailbox] = &self.mailboxes;
+        let barrier = PhaseBarrier::new(self.shards.len());
+        let barrier = &barrier;
+        std::thread::scope(|scope| {
+            for shard in self.shards.iter_mut() {
+                scope.spawn(move || {
+                    shard.run_sweeps(table, mailboxes, barrier, seed, step0, n);
+                });
+            }
+        });
+        self.step += n;
+        // 2 boundary rows published + 2 halo rows pulled per slab per
+        // color phase; counted once as "rows exchanged".
+        self.halo_rows_exchanged += 2 * 2 * self.shards.len() as u64 * n;
+    }
+
+    fn magnetization(&self) -> f64 {
+        self.gather().magnetization()
+    }
+
+    fn energy_per_site(&self) -> f64 {
+        self.gather().energy_per_site()
+    }
+
+    fn spins(&self) -> Vec<i8> {
+        self.gather().to_spins()
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.table = AcceptanceTable::new(beta);
+    }
+
+    fn export_snapshot(&self) -> Option<EngineSnapshot> {
+        Some(DomainEngine::snapshot(self))
+    }
+
+    fn halo_rows_exchanged(&self) -> Option<u64> {
+        Some(self.halo_rows_exchanged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::metropolis::ScalarEngine;
+    use crate::algorithms::sweeper::Sweeper;
+    use crate::lattice::init;
+
+    #[test]
+    fn validate_split_rejects_degenerate_slabs() {
+        validate_split(8, 1).unwrap();
+        validate_split(8, 2).unwrap();
+        validate_split(8, 4).unwrap();
+        for (h, threads) in [(8, 0), (8, 3), (8, 5), (8, 8), (12, 4), (2, 2), (4, 4)] {
+            let err = validate_split(h, threads).unwrap_err();
+            assert!(
+                matches!(err, Error::Usage(_)),
+                "({h}, {threads}) must be a usage error, got {err}"
+            );
+        }
+        // Slab count == H (height-1 slabs) is the paper's degenerate
+        // case: rejected, not panicked.
+        assert!(validate_split(6, 6).is_err());
+    }
+
+    #[test]
+    fn single_thread_matches_scalar_engine_exactly() {
+        let g = Geometry::new(8, 12).unwrap();
+        let mut scalar = ScalarEngine::hot(g, 0.4, 7);
+        let mut domain = DomainEngine::hot(g, 0.4, 7, 1).unwrap();
+        assert_eq!(domain.gather(), scalar.lattice, "identical initial state");
+        scalar.sweep_n(11);
+        domain.sweep_n(11);
+        assert_eq!(domain.gather(), scalar.lattice);
+        assert_eq!(domain.magnetization(), scalar.magnetization());
+        assert_eq!(domain.energy_per_site(), scalar.energy_per_site());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_trajectory() {
+        let g = Geometry::new(12, 8).unwrap();
+        let mut scalar = ScalarEngine::hot(g, 0.44, 3);
+        scalar.sweep_n(9);
+        for threads in [1, 2, 3, 6] {
+            let mut domain = DomainEngine::hot(g, 0.44, 3, threads).unwrap();
+            domain.sweep_n(9);
+            assert_eq!(domain.gather(), scalar.lattice, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn halo_rows_track_periodic_neighbors_after_each_sweep() {
+        // After sweep_n, every shard's halo rows must equal the owning
+        // neighbor's boundary rows — including across the periodic seam
+        // (slab 0's top halo is the last slab's bottom row).
+        let g = Geometry::new(8, 8).unwrap();
+        let mut domain = DomainEngine::hot(g, 0.35, 5, 2).unwrap();
+        domain.sweep_n(3);
+        let full = domain.gather();
+        let w2 = g.w2();
+        for shard in &domain.shards {
+            for color in Color::BOTH {
+                let plane = &shard.planes[color.index()];
+                let src = full.plane(color);
+                let above = shard.slab.row_above(g);
+                let below = shard.slab.row_below(g);
+                assert_eq!(
+                    &plane[..w2],
+                    &src[above * w2..(above + 1) * w2],
+                    "top halo = global row {above}"
+                );
+                let h = shard.slab.height;
+                assert_eq!(
+                    &plane[(h + 1) * w2..],
+                    &src[below * w2..(below + 1) * w2],
+                    "bottom halo = global row {below}"
+                );
+            }
+        }
+        assert_eq!(domain.halo_rows_exchanged(), 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_across_thread_counts() {
+        let g = Geometry::new(8, 16).unwrap();
+        let mut a = DomainEngine::hot(g, 0.42, 13, 4).unwrap();
+        a.sweep_n(7);
+        let snap = a.export_snapshot().expect("domain engine is checkpointable");
+        let mut b = DomainEngine::from_snapshot(&snap, 2).unwrap();
+        assert_eq!(b.step, 7);
+        assert_eq!(b.gather(), a.gather());
+        a.sweep_n(9);
+        b.sweep_n(9);
+        assert_eq!(a.gather(), b.gather(), "resume under a different thread count");
+        assert_eq!(a.step, b.step);
+        // And the snapshot itself matches what the scalar engine writes.
+        let mut s = ScalarEngine::hot(g, 0.42, 13);
+        s.sweep_n(7);
+        assert_eq!(s.snapshot().encode(), snap.encode());
+    }
+
+    #[test]
+    fn beta_zero_randomizes_like_scalar() {
+        let g = Geometry::new(8, 8).unwrap();
+        let mut domain = DomainEngine::from_lattice(&init::hot(g, 1), 0.0, 1, 0, 2).unwrap();
+        let orig = domain.gather();
+        domain.sweep_n(1);
+        assert_ne!(domain.gather(), orig, "one sweep flips everything");
+        domain.sweep_n(1);
+        assert_eq!(domain.gather(), orig, "two sweeps restore the state");
+    }
+}

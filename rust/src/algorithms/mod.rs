@@ -3,6 +3,8 @@
 //! * [`acceptance`] — tabulated Metropolis/heat-bath probabilities with
 //!   exact integer thresholds.
 //! * [`metropolis`] — scalar checkerboard Metropolis (paper "Basic CUDA C").
+//! * [`domain`] — slab-decomposed multi-threaded Metropolis with halo
+//!   exchange (paper §4, the multi-GPU decomposition on cores).
 //! * [`multispin`] — word-parallel multi-spin coding (paper §3.3, the
 //!   optimized implementation).
 //! * [`batch`] — replica-batched bit-sliced Metropolis: 64 independent
@@ -15,6 +17,7 @@
 
 pub mod acceptance;
 pub mod batch;
+pub mod domain;
 pub mod heatbath;
 pub mod metropolis;
 pub mod multispin;
@@ -24,6 +27,7 @@ pub mod wolff;
 
 pub use acceptance::{AcceptanceTable, HeatBathTable};
 pub use batch::BatchEngine;
+pub use domain::DomainEngine;
 pub use heatbath::HeatBathEngine;
 pub use metropolis::ScalarEngine;
 pub use multispin::MultispinEngine;

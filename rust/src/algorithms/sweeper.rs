@@ -46,4 +46,11 @@ pub trait Sweeper {
     fn export_snapshot(&self) -> Option<crate::util::snapshot::EngineSnapshot> {
         None
     }
+
+    /// Halo rows exchanged so far — `Some` only for domain-decomposed
+    /// engines. A pure counter read: instrumentation that reports it
+    /// (CLI prints, obs metrics) stays outside the determinism zones.
+    fn halo_rows_exchanged(&self) -> Option<u64> {
+        None
+    }
 }

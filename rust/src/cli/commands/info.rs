@@ -38,18 +38,26 @@ pub fn exec(args: &Args) -> Result<()> {
     }
 
     // The engine matrix, straight from the canonical registry — the same
-    // source that feeds `EngineKind::parse` hints and the CLI help.
+    // source that feeds `EngineKind::parse` hints, `/v2/info` and the
+    // CLI help. The capability columns mirror the registry flags: `run`
+    // (`ising run`), `farm` (`ising sweep` / `/v2/jobs`), `snapshot`
+    // (bit-exact checkpoints) and `threads` (`--threads N` slab
+    // decomposition).
     let mut engines = Table::new(&[
-        "engine", "paper", "layout", "rng", "snapshot", "pjrt",
+        "engine", "paper", "layout", "rng", "run", "farm", "snapshot", "threads", "pjrt",
     ])
     .with_title("Engines (--engine NAME)");
+    let mark = |b: bool| (if b { "yes" } else { "-" }).to_string();
     for spec in crate::config::ENGINES {
         engines.row(&[
             spec.name.to_string(),
             spec.paper.to_string(),
             spec.layout.to_string(),
             spec.rng.to_string(),
-            (if spec.snapshot { "yes" } else { "-" }).to_string(),
+            mark(spec.runnable),
+            mark(spec.farmable),
+            mark(spec.snapshot),
+            mark(spec.threads),
             (if spec.needs_pjrt { "feature" } else { "native" }).to_string(),
         ]);
     }

@@ -11,7 +11,7 @@ pub mod trace;
 pub mod validate;
 
 use crate::algorithms::{
-    HeatBathEngine, MultispinEngine, ScalarEngine, Sweeper, WolffEngine,
+    DomainEngine, HeatBathEngine, MultispinEngine, ScalarEngine, Sweeper, WolffEngine,
 };
 use crate::config::{EngineKind, RunConfig};
 use crate::error::Result;
@@ -27,6 +27,9 @@ pub fn build_engine(cfg: &RunConfig) -> Result<Box<dyn Sweeper>> {
     let beta = cfg.beta();
     Ok(match cfg.engine {
         EngineKind::NativeScalar => Box::new(ScalarEngine::hot(geom, beta, cfg.seed)),
+        EngineKind::NativeDomain => {
+            Box::new(DomainEngine::hot(geom, beta, cfg.seed, cfg.threads.max(1))?)
+        }
         EngineKind::NativeMultispin => {
             Box::new(MultispinEngine::hot(geom, beta, cfg.seed)?)
         }

@@ -10,7 +10,7 @@ use crate::util::units;
 
 const KNOWN: &[&str] = &[
     "size", "temperature", "beta", "engine", "sweeps", "seed", "workers",
-    "artifacts", "config", "burn-in", "samples", "thin", "quiet",
+    "threads", "artifacts", "config", "burn-in", "samples", "thin", "quiet",
 ];
 
 /// Assemble a `RunConfig` from `--config` plus flag overrides.
@@ -37,6 +37,7 @@ pub fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.samples = args.opt_parse("samples", cfg.samples)?;
     cfg.thin = args.opt_parse("thin", cfg.thin)?;
     cfg.workers = args.opt_parse("workers", cfg.workers)?;
+    cfg.threads = args.opt_parse("threads", cfg.threads)?;
     if let Some(v) = args.opt("artifacts") {
         cfg.artifacts = v.into();
     }
@@ -69,6 +70,27 @@ pub fn exec(args: &Args) -> Result<()> {
     // Measurement phase.
     let meas = observables::measure(engine.as_mut(), 0, cfg.samples, cfg.thin);
     let binder = meas.binder();
+
+    // Instrumentation stays at this layer: the engine only exposes a
+    // pure halo counter, so tracing cannot perturb the trajectory.
+    if let Some(halo) = engine.halo_rows_exchanged() {
+        let obs = crate::obs::Obs::new("run");
+        obs.metrics.observe(
+            "ising_halo_rows_exchanged_total",
+            "Boundary rows exchanged between slab threads (domain engine).",
+            &[("engine", engine.name())],
+            halo as f64,
+        );
+        if !args.flag("quiet") {
+            println!(
+                "  halo exchange   : {halo} boundary rows across {} slab thread(s)",
+                cfg.threads
+            );
+            for line in obs.metrics.summary_lines() {
+                println!("    {line}");
+            }
+        }
+    }
 
     if !args.flag("quiet") {
         println!("  sweeps          : {sweeps} in {secs:.3}s");

@@ -18,7 +18,7 @@ use std::path::PathBuf;
 
 const KNOWN: &[&str] = &[
     "size", "engine", "betas", "beta-points", "replicas", "seed", "workers", "shards",
-    "burn-in", "samples", "thin", "threaded-shards", "quiet",
+    "threads", "burn-in", "samples", "thin", "threaded-shards", "quiet",
     "checkpoint-dir", "checkpoint-every", "resume", "max-samples", "report",
     "trace-out",
 ];
@@ -83,7 +83,7 @@ pub fn exec(args: &Args) -> Result<()> {
 
     println!(
         "ising sweep: {}² lattice, engine {}, {} β × {} seed(s) = {} replicas, \
-         {} worker(s), {} shard(s)/replica",
+         {} worker(s), {} shard(s)/replica, {} slab thread(s)/replica",
         cfg.geom.w,
         cfg.engine.name(),
         cfg.betas.len(),
@@ -91,6 +91,7 @@ pub fn exec(args: &Args) -> Result<()> {
         cfg.replica_count(),
         cfg.workers,
         cfg.shards.max(1),
+        cfg.threads.max(1),
     );
     println!(
         "  protocol: burn-in {} + {} samples × thin {} sweeps per replica",

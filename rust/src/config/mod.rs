@@ -5,6 +5,6 @@ pub mod types;
 
 pub use toml::{Toml, Value};
 pub use types::{
-    default_temperature_grid, engine_names_hint, EngineKind, EngineSpec, FleetConfig,
+    default_temperature_grid, engine_names_hint, EngineInfo, EngineKind, FleetConfig,
     RunConfig, ServerConfig, SweepConfig, ENGINES,
 };

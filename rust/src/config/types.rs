@@ -20,6 +20,11 @@ pub enum EngineKind {
     NativeBatch,
     /// Native heat-bath.
     NativeHeatbath,
+    /// Domain-decomposed scalar Metropolis: one lattice slab-partitioned
+    /// across `--threads N` workers with checkerboard-phase halo
+    /// exchange (paper §4 multi-GPU analogue). Bit-identical to
+    /// `NativeScalar` for any thread count.
+    NativeDomain,
     /// Native Wolff cluster.
     NativeWolff,
     /// Native stencil-as-GEMM tensor engine (paper §3.2), with the GEMM
@@ -34,7 +39,7 @@ pub enum EngineKind {
 /// text, and the `ising info` engine matrix, so the three can never
 /// drift apart again.
 #[derive(Clone, Copy, Debug)]
-pub struct EngineSpec {
+pub struct EngineInfo {
     /// Parsed engine kind.
     pub kind: EngineKind,
     /// Canonical CLI/TOML name.
@@ -51,11 +56,17 @@ pub struct EngineSpec {
     pub snapshot: bool,
     /// Requires the `pjrt` cargo feature to execute.
     pub needs_pjrt: bool,
+    /// Accepted by `ising run` / `[run]` configs (single-replica form)?
+    pub runnable: bool,
+    /// Accepted by the replica farm (`ising sweep`, `/v2/jobs`)?
+    pub farmable: bool,
+    /// Honours `--threads N` (domain decomposition across cores)?
+    pub threads: bool,
 }
 
 /// The canonical engine registry, in display order.
-pub const ENGINES: &[EngineSpec] = &[
-    EngineSpec {
+pub const ENGINES: &[EngineInfo] = &[
+    EngineInfo {
         kind: EngineKind::NativeScalar,
         name: "scalar",
         aliases: &["native-scalar"],
@@ -64,8 +75,24 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: true,
         needs_pjrt: false,
+        runnable: true,
+        farmable: true,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
+        kind: EngineKind::NativeDomain,
+        name: "domain",
+        aliases: &["native-domain", "slab"],
+        paper: "§4 multi-GPU slabs",
+        layout: "byte planes, slab halos",
+        rng: "Philox site-group",
+        snapshot: true,
+        needs_pjrt: false,
+        runnable: true,
+        farmable: true,
+        threads: true,
+    },
+    EngineInfo {
         kind: EngineKind::NativeMultispin,
         name: "multispin",
         aliases: &["native-multispin", "optimized"],
@@ -74,8 +101,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: true,
         needs_pjrt: false,
+        runnable: true,
+        farmable: true,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::NativeBatch,
         name: "batch",
         aliases: &["multispin-batch", "batch64"],
@@ -84,8 +114,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group, draw shared by lanes",
         snapshot: true,
         needs_pjrt: false,
+        runnable: false,
+        farmable: true,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::NativeTensor(Precision::F32),
         name: "tensor",
         aliases: &["tensor-fp32", "native-tensor"],
@@ -94,8 +127,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: true,
         needs_pjrt: false,
+        runnable: true,
+        farmable: true,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::NativeTensor(Precision::F16),
         name: "tensor-fp16",
         aliases: &["tensor-f16"],
@@ -104,8 +140,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: true,
         needs_pjrt: false,
+        runnable: true,
+        farmable: false,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::NativeHeatbath,
         name: "heatbath",
         aliases: &[],
@@ -114,8 +153,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: true,
         needs_pjrt: false,
+        runnable: true,
+        farmable: false,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::NativeWolff,
         name: "wolff",
         aliases: &[],
@@ -124,8 +166,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "sequential xoshiro256",
         snapshot: false,
         needs_pjrt: false,
+        runnable: true,
+        farmable: false,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::Pjrt(Variant::Basic),
         name: "pjrt-basic",
         aliases: &[],
@@ -134,8 +179,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: false,
         needs_pjrt: true,
+        runnable: true,
+        farmable: false,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::Pjrt(Variant::Multispin),
         name: "pjrt-multispin",
         aliases: &[],
@@ -144,8 +192,11 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: false,
         needs_pjrt: true,
+        runnable: true,
+        farmable: false,
+        threads: false,
     },
-    EngineSpec {
+    EngineInfo {
         kind: EngineKind::Pjrt(Variant::Tensorcore),
         name: "pjrt-tensorcore",
         aliases: &[],
@@ -154,6 +205,9 @@ pub const ENGINES: &[EngineSpec] = &[
         rng: "Philox site-group",
         snapshot: false,
         needs_pjrt: true,
+        runnable: true,
+        farmable: false,
+        threads: false,
     },
 ];
 
@@ -191,6 +245,7 @@ impl EngineKind {
             None => match self {
                 EngineKind::Pjrt(_) => "pjrt",
                 EngineKind::NativeScalar
+                | EngineKind::NativeDomain
                 | EngineKind::NativeMultispin
                 | EngineKind::NativeBatch
                 | EngineKind::NativeHeatbath
@@ -203,7 +258,7 @@ impl EngineKind {
     }
 
     /// Registry row for this kind (`None` only for `Pjrt(Variant::Any)`).
-    pub fn spec(&self) -> Option<&'static EngineSpec> {
+    pub fn spec(&self) -> Option<&'static EngineInfo> {
         ENGINES.iter().find(|spec| spec.kind == *self)
     }
 }
@@ -227,6 +282,9 @@ pub struct RunConfig {
     pub thin: u32,
     /// Worker (virtual device) count for coordinator runs.
     pub workers: usize,
+    /// Domain-decomposition thread count (engines with the `threads`
+    /// capability; ignored as long as it is 1 otherwise).
+    pub threads: usize,
     /// Artifact directory (PJRT engines).
     pub artifacts: PathBuf,
 }
@@ -242,6 +300,7 @@ impl Default for RunConfig {
             samples: 200,
             thin: 2,
             workers: 1,
+            threads: 1,
             artifacts: PathBuf::from("artifacts"),
         }
     }
@@ -283,6 +342,9 @@ impl RunConfig {
         if let Some(v) = doc.get("run", "workers") {
             cfg.workers = v.as_usize()?;
         }
+        if let Some(v) = doc.get("run", "threads") {
+            cfg.threads = v.as_usize()?;
+        }
         if let Some(v) = doc.get("run", "artifacts") {
             cfg.artifacts = PathBuf::from(v.as_str()?);
         }
@@ -314,6 +376,19 @@ impl RunConfig {
         }
         if self.workers == 0 {
             return Err(Error::Config("workers must be ≥ 1".into()));
+        }
+        if self.threads == 0 {
+            return Err(Error::Config("threads must be ≥ 1".into()));
+        }
+        if self.threads > 1 && !self.engine.spec().is_some_and(|s| s.threads) {
+            return Err(Error::Config(format!(
+                "engine '{}' does not take --threads (only domain-decomposed \
+                 engines split one lattice across cores)",
+                self.engine.name()
+            )));
+        }
+        if self.engine == EngineKind::NativeDomain {
+            crate::algorithms::domain::validate_split(self.size, self.threads)?;
         }
         Ok(())
     }
@@ -643,6 +718,47 @@ mod tests {
         assert!(ENGINES
             .iter()
             .any(|s| s.kind == EngineKind::NativeTensor(crate::tensor::Precision::F16)));
+    }
+
+    #[test]
+    fn engine_capability_flags_are_consistent() {
+        for spec in ENGINES {
+            // Every engine is reachable from at least one entry point.
+            assert!(spec.runnable || spec.farmable, "{} is unreachable", spec.name);
+            // `--threads` implies the farm path exists (the domain engine
+            // is exercised through both `run` and `sweep`).
+            if spec.threads {
+                assert!(spec.runnable && spec.snapshot, "{}", spec.name);
+            }
+            // PJRT engines never enter the deterministic replica farm.
+            if spec.needs_pjrt {
+                assert!(!spec.farmable, "{}", spec.name);
+            }
+        }
+        let domain = EngineKind::NativeDomain.spec().unwrap();
+        assert!(domain.threads && domain.farmable && domain.snapshot);
+        let wolff = EngineKind::NativeWolff.spec().unwrap();
+        assert!(wolff.runnable && !wolff.farmable && !wolff.threads);
+        let batch = EngineKind::NativeBatch.spec().unwrap();
+        assert!(!batch.runnable && batch.farmable);
+    }
+
+    #[test]
+    fn domain_run_configs_validate_thread_split() {
+        let ok = Toml::parse("[run]\nsize = 64\nengine = \"domain\"\nthreads = 4\n").unwrap();
+        let cfg = RunConfig::from_toml(&ok).unwrap();
+        assert_eq!(cfg.engine, EngineKind::NativeDomain);
+        assert_eq!(cfg.threads, 4);
+        // threads must divide the height into even-height slabs.
+        for bad in [
+            "[run]\nsize = 64\nengine = \"domain\"\nthreads = 3\n",
+            "[run]\nsize = 64\nengine = \"domain\"\nthreads = 64\n",
+            "[run]\nsize = 64\nengine = \"domain\"\nthreads = 0\n",
+            "[run]\nsize = 64\nengine = \"scalar\"\nthreads = 4\n",
+        ] {
+            let doc = Toml::parse(bad).unwrap();
+            assert!(RunConfig::from_toml(&doc).is_err(), "must reject: {bad}");
+        }
     }
 
     #[test]

@@ -735,6 +735,7 @@ mod tests {
             samples: 6,
             thin: 2,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Multispin,
         }
     }
@@ -945,6 +946,7 @@ mod tests {
         layout.workers = 9;
         layout.shards = 2;
         layout.threaded_shards = true;
+        layout.threads = 4;
         assert_eq!(Manifest::from_config(&layout).fingerprint(), fp);
         let mut done = base.clone();
         done.done.insert(1);

@@ -14,6 +14,9 @@ use super::checkpoint::{CheckpointSpec, Checkpointer};
 use super::driver::NativeCluster;
 use super::metrics::Metrics;
 use crate::algorithms::batch::{self, BatchEngine};
+use crate::algorithms::metropolis::ScalarEngine;
+use crate::algorithms::sweeper::Sweeper;
+use crate::algorithms::DomainEngine;
 use crate::error::{Error, Result};
 use crate::lattice::Geometry;
 use crate::observables::binder::BinderAccumulator;
@@ -55,6 +58,14 @@ pub fn default_beta_grid(n: usize) -> Vec<f32> {
 /// (documented, tested) lane convention.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FarmEngine {
+    /// Reference byte-plane [`ScalarEngine`] — the §3.1 baseline, one
+    /// thread per replica.
+    Scalar,
+    /// Domain-decomposed [`DomainEngine`]: one lattice per replica split
+    /// into `threads` slabs with halo-row exchange (§4). Trajectories
+    /// are thread-count-invariant, so `threads` is execution layout
+    /// like `workers`, excluded from the manifest fingerprint.
+    Domain,
     /// Sharded [`NativeCluster`] over the packed multi-spin lattice.
     Multispin,
     /// [`TensorEngine`] (banded-GEMM neighbor sums, f32 mode).
@@ -74,6 +85,8 @@ impl FarmEngine {
     /// not through a second name table here.
     pub fn name(self) -> &'static str {
         match self {
+            FarmEngine::Scalar => "scalar",
+            FarmEngine::Domain => "domain",
             FarmEngine::Multispin => "multispin",
             FarmEngine::Tensor => "tensor",
             FarmEngine::Batch => "batch",
@@ -86,6 +99,8 @@ impl FarmEngine {
     pub fn parse(s: &str) -> Result<Self> {
         use crate::config::EngineKind;
         match EngineKind::parse(s)? {
+            EngineKind::NativeScalar => Ok(FarmEngine::Scalar),
+            EngineKind::NativeDomain => Ok(FarmEngine::Domain),
             EngineKind::NativeMultispin => Ok(FarmEngine::Multispin),
             EngineKind::NativeBatch => Ok(FarmEngine::Batch),
             EngineKind::NativeTensor(Precision::F32) => Ok(FarmEngine::Tensor),
@@ -98,8 +113,10 @@ impl FarmEngine {
                     .into(),
             )),
             other => Err(Error::Usage(format!(
-                "the replica farm drives 'multispin', 'batch' or 'tensor' replicas, \
-                 not '{}'",
+                "the replica farm drives 'scalar', 'domain', 'multispin', 'batch' \
+                 or 'tensor' replicas, not '{}' (run it directly: `ising run \
+                 --engine {}`)",
+                other.name(),
                 other.name()
             ))),
         }
@@ -129,8 +146,14 @@ pub struct FarmConfig {
     /// Run each replica's shards on threads too (off by default: the farm
     /// parallelizes across replicas; turning both on oversubscribes cores).
     pub threaded_shards: bool,
+    /// Slab worker threads inside each domain-decomposed replica
+    /// (`FarmEngine::Domain` only; other engines require 1). Execution
+    /// layout like `workers`: excluded from the manifest fingerprint,
+    /// because domain trajectories are thread-count-invariant.
+    pub threads: usize,
     /// Engine family per replica (`shards`/`threaded_shards` apply to the
-    /// multispin cluster only; the tensor engine is single-block).
+    /// multispin cluster only; `threads` to the domain engine only; the
+    /// tensor engine is single-block).
     pub engine: FarmEngine,
 }
 
@@ -148,6 +171,7 @@ impl FarmConfig {
             samples: 100,
             thin: 2,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Multispin,
         })
     }
@@ -185,6 +209,13 @@ impl FarmConfig {
         if self.shards == 0 {
             return Err(Error::Usage("shards must be ≥ 1".into()));
         }
+        if self.threads > 1 && self.engine != FarmEngine::Domain {
+            return Err(Error::Usage(format!(
+                "'threads' splits one lattice across slab workers, which only \
+                 the domain engine does; '{}' replicas take threads = 1",
+                self.engine.name()
+            )));
+        }
         match self.engine {
             FarmEngine::Multispin => {
                 if self.geom.w % 32 != 0 {
@@ -194,9 +225,19 @@ impl FarmConfig {
                     )));
                 }
             }
+            FarmEngine::Domain => {
+                if self.shards > 1 || self.threaded_shards {
+                    return Err(Error::Usage(
+                        "'shards'/'threaded-shards' apply to the multispin engine; \
+                         'domain' replicas split across slab threads (--threads)"
+                            .into(),
+                    ));
+                }
+                crate::algorithms::domain::validate_split(self.geom.h, self.threads.max(1))?;
+            }
             // Single-block replica engines: intra-replica sharding knobs
             // would be silently ignored, so they are refused.
-            FarmEngine::Tensor | FarmEngine::Batch => {
+            FarmEngine::Scalar | FarmEngine::Tensor | FarmEngine::Batch => {
                 if self.shards > 1 || self.threaded_shards {
                     return Err(Error::Usage(format!(
                         "'shards'/'threaded-shards' apply to the multispin engine; \
@@ -446,7 +487,10 @@ pub fn work_units(cfg: &FarmConfig) -> Vec<WorkUnit> {
                     off += chunk.len();
                 }
             }
-            FarmEngine::Multispin | FarmEngine::Tensor => {
+            FarmEngine::Scalar
+            | FarmEngine::Domain
+            | FarmEngine::Multispin
+            | FarmEngine::Tensor => {
                 for (si, &seed) in cfg.seeds.iter().enumerate() {
                     units.push(WorkUnit { beta, seeds: vec![seed], first: bi * ns + si });
                 }
@@ -480,10 +524,25 @@ enum ReplicaSim {
     /// Tensor engine plus farm-side metrics accounting (boxed: the
     /// engine carries band + scratch buffers).
     Tensor(Box<TensorReplica>),
+    /// Reference byte-plane engine plus farm-side metrics accounting.
+    Scalar(Box<ScalarReplica>),
+    /// Domain-decomposed engine (slab threads inside the replica) plus
+    /// farm-side metrics accounting.
+    Domain(Box<DomainReplica>),
 }
 
 struct TensorReplica {
     engine: TensorEngine,
+    metrics: Metrics,
+}
+
+struct ScalarReplica {
+    engine: ScalarEngine,
+    metrics: Metrics,
+}
+
+struct DomainReplica {
+    engine: DomainEngine,
     metrics: Metrics,
 }
 
@@ -499,6 +558,14 @@ impl ReplicaSim {
             }
             FarmEngine::Tensor => Ok(ReplicaSim::Tensor(Box::new(TensorReplica {
                 engine: TensorEngine::with_precision(cfg.geom, beta, seed, Precision::F32),
+                metrics: Metrics::new(),
+            }))),
+            FarmEngine::Scalar => Ok(ReplicaSim::Scalar(Box::new(ScalarReplica {
+                engine: ScalarEngine::hot(cfg.geom, beta, seed),
+                metrics: Metrics::new(),
+            }))),
+            FarmEngine::Domain => Ok(ReplicaSim::Domain(Box::new(DomainReplica {
+                engine: DomainEngine::hot(cfg.geom, beta, seed, cfg.threads.max(1))?,
                 metrics: Metrics::new(),
             }))),
             // Batched units never reach the per-replica body
@@ -523,6 +590,14 @@ impl ReplicaSim {
                 engine: TensorEngine::from_snapshot(snap, Precision::F32)?,
                 metrics,
             }))),
+            FarmEngine::Scalar => Ok(ReplicaSim::Scalar(Box::new(ScalarReplica {
+                engine: ScalarEngine::from_snapshot(snap)?,
+                metrics,
+            }))),
+            FarmEngine::Domain => Ok(ReplicaSim::Domain(Box::new(DomainReplica {
+                engine: DomainEngine::from_snapshot(snap, cfg.threads.max(1))?,
+                metrics,
+            }))),
             FarmEngine::Batch => Err(Error::Coordinator(
                 "batch units are driven by run_batch_unit, not ReplicaSim".into(),
             )),
@@ -534,6 +609,8 @@ impl ReplicaSim {
         match self {
             ReplicaSim::Cluster(c) => c.step(),
             ReplicaSim::Tensor(t) => t.engine.step,
+            ReplicaSim::Scalar(s) => s.engine.step,
+            ReplicaSim::Domain(d) => d.engine.step(),
         }
     }
 
@@ -549,6 +626,22 @@ impl ReplicaSim {
                 t.metrics.sweeps += n;
                 t.metrics.elapsed += timer.elapsed();
             }
+            ReplicaSim::Scalar(s) => {
+                let timer = Timer::start();
+                s.engine.sweep_n(n);
+                let sites = s.engine.lattice.geometry().sites() as u64;
+                s.metrics.flips += n * sites;
+                s.metrics.sweeps += n;
+                s.metrics.elapsed += timer.elapsed();
+            }
+            ReplicaSim::Domain(d) => {
+                let timer = Timer::start();
+                d.engine.sweep_n(n);
+                let sites = d.engine.geometry().sites() as u64;
+                d.metrics.flips += n * sites;
+                d.metrics.sweeps += n;
+                d.metrics.elapsed += timer.elapsed();
+            }
         }
     }
 
@@ -557,6 +650,8 @@ impl ReplicaSim {
         match self {
             ReplicaSim::Cluster(c) => c.lattice.magnetization(),
             ReplicaSim::Tensor(t) => t.engine.lattice.magnetization(),
+            ReplicaSim::Scalar(s) => s.engine.lattice.magnetization(),
+            ReplicaSim::Domain(d) => d.engine.magnetization(),
         }
     }
 
@@ -565,6 +660,8 @@ impl ReplicaSim {
         match self {
             ReplicaSim::Cluster(c) => c.lattice.energy_per_site(),
             ReplicaSim::Tensor(t) => t.engine.lattice.energy_per_site(),
+            ReplicaSim::Scalar(s) => s.engine.lattice.energy_per_site(),
+            ReplicaSim::Domain(d) => d.engine.energy_per_site(),
         }
     }
 
@@ -573,6 +670,8 @@ impl ReplicaSim {
         match self {
             ReplicaSim::Cluster(c) => c.snapshot(),
             ReplicaSim::Tensor(t) => t.engine.snapshot(),
+            ReplicaSim::Scalar(s) => s.engine.snapshot(),
+            ReplicaSim::Domain(d) => d.engine.snapshot(),
         }
     }
 
@@ -581,6 +680,8 @@ impl ReplicaSim {
         match self {
             ReplicaSim::Cluster(c) => &c.metrics,
             ReplicaSim::Tensor(t) => &t.metrics,
+            ReplicaSim::Scalar(s) => &s.metrics,
+            ReplicaSim::Domain(d) => &d.metrics,
         }
     }
 
@@ -589,6 +690,8 @@ impl ReplicaSim {
         match self {
             ReplicaSim::Cluster(c) => c.metrics,
             ReplicaSim::Tensor(t) => t.metrics,
+            ReplicaSim::Scalar(s) => s.metrics,
+            ReplicaSim::Domain(d) => d.metrics,
         }
     }
 }
@@ -769,7 +872,10 @@ fn run_batch_unit(
 fn run_unit(cfg: &FarmConfig, unit: &WorkUnit, ckpt: Option<&Checkpointer>) -> Result<UnitStatus> {
     match cfg.engine {
         FarmEngine::Batch => run_batch_unit(cfg, unit, ckpt),
-        FarmEngine::Multispin | FarmEngine::Tensor => {
+        FarmEngine::Scalar
+        | FarmEngine::Domain
+        | FarmEngine::Multispin
+        | FarmEngine::Tensor => {
             match run_replica(cfg, unit.beta, unit.seeds[0], unit.first, ckpt)? {
                 ReplicaStatus::Done(r) => Ok(UnitStatus::Done(vec![r])),
                 ReplicaStatus::Paused => Ok(UnitStatus::Paused),
@@ -881,6 +987,7 @@ mod tests {
             samples: 4,
             thin: 1,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Multispin,
         }
     }
@@ -1005,6 +1112,7 @@ mod tests {
             samples: 3,
             thin: 1,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Tensor,
         };
         let res = run_farm(&cfg).unwrap();
@@ -1013,8 +1121,56 @@ mod tests {
         assert_eq!(res.replicas[0].metrics.sweeps, 2 + 3);
     }
 
+    /// The domain farm reproduces the scalar farm's observable series
+    /// bit-exactly at every slab thread count — the slab invariance the
+    /// domain engine guarantees, end to end through the farm loop.
+    #[test]
+    fn domain_farm_matches_scalar_farm_at_every_thread_count() {
+        let mut cfg = small_cfg();
+        cfg.engine = FarmEngine::Scalar;
+        cfg.shards = 1;
+        let scalar = run_farm(&cfg).unwrap();
+        for threads in [1, 2, 4] {
+            let mut cfg = small_cfg();
+            cfg.engine = FarmEngine::Domain;
+            cfg.shards = 1;
+            cfg.threads = threads;
+            let domain = run_farm(&cfg).unwrap();
+            assert_eq!(
+                domain.replica_report(),
+                scalar.replica_report(),
+                "threads = {threads}"
+            );
+            for r in &domain.replicas {
+                assert_eq!(r.metrics.sweeps, 3 + 4);
+            }
+        }
+    }
+
+    /// Domain-farm knobs: bad slab splits and foreign sharding knobs
+    /// are refused by the shared validation; threads on a non-domain
+    /// engine is refused too.
+    #[test]
+    fn domain_farm_rejects_bad_splits_and_foreign_knobs() {
+        let mut cfg = small_cfg();
+        cfg.engine = FarmEngine::Domain;
+        cfg.shards = 1;
+        cfg.threads = 3; // 8 rows % 3 != 0
+        assert!(run_farm(&cfg).is_err());
+        let mut cfg = small_cfg();
+        cfg.engine = FarmEngine::Domain; // small_cfg has shards: 2
+        assert!(cfg.validate().is_err());
+        let mut cfg = small_cfg();
+        cfg.threads = 2; // multispin replicas take threads = 1
+        assert!(cfg.validate().is_err());
+    }
+
     #[test]
     fn farm_engine_parse_maps_registry_names() {
+        assert_eq!(FarmEngine::parse("scalar").unwrap(), FarmEngine::Scalar);
+        assert_eq!(FarmEngine::parse("native-scalar").unwrap(), FarmEngine::Scalar);
+        assert_eq!(FarmEngine::parse("domain").unwrap(), FarmEngine::Domain);
+        assert_eq!(FarmEngine::parse("slab").unwrap(), FarmEngine::Domain);
         assert_eq!(FarmEngine::parse("multispin").unwrap(), FarmEngine::Multispin);
         assert_eq!(FarmEngine::parse("optimized").unwrap(), FarmEngine::Multispin);
         assert_eq!(FarmEngine::parse("batch").unwrap(), FarmEngine::Batch);
@@ -1040,6 +1196,7 @@ mod tests {
             samples: 4,
             thin: 1,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Batch,
         }
     }

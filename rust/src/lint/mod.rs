@@ -132,6 +132,13 @@ pub const DET_ZONES: &[&str] = &[
 /// Today no path holds two locks at once — the table encodes the only
 /// legal nesting if one ever appears.
 pub const LOCK_ORDER: &[LockSpec] = &[
+    // The domain engine's halo-exchange locks: a worker fills its own
+    // mailbox slot, then waits on the phase-barrier gate; the pull side
+    // locks neighbor slots only after the gate opens, so `slot` ranks
+    // above `gate` and neither nests inside any server/coordinator lock
+    // (workers never leave algorithms/domain.rs while holding one).
+    LockSpec { file: "algorithms/domain.rs", receiver: "slot" },
+    LockSpec { file: "algorithms/domain.rs", receiver: "gate" },
     LockSpec { file: "server/fleet.rs", receiver: "inner" },
     LockSpec { file: "server/queue.rs", receiver: "handles" },
     LockSpec { file: "server/queue.rs", receiver: "state" },
@@ -357,6 +364,11 @@ mod tests {
         assert!(c.panic_audit && !c.index_audit && !c.det_zone);
         let f = classify("coordinator/farm.rs");
         assert!(f.det_zone && f.lock_audit);
+        // The domain engine is both a det zone and a declared lock
+        // module: halo mailboxes + the phase barrier live there.
+        let dom = classify("algorithms/domain.rs");
+        assert!(dom.det_zone && dom.lock_audit && !dom.clock_audit && !dom.panic_audit);
+        assert!(!classify("algorithms/metropolis.rs").lock_audit);
         // Clock confinement: everywhere except det zones (zone-api
         // already covers those) and the chokepoint itself.
         assert!(s.clock_audit && c.clock_audit);

@@ -33,7 +33,9 @@ use super::http::{Request, Response};
 use super::queue::{Scheduler, Submit};
 use super::wire::{ErrorEnvelope, JobSpec};
 use crate::config::ServerConfig;
-use crate::coordinator::farm::{FarmConfig, FarmEngine};
+use crate::coordinator::farm::FarmConfig;
+#[cfg(test)]
+use crate::coordinator::farm::FarmEngine;
 use crate::error::{Error, Result};
 use crate::obs::{clock, Obs};
 use crate::registry::manifest::MANIFEST_MEDIA_TYPE;
@@ -589,8 +591,12 @@ fn healthz(ctx: &ApiCtx) -> Response {
     )
 }
 
-/// `/v1/info` — the same canonical engine registry that drives the CLI
-/// help, parse hints and `ising info`, plus the analytic constants.
+/// `/v1/info` and `/v2/info` — the same canonical engine registry that
+/// drives the CLI help, parse hints and `ising info`, plus the analytic
+/// constants. Every row is generated from `config::ENGINES`: the name,
+/// the paper section it reproduces, the accepted alias spellings (the
+/// `/v1`-era string shim), and a `capabilities` object mirroring the
+/// registry's flags (`runnable`, `farmable`, `snapshot`, `threads`).
 fn info(ctx: &ApiCtx) -> Response {
     let engines: Vec<Json> = crate::config::ENGINES
         .iter()
@@ -600,12 +606,29 @@ fn info(ctx: &ApiCtx) -> Response {
                 ("paper", Json::Str(spec.paper.to_string())),
                 ("layout", Json::Str(spec.layout.to_string())),
                 ("rng", Json::Str(spec.rng.to_string())),
+                (
+                    "aliases",
+                    Json::Arr(
+                        spec.aliases
+                            .iter()
+                            .map(|a| Json::Str(a.to_string()))
+                            .collect(),
+                    ),
+                ),
                 ("snapshot", Json::Bool(spec.snapshot)),
                 ("needs_pjrt", Json::Bool(spec.needs_pjrt)),
                 (
-                    "farm",
-                    Json::Bool(FarmEngine::parse(spec.name).is_ok()),
+                    "capabilities",
+                    obj(vec![
+                        ("runnable", Json::Bool(spec.runnable)),
+                        ("farmable", Json::Bool(spec.farmable)),
+                        ("snapshot", Json::Bool(spec.snapshot)),
+                        ("threads", Json::Bool(spec.threads)),
+                    ]),
                 ),
+                // Kept for /v1 consumers; `capabilities.farmable` is the
+                // v2 spelling of the same registry flag.
+                ("farm", Json::Bool(spec.farmable)),
             ])
         })
         .collect();
@@ -822,6 +845,7 @@ mod tests {
         assert_eq!(cfg.seeds, vec![1]);
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.shards, 1);
+        assert_eq!(cfg.threads, 1);
         assert!(!cfg.threaded_shards);
     }
 
@@ -890,6 +914,111 @@ mod tests {
         // Sharding knobs are refused by the shared FarmConfig::validate.
         let bad = Json::parse(r#"{"size": 64, "engine": "batch", "shards": 2}"#).unwrap();
         assert!(job_config_from_json(&bad).is_err());
+    }
+
+    /// The domain engine submits with its slab thread count — via the
+    /// typed engine object or the flat v1-style key — and `threads`
+    /// stays execution layout, outside the job fingerprint.
+    #[test]
+    fn job_spec_accepts_domain_with_threads() {
+        let typed = job_config_from_json(
+            &Json::parse(
+                r#"{"size": 64, "engine": {"kind": "domain", "threads": 4},
+                    "betas": [0.44], "samples": 3}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(typed.engine, FarmEngine::Domain);
+        assert_eq!(typed.threads, 4);
+        let flat = job_config_from_json(
+            &Json::parse(
+                r#"{"size": 64, "engine": "domain", "threads": 4,
+                    "betas": [0.44], "samples": 3}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(flat.threads, 4);
+        assert_eq!(fingerprint(&typed), fingerprint(&flat));
+        // Thread count is layout, not physics: same key at 1 thread.
+        let single = job_config_from_json(
+            &Json::parse(r#"{"size": 64, "engine": "domain", "betas": [0.44], "samples": 3}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(single.threads, 1);
+        assert_eq!(fingerprint(&typed), fingerprint(&single));
+        for bad in [
+            // threads is a domain-only knob
+            r#"{"size": 64, "engine": "multispin", "threads": 2}"#,
+            // 64 rows cannot split into 3 even slabs
+            r#"{"size": 64, "engine": "domain", "threads": 3}"#,
+            // legal split, but over the service worker cap
+            r#"{"size": 256, "engine": "domain", "threads": 128}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(job_config_from_json(&doc).is_err(), "must reject: {bad}");
+        }
+    }
+
+    /// `/v2/info` serves the engine capability matrix straight from the
+    /// canonical registry: names, paper sections, alias shims (the
+    /// `/v1`-era string spellings) and capability flags match
+    /// `config::ENGINES` row for row.
+    #[test]
+    fn info_matrix_mirrors_the_engine_registry() {
+        let dir = std::env::temp_dir().join(format!("ising-api-info-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let server = ServerConfig { checkpoint_dir: dir.clone(), ..ServerConfig::default() };
+        let scheduler = Arc::new(Scheduler::open(&server).unwrap());
+        let ctx = ApiCtx { scheduler, server };
+
+        let r = handle(&Request::new("GET", "/v2/info"), &ctx);
+        assert_eq!(r.status, 200);
+        let body = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let rows = body.field("engines").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), crate::config::ENGINES.len());
+        for (row, spec) in rows.iter().zip(crate::config::ENGINES) {
+            assert_eq!(row.field("name").unwrap().as_str().unwrap(), spec.name);
+            assert_eq!(row.field("paper").unwrap().as_str().unwrap(), spec.paper);
+            let caps = row.field("capabilities").unwrap();
+            for (key, flag) in [
+                ("runnable", spec.runnable),
+                ("farmable", spec.farmable),
+                ("snapshot", spec.snapshot),
+                ("threads", spec.threads),
+            ] {
+                assert_eq!(
+                    caps.field(key).unwrap().as_bool().unwrap(),
+                    flag,
+                    "capability {key} of engine {}",
+                    spec.name
+                );
+            }
+            let aliases: Vec<&str> = row
+                .field("aliases")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|a| a.as_str().unwrap())
+                .collect();
+            assert_eq!(aliases, spec.aliases.to_vec(), "aliases of {}", spec.name);
+        }
+        // Spot-check the rows the matrix exists to communicate: only
+        // domain honours --threads; wolff runs but does not farm.
+        let find = |name: &str| {
+            rows.iter()
+                .find(|r| r.field("name").unwrap().as_str().unwrap() == name)
+                .unwrap()
+        };
+        let domain_caps = find("domain").field("capabilities").unwrap();
+        assert!(domain_caps.field("threads").unwrap().as_bool().unwrap());
+        let wolff_caps = find("wolff").field("capabilities").unwrap();
+        assert!(wolff_caps.field("runnable").unwrap().as_bool().unwrap());
+        assert!(!wolff_caps.field("farmable").unwrap().as_bool().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// One request must not be able to OOM the server: the service caps

@@ -918,6 +918,7 @@ mod tests {
             samples: 3,
             thin: 1,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Multispin,
         }
     }

@@ -87,6 +87,9 @@ pub fn enforce_job_limits(cfg: &FarmConfig) -> Result<()> {
     if cfg.workers > MAX_WORKERS || cfg.shards > MAX_WORKERS {
         return err(format!("workers/shards exceed the service cap of {MAX_WORKERS}"));
     }
+    if cfg.threads > MAX_WORKERS {
+        return err(format!("{} threads exceed the service cap of {MAX_WORKERS}", cfg.threads));
+    }
     Ok(())
 }
 
@@ -644,6 +647,7 @@ pub fn encode_config(cfg: &FarmConfig) -> Json {
         ("thin", Json::Num(cfg.thin as f64)),
         ("workers", Json::Num(cfg.workers as f64)),
         ("shards", Json::Num(cfg.shards as f64)),
+        ("threads", Json::Num(cfg.threads as f64)),
     ])
 }
 
@@ -672,6 +676,12 @@ pub fn decode_config(doc: &Json) -> Result<FarmConfig> {
         samples: doc.field("samples")?.as_usize()?,
         thin: doc.field("thin")?.as_u64()?,
         threaded_shards: false,
+        // Specs persisted before the domain engine existed carry no
+        // "threads" field; they ran implicitly single-threaded.
+        threads: match doc.get("threads") {
+            Some(v) => v.as_usize()?,
+            None => 1,
+        },
         engine,
     };
     // A hand-edited spec must not re-queue into a crash loop on
@@ -698,6 +708,7 @@ mod tests {
             samples: 3,
             thin: 1,
             threaded_shards: false,
+            threads: 1,
             engine: FarmEngine::Multispin,
         }
     }
@@ -725,6 +736,7 @@ mod tests {
         let mut b = small_cfg();
         b.workers = 8;
         b.shards = 2;
+        b.threads = 4;
         assert_eq!(fingerprint(&a), fingerprint(&b));
         let mut c = small_cfg();
         c.betas[0] = 0.43;
@@ -744,6 +756,38 @@ mod tests {
             let doc = Json::parse(bad).unwrap();
             assert!(decode_config(&doc).is_err(), "must reject: {bad}");
         }
+    }
+
+    /// Specs persisted before the domain engine carry no "threads" key;
+    /// they decode as single-threaded. New domain specs round-trip their
+    /// slab layout, and an over-cap thread count is refused like an
+    /// over-cap worker count.
+    #[test]
+    fn decode_threads_compat_roundtrip_and_cap() {
+        let mut doc = encode_config(&small_cfg());
+        if let Json::Obj(fields) = &mut doc {
+            fields.remove("threads").expect("threads is encoded");
+        }
+        assert_eq!(decode_config(&doc).unwrap().threads, 1);
+
+        let mut dom = small_cfg();
+        dom.engine = FarmEngine::Domain;
+        dom.shards = 1;
+        dom.threads = 4;
+        let back =
+            decode_config(&Json::parse(&encode_config(&dom).to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.engine, FarmEngine::Domain);
+        assert_eq!(back.threads, 4);
+        assert_eq!(fingerprint(&back), fingerprint(&dom));
+
+        let mut capped = dom.clone();
+        capped.geom = Geometry::new(256, 32).unwrap();
+        capped.threads = 128; // valid split (height 2), but over the cap
+        assert!(capped.validate().is_ok());
+        let err = enforce_job_limits(&capped).unwrap_err();
+        assert!(err.to_string().contains("threads exceed"), "{err}");
+        assert!(decode_config(&encode_config(&capped)).is_err());
     }
 
     #[test]

@@ -26,12 +26,187 @@
 //! trajectory.
 
 use crate::cli::args::Args;
-use crate::config::Toml;
+use crate::config::{EngineKind, Toml};
 use crate::coordinator::farm::{default_beta_grid, FarmConfig, FarmEngine};
 use crate::error::{Error, Result};
 use crate::server::http::Response;
+use crate::tensor::Precision;
 use crate::util::json::{obj, Json};
 use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------
+// EngineSpec — the single typed engine vocabulary.
+
+/// The typed-object keys of an engine selection (`"engine"` in a job
+/// body may also be a bare string — the `/v1`-era alias shim).
+pub const ENGINE_SPEC_KEYS: &[&str] = &["kind", "precision", "lanes", "threads"];
+
+/// A fully typed engine selection: family, GEMM precision, replica
+/// lanes, and slab threads. This is the one engine vocabulary shared by
+/// the CLI (`--engine` + `--threads`), `[job]` TOML and HTTP JSON —
+/// every front door parses into it against the canonical registry
+/// (`config::ENGINES`), and `/v2/info` serves the same registry back as
+/// a capability matrix.
+///
+/// On the wire it is the object form
+/// `{"kind": "domain", "precision": "fp32", "lanes": 1, "threads": 4}`;
+/// a bare string (`"engine": "domain"`) is accepted as the documented
+/// `/v1`-era alias shim and means the engine's defaults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineSpec {
+    /// Engine family (canonical registry kind; tensor precision folded
+    /// in, so `kind` alone names the exact engine).
+    pub kind: EngineKind,
+    /// GEMM precision — `fp16` only for the tensor family; every other
+    /// engine is `fp32` (the field exists so typed clients never parse
+    /// precision out of a name suffix).
+    pub precision: Precision,
+    /// Replica lanes advanced per work unit: `batch::LANES` for the
+    /// bit-plane batch family, 1 for per-replica engines. Fixed by the
+    /// family — accepted on the wire only at its fixed value.
+    pub lanes: usize,
+    /// Slab worker threads inside one lattice (domain decomposition).
+    /// Only engines whose registry row sets `threads` accept > 1.
+    pub threads: usize,
+}
+
+impl EngineSpec {
+    /// The spec for `kind` with its family defaults (single-threaded).
+    pub fn of(kind: EngineKind) -> Self {
+        Self {
+            kind,
+            precision: match kind {
+                EngineKind::NativeTensor(p) => p,
+                _ => Precision::F32,
+            },
+            lanes: if kind == EngineKind::NativeBatch {
+                crate::algorithms::batch::LANES
+            } else {
+                1
+            },
+            threads: 1,
+        }
+    }
+
+    /// Canonical registry name.
+    pub fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    /// Capability row from the canonical registry.
+    pub fn info(&self) -> &'static crate::config::EngineInfo {
+        // lint: allow(panic, "every parseable kind has a registry row")
+        self.kind.spec().expect("engine spec kind has a registry row")
+    }
+
+    /// Check the field combination against the registry capabilities.
+    pub fn validate(&self) -> Result<()> {
+        if self.threads == 0 {
+            return Err(Error::Usage("engine threads must be ≥ 1".into()));
+        }
+        let info = self.info();
+        if self.threads > 1 && !info.threads {
+            return Err(Error::Usage(format!(
+                "engine '{}' does not take threads (only domain-decomposed \
+                 engines split one lattice across cores)",
+                info.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// The farm family for this spec (refused for run-only engines with
+    /// the same pinned message every `/v1` client saw).
+    pub fn farm_engine(&self) -> Result<FarmEngine> {
+        FarmEngine::parse(self.name())
+    }
+
+    /// Encode (always the full typed object form).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", Json::Str(self.name().to_string())),
+            (
+                "precision",
+                Json::Str(
+                    match self.precision {
+                        Precision::F32 => "fp32",
+                        Precision::F16 => "fp16",
+                    }
+                    .to_string(),
+                ),
+            ),
+            ("lanes", Json::Num(self.lanes as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+        ])
+    }
+
+    /// Decode + validate. Accepts the typed object form (unknown keys
+    /// strictly rejected) or — the documented `/v1` alias shim — a bare
+    /// engine-name string meaning that family's defaults.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        if let Ok(name) = doc.as_str() {
+            // /v1-era string shim: "engine": "domain" (aliases included).
+            return Ok(Self::of(EngineKind::parse(name)?));
+        }
+        let fields = doc.as_obj().map_err(|_| {
+            Error::Usage("engine must be a name string or a typed object".into())
+        })?;
+        for key in fields.keys() {
+            if !ENGINE_SPEC_KEYS.contains(&key.as_str()) {
+                return Err(Error::Usage(format!(
+                    "unknown engine key '{key}' (known: {})",
+                    ENGINE_SPEC_KEYS.join(", ")
+                )));
+            }
+        }
+        let name = doc.field("kind")?.as_str().map_err(|_| {
+            Error::Usage("engine key 'kind' must be an engine name string".into())
+        })?;
+        let mut kind = EngineKind::parse(name)?;
+        if let Some(v) = doc.get("precision") {
+            let prec = match v.as_str() {
+                Ok("fp32") => Precision::F32,
+                Ok("fp16") => Precision::F16,
+                _ => {
+                    return Err(Error::Usage(
+                        "engine key 'precision' must be \"fp32\" or \"fp16\"".into(),
+                    ))
+                }
+            };
+            kind = match kind {
+                EngineKind::NativeTensor(_) => EngineKind::NativeTensor(prec),
+                k if prec == Precision::F32 => k, // explicit default: harmless
+                _ => {
+                    return Err(Error::Usage(format!(
+                        "engine '{name}' has no fp16 mode (precision selects the \
+                         tensor family's GEMM path)"
+                    )))
+                }
+            };
+        }
+        let mut spec = Self::of(kind);
+        if let Some(v) = doc.get("lanes") {
+            let lanes = v
+                .as_usize()
+                .map_err(|_| Error::Usage("engine key 'lanes' must be an integer".into()))?;
+            if lanes != spec.lanes {
+                return Err(Error::Usage(format!(
+                    "engine '{}' advances {} lane(s) per unit; 'lanes' is fixed \
+                     by the family, not a knob",
+                    spec.name(),
+                    spec.lanes
+                )));
+            }
+        }
+        if let Some(v) = doc.get("threads") {
+            spec.threads = v
+                .as_usize()
+                .map_err(|_| Error::Usage("engine key 'threads' must be an integer".into()))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
 
 /// Longest accepted worker name (registration / heartbeat / lease).
 pub const MAX_WORKER_NAME: usize = 64;
@@ -83,6 +258,8 @@ pub struct JobSpec {
     pub workers: Option<usize>,
     /// Slabs inside each replica (multispin only).
     pub shards: usize,
+    /// Slab threads inside each replica's lattice (domain only).
+    pub threads: usize,
 }
 
 impl Default for JobSpec {
@@ -103,6 +280,7 @@ impl Default for JobSpec {
             thin: cfg.thin,
             workers: None,
             shards: 1,
+            threads: 1,
         }
     }
 }
@@ -110,7 +288,7 @@ impl Default for JobSpec {
 /// The submit-body / `[job]`-section key set (one list, three parsers).
 pub const JOB_KEYS: &[&str] = &[
     "size", "engine", "betas", "beta_points", "replicas", "seed", "burn_in",
-    "samples", "thin", "workers", "shards",
+    "samples", "thin", "workers", "shards", "threads",
 ];
 
 impl JobSpec {
@@ -126,8 +304,18 @@ impl JobSpec {
         cfg.thin = self.thin;
         cfg.workers = self.workers.unwrap_or(1);
         cfg.shards = self.shards;
+        cfg.threads = self.threads;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// This job's engine selection as the typed vocabulary (registry
+    /// kind + slab threads) — what `/v2` status surfaces echo back.
+    pub fn engine_spec(&self) -> Result<EngineSpec> {
+        let mut spec = EngineSpec::of(EngineKind::parse(self.engine.name())?);
+        spec.threads = self.threads;
+        spec.validate()?;
+        Ok(spec)
     }
 
     /// Parse an HTTP submit body (`POST /v1/jobs` and `/v2/jobs` share
@@ -158,10 +346,10 @@ impl JobSpec {
         let mut spec = JobSpec::default();
         spec.size = get_u64("size", spec.size as u64)? as usize;
         if let Some(v) = doc.get("engine") {
-            spec.engine = FarmEngine::parse(
-                v.as_str()
-                    .map_err(|_| Error::Usage("job key 'engine' must be a string".into()))?,
-            )?;
+            // Typed object form, or the /v1-era name-string shim.
+            let es = EngineSpec::from_json(v)?;
+            spec.engine = es.farm_engine()?;
+            spec.threads = es.threads;
         }
         spec.betas = match doc.get("betas") {
             Some(v) => {
@@ -206,6 +394,9 @@ impl JobSpec {
         spec.thin = get_u64("thin", spec.thin)?;
         spec.workers = Some(get_u64("workers", 1)? as usize);
         spec.shards = get_u64("shards", 1)? as usize;
+        // A flat "threads" wins over the engine object's (it is the
+        // same flat key the CLI and TOML doors use).
+        spec.threads = get_u64("threads", spec.threads as u64)? as usize;
         Ok(spec)
     }
 
@@ -231,6 +422,7 @@ impl JobSpec {
             self.workers = Some(args.opt_parse("workers", 1usize)?);
         }
         self.shards = args.opt_parse("shards", self.shards)?;
+        self.threads = args.opt_parse("threads", self.threads)?;
         Ok(())
     }
 
@@ -285,6 +477,7 @@ impl JobSpec {
             spec.workers = Some(v.as_usize()?);
         }
         spec.shards = get_u64("shards", spec.shards as u64)? as usize;
+        spec.threads = get_u64("threads", spec.threads as u64)? as usize;
         Ok(spec)
     }
 }
@@ -964,6 +1157,106 @@ mod tests {
         assert_eq!(fingerprint(&b), fingerprint(&c));
         assert_eq!(a.betas, b.betas);
         assert_eq!(a.seeds, vec![7, 8, 9]);
+    }
+
+    /// The typed engine object and the `/v1`-era name-string shim parse
+    /// to the same spec — the shim is documented, tested, and carries
+    /// the family defaults.
+    #[test]
+    fn engine_spec_object_and_string_shim_agree() {
+        let typed = EngineSpec::from_json(
+            &Json::parse(r#"{"kind": "domain", "threads": 4}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(typed.name(), "domain");
+        assert_eq!(typed.threads, 4);
+        assert_eq!(typed.lanes, 1);
+        assert_eq!(typed.precision, Precision::F32);
+        assert_eq!(EngineSpec::from_json(&typed.to_json()).unwrap(), typed);
+        // v1 alias shim: bare strings (aliases included) still parse.
+        for (s, name) in [("domain", "domain"), ("slab", "domain"), ("optimized", "multispin")] {
+            let shim = EngineSpec::from_json(&Json::Str(s.into())).unwrap();
+            assert_eq!(shim.name(), name);
+            assert_eq!(shim.threads, 1);
+            assert_eq!(shim, EngineSpec::of(shim.kind));
+        }
+        // Family-fixed fields are populated, not parsed from suffixes.
+        let batch = EngineSpec::from_json(&Json::Str("batch".into())).unwrap();
+        assert_eq!(batch.lanes, crate::algorithms::batch::LANES);
+        let fp16 = EngineSpec::from_json(
+            &Json::parse(r#"{"kind": "tensor", "precision": "fp16"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(fp16.name(), "tensor-fp16");
+        assert_eq!(fp16.precision, Precision::F16);
+        assert_eq!(EngineSpec::from_json(&fp16.to_json()).unwrap(), fp16);
+    }
+
+    #[test]
+    fn engine_spec_rejects_unknown_keys_and_capability_violations() {
+        for bad in [
+            r#"{"kind": "domain", "cores": 4}"#,
+            r#"{"threads": 4}"#,
+            r#"{"kind": "no-such-engine"}"#,
+            r#"{"kind": "scalar", "threads": 2}"#,
+            r#"{"kind": "domain", "threads": 0}"#,
+            r#"{"kind": "scalar", "precision": "fp16"}"#,
+            r#"{"kind": "batch", "lanes": 2}"#,
+            r#"{"kind": "domain", "precision": "f16"}"#,
+            r#"[1]"#,
+        ] {
+            assert!(
+                EngineSpec::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject {bad}"
+            );
+        }
+    }
+
+    /// `--engine domain --threads 4`, the `[job]` TOML keys and the
+    /// typed HTTP engine object all land in the same resolved config.
+    #[test]
+    fn typed_engine_threads_flow_through_all_three_doors() {
+        let from_cli = JobSpec::from_args(&args(&[
+            "sweep", "--size", "64", "--engine", "domain", "--threads", "4",
+            "--betas", "0.44", "--samples", "3",
+        ]))
+        .unwrap();
+        let from_http = JobSpec::from_json(
+            &Json::parse(
+                r#"{"size": 64, "engine": {"kind": "domain", "threads": 4},
+                    "betas": [0.44], "samples": 3}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let from_file = JobSpec::from_toml(
+            &Toml::parse(
+                "[job]\nsize = 64\nengine = \"domain\"\nthreads = 4\n\
+                 betas = [0.44]\nsamples = 3\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        for spec in [&from_cli, &from_http, &from_file] {
+            assert_eq!(spec.engine, FarmEngine::Domain);
+            assert_eq!(spec.threads, 4);
+            let cfg = spec.resolve().unwrap();
+            assert_eq!(cfg.threads, 4);
+            assert_eq!(cfg.engine, FarmEngine::Domain);
+            let es = spec.engine_spec().unwrap();
+            assert_eq!((es.name(), es.threads), ("domain", 4));
+        }
+        // A bad slab split is a 400-family (caller) error at resolve.
+        let bad = JobSpec::from_json(
+            &Json::parse(
+                r#"{"size": 64, "engine": {"kind": "domain", "threads": 3},
+                    "betas": [0.44], "samples": 3}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let err = bad.resolve().unwrap_err();
+        assert_eq!(ErrorEnvelope::from_error(&err).code, 400);
     }
 
     #[test]

@@ -203,6 +203,7 @@ fn http_parser_never_overreads_content_length() {
 /// Decode every fleet message type against one document; none may panic.
 fn decode_all_fleet_messages(doc: &Json) {
     let _ = wire::JobSpec::from_json(doc);
+    let _ = wire::EngineSpec::from_json(doc);
     let _ = wire::Register::from_json(doc);
     let _ = wire::RegisterAck::from_json(doc);
     let _ = wire::Heartbeat::from_json(doc);
@@ -297,6 +298,54 @@ fn wire_messages_roundtrip() {
                 .unwrap(),
             fail
         );
+    });
+}
+
+/// The typed engine vocabulary survives the wire: every registry engine
+/// round-trips through its JSON object form, mutated documents decode
+/// to Ok/Err without panicking, and unknown keys stay rejected.
+#[test]
+fn engine_specs_roundtrip_and_survive_mutation() {
+    use ising_dgx::config::ENGINES;
+    // Every registry row (canonical name and each alias) round-trips.
+    for row in ENGINES {
+        for name in std::iter::once(&row.name).chain(row.aliases) {
+            let spec = wire::EngineSpec::from_json(&Json::Str(name.to_string())).unwrap();
+            assert_eq!(spec.name(), row.name, "alias {name}");
+            let doc = Json::parse(&spec.to_json().to_string_compact()).unwrap();
+            assert_eq!(wire::EngineSpec::from_json(&doc).unwrap(), spec, "{name}");
+        }
+    }
+    // A threaded domain spec round-trips with its thread count.
+    let mut domain = wire::EngineSpec::from_json(&Json::Str("domain".into())).unwrap();
+    domain.threads = 4;
+    let doc = Json::parse(&domain.to_json().to_string_compact()).unwrap();
+    assert_eq!(wire::EngineSpec::from_json(&doc).unwrap().threads, 4);
+    // Unknown keys are rejected, not ignored (anti-drift guarantee).
+    let mut with_extra = domain.to_json();
+    if let Json::Obj(ref mut fields) = with_extra {
+        fields.insert("cores".into(), Json::Num(4.0));
+    }
+    assert!(wire::EngineSpec::from_json(&with_extra).is_err());
+    // Mutated encodings decode to Ok/Err, never a panic; whatever still
+    // decodes re-encodes to a fixed point.
+    let seed = domain.to_json().to_string_compact();
+    check("engine spec mutate", 300, |g| {
+        let mut bytes = seed.clone().into_bytes();
+        for _ in 0..g.int_in(0, 6) {
+            let i = g.int_in(0, bytes.len() as i64 - 1) as usize;
+            bytes[i] = g.int_in(32, 126) as u8;
+        }
+        bytes.truncate(g.int_in(0, bytes.len() as i64) as usize);
+        if let Ok(s) = String::from_utf8(bytes) {
+            if let Ok(doc) = Json::parse(&s) {
+                if let Ok(spec) = wire::EngineSpec::from_json(&doc) {
+                    let back = spec.to_json().to_string_compact();
+                    let re = wire::EngineSpec::from_json(&Json::parse(&back).unwrap()).unwrap();
+                    assert_eq!(re, spec, "re-encode must be a fixed point");
+                }
+            }
+        }
     });
 }
 

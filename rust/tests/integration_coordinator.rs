@@ -132,6 +132,7 @@ fn farm_is_deterministic_across_worker_counts() {
         samples: 6,
         thin: 1,
         threaded_shards: false,
+        threads: 1,
         engine: FarmEngine::Multispin,
     };
     let reference = run_farm(&base).unwrap();
@@ -174,6 +175,7 @@ fn farm_matches_native_cluster_reference() {
         samples,
         thin,
         threaded_shards: false,
+        threads: 1,
         engine: FarmEngine::Multispin,
     };
     let farm = run_farm(&cfg).unwrap();
@@ -219,6 +221,7 @@ fn ckpt_cfg() -> FarmConfig {
         samples: 8,
         thin: 2,
         threaded_shards: false,
+        threads: 1,
         engine: FarmEngine::Multispin,
     }
 }

@@ -42,6 +42,7 @@ fn farm_cfg() -> FarmConfig {
         samples: 6,
         thin: 1,
         threaded_shards: false,
+        threads: 1,
         engine: FarmEngine::Multispin,
     }
 }

@@ -50,6 +50,7 @@ fn job_cfg(seed0: u32) -> FarmConfig {
         samples: 6,
         thin: 1,
         threaded_shards: false,
+        threads: 1,
         engine: FarmEngine::Multispin,
     }
 }
@@ -414,6 +415,7 @@ fn http_end_to_end_submit_poll_result_shutdown() {
         samples: 6,
         thin: 1,
         threaded_shards: false,
+        threads: 1,
         engine: FarmEngine::Multispin,
     };
     let offline = run_farm(&offline_cfg).unwrap().replica_report();

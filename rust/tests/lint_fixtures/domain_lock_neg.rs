@@ -1,0 +1,37 @@
+//! Negative fixture: the domain halo discipline as written — publish
+//! into the own slot, release, wait on the barrier gate, pull neighbor
+//! slots one scoped guard at a time, poisoning surfaced via `.expect`.
+use std::sync::{Condvar, Mutex};
+
+pub struct S {
+    slot: Mutex<Vec<i8>>,
+    gate: Mutex<u64>,
+    arrivals: Condvar,
+}
+
+impl S {
+    pub fn publish(&self, row: &[i8]) {
+        let mut slot = self.slot.lock().expect("slot poisoned");
+        slot.clear();
+        slot.extend_from_slice(row);
+    }
+
+    pub fn wait(&self) {
+        let mut g = self.gate.lock().expect("gate poisoned");
+        *g += 1;
+        while *g % 2 == 1 {
+            g = self.arrivals.wait(g).expect("gate poisoned");
+        }
+    }
+
+    pub fn pull(&self, boxes: &[S], halo: &mut Vec<i8>) {
+        {
+            let above = boxes[0].slot.lock().expect("slot poisoned");
+            halo.extend_from_slice(&above);
+        }
+        {
+            let below = boxes[1].slot.lock().expect("slot poisoned");
+            halo.extend_from_slice(&below);
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Positive fixture: the domain halo discipline violated. Declared
+//! order for this file: `slot` (halo mailbox), then `gate` (barrier) —
+//! so pulling a neighbor slot while the gate is held, holding two
+//! mailbox guards at once, and a bare unwrap are all findings.
+use std::sync::{Condvar, Mutex};
+
+pub struct S {
+    slot: Mutex<Vec<i8>>,
+    gate: Mutex<u64>,
+    arrivals: Condvar,
+}
+
+impl S {
+    pub fn pull_inside_the_gate(&self, boxes: &[S]) {
+        let mut g = self.gate.lock().expect("gate poisoned");
+        *g += 1;
+        let row = boxes[0].slot.lock().expect("slot poisoned");
+        drop(row);
+        self.arrivals.notify_all();
+    }
+
+    pub fn unscoped_pull(&self, boxes: &[S]) {
+        let above = boxes[0].slot.lock().expect("slot poisoned");
+        let below = boxes[1].slot.lock().expect("slot poisoned");
+        drop(above);
+        drop(below);
+    }
+
+    pub fn bare_gate(&self) -> u64 {
+        *self.gate.lock().unwrap()
+    }
+}

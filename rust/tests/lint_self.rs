@@ -23,6 +23,12 @@ const FIXTURE_LOCKS: &[LockSpec] = &[
     LockSpec { file: "panic_neg.rs", receiver: "state" },
     LockSpec { file: "registry_lock_pos.rs", receiver: "refs" },
     LockSpec { file: "registry_lock_neg.rs", receiver: "refs" },
+    // The domain engine's halo discipline: mailbox `slot` ranks above
+    // the barrier `gate`, mirroring lint::LOCK_ORDER.
+    LockSpec { file: "domain_lock_pos.rs", receiver: "slot" },
+    LockSpec { file: "domain_lock_pos.rs", receiver: "gate" },
+    LockSpec { file: "domain_lock_neg.rs", receiver: "slot" },
+    LockSpec { file: "domain_lock_neg.rs", receiver: "gate" },
 ];
 
 fn spans(diags: &[Diagnostic]) -> Vec<(u32, u32, &'static str)> {
@@ -146,6 +152,35 @@ fn registry_lock_rank_negative_is_clean() {
     assert!(diags.is_empty(), "{diags:?}");
 }
 
+/// The domain engine's halo ranks: a neighbor `slot` pulled while the
+/// barrier `gate` is held inverts the declared order, two mailbox
+/// guards held at once is a re-acquisition, and a bare unwrap on the
+/// gate loses the poison context.
+#[test]
+fn domain_lock_rank_positive_spans() {
+    let src = include_str!("lint_fixtures/domain_lock_pos.rs");
+    let class = FileClass { lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("domain_lock_pos.rs", src, &class, FIXTURE_LOCKS);
+    assert_eq!(
+        spans(&diags),
+        vec![(17, 33, RULE_LOCK), (24, 35, RULE_LOCK), (30, 20, RULE_LOCK)]
+    );
+    assert!(diags[0].msg.contains("declared order"), "{}", diags[0].msg);
+    assert!(diags[1].msg.contains("re-acquired"), "{}", diags[1].msg);
+    assert!(diags[2].msg.contains("bare .lock().unwrap()"), "{}", diags[2].msg);
+}
+
+/// The discipline as `algorithms/domain.rs` actually writes it —
+/// publish, release, barrier, then one scoped neighbor guard at a
+/// time — is clean.
+#[test]
+fn domain_lock_rank_negative_is_clean() {
+    let src = include_str!("lint_fixtures/domain_lock_neg.rs");
+    let class = FileClass { lock_audit: true, ..FileClass::NONE };
+    let diags = check_file("domain_lock_neg.rs", src, &class, FIXTURE_LOCKS);
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
 #[test]
 fn allow_rule_positive_spans() {
     let src = include_str!("lint_fixtures/allow_pos.rs");
@@ -219,6 +254,7 @@ fn deps_policy_negative_is_clean() {
 #[test]
 fn declared_lock_order_covers_every_lock_module() {
     let files = [
+        "algorithms/domain.rs",
         "server/fleet.rs",
         "server/queue.rs",
         "coordinator/checkpoint.rs",

@@ -442,3 +442,82 @@ fn prop_tensor_snapshot_save_resume_bit_identity() {
         let _ = std::fs::remove_file(&path);
     });
 }
+
+/// The domain-decomposed engine is the scalar engine, bit for bit, at
+/// every legal thread count: the trajectory depends only on (geometry,
+/// β, seed), never on how the rows were split across workers.
+#[test]
+fn prop_domain_matches_scalar_at_any_thread_count() {
+    use ising_dgx::algorithms::DomainEngine;
+    check("domain == scalar for threads in {1,2,3,7}", 20, |g| {
+        let threads = *g.choose(&[1usize, 2, 3, 7]);
+        let slab = g.even_in(2, 6);
+        let h = threads * slab;
+        let w = g.even_in(4, 16);
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.1, 1.2);
+        let sweeps = g.int_in(1, 5) as u64;
+
+        let mut scalar = ScalarEngine::hot(geom, beta, seed);
+        let mut domain = DomainEngine::hot(geom, beta, seed, threads).unwrap();
+        scalar.sweep_n(sweeps);
+        domain.sweep_n(sweeps);
+        assert_eq!(
+            domain.spins(),
+            scalar.spins(),
+            "h={h} w={w} threads={threads} beta={beta} seed={seed}"
+        );
+        // Snapshots are worker-count-independent: byte-equal to the
+        // scalar engine's at the same point of the same trajectory.
+        assert_eq!(domain.snapshot().encode(), scalar.snapshot().encode());
+    });
+}
+
+/// A snapshot written under one thread count resumes under another onto
+/// the identical trajectory (threads are execution layout, not state).
+#[test]
+fn prop_domain_snapshot_migrates_across_thread_counts() {
+    use ising_dgx::algorithms::DomainEngine;
+    check("domain snapshot 4 -> 2 thread migration", 15, |g| {
+        let slab = g.even_in(2, 4);
+        let h = 4 * slab;
+        let w = g.even_in(4, 12);
+        let geom = Geometry::new(h, w).unwrap();
+        let seed = g.u32();
+        let beta = g.f32_in(0.1, 1.0);
+        let pre = g.int_in(1, 5) as u64;
+        let post = g.int_in(1, 5) as u64;
+
+        let mut wide = DomainEngine::hot(geom, beta, seed, 4).unwrap();
+        wide.sweep_n(pre);
+        let snap = wide.snapshot();
+        let mut narrow = DomainEngine::from_snapshot(&snap, 2).unwrap();
+        assert_eq!(narrow.step(), pre);
+        wide.sweep_n(post);
+        narrow.sweep_n(post);
+        assert_eq!(wide.spins(), narrow.spins(), "migrated trajectory diverged");
+        assert_eq!(wide.snapshot().encode(), narrow.snapshot().encode());
+    });
+}
+
+/// Degenerate splits are refused as caller errors (HTTP 400 via the
+/// shared error envelope), never panics — and `validate_split` agrees
+/// exactly with the "even slabs of at least two rows" rule.
+#[test]
+fn prop_domain_split_rejection_is_a_usage_error() {
+    use ising_dgx::algorithms::domain::validate_split;
+    use ising_dgx::server::wire::ErrorEnvelope;
+    check("bad splits reject with 400, good splits pass", 120, |g| {
+        let h = g.even_in(2, 32);
+        let threads = g.int_in(0, 9) as usize;
+        let legal = threads >= 1 && h % threads == 0 && (h / threads) % 2 == 0 && h / threads >= 2;
+        match validate_split(h, threads) {
+            Ok(()) => assert!(legal, "accepted illegal split h={h} threads={threads}"),
+            Err(e) => {
+                assert!(!legal, "rejected legal split h={h} threads={threads}: {e}");
+                assert_eq!(ErrorEnvelope::from_error(&e).code, 400, "h={h} threads={threads}");
+            }
+        }
+    });
+}
